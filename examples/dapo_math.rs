@@ -1,0 +1,44 @@
+//! DAPO competition-math scenario (the paper's Table 2 workload): dynamic
+//! sampling + decoupled clip + token-mean, with INT8 quantized rollout and
+//! the full QuRL recipe (ACR + UAQ).  Prints the sampling-efficiency
+//! series (the DAPO-specific metric) alongside reward.
+//!
+//! Run: cargo run --release --example dapo_math -- [steps]
+
+use anyhow::Result;
+use qurl::benchkit as bk;
+use qurl::config;
+use qurl::metrics::Recorder;
+use qurl::rl::{eval as rleval, Trainer};
+use qurl::runtime::QuantMode;
+use qurl::tasks::{Suite, Tokenizer};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let (rt, base) = bk::setup()?;
+    let mut cfg = config::dapo_aime();
+    cfg.steps = steps;
+    cfg.eval_every = (steps / 6).max(1);
+    println!("DAPO on the AIME analog: {} steps, INT8 rollout, ACR+UAQ, \
+              dynamic sampling on", steps);
+    let rec = Recorder::create(&bk::results_dir(), "example_dapo")?;
+    let mut tr = Trainer::new(&rt, cfg, base, rec)?;
+    let final_reward = tr.run()?;
+    println!("\nreward        : {}",
+             bk::sparkline(&tr.rec.series("reward"), 56));
+    println!("dapo efficiency: {}",
+             bk::sparkline(&tr.rec.series("dapo_efficiency"), 56));
+    println!("clip fraction : {}",
+             bk::sparkline(&tr.rec.series("clip_frac"), 56));
+    let tk = Tokenizer::new();
+    let suite = Suite::by_name("aime").unwrap();
+    let w = rt.engine_weights(QuantMode::Bf16, &tr.ps.params)?;
+    let avg1 = rleval::greedy_accuracy(&rt, &w, &tk, &suite, 77, 64)?;
+    let avg8 = rleval::avg_at_k(&rt, &w, &tk, &suite, 77, 32, 8, 1.0, 0.7)?;
+    println!("final reward {final_reward:.3} | Avg@1 {:.1}% | Avg@8 {:.1}%",
+             avg1 * 100.0, avg8 * 100.0);
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: the QuRL pipeline in ~60 lines.
+//!
+//! Loads the AOT artifacts, initializes an actor, quantizes it to INT8,
+//! rolls out a batch of math problems on the quantized engine, verifies
+//! rewards, and runs one ACR policy-gradient step — the full Fig. 1 cycle.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use qurl::metrics::Recorder;
+use qurl::rl::{Trainer, TrainerConfig};
+use qurl::runtime::{ParamStore, QuantMode, Runtime};
+use qurl::tasks::Tokenizer;
+
+fn main() -> Result<()> {
+    // 1. the runtime executes HLO artifacts via PJRT; Python is build-only
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    let man = rt.manifest().clone();
+    println!("model: {} params | rollout batch {} | context {}",
+             man.n_params, man.rollout_batch, man.max_seq);
+
+    // 2. actor parameters (deterministic init; real runs start from the
+    //    SFT base checkpoint — see `qurl pretrain`)
+    let params = rt.init_params(0)?;
+    let ps = ParamStore::new(&man, params);
+
+    // 3. one QuRL RL step: INT8 rollout + ACR objective
+    let cfg = TrainerConfig {
+        rollout_mode: QuantMode::Int8,
+        steps: 1,
+        suite: "gsm8k".into(),
+        ..TrainerConfig::default()
+    };
+    let rec = Recorder::ephemeral("quickstart");
+    let mut trainer = Trainer::new(&rt, cfg, ps, rec)?;
+    let reward = trainer.step(0)?;
+    println!("step 0: mean reward {reward:.3} (random-init model — expect ~0)");
+
+    // 4. inspect a rollout directly
+    let w = rt.engine_weights(QuantMode::Int8, &trainer.ps.params)?;
+    let tk = Tokenizer::new();
+    let suite = qurl::tasks::Suite::by_name("gsm8k").unwrap();
+    let probs = suite.test_set(7, 2);
+    let refs: Vec<&qurl::tasks::Problem> = probs.iter().map(|(_, p)| p).collect();
+    let (tokens, lens) = qurl::tasks::encode_batch(
+        &tk, &refs, man.rollout_batch, man.max_seq, man.max_prompt);
+    let gen = rt.generate(&w, &tokens, &lens, 1, 1.0, 1.0)?;
+    for r in 0..2 {
+        let row = &gen.tokens[r * man.max_seq..(r + 1) * man.max_seq];
+        println!("prompt: {:24} -> model says: {:?} (answer: {})",
+                 refs[r].prompt,
+                 tk.decode_generation(row, lens[r] as usize),
+                 refs[r].answer);
+    }
+    println!("\nnext: `qurl pretrain` then `qurl train --preset \
+              deepscaler_grpo` for a real run.");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Fig. 8 scenario as a standalone tool: sweep the decode roofline over
+//! GPU types, model scales, precisions, batch sizes and context lengths;
+//! optionally cross-check against the serving scheduler on this testbed.
+//!
+//! Run: cargo run --release --example throughput_sim -- [--serve]
+
+use anyhow::Result;
+use qurl::benchkit as bk;
+use qurl::coordinator::{RolloutRequest, Scheduler, StepEngine};
+use qurl::perfmodel::{self, roofline, DecodeConfig, Precision};
+use qurl::runtime::QuantMode;
+use qurl::tasks::{Suite, Tokenizer};
+use qurl::util::timer::print_table;
+
+fn main() -> Result<()> {
+    // full sweep: precision x scale x gpu
+    let cfg = DecodeConfig::default();
+    let mut rows = Vec::new();
+    for prec in [Precision::Bf16, Precision::Int8, Precision::Fp8] {
+        for scale in roofline::ALL_SCALES {
+            for gpu in perfmodel::ALL_GPUS {
+                let q = perfmodel::decode_throughput(gpu, scale, prec, &cfg);
+                let s = perfmodel::speedup(gpu, scale, prec, &cfg);
+                rows.push(vec![format!("{prec:?}"),
+                               scale.name().to_string(),
+                               gpu.spec().name.to_string(),
+                               format!("{q:.2}"),
+                               format!("{:.2}x", s)]);
+            }
+        }
+    }
+    print_table("decode roofline sweep",
+                &["precision", "model", "gpu", "queries/s", "vs bf16"], &rows);
+
+    // context-length sensitivity: the un-quantized fp16 KV cache erodes the
+    // INT8 gain as contexts grow (why the paper excludes KV quantization
+    // from the wins, and why bigger models still gain more)
+    let mut rows = Vec::new();
+    for ctx in [512, 2048, 8192, 16384] {
+        let c = DecodeConfig { ctx, ..cfg };
+        let s7 = perfmodel::speedup(perfmodel::Gpu::H100, roofline::ModelScale::B7,
+                                    Precision::Int8, &c);
+        let s32 = perfmodel::speedup(perfmodel::Gpu::H100, roofline::ModelScale::B32,
+                                     Precision::Int8, &c);
+        rows.push(vec![ctx.to_string(),
+                       format!("{:.0}%", (s7 - 1.0) * 100.0),
+                       format!("{:.0}%", (s32 - 1.0) * 100.0)]);
+    }
+    print_table("INT8 speedup vs context length (H100)",
+                &["ctx", "7B", "32B"], &rows);
+
+    if std::env::args().any(|a| a == "--serve") {
+        println!("\nserving-scheduler cross-check on this testbed...");
+        let (rt, base) = bk::setup()?;
+        let man = rt.manifest().clone();
+        let tk = Tokenizer::new();
+        let suite = Suite::by_name("deepscaler").unwrap();
+        for mode in [QuantMode::Bf16, QuantMode::Int8] {
+            let w = rt.engine_weights(mode, &base.params)?;
+            let mut engine = StepEngine::new(&rt, w);
+            let mut sched = Scheduler::new(&mut engine, man.max_seq, man.eos_id);
+            let mut sampler = suite.train_sampler(3);
+            for id in 0..64u64 {
+                let (_, prob) = sampler.next();
+                sched.submit(RolloutRequest {
+                    id, prompt: tk.encode_prompt(&prob.prompt), max_new: 32,
+                    temperature: 1.0, top_p: 1.0, seed: id,
+                });
+            }
+            let res = sched.run_to_completion()?;
+            println!("  {:5}: {} reqs, {:.1} tok/s, occupancy {:.2}",
+                     mode.tag(), res.len(), sched.stats.tokens_per_s(),
+                     sched.stats.mean_occupancy());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,212 @@
+"""AOT driver: lower every L2 entry point to HLO text + manifest.json.
+
+Run via ``make artifacts`` (``python -m compile.aot --out-dir ../artifacts``).
+Python runs ONCE here; the Rust coordinator is self-contained afterwards.
+
+Interchange format is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import ModelConfig, FLAGS, ARTIFACTS
+from . import model as M
+
+METRIC_NAMES = [
+    "loss", "pg_loss", "kl_ref", "entropy", "value_loss", "clip_frac",
+    "ratio_mean", "ratio_max", "rho_max", "grad_norm", "trunc_frac",
+    "prob_diff_behav_prox", "kl_behav_prox", "clip_hi_mean", "update_norm",
+    "lp_theta_mean",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entry_points(cfg: ModelConfig):
+    """name -> (fn, example_args).  Keep signatures in sync with
+    rust/src/runtime/exec.rs (the manifest carries them for verification)."""
+    f32, i32 = jnp.float32, jnp.int32
+    P, Pa, Pb, Nq = cfg.n_params, cfg.a_size, cfg.b_size, cfg.n_qscales
+    B, S, Pr = cfg.rollout_batch, cfg.max_seq, cfg.max_prompt
+    Bt, T = cfg.train_batch, cfg.max_seq
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    NF = FLAGS.N
+    max_new = S - Pr
+
+    params = _sds((P,), f32)
+    flat_a = _sds((Pa,), f32)
+    flat_b = _sds((Pb,), f32)
+    qw = _sds((Pb,), jnp.int8)
+    qs = _sds((Nq,), f32)
+    toks_r = _sds((B, S), i32)
+    lens = _sds((B,), i32)
+    kv = _sds((L, B, H, S, Dh), f32)
+    pos = _sds((B,), i32)
+    tok1 = _sds((B,), i32)
+    toks_t = _sds((Bt, T), i32)
+    grid_t = _sds((Bt, T), f32)
+    scalar_f = _sds((), f32)
+    scalar_i = _sds((), i32)
+    flags = _sds((NF,), f32)
+    prompt = _sds((B, Pr), i32)
+
+    def w_bf(p):
+        return M.weights_bf16(cfg, p)
+
+    def w_i8(a, q, s):
+        return M.weights_int8(cfg, a, q, s)
+
+    def w_f8(a, b):
+        return M.weights_fp8(cfg, a, b)
+
+    eps = {}
+
+    eps["init_params"] = (
+        lambda seed: (M.init_params(cfg, seed),),
+        [scalar_i])
+
+    # ---- rollout (generate): the QuRL hot path ---------------------------
+    eps["generate_bf16"] = (
+        lambda p, t, l, seed, temp, tp:
+            M.generate(cfg, w_bf(p), t, l, seed, temp, tp, max_new),
+        [params, toks_r, lens, scalar_i, scalar_f, scalar_f])
+    eps["generate_int8"] = (
+        lambda a, q, s, t, l, seed, temp, tp:
+            M.generate(cfg, w_i8(a, q, s), t, l, seed, temp, tp, max_new),
+        [flat_a, qw, qs, toks_r, lens, scalar_i, scalar_f, scalar_f])
+    eps["generate_fp8"] = (
+        lambda a, b, t, l, seed, temp, tp:
+            M.generate(cfg, w_f8(a, b), t, l, seed, temp, tp, max_new),
+        [flat_a, flat_b, toks_r, lens, scalar_i, scalar_f, scalar_f])
+
+    # ---- serving-style prefill/decode (per-step scheduler path) ----------
+    eps["prefill_bf16"] = (
+        lambda p, t, l: M.prefill(cfg, w_bf(p), t, l),
+        [params, prompt, lens])
+    eps["prefill_int8"] = (
+        lambda a, q, s, t, l: M.prefill(cfg, w_i8(a, q, s), t, l),
+        [flat_a, qw, qs, prompt, lens])
+    eps["prefill_fp8"] = (
+        lambda a, b, t, l: M.prefill(cfg, w_f8(a, b), t, l),
+        [flat_a, flat_b, prompt, lens])
+    eps["decode_bf16"] = (
+        lambda p, ck, cv, ps, tk: M.decode_step(cfg, w_bf(p), ck, cv, ps, tk),
+        [params, kv, kv, pos, tok1])
+    eps["decode_int8"] = (
+        lambda a, q, s, ck, cv, ps, tk:
+            M.decode_step(cfg, w_i8(a, q, s), ck, cv, ps, tk),
+        [flat_a, qw, qs, kv, kv, pos, tok1])
+    eps["decode_fp8"] = (
+        lambda a, b, ck, cv, ps, tk:
+            M.decode_step(cfg, w_f8(a, b), ck, cv, ps, tk),
+        [flat_a, flat_b, kv, kv, pos, tok1])
+
+    # ---- teacher-forced scoring ------------------------------------------
+    eps["logprob_bf16"] = (
+        lambda p, t: M.sequence_scores(cfg, w_bf(p), t),
+        [params, toks_t])
+    eps["logprob_int8"] = (
+        lambda a, q, s, t: (M.sequence_scores(cfg, w_i8(a, q, s), t)[0],),
+        [flat_a, qw, qs, toks_t])
+    eps["logprob_fp8"] = (
+        lambda a, b, t: (M.sequence_scores(cfg, w_f8(a, b), t)[0],),
+        [flat_a, flat_b, toks_t])
+
+    # ---- optimization -----------------------------------------------------
+    eps["train_step"] = (
+        lambda p, m, v, st, t, mk, ad, lb, lpx, lr_, rt, ov, fl:
+            M.train_step(cfg, p, m, v, st, t, mk, ad, lb, lpx, lr_, rt, ov, fl),
+        [params, params, params, scalar_f, toks_t, grid_t, grid_t, grid_t,
+         grid_t, grid_t, grid_t, grid_t, flags])
+    eps["sft_step"] = (
+        lambda p, m, v, st, t, mk, fl: M.sft_step(cfg, p, m, v, st, t, mk, fl),
+        [params, params, params, scalar_f, toks_t, grid_t, flags])
+
+    # ---- quantization ------------------------------------------------------
+    eps["quantize_int8"] = (
+        lambda b: M.quantize_section_b_int8(cfg, b), [flat_b])
+    eps["quantize_fp8"] = (
+        lambda b: (M.quantize_section_b_fp8(cfg, b),), [flat_b])
+    eps["uaq_scale"] = (
+        lambda p, s: (M.uaq_scale(cfg, p, s),), [params, scalar_f])
+
+    return eps
+
+
+def lower_all(cfg: ModelConfig, out_dir: str, only=None, verbose=True):
+    eps = build_entry_points(cfg)
+    os.makedirs(out_dir, exist_ok=True)
+    sigs = {}
+    for name, (fn, args) in eps.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *args)
+        sigs[name] = {
+            "inputs": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for a in args],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                        for o in out_avals],
+        }
+        if verbose:
+            print(f"  {name:16s} {len(text)/1e6:7.2f} MB hlo "
+                  f"({time.time()-t0:5.1f}s)", flush=True)
+    return sigs
+
+
+def write_manifest(cfg: ModelConfig, sigs, out_dir: str):
+    manifest = {
+        "config": cfg.to_manifest_dict(),
+        "flags": {k: getattr(FLAGS, k) for k in
+                  [a for a in dir(FLAGS) if a.isupper()]},
+        "metric_names": METRIC_NAMES,
+        "special_tokens": {"pad": M.PAD_ID, "bos": M.BOS_ID, "eos": M.EOS_ID},
+        "max_new": cfg.max_seq - cfg.max_prompt,
+        "artifacts": sigs,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="lower a subset (still rewrites the manifest)")
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    t0 = time.time()
+    print(f"lowering {len(ARTIFACTS) + 4} artifacts "
+          f"(model: {cfg.n_params} params)", flush=True)
+    sigs = lower_all(cfg, args.out_dir, only=args.only)
+    write_manifest(cfg, sigs, args.out_dir)
+    print(f"done in {time.time()-t0:.1f}s -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

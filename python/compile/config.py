@@ -1,0 +1,181 @@
+"""Model / artifact configuration shared by the L2 model and the AOT driver.
+
+The same numbers are emitted into ``artifacts/manifest.json`` so the Rust
+coordinator (L3) never hard-codes shapes: it reads the manifest and sizes its
+buffers from it.  Keep this file dependency-free (no jax import) so the AOT
+driver can be introspected cheaply.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM dimensions (the paper's actor, scaled to this testbed).
+
+    The paper trains 0.5B-32B Qwen/DeepSeek models; the QuRL phenomena
+    (importance-ratio blow-up, clipping instability, update-vs-quantization
+    noise mismatch) are dimensionless, so we reproduce them on a from-scratch
+    ~0.8M-param model (see DESIGN.md §2 for the substitution argument).
+    """
+
+    vocab_size: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    max_seq: int = 128          # KV-cache length == train sequence length
+    max_prompt: int = 48        # prefill artifact width
+    rollout_batch: int = 64     # decode/prefill batch (GRPO: 8 prompts x G=8)
+    train_batch: int = 64       # train_step microbatch (sequences)
+    # INT8 W8A8 tiling (TPU-shaped; interpret=True on CPU). 'fused' profile
+    # uses one block over K for speed; 'tiled' splits K for the VMEM story.
+    block_m: int = 64
+    block_n: int = 128
+    block_k: int = 128
+    kernel_profile: str = "fused"  # "fused" | "tiled"
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    # ---- flat parameter layout -------------------------------------------
+    # Section A (never quantized): embed, pos, norms, lm head, value head.
+    # Section B (quantized matrices): per layer qkv, attn_out, mlp_up,
+    # mlp_down.  A comes first so Rust can slice [0..a_size) / [a_size..).
+    def section_a(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        names: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed", (self.vocab_size, self.d_model)),
+            ("pos", (self.max_seq, self.d_model)),
+        ]
+        for l in range(self.n_layers):
+            names.append((f"layer{l}.ln1", (self.d_model,)))
+            names.append((f"layer{l}.ln2", (self.d_model,)))
+        names.append(("ln_f", (self.d_model,)))
+        names.append(("head", (self.d_model, self.vocab_size)))
+        names.append(("v_head", (self.d_model,)))
+        names.append(("v_bias", (1,)))
+        return names
+
+    def section_b(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        names: List[Tuple[str, Tuple[int, ...]]] = []
+        for l in range(self.n_layers):
+            names.append((f"layer{l}.qkv", (self.d_model, 3 * self.d_model)))
+            names.append((f"layer{l}.attn_out", (self.d_model, self.d_model)))
+            names.append((f"layer{l}.mlp_up", (self.d_model, self.d_ff)))
+            names.append((f"layer{l}.mlp_down", (self.d_ff, self.d_model)))
+        return names
+
+    def layout(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        return self.section_a() + self.section_b()
+
+    @staticmethod
+    def _numel(shape: Tuple[int, ...]) -> int:
+        n = 1
+        for s in shape:
+            n *= s
+        return n
+
+    @property
+    def a_size(self) -> int:
+        return sum(self._numel(s) for _, s in self.section_a())
+
+    @property
+    def b_size(self) -> int:
+        return sum(self._numel(s) for _, s in self.section_b())
+
+    @property
+    def n_params(self) -> int:
+        return self.a_size + self.b_size
+
+    @property
+    def n_qscales(self) -> int:
+        """One scale per output channel of each quantized matrix."""
+        return sum(s[-1] for _, s in self.section_b())
+
+    def offsets(self):
+        """name -> (offset, shape) over the full flat vector (A then B)."""
+        out = {}
+        off = 0
+        for name, shape in self.layout():
+            out[name] = (off, shape)
+            off += self._numel(shape)
+        return out
+
+    def scale_offsets(self):
+        """name -> (offset, n_channels) into the flat per-channel scale vec."""
+        out = {}
+        off = 0
+        for name, shape in self.section_b():
+            out[name] = (off, shape[-1])
+            off += shape[-1]
+        return out
+
+    def to_manifest_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["a_size"] = self.a_size
+        d["b_size"] = self.b_size
+        d["n_params"] = self.n_params
+        d["n_qscales"] = self.n_qscales
+        d["params"] = [
+            {"name": n, "shape": list(s), "offset": self.offsets()[n][0]}
+            for n, s in self.layout()
+        ]
+        d["qscales"] = [
+            {"name": n, "offset": self.scale_offsets()[n][0],
+             "channels": self.scale_offsets()[n][1]}
+            for n, _ in self.section_b()
+        ]
+        return d
+
+
+@dataclass(frozen=True)
+class TrainFlags:
+    """Indices into the flat f32 `flags` input of the train_step artifact.
+
+    Keep in sync with rust/src/rl/objective.rs (FLAG_* constants) — the
+    manifest also carries these indices for cross-checking.
+    """
+
+    OBJ_MODE: int = 0       # 0=onpolicy 1=naive(Eq.3) 2=decoupled(Eq.4)
+    #                         3=TIS(Eq.5) 4=ACR(Eq.9)
+    EPS_LOW: int = 1        # lower clip epsilon
+    EPS_HIGH: int = 2       # upper clip epsilon (DAPO decoupled clip)
+    TIS_CAP: int = 3        # C in min(pi_prox/pi_behav, C)
+    KL_COEF: int = 4        # k3 KL-to-reference coefficient (GRPO)
+    VF_COEF: int = 5        # value-loss coefficient (PPO)
+    ENT_COEF: int = 6       # entropy bonus coefficient
+    TOKEN_MEAN: int = 7     # 0 = GRPO seq-mean-of-token-mean, 1 = DAPO token-mean
+    LR: int = 8
+    BETA1: int = 9
+    BETA2: int = 10
+    ADAM_EPS: int = 11
+    WEIGHT_DECAY: int = 12
+    VALUE_CLIP: int = 13
+    MAX_GRAD_NORM: int = 14  # 0 = no clipping
+    N: int = 15
+
+
+FLAGS = TrainFlags()
+
+# Artifact names (basenames under artifacts/); the Rust runtime enumerates
+# this list from the manifest.
+ARTIFACTS = [
+    "prefill_bf16",
+    "prefill_int8",
+    "prefill_fp8",
+    "decode_bf16",
+    "decode_int8",
+    "decode_fp8",
+    "logprob_bf16",
+    "logprob_int8",
+    "logprob_fp8",
+    "train_step",
+    "quantize_int8",
+    "quantize_fp8",
+    "uaq_scale",
+    "init_params",
+]

@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+from . import ref, int8, fp8, quantize  # noqa: F401

@@ -1,0 +1,77 @@
+"""Pallas FP8 (e4m3fn) fake-quantized matmul (L1).
+
+The FP8 rollout path of the paper uses vLLM's FP8 GEMMs.  On this testbed we
+emulate e4m3fn *exactly* (RNE onto the 3-mantissa-bit grid, saturation at
++-448, subnormals to 2^-9) in f32 — "fake quantization".  Weights arrive
+already fake-quantized (per-output-channel scale folded back in, see
+ref.weight_quant_fp8 / the quantize_fp8 artifact); the kernel fuses
+token-wise activation fake-quantization into its prologue and runs the GEMM
+in f32 (a real deployment would keep e4m3 operands and accumulate in f32 on
+the MXU — numerics are identical).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import E4M3_MAX, E4M3_MIN_EXP, E4M3_MAX_EXP, SCALE_EPS
+
+
+def _quant_e4m3(x):
+    """In-kernel e4m3fn grid rounding (same math as ref.quant_e4m3)."""
+    a = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(a, jnp.float32(2.0 ** -40))))
+    e = jnp.clip(e, E4M3_MIN_EXP, E4M3_MAX_EXP)
+    step = jnp.exp2(e - 3.0)
+    q = jnp.round(x / step) * step
+    return jnp.clip(q, -E4M3_MAX, E4M3_MAX)
+
+
+def _fp8_kernel(x_ref, w_ref, o_ref):
+    """Block: x [bm, K] f32, w_fq [K, bn] f32 -> o [bm, bn] f32."""
+    x = x_ref[...]
+    # prologue: token-wise scaled e4m3 fake quantization
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    s = jnp.maximum(absmax, SCALE_EPS) / E4M3_MAX
+    xq = _quant_e4m3(x / s[:, None]) * s[:, None]
+    o_ref[...] = jnp.dot(xq, w_ref[...])
+
+
+def fp8_matmul(x, w_fq, *, block_m=64, block_n=128):
+    """x [M, K] f32 @ w_fq [K, N] (fake-quantized f32) -> [M, N] f32."""
+    m, k = x.shape
+    k2, n = w_fq.shape
+    assert k == k2
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _fp8_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_fq)
+
+
+def _quant_e4m3_kernel(x_ref, o_ref):
+    o_ref[...] = _quant_e4m3(x_ref[...])
+
+
+def quant_e4m3_pallas(x, *, block=4096):
+    """Standalone e4m3 grid rounding over a flat vector (used by the
+    quantize_fp8 artifact's per-channel path and by tests)."""
+    (n,) = x.shape
+    b = min(block, n)
+    assert n % b == 0
+    return pl.pallas_call(
+        _quant_e4m3_kernel,
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x)

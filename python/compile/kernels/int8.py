@@ -1,0 +1,180 @@
+"""Pallas INT8 W8A8 matmul — the paper's rollout hot-spot (L1).
+
+The paper rides vLLM's CUTLASS INT8 GEMMs (threadblock tiling + tensor
+cores).  Re-expressed for TPU (see DESIGN.md §6 Hardware-Adaptation):
+
+* the HBM<->VMEM schedule is a Pallas grid + BlockSpecs — (M, N[, K]) tiles
+  instead of CUDA threadblocks;
+* the MXU systolic array is fed i8 x i8 -> i32; on this CPU testbed we run
+  ``interpret=True`` so the i32 accumulation is emulated with *exact* f32
+  integer arithmetic (|acc| <= 127^2 * K < 2^24 for K <= 1024 — asserted);
+* token-wise activation quantization (absmax -> scale -> RNE round) is fused
+  into the kernel prologue, exactly where vLLM fuses it into the GEMM;
+* per-output-channel weight scales multiply the accumulator in the epilogue.
+
+Two profiles (ModelConfig.kernel_profile):
+  "fused"  — one kernel, grid (M/bm, N/bn), whole K resident in VMEM.  The
+             default: all QuRL layer shapes (K <= 512) fit comfortably.
+  "tiled"  — split-K pipeline, grid (M/bm, N/bn, K/bk) with a separate
+             activation-quant kernel; the shape a real TPU would use when K
+             outgrows VMEM.  Kept for the VMEM-schedule ablation.
+Both are validated against kernels/ref.py (bit-exact).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INT8_QMAX, SCALE_EPS
+
+# Exactness bound for f32 emulation of the i32 MXU accumulator.
+_MAX_EXACT_K = 1024
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+# --------------------------------------------------------------------------
+# fused profile: activation-quant prologue + GEMM in one kernel
+# --------------------------------------------------------------------------
+
+def _fused_kernel(x_ref, wq_ref, wscale_ref, o_ref):
+    """Block: x [bm, K] f32, wq [K, bn] i8, wscale [bn] f32 -> o [bm, bn]."""
+    x = x_ref[...]
+    # prologue: token-wise symmetric int8 quantization (fused, like vLLM)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    ascale = jnp.maximum(absmax, SCALE_EPS) / INT8_QMAX
+    xq = jnp.clip(jnp.round(x / ascale[:, None]), -INT8_QMAX, INT8_QMAX)
+    # MXU: i8 x i8 -> i32; f32 ints are exact here (|acc| < 2^24, K <= 1024)
+    acc = jnp.dot(xq, wq_ref[...].astype(jnp.float32))
+    # epilogue: dequantize with a_scale[m] * w_scale[n]
+    o_ref[...] = acc * ascale[:, None] * wscale_ref[...][None, :]
+
+
+def int8_matmul_fused(x, wq, wscale, *, block_m=64, block_n=128):
+    """x [M, K] f32 @ wq [K, N] i8 (per-channel wscale [N]) -> [M, N] f32."""
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2 and wscale.shape == (n,)
+    assert k <= _MAX_EXACT_K, "f32 emulation of i32 accumulate needs K<=1024"
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x, wq, wscale)
+
+
+# --------------------------------------------------------------------------
+# tiled profile: standalone act-quant kernel + split-K GEMM
+# --------------------------------------------------------------------------
+
+def _act_quant_kernel(x_ref, xq_ref, s_ref):
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    s = jnp.maximum(absmax, SCALE_EPS) / INT8_QMAX
+    xq_ref[...] = jnp.clip(jnp.round(x / s[:, None]), -INT8_QMAX, INT8_QMAX
+                           ).astype(jnp.int8)
+    s_ref[...] = s
+
+
+def act_quant_int8_pallas(x, *, block_m=64):
+    """Token-wise int8 activation quantization as its own Pallas kernel."""
+    m, k = x.shape
+    bm = min(block_m, m)
+    assert m % bm == 0
+    return pl.pallas_call(
+        _act_quant_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def _tiled_kernel(nk, xq_ref, ascale_ref, wq_ref, wscale_ref, o_ref):
+    """Split-K accumulation: grid (M/bm, N/bn, K/bk), K innermost.
+
+    o_ref doubles as the accumulator (raw integer partial sums, exact in
+    f32); the epilogue on the last K step applies both scales.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(xq_ref[...].astype(jnp.float32),
+                   wq_ref[...].astype(jnp.float32))
+    o_ref[...] += part
+
+    @pl.when(kk == nk - 1)
+    def _epilogue():
+        o_ref[...] = (o_ref[...]
+                      * ascale_ref[...][:, None]
+                      * wscale_ref[...][None, :])
+
+
+def int8_matmul_tiled(x, wq, wscale, *, block_m=64, block_n=128, block_k=128):
+    """Split-K W8A8 GEMM (act-quant kernel + 3D-grid GEMM kernel)."""
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2 and wscale.shape == (n,)
+    assert k <= _MAX_EXACT_K
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    xq, ascale = act_quant_int8_pallas(x, block_m=bm)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_tiled_kernel, nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm,), lambda i, j, kk: (i,)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(xq, ascale, wq, wscale)
+
+
+def int8_matmul(x, wq, wscale, *, profile="fused",
+                block_m=64, block_n=128, block_k=128):
+    """Dispatch on kernel profile (see module docstring)."""
+    if profile == "fused":
+        return int8_matmul_fused(x, wq, wscale, block_m=block_m,
+                                 block_n=block_n)
+    if profile == "tiled":
+        return int8_matmul_tiled(x, wq, wscale, block_m=block_m,
+                                 block_n=block_n, block_k=block_k)
+    raise ValueError(f"unknown kernel profile {profile!r}")
+
+
+def vmem_bytes_fused(block_m, k, block_n):
+    """VMEM footprint estimate of one fused-profile block (DESIGN.md §8)."""
+    x = block_m * k * 4          # f32 activations
+    xq = block_m * k * 4         # quantized copy (interpret keeps f32 width)
+    w = k * block_n * 1          # i8 weights
+    o = block_m * block_n * 4    # f32 out tile
+    scales = (block_m + block_n) * 4
+    return x + xq + w + o + scales

@@ -1,0 +1,66 @@
+"""Pallas per-output-channel weight quantizers (L1).
+
+These back the ``quantize_int8`` / ``quantize_fp8`` artifacts that L3 runs
+once per RL step to refresh the rollout engine's weights — the QuRL pipeline
+step "theta_old -> Q(theta_old)" (paper Fig. 1).  Grid is over output
+channels so each block sees whole columns (the scale reduction axis).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INT8_QMAX, E4M3_MAX, SCALE_EPS
+from .fp8 import _quant_e4m3
+
+
+def _wq_int8_kernel(w_ref, q_ref, s_ref):
+    w = w_ref[...]
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    s = jnp.maximum(absmax, SCALE_EPS) / INT8_QMAX
+    q_ref[...] = jnp.clip(jnp.round(w / s[None, :]), -INT8_QMAX, INT8_QMAX
+                          ).astype(jnp.int8)
+    s_ref[...] = s
+
+
+def weight_quant_int8_pallas(w, *, block_n=128):
+    """w [K, N] f32 -> (q [K, N] i8, scale [N] f32), per-output-channel."""
+    k, n = w.shape
+    bn = min(block_n, n)
+    assert n % bn == 0
+    return pl.pallas_call(
+        _wq_int8_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((k, bn), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((k, bn), lambda j: (0, j)),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), jnp.int8),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(w)
+
+
+def _wq_fp8_kernel(w_ref, o_ref):
+    w = w_ref[...]
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    s = jnp.maximum(absmax, SCALE_EPS) / E4M3_MAX
+    o_ref[...] = _quant_e4m3(w / s[None, :]) * s[None, :]
+
+
+def weight_quant_fp8_pallas(w, *, block_n=128):
+    """w [K, N] f32 -> fake-quantized f32 [K, N], per-output-channel e4m3."""
+    k, n = w.shape
+    bn = min(block_n, n)
+    assert n % bn == 0
+    return pl.pallas_call(
+        _wq_fp8_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((k, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((k, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=True,
+    )(w)

@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact (or bit-exact) counterpart here;
+pytest + hypothesis assert the Pallas implementations match.  The Rust
+``quant`` module mirrors the same arithmetic (cross-checked in cargo tests via
+the quantize_* artifacts), so these functions are the single source of truth
+for QuRL's quantization semantics:
+
+* INT8: symmetric, per-output-channel weight scales (absmax/127), token-wise
+  activation scales (absmax/127), round-to-nearest-even, i32 accumulation.
+* FP8:  OCP e4m3fn "fake quantization" — round-to-nearest-even onto the e4m3
+  grid with saturation to +-448, subnormals down to 2^-9, applied to both
+  weights (per-channel scaled) and activations (token-wise scaled).
+"""
+
+import jax.numpy as jnp
+
+INT8_QMAX = 127.0
+E4M3_MAX = 448.0
+E4M3_MIN_EXP = -6.0   # smallest normal exponent
+E4M3_MAX_EXP = 8.0    # largest normal exponent (448 = 2^8 * 1.75)
+SCALE_EPS = 1e-8      # floor on absmax so all-zero rows stay well-defined
+
+
+# --------------------------------------------------------------------------
+# INT8
+# --------------------------------------------------------------------------
+
+def act_quant_int8(x):
+    """Token-wise symmetric INT8 quantization of activations.
+
+    x: [M, K] f32  ->  (q: [M, K] i8, scale: [M] f32)  with
+    scale = max(|x_row|, eps)/127,  q = clip(rne(x/scale), -127, 127).
+    """
+    absmax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(absmax, SCALE_EPS) / INT8_QMAX
+    q = jnp.clip(jnp.round(x / scale[..., None]), -INT8_QMAX, INT8_QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def weight_quant_int8(w):
+    """Per-output-channel symmetric INT8 quantization.
+
+    w: [K, N] f32  ->  (q: [K, N] i8, scale: [N] f32).
+    """
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.maximum(absmax, SCALE_EPS) / INT8_QMAX
+    q = jnp.clip(jnp.round(w / scale[None, :]), -INT8_QMAX, INT8_QMAX)
+    return q.astype(jnp.int8), scale
+
+
+def int8_matmul(x, wq, wscale):
+    """W8A8 GEMM: quantize activations token-wise, multiply in integers
+    (i32 accumulation), dequantize with a_scale[m] * w_scale[n].
+
+    x: [M, K] f32, wq: [K, N] i8, wscale: [N] f32 -> [M, N] f32.
+    """
+    xq, ascale = act_quant_int8(x)
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    return acc.astype(jnp.float32) * ascale[:, None] * wscale[None, :]
+
+
+def dequant_int8(wq, wscale):
+    """Inverse of weight_quant_int8 up to rounding: [K,N] i8 -> f32."""
+    return wq.astype(jnp.float32) * wscale[None, :]
+
+
+# --------------------------------------------------------------------------
+# FP8 (e4m3fn)
+# --------------------------------------------------------------------------
+
+def quant_e4m3(x):
+    """Round-to-nearest-even onto the e4m3fn grid with saturation.
+
+    Exact emulation: the quantum at exponent e is 2^(e-3) (3 mantissa bits);
+    exponents below -6 share the subnormal quantum 2^-9; values above 448
+    saturate (e4m3fn has no inf).
+    """
+    a = jnp.abs(x)
+    # floor(log2 a), guarded for zeros; clamp to the normal exponent range.
+    e = jnp.floor(jnp.log2(jnp.maximum(a, jnp.float32(2.0 ** -40))))
+    e = jnp.clip(e, E4M3_MIN_EXP, E4M3_MAX_EXP)
+    step = jnp.exp2(e - 3.0)
+    q = jnp.round(x / step) * step  # jnp.round = RNE
+    return jnp.clip(q, -E4M3_MAX, E4M3_MAX)
+
+
+def weight_quant_fp8(w):
+    """Per-output-channel scaled e4m3 fake quantization.
+
+    Returns the *fake-quantized* f32 weights (scale folded back in), which is
+    what the fp8 decode/logprob artifacts consume — numerically identical to
+    storing e4m3 + scale, without needing an FP8 dtype on this testbed.
+    """
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.maximum(absmax, SCALE_EPS) / E4M3_MAX
+    return quant_e4m3(w / scale[None, :]) * scale[None, :]
+
+
+def act_quant_fp8(x):
+    """Token-wise scaled e4m3 fake quantization of activations."""
+    absmax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(absmax, SCALE_EPS) / E4M3_MAX
+    return quant_e4m3(x / scale[..., None]) * scale[..., None]
+
+
+def fp8_matmul(x, w_fq):
+    """FP8 GEMM with fake-quantized weights: fq(x) @ w_fq in f32."""
+    return jnp.matmul(act_quant_fp8(x), w_fq)

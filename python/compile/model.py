@@ -1,0 +1,622 @@
+"""L2: the QuRL actor — a transformer LM in JAX, plus the paper's RL losses.
+
+Everything here is *build-time only*: `aot.py` lowers the jitted entry points
+to HLO text which the Rust coordinator executes via PJRT.  The module covers:
+
+* the actor network (RMSNorm, MHA with learned positions, GELU MLP), with
+  three weight modes — ``bf16`` (full precision), ``int8`` (W8A8 via the
+  Pallas kernel), ``fp8`` (e4m3 fake-quantized weights + fused activation
+  fake-quant kernel);
+* batched generation (prefill + lax.scan decode + sampling + EOS masking) —
+  the paper's *rollout*, all inside one HLO module so the request path has
+  no per-token host/device round-trips;
+* teacher-forced log-probabilities / values / entropies;
+* the QuRL training objective (Eq. 1/3/4/5/9 selected by a runtime flag:
+  on-policy, naive quantized IS, decoupled PPO, TIS, ACR), k3 KL
+  regularization, PPO value loss, AdamW;
+* Update-Aware Quantization's invariant scaling (Eq. 11-12);
+* parameter init / flatten / unflatten against the manifest layout.
+
+Conventions: tokens are left-aligned with PAD=0; position t's logits predict
+token t+1; ``lp[b, t]`` is the logprob of token t given its prefix (lp[:,0]
+is 0).  A generation mask marks sampled tokens (EOS inclusive).
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, FLAGS
+from .kernels import int8 as k_int8
+from .kernels import fp8 as k_fp8
+from .kernels import quantize as k_quant
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+_NEG_INF = -1e9
+_RMS_EPS = 1e-6
+
+
+class Weights(NamedTuple):
+    """Actor weights in one of three modes.
+
+    mode "bf16": mats = full-precision section-B matrices.
+    mode "fp8":  mats = fake-quantized section-B matrices (same graph shape).
+    mode "int8": qw/qs = int8 matrices + per-output-channel scales.
+    ``aux`` always holds section A (embed, pos, norms, head, value head).
+    """
+
+    mode: str
+    aux: dict
+    mats: dict
+    qw: dict
+    qs: dict
+
+
+# --------------------------------------------------------------------------
+# parameter plumbing
+# --------------------------------------------------------------------------
+
+def unflatten(cfg: ModelConfig, flat):
+    out = {}
+    for name, (off, shape) in cfg.offsets().items():
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+    return out
+
+
+def flatten(cfg: ModelConfig, params: dict):
+    parts = [params[name].reshape(-1) for name, _ in cfg.layout()]
+    return jnp.concatenate(parts)
+
+
+def unflatten_b(cfg: ModelConfig, flat_b):
+    """Section-B-only flat vector -> dict of matrices."""
+    out = {}
+    a = cfg.a_size
+    for name, shape in cfg.section_b():
+        off = cfg.offsets()[name][0] - a
+        n = shape[0] * shape[1]
+        out[name] = jax.lax.dynamic_slice(flat_b, (off,), (n,)).reshape(shape)
+    return out
+
+
+def unflatten_scales(cfg: ModelConfig, flat_s):
+    out = {}
+    for name, (off, ch) in cfg.scale_offsets().items():
+        out[name] = jax.lax.dynamic_slice(flat_s, (off,), (ch,))
+    return out
+
+
+def weights_bf16(cfg: ModelConfig, flat):
+    p = unflatten(cfg, flat)
+    aux = {n: p[n] for n, _ in cfg.section_a()}
+    mats = {n: p[n] for n, _ in cfg.section_b()}
+    return Weights("bf16", aux, mats, {}, {})
+
+
+def weights_fp8(cfg: ModelConfig, flat_a, flat_b_fq):
+    aux_all = unflatten(cfg, jnp.concatenate([flat_a, flat_b_fq]))
+    aux = {n: aux_all[n] for n, _ in cfg.section_a()}
+    mats = {n: aux_all[n] for n, _ in cfg.section_b()}
+    return Weights("fp8", aux, mats, {}, {})
+
+
+def weights_int8(cfg: ModelConfig, flat_a, flat_qw, flat_qs):
+    a_named = {}
+    off = 0
+    for name, shape in cfg.section_a():
+        n = 1
+        for s in shape:
+            n *= s
+        a_named[name] = jax.lax.dynamic_slice(flat_a, (off,), (n,)).reshape(shape)
+        off += n
+    qw = unflatten_b(cfg, flat_qw)
+    qs = unflatten_scales(cfg, flat_qs)
+    return Weights("int8", a_named, {}, qw, qs)
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Deterministic GPT-style init from an i32 seed (exported artifact)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4 + 6 * cfg.n_layers)
+    p = {}
+    p["embed"] = 0.02 * jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+    p["pos"] = 0.01 * jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model))
+    p["head"] = 0.02 * jax.random.normal(ks[2], (cfg.d_model, cfg.vocab_size))
+    p["v_head"] = jnp.zeros((cfg.d_model,))
+    p["v_bias"] = jnp.zeros((1,))
+    p["ln_f"] = jnp.ones((cfg.d_model,))
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for l in range(cfg.n_layers):
+        k = ks[4 + 6 * l:4 + 6 * (l + 1)]
+        p[f"layer{l}.ln1"] = jnp.ones((cfg.d_model,))
+        p[f"layer{l}.ln2"] = jnp.ones((cfg.d_model,))
+        p[f"layer{l}.qkv"] = 0.02 * jax.random.normal(
+            k[0], (cfg.d_model, 3 * cfg.d_model))
+        p[f"layer{l}.attn_out"] = 0.02 * resid_scale * jax.random.normal(
+            k[1], (cfg.d_model, cfg.d_model))
+        p[f"layer{l}.mlp_up"] = 0.02 * jax.random.normal(
+            k[2], (cfg.d_model, cfg.d_ff))
+        p[f"layer{l}.mlp_down"] = 0.02 * resid_scale * jax.random.normal(
+            k[3], (cfg.d_ff, cfg.d_model))
+    return flatten(cfg, {n: p[n].astype(jnp.float32) for n, _ in cfg.layout()})
+
+
+# --------------------------------------------------------------------------
+# network pieces
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + _RMS_EPS) * g
+
+
+def _linear(cfg: ModelConfig, w: Weights, name: str, x2d):
+    """Quantization-mode-dispatched linear over [M, K] activations."""
+    if w.mode == "bf16":
+        return jnp.matmul(x2d, w.mats[name])
+    m = x2d.shape[0]
+    bm = m if m <= 512 else 512
+    if w.mode == "fp8":
+        return k_fp8.fp8_matmul(x2d, w.mats[name], block_m=bm,
+                                block_n=cfg.block_n)
+    if w.mode == "int8":
+        return k_int8.int8_matmul(
+            x2d, w.qw[name], w.qs[name], profile=cfg.kernel_profile,
+            block_m=bm, block_n=cfg.block_n, block_k=cfg.block_k)
+    raise ValueError(w.mode)
+
+
+def embed_tokens(cfg: ModelConfig, w: Weights, tokens):
+    """One-hot matmul embedding (avoids HLO gather for the 0.5.1 parser)."""
+    oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=jnp.float32)
+    return oh @ w.aux["embed"]
+
+
+def forward_full(cfg: ModelConfig, w: Weights, tokens):
+    """Teacher-forced forward over [B, T] tokens -> hidden states [B, T, d].
+
+    Causal attention; PAD positions flow through but are masked out by the
+    caller (their keys are attended only by other PAD queries to the right,
+    whose outputs are discarded -- PAD only ever appears as a suffix).
+    """
+    b, t = tokens.shape
+    x = embed_tokens(cfg, w, tokens) + w.aux["pos"][None, :t, :]
+    causal = jnp.tril(jnp.ones((t, t), dtype=jnp.float32))
+    neg = (1.0 - causal) * _NEG_INF
+    scale = 1.0 / jnp.sqrt(float(cfg.head_dim))
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, w.aux[f"layer{l}.ln1"])
+        qkv = _linear(cfg, w, f"layer{l}.qkv", h.reshape(b * t, cfg.d_model))
+        qkv = qkv.reshape(b, t, 3, cfg.n_heads, cfg.head_dim)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        # [B, H, T, T]
+        scores = jnp.einsum("bihd,bjhd->bhij", q, k) * scale + neg[None, None]
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhij,bjhd->bihd", probs, v).reshape(b * t, cfg.d_model)
+        x = x + _linear(cfg, w, f"layer{l}.attn_out", ctx).reshape(b, t, -1)
+        h = rmsnorm(x, w.aux[f"layer{l}.ln2"])
+        u = _linear(cfg, w, f"layer{l}.mlp_up", h.reshape(b * t, cfg.d_model))
+        u = jax.nn.gelu(u, approximate=True)
+        x = x + _linear(cfg, w, f"layer{l}.mlp_down", u).reshape(b, t, -1)
+    return rmsnorm(x, w.aux["ln_f"])
+
+
+def logits_from_hidden(w: Weights, h):
+    return h @ w.aux["head"]
+
+
+def values_from_hidden(w: Weights, h):
+    return jnp.squeeze(h @ w.aux["v_head"][:, None], -1) + w.aux["v_bias"][0]
+
+
+def sequence_scores(cfg: ModelConfig, w: Weights, tokens):
+    """Per-token logprob / value / entropy aligned to token index.
+
+    lp[b, t]   = log pi(tokens[b, t] | tokens[b, :t])      (lp[:, 0] = 0)
+    value[b,t] = V(prefix before sampling token t)          (value[:,0] = 0)
+    ent[b, t]  = entropy of that sampling distribution.
+    """
+    b, t = tokens.shape
+    h = forward_full(cfg, w, tokens)
+    logits = logits_from_hidden(w, h)                      # [B, T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    oh_next = jax.nn.one_hot(tokens[:, 1:], cfg.vocab_size, dtype=jnp.float32)
+    lp_next = jnp.sum(logp[:, :-1, :] * oh_next, axis=-1)  # [B, T-1]
+    zeros = jnp.zeros((b, 1), dtype=jnp.float32)
+    lp = jnp.concatenate([zeros, lp_next], axis=1)
+    ent_t = -jnp.sum(jnp.exp(logp) * logp, axis=-1)        # [B, T]
+    ent = jnp.concatenate([zeros, ent_t[:, :-1]], axis=1)
+    val_t = values_from_hidden(w, h)                       # [B, T]
+    value = jnp.concatenate([zeros, val_t[:, :-1]], axis=1)
+    return lp, value, ent
+
+
+# --------------------------------------------------------------------------
+# prefill / decode (KV cache) — the serving path
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, w: Weights, tokens, lens):
+    """Fill the KV cache for prompt tokens and return last-position logits.
+
+    tokens: [B, P] i32 (left-aligned, PAD right), lens: [B] i32.
+    Returns (cache_k, cache_v, logits_last) with caches [L, B, H, S, Dh];
+    cache slots >= len stay zero (decode overwrites them in order, so
+    garbage is never attended — see coordinator/kv.rs invariant test).
+    """
+    b, p = tokens.shape
+    s = cfg.max_seq
+    x = embed_tokens(cfg, w, tokens) + w.aux["pos"][None, :p, :]
+    causal = jnp.tril(jnp.ones((p, p), dtype=jnp.float32))
+    neg = (1.0 - causal) * _NEG_INF
+    scale = 1.0 / jnp.sqrt(float(cfg.head_dim))
+    # [B, P] validity of each prompt position
+    valid = (jnp.arange(p)[None, :] < lens[:, None]).astype(jnp.float32)
+    cks, cvs = [], []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, w.aux[f"layer{l}.ln1"])
+        qkv = _linear(cfg, w, f"layer{l}.qkv", h.reshape(b * p, cfg.d_model))
+        qkv = qkv.reshape(b, p, 3, cfg.n_heads, cfg.head_dim)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        # cache layout [B, H, S, Dh]; positions >= len masked to zero
+        k_m = k * valid[:, :, None, None]
+        v_m = v * valid[:, :, None, None]
+        pad = jnp.zeros((b, s - p, cfg.n_heads, cfg.head_dim), jnp.float32)
+        cks.append(jnp.transpose(jnp.concatenate([k_m, pad], 1), (0, 2, 1, 3)))
+        cvs.append(jnp.transpose(jnp.concatenate([v_m, pad], 1), (0, 2, 1, 3)))
+        scores = jnp.einsum("bihd,bjhd->bhij", q, k) * scale + neg[None, None]
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhij,bjhd->bihd", probs, v).reshape(b * p, cfg.d_model)
+        x = x + _linear(cfg, w, f"layer{l}.attn_out", ctx).reshape(b, p, -1)
+        h = rmsnorm(x, w.aux[f"layer{l}.ln2"])
+        u = _linear(cfg, w, f"layer{l}.mlp_up", h.reshape(b * p, cfg.d_model))
+        u = jax.nn.gelu(u, approximate=True)
+        x = x + _linear(cfg, w, f"layer{l}.mlp_down", u).reshape(b, p, -1)
+    hf = rmsnorm(x, w.aux["ln_f"])
+    # gather h at position len-1 via one-hot over P
+    oh_last = jax.nn.one_hot(lens - 1, p, dtype=jnp.float32)       # [B, P]
+    h_last = jnp.einsum("bp,bpd->bd", oh_last, hf)
+    logits_last = logits_from_hidden(w, h_last)
+    cache_k = jnp.stack(cks)   # [L, B, H, S, Dh]
+    cache_v = jnp.stack(cvs)
+    return cache_k, cache_v, logits_last
+
+
+def decode_step(cfg: ModelConfig, w: Weights, cache_k, cache_v, pos, tok):
+    """One decode step: token `tok` sits at index `pos` (per row).
+
+    Writes its K/V at `pos`, attends indices <= pos, returns logits
+    predicting the token at pos+1 plus the updated caches.
+    """
+    b = tok.shape[0]
+    s = cfg.max_seq
+    oh_pos = jax.nn.one_hot(pos, s, dtype=jnp.float32)             # [B, S]
+    x = embed_tokens(cfg, w, tok) + oh_pos @ w.aux["pos"]          # [B, d]
+    attend = (jnp.arange(s)[None, :] <= pos[:, None]).astype(jnp.float32)
+    neg = (1.0 - attend) * _NEG_INF                                # [B, S]
+    scale = 1.0 / jnp.sqrt(float(cfg.head_dim))
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, w.aux[f"layer{l}.ln1"])
+        qkv = _linear(cfg, w, f"layer{l}.qkv", h)
+        qkv = qkv.reshape(b, 3, cfg.n_heads, cfg.head_dim)
+        q, k, v = qkv[:, 0], qkv[:, 1], qkv[:, 2]                  # [B, H, Dh]
+        sel = oh_pos[:, None, :, None]                             # [B,1,S,1]
+        ck = cache_k[l] * (1.0 - sel) + k[:, :, None, :] * sel
+        cv = cache_v[l] * (1.0 - sel) + v[:, :, None, :] * sel
+        new_k.append(ck)
+        new_v.append(cv)
+        scores = jnp.einsum("bhd,bhsd->bhs", q, ck) * scale + neg[:, None, :]
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhs,bhsd->bhd", probs, cv).reshape(b, cfg.d_model)
+        x = x + _linear(cfg, w, f"layer{l}.attn_out", ctx)
+        h = rmsnorm(x, w.aux[f"layer{l}.ln2"])
+        u = jax.nn.gelu(_linear(cfg, w, f"layer{l}.mlp_up", h),
+                        approximate=True)
+        x = x + _linear(cfg, w, f"layer{l}.mlp_down", u)
+    hf = rmsnorm(x, w.aux["ln_f"])
+    logits = logits_from_hidden(w, hf)
+    return jnp.stack(new_k), jnp.stack(new_v), logits
+
+
+# --------------------------------------------------------------------------
+# sampling + generation (the rollout artifact)
+# --------------------------------------------------------------------------
+
+def _cumsum_tri(x):
+    """Cumulative sum along the last axis via a lower-triangular matmul —
+    avoids HLO reduce_window for the 0.5.1 text parser (V is tiny)."""
+    v = x.shape[-1]
+    tri = jnp.tril(jnp.ones((v, v), dtype=jnp.float32))
+    return x @ tri.T
+
+
+def sample_token(logits, key, temp, top_p):
+    """Temperature + nucleus sampling with exact behavior logprobs.
+
+    Returns (token [B] i32, lp [B] f32) where lp is the log-probability of
+    the sampled token under the *actual* sampling distribution (post
+    temperature + top-p renormalization) — this is pi_behav.
+    temp < 1e-7 selects greedy decoding (lp from the untempered dist).
+    """
+    b, v = logits.shape
+    t_safe = jnp.maximum(temp, 1e-6)
+    lt = logits / t_safe
+    logp = jax.nn.log_softmax(lt, axis=-1)
+    p = jnp.exp(logp)
+    # nucleus: keep the smallest prefix of the sorted distribution with
+    # cumulative mass >= top_p; implemented with sort + tri-matmul cumsum.
+    p_sorted = -jnp.sort(-p, axis=-1)                      # descending
+    cum = _cumsum_tri(p_sorted)                            # inclusive
+    # threshold = probability of the last kept sorted entry
+    kept = (cum - p_sorted) < top_p                        # [B, V] sorted dom.
+    thresh = jnp.min(jnp.where(kept, p_sorted, 2.0), axis=-1)   # [B]
+    keep = p >= thresh[:, None]
+    filt_logp = jnp.where(keep, logp, _NEG_INF)
+    filt_logp = jax.nn.log_softmax(filt_logp, axis=-1)     # renormalized
+    g = jax.random.gumbel(key, (b, v), dtype=jnp.float32)
+    sampled = jnp.argmax(filt_logp + g, axis=-1).astype(jnp.int32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    use_greedy = temp < 1e-7
+    tok = jnp.where(use_greedy, greedy, sampled)
+    oh = jax.nn.one_hot(tok, v, dtype=jnp.float32)
+    lp_sampled = jnp.sum(filt_logp * oh, axis=-1)
+    lp_greedy = jnp.sum(jax.nn.log_softmax(logits, axis=-1) * oh, axis=-1)
+    lp = jnp.where(use_greedy, lp_greedy, lp_sampled)
+    return tok, lp
+
+
+def generate(cfg: ModelConfig, w: Weights, tokens, lens, seed, temp, top_p,
+             max_new: int):
+    """Batched rollout: prefill + `max_new` scanned decode steps.
+
+    tokens: [B, S] i32, prompt left-aligned (only [:, :max_prompt] read);
+    returns (tokens' [B, S], lp [B, S], genmask [B, S]) where genmask marks
+    sampled tokens (EOS inclusive) and lp holds behavior logprobs there.
+    """
+    b, s = tokens.shape
+    p = cfg.max_prompt
+    cache_k, cache_v, logits0 = prefill(cfg, w, tokens[:, :p], lens)
+    key0 = jax.random.PRNGKey(seed)
+
+    oh_last = jax.nn.one_hot(lens - 1, s, dtype=jnp.float32)
+    last_tok = jnp.sum(oh_last * tokens.astype(jnp.float32), -1).astype(jnp.int32)
+
+    def write_at(arr, idx, val, gate):
+        """arr [B, S]: write val [B] at per-row idx [B] where gate [B] is 1."""
+        oh = jax.nn.one_hot(idx, s, dtype=jnp.float32) * gate[:, None]
+        return arr * (1.0 - oh) + val[:, None].astype(jnp.float32) * oh
+
+    def step(carry, i):
+        ck, cv, toks, lp, mask, cur_tok, cur_pos, done, logits = carry
+        key = jax.random.fold_in(key0, i)
+        t_new, lp_new = sample_token(logits, key, temp, top_p)
+        idx = jnp.minimum(cur_pos + 1, s - 1)
+        alive = 1.0 - done
+        tok_write = jnp.where(done > 0.5, PAD_ID, t_new)
+        toks = write_at(toks, idx, tok_write.astype(jnp.float32), alive)
+        lp = write_at(lp, idx, lp_new, alive)
+        mask = write_at(mask, idx, alive, alive)
+        done = jnp.maximum(done, (t_new == EOS_ID).astype(jnp.float32))
+        # also stop rows that hit the context limit
+        done = jnp.maximum(done, (idx >= s - 1).astype(jnp.float32))
+        ck, cv, logits = decode_step(
+            cfg, w, ck, cv, idx, tok_write.astype(jnp.int32))
+        return (ck, cv, toks, lp, mask, tok_write.astype(jnp.int32), idx,
+                done, logits), ()
+
+    toks_f = tokens.astype(jnp.float32)
+    lp0 = jnp.zeros((b, s), jnp.float32)
+    mask0 = jnp.zeros((b, s), jnp.float32)
+    done0 = jnp.zeros((b,), jnp.float32)
+    carry = (cache_k, cache_v, toks_f, lp0, mask0, last_tok, lens - 1,
+             done0, logits0)
+    carry, _ = jax.lax.scan(step, carry, jnp.arange(max_new))
+    _, _, toks, lp, mask, _, _, _, _ = carry
+    return toks.astype(jnp.int32), lp, mask
+
+
+# --------------------------------------------------------------------------
+# RL objective (Eq. 1 / 3 / 4 / 5 / 9) + value/KL/entropy terms
+# --------------------------------------------------------------------------
+
+def rl_loss(cfg: ModelConfig, flat_params, tokens, mask, adv,
+            lp_behav, lp_prox, lp_ref, returns, old_values, flags):
+    """QuRL surrogate loss; objective variant chosen by flags[OBJ_MODE].
+
+    0 on-policy GRPO/PPO clip (Eq. 1)        ratio vs prox, no IS factor
+    1 naive quantized IS (Eq. 3)             ratio vs *behavior* policy
+    2 decoupled PPO (Eq. 4)                  x (prox/behav), uncapped
+    3 TIS / FlashRL (Eq. 5)                  x min(prox/behav, C)
+    4 ACR / QuRL (Eq. 9)                     TIS + upper bound (1+eps)/r
+    Returns (loss, metrics[16]).
+    """
+    w = weights_bf16(cfg, flat_params)
+    lp_theta, value, entropy = sequence_scores(cfg, w, tokens)
+
+    mode = flags[FLAGS.OBJ_MODE]
+    eps_lo = flags[FLAGS.EPS_LOW]
+    eps_hi = flags[FLAGS.EPS_HIGH]
+    cap = flags[FLAGS.TIS_CAP]
+
+    d_prox = jnp.clip(lp_theta - lp_prox, -20.0, 20.0)
+    d_behav = jnp.clip(lp_theta - lp_behav, -20.0, 20.0)
+    d_pb = jnp.clip(lp_prox - lp_behav, -20.0, 20.0)
+    ratio_prox = jnp.exp(d_prox)
+    ratio_behav = jnp.exp(d_behav)
+    rho = jnp.exp(d_pb)                       # prox-to-behavior ratio
+    tis_w = jnp.minimum(rho, cap)
+    r = tis_w / rho                           # in (0, 1]; <1 iff truncated
+
+    is_naive = (mode == 1.0)
+    ratio = jnp.where(is_naive, ratio_behav, ratio_prox)
+    factor = jnp.where(mode == 2.0, rho,
+                       jnp.where(mode == 3.0, tis_w,
+                                 jnp.where(mode == 4.0, tis_w, 1.0)))
+    hi = jnp.where(mode == 4.0, (1.0 + eps_hi) / r, 1.0 + eps_hi)
+    lo = 1.0 - eps_lo
+
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, lo, hi) * adv
+    surr = factor * jnp.minimum(unclipped, clipped)
+    was_clipped = (unclipped > clipped + 1e-12).astype(jnp.float32)
+
+    # k3 KL to the reference policy (Schulman 2020)
+    d_ref = jnp.clip(lp_ref - lp_theta, -20.0, 20.0)
+    kl3 = jnp.exp(d_ref) - d_ref - 1.0
+
+    tok_loss = (-surr
+                + flags[FLAGS.KL_COEF] * kl3
+                - flags[FLAGS.ENT_COEF] * entropy)
+
+    msum = jnp.maximum(jnp.sum(mask), 1.0)
+    seq_msum = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    grpo_agg = jnp.mean(jnp.sum(tok_loss * mask, axis=1) / seq_msum)
+    dapo_agg = jnp.sum(tok_loss * mask) / msum
+    pg_loss = jnp.where(flags[FLAGS.TOKEN_MEAN] > 0.5, dapo_agg, grpo_agg)
+
+    # PPO clipped value loss
+    vclip = flags[FLAGS.VALUE_CLIP]
+    v_clipped = old_values + jnp.clip(value - old_values, -vclip, vclip)
+    v_err = jnp.maximum(jnp.square(value - returns),
+                        jnp.square(v_clipped - returns))
+    v_loss = 0.5 * jnp.sum(v_err * mask) / msum
+
+    loss = pg_loss + flags[FLAGS.VF_COEF] * v_loss
+
+    def mmean(x):
+        return jnp.sum(x * mask) / msum
+
+    def mmax(x):
+        return jnp.max(x * mask)
+
+    metrics = jnp.stack([
+        loss,
+        pg_loss,
+        mmean(kl3),                               # 2: KL(theta||ref) est.
+        mmean(entropy),                           # 3
+        v_loss,                                   # 4
+        mmean(was_clipped),                       # 5: token clipped fraction
+        mmean(ratio),                             # 6
+        mmax(ratio),                              # 7
+        mmax(rho),                                # 8: max prox/behav (Fig 3b)
+        0.0,                                      # 9: grad_norm (filled later)
+        mmean((rho > cap).astype(jnp.float32)),   # 10: truncated fraction
+        mmean(jnp.abs(jnp.exp(lp_prox) - jnp.exp(lp_behav))),  # 11: Fig 4b
+        mmean(lp_behav - lp_prox),                # 12: KL(behav||prox), Fig 3a
+        mmean(hi * jnp.ones_like(ratio)),         # 13: mean upper clip bound
+        0.0,                                      # 14: update_norm (later)
+        mmean(lp_theta),                          # 15
+    ])
+    return loss, metrics
+
+
+def sft_loss(cfg: ModelConfig, flat_params, tokens, mask):
+    """Masked next-token cross-entropy (builds the RL base model)."""
+    w = weights_bf16(cfg, flat_params)
+    lp, _, _ = sequence_scores(cfg, w, tokens)
+    msum = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(lp * mask) / msum
+    acc_tok = jnp.sum(jnp.exp(lp) * mask) / msum   # mean token prob (proxy)
+    return loss, jnp.stack([loss, acc_tok])
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw_update(flat_params, grads, m, v, step, flags):
+    """AdamW with optional global-norm clipping; step is f32 (1-based)."""
+    lr = flags[FLAGS.LR]
+    b1 = flags[FLAGS.BETA1]
+    b2 = flags[FLAGS.BETA2]
+    eps = flags[FLAGS.ADAM_EPS]
+    wd = flags[FLAGS.WEIGHT_DECAY]
+    max_norm = flags[FLAGS.MAX_GRAD_NORM]
+
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(grads)) + 1e-12)
+    scale = jnp.where((max_norm > 0.0) & (gnorm > max_norm),
+                      max_norm / gnorm, 1.0)
+    g = grads * scale
+
+    m1 = b1 * m + (1.0 - b1) * g
+    v1 = b2 * v + (1.0 - b2) * jnp.square(g)
+    bc1 = 1.0 - jnp.exp(step * jnp.log(b1))
+    bc2 = 1.0 - jnp.exp(step * jnp.log(b2))
+    mh = m1 / bc1
+    vh = v1 / bc2
+    upd = lr * (mh / (jnp.sqrt(vh) + eps) + wd * flat_params)
+    new_params = flat_params - upd
+    unorm = jnp.sqrt(jnp.sum(jnp.square(upd)) + 1e-12)
+    return new_params, m1, v1, gnorm, unorm
+
+
+def train_step(cfg: ModelConfig, flat_params, m, v, step, tokens, mask, adv,
+               lp_behav, lp_prox, lp_ref, returns, old_values, flags):
+    """One RL optimization step (the train_step artifact)."""
+    grad_fn = jax.grad(lambda p: rl_loss(cfg, p, tokens, mask, adv, lp_behav,
+                                         lp_prox, lp_ref, returns, old_values,
+                                         flags), has_aux=True)
+    grads, metrics = grad_fn(flat_params)
+    new_params, m1, v1, gnorm, unorm = adamw_update(
+        flat_params, grads, m, v, step, flags)
+    metrics = metrics.at[9].set(gnorm).at[14].set(unorm)
+    return new_params, m1, v1, metrics
+
+
+def sft_step(cfg: ModelConfig, flat_params, m, v, step, tokens, mask, flags):
+    grad_fn = jax.grad(lambda p: sft_loss(cfg, p, tokens, mask), has_aux=True)
+    grads, metrics = grad_fn(flat_params)
+    new_params, m1, v1, gnorm, _ = adamw_update(
+        flat_params, grads, m, v, step, flags)
+    return new_params, m1, v1, jnp.concatenate([metrics, gnorm[None]])
+
+
+# --------------------------------------------------------------------------
+# quantization entry points (ride the Pallas quantizers)
+# --------------------------------------------------------------------------
+
+def quantize_section_b_int8(cfg: ModelConfig, flat_b):
+    """Section-B flat f32 -> (flat i8 qweights, flat f32 per-channel scales)."""
+    mats = unflatten_b(cfg, flat_b)
+    qws, qss = [], []
+    for name, _ in cfg.section_b():
+        qw, qs = k_quant.weight_quant_int8_pallas(mats[name],
+                                                  block_n=cfg.block_n)
+        qws.append(qw.reshape(-1))
+        qss.append(qs)
+    return jnp.concatenate(qws), jnp.concatenate(qss)
+
+
+def quantize_section_b_fp8(cfg: ModelConfig, flat_b):
+    """Section-B flat f32 -> fake-quantized flat f32 (per-channel e4m3)."""
+    mats = unflatten_b(cfg, flat_b)
+    out = []
+    for name, _ in cfg.section_b():
+        out.append(k_quant.weight_quant_fp8_pallas(
+            mats[name], block_n=cfg.block_n).reshape(-1))
+    return jnp.concatenate(out)
+
+
+def uaq_scale(cfg: ModelConfig, flat_params, s):
+    """Update-Aware Quantization invariant scaling (Eq. 11).
+
+    For every LN-preceded quantized linear (qkv, mlp_up): W <- W/s and the
+    preceding RMSNorm gain <- gain*s.  Network function is exactly preserved;
+    weight quantization error shrinks by s while effective weight updates
+    grow by s (the s^2 effect of Eq. 12).
+    """
+    p = unflatten(cfg, flat_params)
+    for l in range(cfg.n_layers):
+        p[f"layer{l}.ln1"] = p[f"layer{l}.ln1"] * s
+        p[f"layer{l}.qkv"] = p[f"layer{l}.qkv"] / s
+        p[f"layer{l}.ln2"] = p[f"layer{l}.ln2"] * s
+        p[f"layer{l}.mlp_up"] = p[f"layer{l}.mlp_up"] / s
+    return flatten(cfg, p)

@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+The integer path must be bit-exact; dequantization scaling is allowed one
+ulp of f32 reassociation.  Hypothesis sweeps shapes, scales and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp8 as k_fp8
+from compile.kernels import int8 as k_int8
+from compile.kernels import quantize as k_quant
+from compile.kernels import ref
+
+
+def rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# --------------------------------------------------------------------------
+# INT8
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile", ["fused", "tiled"])
+@pytest.mark.parametrize("m,k,n", [(64, 128, 128), (64, 128, 384),
+                                   (128, 512, 128), (512, 128, 512)])
+def test_int8_matmul_matches_ref(profile, m, k, n):
+    x = rand((m, k), seed=m + k)
+    w = rand((k, n), seed=n)
+    wq, ws = ref.weight_quant_int8(w)
+    got = k_int8.int8_matmul(x, wq, ws, profile=profile)
+    want = ref.int8_matmul(x, wq, ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_int8_integer_accumulation_exact():
+    """The raw integer products must agree exactly with i32 math."""
+    x = rand((64, 512), seed=1, scale=3.0)
+    w = rand((512, 128), seed=2, scale=3.0)
+    wq, ws = ref.weight_quant_int8(w)
+    xq, ascale = ref.act_quant_int8(x)
+    acc_i32 = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    got = k_int8.int8_matmul(x, wq, ws, profile="fused")
+    want = acc_i32.astype(jnp.float32) * ascale[:, None] * ws[None, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_weight_quant_pallas_bitexact():
+    w = rand((128, 384), seed=3, scale=0.05)
+    q_ref, s_ref = ref.weight_quant_int8(w)
+    q, s = k_quant.weight_quant_int8_pallas(w)
+    assert bool(jnp.all(q == q_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+
+
+def test_act_quant_pallas_bitexact():
+    x = rand((128, 512), seed=4)
+    q_ref, s_ref = ref.act_quant_int8(x)
+    q, s = k_int8.act_quant_int8_pallas(x)
+    assert bool(jnp.all(q == q_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m_blocks=st.integers(1, 4),
+    k=st.sampled_from([64, 128, 256, 512]),
+    n_blocks=st.integers(1, 3),
+    scale=st.sampled_from([1e-3, 0.1, 1.0, 30.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_int8_matmul_hypothesis(m_blocks, k, n_blocks, scale, seed):
+    m, n = 64 * m_blocks, 128 * n_blocks
+    x = rand((m, k), seed=seed, scale=scale)
+    w = rand((k, n), seed=seed + 1, scale=scale)
+    wq, ws = ref.weight_quant_int8(w)
+    got = k_int8.int8_matmul(x, wq, ws, profile="fused")
+    want = ref.int8_matmul(x, wq, ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5 * scale * scale * k)
+
+
+def test_quant_error_bounded_by_half_step():
+    w = rand((256, 128), seed=5, scale=0.02)
+    wq, ws = ref.weight_quant_int8(w)
+    deq = ref.dequant_int8(wq, ws)
+    err = jnp.abs(deq - w)
+    bound = 0.5 * ws[None, :] + 1e-9
+    assert bool(jnp.all(err <= bound))
+
+
+def test_zero_rows_are_safe():
+    x = jnp.zeros((64, 128), jnp.float32)
+    w = rand((128, 128), seed=6)
+    wq, ws = ref.weight_quant_int8(w)
+    out = k_int8.int8_matmul(x, wq, ws, profile="fused")
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# FP8
+# --------------------------------------------------------------------------
+
+def test_e4m3_grid_values():
+    # representable values are fixed points
+    vals = jnp.asarray([1.0, 1.125, 0.875, 448.0, -448.0, 2.0 ** -9,
+                        2.0 ** -6, 240.0, 0.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ref.quant_e4m3(vals)),
+                                  np.asarray(vals))
+
+
+def test_e4m3_saturation():
+    vals = jnp.asarray([1e6, -1e6, 460.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ref.quant_e4m3(vals)),
+                                  [448.0, -448.0, 448.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       scale=st.sampled_from([1e-4, 0.02, 1.0, 50.0]))
+def test_e4m3_relative_error(seed, scale):
+    x = rand((1024,), seed=seed, scale=scale)
+    q = ref.quant_e4m3(x)
+    # normal range: rel err <= 2^-4; subnormal range (|x| < 2^-6): abs err
+    # <= 2^-10, i.e. <= 2^-4 relative to the smallest normal 2^-6.
+    rel = np.abs(np.asarray(q - x)) / np.maximum(np.abs(np.asarray(x)),
+                                                 2.0 ** -6)
+    assert rel.max() <= 1.0 / 16.0 + 1e-5
+
+
+@pytest.mark.parametrize("m,k,n", [(64, 128, 128), (128, 512, 128)])
+def test_fp8_matmul_matches_ref(m, k, n):
+    x = rand((m, k), seed=7)
+    w = rand((k, n), seed=8, scale=0.05)
+    w_fq = ref.weight_quant_fp8(w)
+    got = k_fp8.fp8_matmul(x, w_fq)
+    want = ref.fp8_matmul(x, w_fq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fp8_weight_quant_pallas_matches_ref():
+    w = rand((128, 384), seed=9, scale=0.05)
+    got = k_quant.weight_quant_fp8_pallas(w)
+    want = ref.weight_quant_fp8(w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_fp8_idempotent():
+    w = rand((64, 128), seed=10, scale=0.1)
+    q1 = ref.weight_quant_fp8(w)
+    q2 = ref.weight_quant_fp8(q1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_quant_e4m3_pallas_matches_ref():
+    x = rand((8192,), seed=11, scale=2.0)
+    got = k_fp8.quant_e4m3_pallas(x)
+    want = ref.quant_e4m3(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_vmem_estimate_reasonable():
+    # the fused block at default shapes must fit a 16 MB VMEM budget
+    b = k_int8.vmem_bytes_fused(64, 512, 128)
+    assert b < 16 * 1024 * 1024

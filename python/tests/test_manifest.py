@@ -1,0 +1,86 @@
+"""Build-path contract tests: manifest layout arithmetic and artifact
+signatures must match what the Rust runtime assumes."""
+
+import json
+import os
+
+import pytest
+
+from compile.config import ModelConfig, FLAGS, ARTIFACTS
+
+CFG = ModelConfig()
+
+
+def test_layout_contiguous():
+    off = 0
+    for name, (o, shape) in CFG.offsets().items():
+        assert o == off, name
+        n = 1
+        for s in shape:
+            n *= s
+        off += n
+    assert off == CFG.n_params
+
+
+def test_section_split():
+    assert CFG.a_size + CFG.b_size == CFG.n_params
+    # section A entries all come before section B
+    a_names = {n for n, _ in CFG.section_a()}
+    boundary = CFG.a_size
+    for name, (off, _) in CFG.offsets().items():
+        if name in a_names:
+            assert off < boundary
+        else:
+            assert off >= boundary
+
+
+def test_qscale_channels():
+    total = sum(ch for _, (_, ch) in CFG.scale_offsets().items())
+    assert total == CFG.n_qscales
+    for name, shape in CFG.section_b():
+        assert CFG.scale_offsets()[name][1] == shape[-1]
+
+
+def test_flags_are_dense():
+    idx = sorted(getattr(FLAGS, a) for a in dir(FLAGS)
+                 if a.isupper() and a != "N")
+    assert idx == list(range(FLAGS.N))
+
+
+def test_dims_divisible_for_kernels():
+    assert CFG.d_model % CFG.n_heads == 0
+    # pallas block shapes must divide the linear dims
+    for _, shape in CFG.section_b():
+        assert shape[-1] % min(CFG.block_n, shape[-1]) == 0
+
+
+def test_prompt_plus_gen_fits_context():
+    assert CFG.max_prompt < CFG.max_seq
+
+
+@pytest.mark.skipif(not os.path.exists("../artifacts/manifest.json"),
+                    reason="artifacts not built")
+def test_manifest_matches_config():
+    with open("../artifacts/manifest.json") as f:
+        man = json.load(f)
+    c = man["config"]
+    assert c["n_params"] == CFG.n_params
+    assert c["a_size"] == CFG.a_size
+    assert c["vocab_size"] == CFG.vocab_size
+    assert man["max_new"] == CFG.max_seq - CFG.max_prompt
+    for art in ARTIFACTS:
+        if art in ("prefill_bf16",):  # every listed artifact has a signature
+            assert art in man["artifacts"]
+    # all signatures have inputs and outputs
+    for name, sig in man["artifacts"].items():
+        assert sig["inputs"], name
+        assert sig["outputs"], name
+
+
+@pytest.mark.skipif(not os.path.exists("../artifacts"),
+                    reason="artifacts not built")
+def test_all_artifacts_lowered():
+    missing = [a for a in ARTIFACTS
+               if not os.path.exists(f"../artifacts/{a}.hlo.txt")]
+    # generate_* are extra (not in the base ARTIFACTS list); check core set
+    assert not missing, missing

@@ -1,0 +1,52 @@
+//! Fig. 2 reproduction: training rewards + token-clipped-fraction under
+//! different objectives with INT8 quantized rollout.
+//!
+//! Paper setup: DeepScaleR GRPO.  Series:
+//!   (a) BF16 on-policy           — the full-precision reference
+//!   (b) INT8 + Eq. 3 (naive IS against the quantized actor) — unstable,
+//!       clip fraction spikes then collapses
+//!   (c) INT8 + Eq. 1 (ratio vs fp old actor, mismatch ignored) — stable
+//!       curve but a growing gap vs BF16
+//!   (d) INT8 + decoupled/TIS (Eq. 4/5) — stable
+//!
+//! Expected shape: (b) degrades or collapses, (d) tracks (a) closely,
+//! (c) in between.  `QURL_FULL=1` runs the preset's full horizon.
+
+use qurl::benchkit as bk;
+use qurl::config;
+use qurl::rl::ObjectiveKind;
+use qurl::runtime::QuantMode;
+
+fn main() -> anyhow::Result<()> {
+    let (rt, base) = bk::setup()?;
+    let steps = bk::bench_steps(6, 160);
+    let variants: [(&str, QuantMode, ObjectiveKind); 4] = [
+        ("bf16_onpolicy", QuantMode::Bf16, ObjectiveKind::OnPolicy),
+        ("int8_naive_eq3", QuantMode::Int8, ObjectiveKind::NaiveQuant),
+        ("int8_fpold_eq1", QuantMode::Int8, ObjectiveKind::OnPolicy),
+        ("int8_tis_eq5", QuantMode::Int8, ObjectiveKind::Tis),
+    ];
+    let mut finals = Vec::new();
+    for (name, mode, kind) in variants {
+        let mut cfg = config::deepscaler_grpo();
+        cfg.steps = steps;
+        cfg.rollout_mode = mode;
+        cfg.objective.kind = kind;
+        cfg.uaq_scale = 1.0; // isolate the objective axis
+        cfg.eval_every = 0;
+        let run = format!("fig2_{name}");
+        let (tr, reward) = bk::run_variant(&rt, &base, cfg, &run)?;
+        println!("\n== Fig 2 series: {name} ==");
+        bk::print_curve(name, &tr.rec, "reward");
+        bk::print_curve(name, &tr.rec, "clip_frac");
+        tr.rec.write_csv(&bk::results_dir(), &["reward", "clip_frac"])?;
+        finals.push((name, reward, tr.rec.tail_mean("clip_frac", 8)
+                     .unwrap_or(0.0)));
+    }
+    println!("\n== Fig 2 summary (tail means over last 8 steps) ==");
+    println!("{:18} {:>8} {:>10}", "series", "reward", "clip_frac");
+    for (name, r, c) in finals {
+        println!("{name:18} {r:8.3} {c:10.4}");
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf source of truth):
+//! steady-state latency of every artifact on the training path, the
+//! serving scheduler's throughput, and the host-side (non-XLA) overhead
+//! share — the "coordinator is not the bottleneck" check.
+
+use std::time::Instant;
+
+use qurl::benchkit as bk;
+use qurl::coordinator::{RolloutRequest, Scheduler, StepEngine};
+use qurl::runtime::{QuantMode, TrainBatch};
+use qurl::tasks::{encode_batch, Suite, Tokenizer};
+use qurl::util::timer::{bench, print_table};
+
+fn main() -> anyhow::Result<()> {
+    let (rt, base) = bk::setup()?;
+    let man = rt.manifest().clone();
+    let (b, s) = (man.rollout_batch, man.max_seq);
+    let tk = Tokenizer::new();
+    let suite = Suite::by_name("deepscaler").unwrap();
+    let probs = suite.test_set(5, 11);
+    let refs: Vec<&qurl::tasks::Problem> =
+        probs.iter().take(b).map(|(_, p)| p).collect();
+    let (tokens, lens) = encode_batch(&tk, &refs, b, s, man.max_prompt);
+
+    let mut rows = Vec::new();
+
+    // quantization (per RL step when requantize_every=1)
+    for mode in [QuantMode::Int8, QuantMode::Fp8] {
+        let _ = rt.engine_weights(mode, &base.params)?; // compile
+        let stat = bench(&format!("quantize_{}", mode.tag()), 1, 5, 3.0, || {
+            let _ = rt.engine_weights(mode, &base.params).unwrap();
+        });
+        rows.push(vec![format!("quantize_{}", mode.tag()),
+                       format!("{:.1}", stat.mean_s * 1e3), "ms".into()]);
+    }
+
+    // rollout generate (the paper's 70% phase)
+    for mode in [QuantMode::Bf16, QuantMode::Int8, QuantMode::Fp8] {
+        let w = rt.engine_weights(mode, &base.params)?;
+        let _ = rt.generate(&w, &tokens, &lens, 0, 1.0, 1.0)?;
+        let mut seed = 0;
+        let stat = bench(&format!("generate_{}", mode.tag()), 0, 2, 8.0, || {
+            seed += 1;
+            let _ = rt.generate(&w, &tokens, &lens, seed, 1.0, 1.0).unwrap();
+        });
+        rows.push(vec![format!("generate_{} (B={b})", mode.tag()),
+                       format!("{:.1}", stat.mean_s * 1e3), "ms".into()]);
+    }
+
+    // scoring + train step
+    let _ = rt.score_bf16(&base.params, &tokens)?;
+    let stat = bench("score_bf16", 0, 4, 4.0, || {
+        let _ = rt.score_bf16(&base.params, &tokens).unwrap();
+    });
+    rows.push(vec!["score_bf16".into(), format!("{:.1}", stat.mean_s * 1e3),
+                   "ms".into()]);
+
+    let sc = rt.score_bf16(&base.params, &tokens)?;
+    let batch = TrainBatch {
+        tokens: tokens.clone(),
+        mask: vec![1.0; b * s],
+        adv: vec![0.1; b * s],
+        lp_behav: sc.logprob.clone(),
+        lp_prox: sc.logprob.clone(),
+        lp_ref: sc.logprob.clone(),
+        returns: vec![0.0; b * s],
+        old_values: vec![0.0; b * s],
+    };
+    let obj = qurl::rl::Objective::default();
+    let flags = obj.to_flags(&man.flags);
+    let mut ps = qurl::runtime::ParamStore::new(&man, base.params.clone());
+    let _ = rt.train_step(&mut ps, &batch, &flags)?;
+    let stat = bench("train_step", 0, 3, 6.0, || {
+        let _ = rt.train_step(&mut ps, &batch, &flags).unwrap();
+    });
+    rows.push(vec!["train_step".into(), format!("{:.1}", stat.mean_s * 1e3),
+                   "ms".into()]);
+
+    print_table("artifact steady-state latency", &["op", "mean", "unit"],
+                &rows);
+
+    // ---- end-to-end RL step decomposition ---------------------------------
+    rt.store.reset_stats();
+    let mut cfg = qurl::config::deepscaler_grpo();
+    cfg.steps = 2;
+    cfg.eval_every = 0;
+    let rec = qurl::metrics::Recorder::ephemeral("perf");
+    let mut tr = qurl::rl::Trainer::new(&rt, cfg, base.clone(), rec)?;
+    let t0 = Instant::now();
+    tr.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut rows = Vec::new();
+    let mut xla_total = 0.0;
+    for (name, calls, secs) in rt.store.stats() {
+        xla_total += secs;
+        rows.push(vec![name, calls.to_string(), format!("{secs:.2}")]);
+    }
+    rows.push(vec!["TOTAL XLA".into(), String::new(),
+                   format!("{xla_total:.2}")]);
+    rows.push(vec!["host (L3) overhead".into(), String::new(),
+                   format!("{:.2} ({:.1}%)", wall - xla_total,
+                           (wall - xla_total) / wall * 100.0)]);
+    print_table(&format!("RL-step decomposition (3 steps, {wall:.2}s wall)"),
+                &["artifact", "calls", "seconds"], &rows);
+
+    // ---- serving scheduler throughput -------------------------------------
+    let w = rt.engine_weights(QuantMode::Int8, &base.params)?;
+    let mut engine = StepEngine::new(&rt, w);
+    let mut sched = Scheduler::new(&mut engine, man.max_seq, man.eos_id);
+    let mut sampler = suite.train_sampler(1);
+    for id in 0..16u64 {
+        let (_, prob) = sampler.next();
+        sched.submit(RolloutRequest {
+            id,
+            prompt: tk.encode_prompt(&prob.prompt),
+            max_new: 16,
+            temperature: 1.0,
+            top_p: 1.0,
+            seed: id,
+        });
+    }
+    let results = sched.run_to_completion()?;
+    println!("\nscheduler: {} reqs, {:.1} tok/s, occupancy {:.2}, \
+              {} decode calls",
+             results.len(), sched.stats.tokens_per_s(),
+             sched.stats.mean_occupancy(), sched.stats.decode_calls);
+    Ok(())
+}

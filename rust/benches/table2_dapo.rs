@@ -1,0 +1,76 @@
+//! Table 2 reproduction: DAPO on the AIME analog — Avg@1 (greedy) and
+//! Avg@K sampled accuracy, isolating the UAQ contribution.
+//!
+//! Paper rows: RL/BF16; {RL naive, FlashRL, QuRL w/o UAQ, QuRL w/ UAQ} on
+//! INT8 (FP8 optional via QURL_FP8=1).  Expected ordering:
+//! naive collapses; FlashRL < QuRL w/o UAQ <= QuRL w/ UAQ ~= BF16.
+
+use qurl::benchkit as bk;
+use qurl::config;
+use qurl::rl::{eval as rleval, ObjectiveKind};
+use qurl::runtime::QuantMode;
+use qurl::tasks::{Suite, Tokenizer};
+use qurl::util::timer::print_table;
+
+struct Variant {
+    label: &'static str,
+    mode: QuantMode,
+    kind: ObjectiveKind,
+    uaq: f32,
+}
+
+fn main() -> anyhow::Result<()> {
+    let (rt, base) = bk::setup()?;
+    let steps = bk::bench_steps(5, 100);
+    let k = bk::env_usize("QURL_EVAL_K", 4);
+    let n_eval = bk::env_usize("QURL_EVAL_N", 12);
+    let mut variants = vec![
+        Variant { label: "RL", mode: QuantMode::Bf16,
+                  kind: ObjectiveKind::OnPolicy, uaq: 1.0 },
+        Variant { label: "RL (naive)", mode: QuantMode::Int8,
+                  kind: ObjectiveKind::NaiveQuant, uaq: 1.0 },
+        Variant { label: "FlashRL", mode: QuantMode::Int8,
+                  kind: ObjectiveKind::Tis, uaq: 1.0 },
+        Variant { label: "QuRL w/o UAQ", mode: QuantMode::Int8,
+                  kind: ObjectiveKind::Acr, uaq: 1.0 },
+        Variant { label: "QuRL w/ UAQ", mode: QuantMode::Int8,
+                  kind: ObjectiveKind::Acr, uaq: 1.5 },
+    ];
+    if std::env::var("QURL_FP8").map(|v| v == "1").unwrap_or(false) {
+        variants.push(Variant { label: "FlashRL fp8", mode: QuantMode::Fp8,
+                                kind: ObjectiveKind::Tis, uaq: 1.0 });
+        variants.push(Variant { label: "QuRL fp8 w/ UAQ", mode: QuantMode::Fp8,
+                                kind: ObjectiveKind::Acr, uaq: 1.5 });
+    }
+    let tk = Tokenizer::new();
+    let suite = Suite::by_name("aime").unwrap();
+    let mut rows = Vec::new();
+    for v in &variants {
+        let mut cfg = config::dapo_aime();
+        cfg.steps = steps;
+        cfg.rollout_mode = v.mode;
+        cfg.objective.kind = v.kind;
+        cfg.uaq_scale = v.uaq;
+        cfg.eval_every = 0;
+        let run = format!("table2_{}_{}_uaq{}", v.mode.tag(), v.kind.name(),
+                          v.uaq);
+        let (tr, reward) = bk::run_variant(&rt, &base, cfg, &run)?;
+        let w = rt.engine_weights(QuantMode::Bf16, &tr.ps.params)?;
+        let avg1 = rleval::greedy_accuracy(&rt, &w, &tk, &suite, 77, n_eval)?;
+        let avgk = rleval::avg_at_k(&rt, &w, &tk, &suite, 77, n_eval, k,
+                                    1.0, 0.7)?;
+        tr.rec.write_csv(&bk::results_dir(), &["reward"])?;
+        bk::print_curve(v.label, &tr.rec, "reward");
+        rows.push(vec![v.label.to_string(), v.mode.tag().to_string(),
+                       format!("{:.2}", avg1 * 100.0),
+                       format!("{:.2}", avgk * 100.0),
+                       format!("{reward:.3}")]);
+    }
+    print_table(&format!("Table 2 analog: AIME accuracy (Avg@1 / Avg@{k}, %)"),
+                &["method", "bitwidth", "Avg@1", &format!("Avg@{k}"),
+                  "train reward"], &rows);
+    println!("\npaper reference (7B, 200 steps, INT8): BF16 33.3/31.7 | \
+              naive 0.0 | FlashRL 26.7/30.3 | QuRL w/o UAQ 33.3/30.6 | \
+              QuRL w/ UAQ 33.3/31.3");
+    Ok(())
+}

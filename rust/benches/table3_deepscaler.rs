@@ -1,0 +1,79 @@
+//! Table 3 + Fig. 10 reproduction: GRPO on the DeepScaleR analog — per-task
+//! Avg@K across the 6-family suite, plus long-horizon test-accuracy curves.
+//!
+//! Paper rows: Base, RL/BF16, {RL, FlashRL, QuRL w/o UAQ, QuRL w/ UAQ} on
+//! INT8.  Expected ordering: Base < RL int8 < FlashRL < QuRL w/o UAQ <
+//! QuRL w/ UAQ <= RL bf16, per family and on average.
+
+use qurl::benchkit as bk;
+use qurl::config;
+use qurl::rl::{eval as rleval, ObjectiveKind};
+use qurl::runtime::QuantMode;
+use qurl::tasks::{Suite, Tokenizer, ALL_FAMILIES};
+use qurl::util::timer::print_table;
+
+fn main() -> anyhow::Result<()> {
+    let (rt, base) = bk::setup()?;
+    let steps = bk::bench_steps(6, 160);
+    let k = bk::env_usize("QURL_EVAL_K", 2);
+    let n_eval = bk::env_usize("QURL_EVAL_N", 5);
+    let tk = Tokenizer::new();
+    let suite = Suite::by_name("deepscaler").unwrap();
+
+    let header: Vec<String> = std::iter::once("method".to_string())
+        .chain(std::iter::once("bits".to_string()))
+        .chain(ALL_FAMILIES.iter().map(|f| f.name().to_string()))
+        .chain(std::iter::once("Avg".to_string()))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    let eval_row = |rt: &qurl::runtime::Runtime, params: &[f32],
+                    label: &str, bits: &str|
+                    -> anyhow::Result<Vec<String>> {
+        let w = rt.engine_weights(QuantMode::Bf16, params)?;
+        let per = rleval::per_family_accuracy(rt, &w, &tk, &suite, 99,
+                                              n_eval, k, 0.6, 0.95)?;
+        let mut row = vec![label.to_string(), bits.to_string()];
+        let mut total = 0.0;
+        for fam in ALL_FAMILIES {
+            let (acc, _) = per[fam.name()];
+            row.push(format!("{:.1}", acc * 100.0));
+            total += acc;
+        }
+        row.push(format!("{:.1}", total / ALL_FAMILIES.len() as f64 * 100.0));
+        Ok(row)
+    };
+
+    // Base model row
+    rows.push(eval_row(&rt, &base.params, "Base", "bf16")?);
+
+    let variants: [(&str, QuantMode, ObjectiveKind, f32); 5] = [
+        ("RL", QuantMode::Bf16, ObjectiveKind::OnPolicy, 1.0),
+        ("RL", QuantMode::Int8, ObjectiveKind::NaiveQuant, 1.0),
+        ("FlashRL", QuantMode::Int8, ObjectiveKind::Tis, 1.0),
+        ("QuRL w/o UAQ", QuantMode::Int8, ObjectiveKind::Acr, 1.0),
+        ("QuRL w/ UAQ", QuantMode::Int8, ObjectiveKind::Acr, 1.5),
+    ];
+    for (label, mode, kind, uaq) in variants {
+        let mut cfg = config::deepscaler_grpo();
+        cfg.steps = steps;
+        cfg.rollout_mode = mode;
+        cfg.objective.kind = kind;
+        cfg.uaq_scale = uaq;
+        cfg.eval_every = (steps / 2).max(1); // Fig. 10 test-acc curve
+        let run = format!("table3_{}_{}_uaq{uaq}", mode.tag(), kind.name());
+        let (tr, _) = bk::run_variant(&rt, &base, cfg, &run)?;
+        println!("== Fig 10 test-accuracy curve: {label} {} ==", mode.tag());
+        bk::print_curve(label, &tr.rec, "eval_acc");
+        tr.rec.write_csv(&bk::results_dir(), &["reward", "eval_acc"])?;
+        rows.push(eval_row(&rt, &tr.ps.params, label, mode.tag())?);
+    }
+
+    print_table(&format!("Table 3 analog: DeepScaleR Avg@{k} per family (%)"),
+                &header_refs, &rows);
+    println!("\npaper reference (1.5B, avg): Base 48.8 | RL bf16 56.4 | RL \
+              int8 52.3 | FlashRL 53.8 | QuRL w/o UAQ 54.8 | QuRL w/ UAQ \
+              55.5");
+    Ok(())
+}

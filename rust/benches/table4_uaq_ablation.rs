@@ -1,0 +1,54 @@
+//! Table 4 reproduction: UAQ scale ablation vs learning-rate scaling.
+//!
+//! Paper: DAPO INT8, comparing s in {1, 1.5, 2} at lr=1e-6 against lr in
+//! {1.5x, 2x} at s=1.  Expected shape: s=1.5 best; s=2 and raw lr scaling
+//! overshoot (less stable RL, lower accuracy).
+
+use qurl::benchkit as bk;
+use qurl::config;
+use qurl::rl::eval as rleval;
+use qurl::runtime::QuantMode;
+use qurl::tasks::{Suite, Tokenizer};
+use qurl::util::timer::print_table;
+
+fn main() -> anyhow::Result<()> {
+    let (rt, base) = bk::setup()?;
+    let steps = bk::bench_steps(5, 100);
+    let k = bk::env_usize("QURL_EVAL_K", 4);
+    let n_eval = bk::env_usize("QURL_EVAL_N", 12);
+    let base_lr = config::dapo_aime().objective.lr;
+    let variants: [(&str, f32, f32); 5] = [
+        ("s=1.0, lr=1x", 1.0, 1.0),
+        ("s=1.5, lr=1x", 1.5, 1.0),
+        ("s=2.0, lr=1x", 2.0, 1.0),
+        ("s=1.0, lr=1.5x", 1.0, 1.5),
+        ("s=1.0, lr=2x", 1.0, 2.0),
+    ];
+    let tk = Tokenizer::new();
+    let suite = Suite::by_name("aime").unwrap();
+    let mut rows = Vec::new();
+    for (label, s, lr_mult) in variants {
+        let mut cfg = config::dapo_aime();
+        cfg.steps = steps;
+        cfg.rollout_mode = QuantMode::Int8;
+        cfg.uaq_scale = s;
+        cfg.objective.lr = base_lr * lr_mult;
+        cfg.eval_every = 0;
+        let run = format!("table4_s{s}_lr{lr_mult}");
+        let (tr, reward) = bk::run_variant(&rt, &base, cfg, &run)?;
+        let w = rt.engine_weights(QuantMode::Bf16, &tr.ps.params)?;
+        let avgk = rleval::avg_at_k(&rt, &w, &tk, &suite, 77, n_eval, k,
+                                    1.0, 0.7)?;
+        let clip = tr.rec.tail_mean("clip_frac", 8).unwrap_or(0.0);
+        rows.push(vec![label.to_string(),
+                       format!("{:.2}", avgk * 100.0),
+                       format!("{reward:.3}"),
+                       format!("{clip:.4}")]);
+    }
+    print_table(&format!("Table 4 analog: UAQ scale vs lr (Avg@{k}, %)"),
+                &["config", &format!("Avg@{k}"), "train reward",
+                  "clip_frac"], &rows);
+    println!("\npaper reference: s=1 30.6 | s=1.5 31.3 (best) | s=2 29.2 | \
+              lr=1.5x 29.1 | lr=2x 26.7");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Shared plumbing for the `cargo bench` reproduction harnesses (one bench
+//! target per paper table/figure — see DESIGN.md §4).
+//!
+//! Benches honor environment knobs so CI smoke runs stay short while
+//! `QURL_FULL=1` regenerates paper-scale curves:
+//!   QURL_STEPS   — RL steps per variant (default: per-bench small value)
+//!   QURL_FULL    — 1: use the preset's full step counts
+//!   QURL_SFT     — SFT steps when the base checkpoint is missing
+//!   QURL_EVAL_K  — samples for Avg@K evaluations
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::metrics::Recorder;
+use crate::rl::{self, Trainer, TrainerConfig};
+use crate::runtime::{ParamStore, Runtime};
+use crate::tasks::Suite;
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+pub fn full_run() -> bool {
+    std::env::var("QURL_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Steps for a bench variant: QURL_STEPS > QURL_FULL=preset > default.
+pub fn bench_steps(default_small: usize, preset_steps: usize) -> usize {
+    if let Ok(s) = std::env::var("QURL_STEPS") {
+        if let Ok(v) = s.parse() {
+            return v;
+        }
+    }
+    if full_run() {
+        preset_steps
+    } else {
+        default_small
+    }
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn results_dir() -> PathBuf {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Open the runtime + shared SFT base checkpoint (pretraining on demand).
+pub fn setup() -> Result<(Runtime, ParamStore)> {
+    let rt = Runtime::open(&artifacts_dir())?;
+    let path = results_dir().join("base_model.bin");
+    let ps = if path.exists() {
+        let ps = ParamStore::load(&path)?;
+        anyhow::ensure!(ps.params.len() == rt.manifest().n_params,
+                        "stale base checkpoint — rerun `qurl pretrain`");
+        ps
+    } else {
+        let steps = env_usize("QURL_SFT", 600);
+        eprintln!("[benchkit] pretraining base model ({steps} SFT steps)...");
+        let init = rt.init_params(0)?;
+        let mut ps = ParamStore::new(rt.manifest(), init);
+        let suite = Suite::by_name("deepscaler").unwrap();
+        let mut rec = Recorder::ephemeral("sft");
+        rl::pretrain_sft(&rt, &mut ps, &suite, steps, 3e-4, 0, &mut rec)?;
+        ps.reset_optimizer();
+        ps.save(&path)?;
+        ps
+    };
+    Ok((rt, ps))
+}
+
+/// Train one experiment variant, recording to results/<run>.jsonl.
+pub fn run_variant<'rt>(rt: &'rt Runtime, base: &ParamStore,
+                        cfg: TrainerConfig, run: &str)
+                        -> Result<(Trainer<'rt>, f64)> {
+    eprintln!("[benchkit] variant {run}: {} steps, obj={}, rollout={}, \
+               uaq={}", cfg.steps, cfg.objective.kind.name(),
+              cfg.rollout_mode.tag(), cfg.uaq_scale);
+    let rec = Recorder::create(&results_dir(), run)?;
+    let mut tr = Trainer::new(rt, cfg, base.clone(), rec)?;
+    let final_reward = tr.run()?;
+    Ok((tr, final_reward))
+}
+
+/// Render a (step, value) series as a compact sparkline + endpoints.
+pub fn sparkline(series: &[(u64, f64)], width: usize) -> String {
+    if series.is_empty() {
+        return "(empty)".into();
+    }
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let vals: Vec<f64> = series.iter().map(|&(_, v)| v).collect();
+    let (mn, mx) = vals.iter().fold((f64::INFINITY, f64::NEG_INFINITY),
+                                    |(a, b), &v| (a.min(v), b.max(v)));
+    let span = (mx - mn).max(1e-12);
+    let n = vals.len();
+    let w = width.min(n).max(1);
+    let mut out = String::new();
+    for i in 0..w {
+        let lo = i * n / w;
+        let hi = ((i + 1) * n / w).max(lo + 1);
+        let m = vals[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+        let idx = (((m - mn) / span) * 7.0).round() as usize;
+        out.push(GLYPHS[idx.min(7)]);
+    }
+    format!("{out}  [{mn:.3} → {:.3}, max {mx:.3}]", vals[n - 1])
+}
+
+/// Print one metric curve for a finished run.
+pub fn print_curve(label: &str, rec: &Recorder, key: &str) {
+    let s = rec.series(key);
+    println!("  {label:34} {key:18} {}", sparkline(&s, 48));
+}

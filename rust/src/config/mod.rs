@@ -1,0 +1,256 @@
+//! Experiment configuration: named presets mirroring the paper's three
+//! setups (§5) plus JSON file round-tripping so runs are reproducible.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::rl::{Algo, Objective, ObjectiveKind, TrainerConfig};
+use crate::runtime::QuantMode;
+use crate::util::json::Json;
+
+/// Paper §5.1 "PPO on GSM8K": Qwen2.5-0.5B, 435 steps, lr 1e-5 (high enough
+/// that UAQ is disabled), greedy eval.  Scaled: arith-chain suite.
+pub fn gsm8k_ppo() -> TrainerConfig {
+    TrainerConfig {
+        algo: Algo::Ppo,
+        objective: Objective {
+            kind: ObjectiveKind::Acr,
+            eps_low: 0.2,
+            eps_high: 0.2,
+            tis_cap: 2.0,
+            kl_coef: 0.0,
+            vf_coef: 0.5,
+            ent_coef: 0.0,
+            token_mean: false,
+            lr: 1e-4, // paper: 1e-5 at 0.5B; scaled for the 0.8M testbed
+            ..Objective::default()
+        },
+        rollout_mode: QuantMode::Int8,
+        suite: "gsm8k".into(),
+        uaq_scale: 1.0, // paper: UAQ off for this experiment (high lr)
+        steps: 120,
+        prompts_per_step: 16,
+        group_size: 4,
+        temp: 1.0,
+        top_p: 1.0,
+        inner_epochs: 2,
+        gamma: 1.0,
+        gae_lambda: 0.95,
+        whiten_adv: true,
+        dynamic_sampling: false,
+        eval_every: 10,
+        eval_problems_per_family: 64,
+        ..TrainerConfig::default()
+    }
+}
+
+/// Paper §5.1 "DAPO on AIME": Qwen2.5-7B-Math, eps_hi 0.28 / eps_lo 0.2,
+/// no KL, 512 prompts x 16 rollouts, lr 1e-6.  Scaled: modular suite.
+pub fn dapo_aime() -> TrainerConfig {
+    TrainerConfig {
+        algo: Algo::Dapo,
+        objective: Objective {
+            kind: ObjectiveKind::Acr,
+            eps_low: 0.2,
+            eps_high: 0.28, // DAPO decoupled clip
+            tis_cap: 2.0,
+            kl_coef: 0.0,   // DAPO drops the KL term
+            vf_coef: 0.0,
+            token_mean: true,
+            lr: 5e-5,       // paper 1e-6, scaled with model size
+            ..Objective::default()
+        },
+        rollout_mode: QuantMode::Int8,
+        suite: "aime".into(),
+        uaq_scale: 1.5,
+        steps: 100,
+        prompts_per_step: 8,
+        group_size: 8,
+        temp: 1.0,
+        top_p: 1.0,
+        inner_epochs: 2,
+        dynamic_sampling: true,
+        eval_every: 10,
+        eval_problems_per_family: 64,
+        ..TrainerConfig::default()
+    }
+}
+
+/// Paper §5.1 "GRPO on DeepScaleR": DeepSeek-Distill-1.5B, 3 stages,
+/// KL coef 1e-3 (k3), temp 0.6, batch 256.  Scaled: 6-family suite.
+pub fn deepscaler_grpo() -> TrainerConfig {
+    TrainerConfig {
+        algo: Algo::Grpo,
+        objective: Objective {
+            kind: ObjectiveKind::Acr,
+            eps_low: 0.2,
+            eps_high: 0.2,
+            tis_cap: 2.0,
+            kl_coef: 1e-3,
+            vf_coef: 0.0,
+            token_mean: false,
+            lr: 5e-5,
+            ..Objective::default()
+        },
+        rollout_mode: QuantMode::Int8,
+        suite: "deepscaler".into(),
+        uaq_scale: 1.5,
+        steps: 160,
+        prompts_per_step: 8,
+        group_size: 8,
+        temp: 1.0, // paper rollout temp 0.6 at eval; keep 1.0 for training
+        top_p: 1.0,
+        inner_epochs: 2,
+        dynamic_sampling: false,
+        eval_every: 20,
+        eval_problems_per_family: 32,
+        analyze_every: 8,
+        ..TrainerConfig::default()
+    }
+}
+
+pub fn preset(name: &str) -> Option<TrainerConfig> {
+    match name {
+        "gsm8k_ppo" => Some(gsm8k_ppo()),
+        "dapo_aime" => Some(dapo_aime()),
+        "deepscaler_grpo" => Some(deepscaler_grpo()),
+        _ => None,
+    }
+}
+
+pub const PRESETS: [&str; 3] = ["gsm8k_ppo", "dapo_aime", "deepscaler_grpo"];
+
+// ---- JSON round-trip --------------------------------------------------------
+
+pub fn to_json(cfg: &TrainerConfig) -> Json {
+    Json::obj(vec![
+        ("algo", Json::str(cfg.algo.name())),
+        ("objective", Json::str(cfg.objective.kind.name())),
+        ("eps_low", Json::num(cfg.objective.eps_low as f64)),
+        ("eps_high", Json::num(cfg.objective.eps_high as f64)),
+        ("tis_cap", Json::num(cfg.objective.tis_cap as f64)),
+        ("kl_coef", Json::num(cfg.objective.kl_coef as f64)),
+        ("vf_coef", Json::num(cfg.objective.vf_coef as f64)),
+        ("ent_coef", Json::num(cfg.objective.ent_coef as f64)),
+        ("token_mean", Json::Bool(cfg.objective.token_mean)),
+        ("lr", Json::num(cfg.objective.lr as f64)),
+        ("max_grad_norm", Json::num(cfg.objective.max_grad_norm as f64)),
+        ("rollout_mode", Json::str(cfg.rollout_mode.tag())),
+        ("suite", Json::str(&cfg.suite)),
+        ("uaq_scale", Json::num(cfg.uaq_scale as f64)),
+        ("steps", Json::num(cfg.steps as f64)),
+        ("prompts_per_step", Json::num(cfg.prompts_per_step as f64)),
+        ("group_size", Json::num(cfg.group_size as f64)),
+        ("temp", Json::num(cfg.temp as f64)),
+        ("top_p", Json::num(cfg.top_p as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("eval_every", Json::num(cfg.eval_every as f64)),
+        ("eval_problems_per_family",
+         Json::num(cfg.eval_problems_per_family as f64)),
+        ("engine_noise", Json::num(cfg.engine_noise as f64)),
+        ("inner_epochs", Json::num(cfg.inner_epochs as f64)),
+        ("gamma", Json::num(cfg.gamma as f64)),
+        ("gae_lambda", Json::num(cfg.gae_lambda as f64)),
+        ("whiten_adv", Json::Bool(cfg.whiten_adv)),
+        ("dynamic_sampling", Json::Bool(cfg.dynamic_sampling)),
+        ("requantize_every", Json::num(cfg.requantize_every as f64)),
+        ("analyze_every", Json::num(cfg.analyze_every as f64)),
+    ])
+}
+
+pub fn from_json(j: &Json) -> Result<TrainerConfig> {
+    let mut cfg = TrainerConfig::default();
+    let get_f = |k: &str, d: f64| j.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+    let get_b = |k: &str, d: bool| j.get(k).and_then(|v| v.as_bool()).unwrap_or(d);
+    if let Some(a) = j.get("algo").and_then(|v| v.as_str()) {
+        cfg.algo = Algo::parse(a).context("bad algo")?;
+    }
+    if let Some(o) = j.get("objective").and_then(|v| v.as_str()) {
+        cfg.objective.kind = ObjectiveKind::parse(o).context("bad objective")?;
+    }
+    if let Some(m) = j.get("rollout_mode").and_then(|v| v.as_str()) {
+        cfg.rollout_mode = QuantMode::parse(m).context("bad rollout_mode")?;
+    }
+    if let Some(s) = j.get("suite").and_then(|v| v.as_str()) {
+        cfg.suite = s.to_string();
+    }
+    cfg.objective.eps_low = get_f("eps_low", 0.2) as f32;
+    cfg.objective.eps_high = get_f("eps_high", 0.2) as f32;
+    cfg.objective.tis_cap = get_f("tis_cap", 2.0) as f32;
+    cfg.objective.kl_coef = get_f("kl_coef", 0.0) as f32;
+    cfg.objective.vf_coef = get_f("vf_coef", 0.0) as f32;
+    cfg.objective.ent_coef = get_f("ent_coef", 0.0) as f32;
+    cfg.objective.token_mean = get_b("token_mean", false);
+    cfg.objective.lr = get_f("lr", 5e-5) as f32;
+    cfg.objective.max_grad_norm = get_f("max_grad_norm", 1.0) as f32;
+    cfg.uaq_scale = get_f("uaq_scale", 1.0) as f32;
+    cfg.steps = get_f("steps", 100.0) as usize;
+    cfg.prompts_per_step = get_f("prompts_per_step", 8.0) as usize;
+    cfg.group_size = get_f("group_size", 8.0) as usize;
+    cfg.temp = get_f("temp", 1.0) as f32;
+    cfg.top_p = get_f("top_p", 1.0) as f32;
+    cfg.seed = get_f("seed", 0.0) as u64;
+    cfg.eval_every = get_f("eval_every", 0.0) as usize;
+    cfg.eval_problems_per_family =
+        get_f("eval_problems_per_family", 32.0) as usize;
+    cfg.engine_noise = get_f("engine_noise", 0.0) as f32;
+    cfg.inner_epochs = get_f("inner_epochs", 2.0) as usize;
+    cfg.gamma = get_f("gamma", 1.0) as f32;
+    cfg.gae_lambda = get_f("gae_lambda", 0.95) as f32;
+    cfg.whiten_adv = get_b("whiten_adv", false);
+    cfg.dynamic_sampling = get_b("dynamic_sampling", false);
+    cfg.requantize_every = get_f("requantize_every", 1.0) as usize;
+    cfg.analyze_every = get_f("analyze_every", 0.0) as usize;
+    Ok(cfg)
+}
+
+pub fn load(path: &Path) -> Result<TrainerConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {path:?}"))?;
+    from_json(&Json::parse(&text).context("parsing config json")?)
+}
+
+pub fn save(cfg: &TrainerConfig, path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(cfg).to_string()).context("writing config")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in PRESETS {
+            let cfg = preset(name).unwrap();
+            assert!(cfg.steps > 0);
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fields() {
+        let cfg = dapo_aime();
+        let j = to_json(&cfg);
+        let back = from_json(&j).unwrap();
+        assert_eq!(back.algo, cfg.algo);
+        assert_eq!(back.objective.kind, cfg.objective.kind);
+        assert_eq!(back.rollout_mode, cfg.rollout_mode);
+        assert_eq!(back.suite, cfg.suite);
+        assert!((back.uaq_scale - cfg.uaq_scale).abs() < 1e-6);
+        assert_eq!(back.dynamic_sampling, cfg.dynamic_sampling);
+        assert!((back.objective.eps_high - 0.28).abs() < 1e-6);
+        assert_eq!(back.inner_epochs, cfg.inner_epochs);
+    }
+
+    #[test]
+    fn paper_hyperparams_encoded() {
+        let d = dapo_aime();
+        assert!(d.objective.token_mean);
+        assert_eq!(d.objective.kl_coef, 0.0);
+        assert!(d.dynamic_sampling);
+        let g = deepscaler_grpo();
+        assert!((g.objective.kl_coef - 1e-3).abs() < 1e-9);
+        assert_eq!(g.algo, Algo::Grpo);
+    }
+}

@@ -1,0 +1,136 @@
+//! Step-wise rollout engine: persistent batched KV caches + the per-step
+//! prefill/decode artifacts.  This is the serving-style execution path the
+//! scheduler drives (continuous batching); bulk training rollouts use the
+//! fused `generate_*` artifacts instead (runtime::exec::generate).
+
+use anyhow::Result;
+
+use crate::runtime::{EngineWeights, HostTensor, Runtime};
+
+/// Persistent decode state across steps.
+pub struct StepEngine<'rt> {
+    rt: &'rt Runtime,
+    pub weights: EngineWeights,
+    /// [L, B, H, S, Dh] caches, host-resident between artifact calls
+    cache_k: Vec<f32>,
+    cache_v: Vec<f32>,
+    kv_shape: Vec<usize>,
+    pub batch: usize,
+}
+
+impl<'rt> StepEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, weights: EngineWeights) -> StepEngine<'rt> {
+        let m = rt.manifest();
+        let kv_shape = vec![m.n_layers, m.rollout_batch, m.n_heads, m.max_seq,
+                            m.head_dim];
+        let n: usize = kv_shape.iter().product();
+        StepEngine {
+            rt,
+            weights,
+            cache_k: vec![0.0; n],
+            cache_v: vec![0.0; n],
+            kv_shape,
+            batch: m.rollout_batch,
+        }
+    }
+
+    fn weight_inputs(&self) -> Vec<HostTensor> {
+        let mut v = Vec::new();
+        match &self.weights {
+            EngineWeights::Bf16 { flat } => {
+                v.push(HostTensor::f32(&[flat.len()], flat.clone()));
+            }
+            EngineWeights::Int8 { a, qw, qs } => {
+                v.push(HostTensor::f32(&[a.len()], a.clone()));
+                v.push(HostTensor::i8(&[qw.len()], qw.clone()));
+                v.push(HostTensor::f32(&[qs.len()], qs.clone()));
+            }
+            EngineWeights::Fp8 { a, b_fq } => {
+                v.push(HostTensor::f32(&[a.len()], a.clone()));
+                v.push(HostTensor::f32(&[b_fq.len()], b_fq.clone()));
+            }
+        }
+        v
+    }
+
+    /// Prefill prompts into the given slots, merging only those rows into
+    /// the persistent cache.  `prompts[i]` goes to `slots[i]`.  Returns the
+    /// last-position logits per slot (the distribution of the first
+    /// generated token).
+    pub fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
+                   -> Result<Vec<Vec<f32>>> {
+        assert_eq!(slots.len(), prompts.len());
+        let m = self.rt.manifest();
+        let (b, p, v) = (m.rollout_batch, m.max_prompt, m.vocab_size);
+        let mut tokens = vec![0i32; b * p];
+        let mut lens = vec![1i32; b];
+        // inert rows: lone BOS
+        for r in 0..b {
+            tokens[r * p] = m.bos_id;
+        }
+        for (i, &slot) in slots.iter().enumerate() {
+            let ids = &prompts[i];
+            assert!(ids.len() <= p, "prompt longer than max_prompt");
+            tokens[slot * p..slot * p + ids.len()].copy_from_slice(ids);
+            lens[slot] = ids.len() as i32;
+        }
+        let mut inputs = self.weight_inputs();
+        inputs.push(HostTensor::i32(&[b, p], tokens));
+        inputs.push(HostTensor::i32(&[b], lens));
+        let name = format!("prefill_{}", self.weights.mode().tag());
+        let out = self.rt.store.call(&name, &inputs)?;
+        let mut it = out.into_iter();
+        let ck = it.next().unwrap().into_f32();
+        let cv = it.next().unwrap().into_f32();
+        let logits = it.next().unwrap().into_f32();
+        // merge the new rows into the persistent cache
+        let (l, _, h, s, dh) = (self.kv_shape[0], self.kv_shape[1],
+                                self.kv_shape[2], self.kv_shape[3],
+                                self.kv_shape[4]);
+        let row_sz = h * s * dh;
+        for &slot in slots {
+            for layer in 0..l {
+                let off = (layer * self.batch + slot) * row_sz;
+                self.cache_k[off..off + row_sz]
+                    .copy_from_slice(&ck[off..off + row_sz]);
+                self.cache_v[off..off + row_sz]
+                    .copy_from_slice(&cv[off..off + row_sz]);
+            }
+        }
+        Ok(slots
+            .iter()
+            .map(|&slot| logits[slot * v..(slot + 1) * v].to_vec())
+            .collect())
+    }
+
+    /// One decode step: for each (slot, pos, token), write KV at `pos` and
+    /// return next-token logits per slot.  Inactive slots are fed an inert
+    /// (pos=0, PAD) probe whose cache row is never merged back... but the
+    /// artifact updates all rows, so inactive slots' caches are only safe
+    /// because a future prefill overwrites them before reuse (tested).
+    pub fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
+        let m = self.rt.manifest();
+        let (b, v) = (m.rollout_batch, m.vocab_size);
+        let mut pos = vec![0i32; b];
+        let mut tok = vec![m.pad_id; b];
+        for &(slot, p, t) in rows {
+            pos[slot] = p;
+            tok[slot] = t;
+        }
+        let mut inputs = self.weight_inputs();
+        inputs.push(HostTensor::f32(&self.kv_shape, std::mem::take(&mut self.cache_k)));
+        inputs.push(HostTensor::f32(&self.kv_shape, std::mem::take(&mut self.cache_v)));
+        inputs.push(HostTensor::i32(&[b], pos));
+        inputs.push(HostTensor::i32(&[b], tok));
+        let name = format!("decode_{}", self.weights.mode().tag());
+        let out = self.rt.store.call(&name, &inputs)?;
+        let mut it = out.into_iter();
+        self.cache_k = it.next().unwrap().into_f32();
+        self.cache_v = it.next().unwrap().into_f32();
+        let logits = it.next().unwrap().into_f32();
+        Ok(rows
+            .iter()
+            .map(|&(slot, _, _)| logits[slot * v..(slot + 1) * v].to_vec())
+            .collect())
+    }
+}

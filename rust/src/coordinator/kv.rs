@@ -1,0 +1,108 @@
+//! KV-cache slot allocator: maps active sequences to rows of the batched
+//! cache tensors.  Invariants (property-tested): a slot is owned by at most
+//! one request; free+active always partitions [0, B); slots are recycled
+//! only after release.
+
+#[derive(Clone, Debug)]
+pub struct SlotMap {
+    free: Vec<usize>,
+    owner: Vec<Option<u64>>, // request id per slot
+}
+
+impl SlotMap {
+    pub fn new(n: usize) -> SlotMap {
+        SlotMap { free: (0..n).rev().collect(), owner: vec![None; n] }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.capacity() - self.free_count()
+    }
+
+    /// Claim a slot for a request; None when full.
+    pub fn acquire(&mut self, request_id: u64) -> Option<usize> {
+        let slot = self.free.pop()?;
+        debug_assert!(self.owner[slot].is_none());
+        self.owner[slot] = Some(request_id);
+        Some(slot)
+    }
+
+    /// Release the slot owned by `request_id`.  Panics on double-free or
+    /// foreign ownership — those are scheduler bugs.
+    pub fn release(&mut self, slot: usize, request_id: u64) {
+        assert_eq!(self.owner[slot], Some(request_id),
+                   "slot {slot} not owned by request {request_id}");
+        self.owner[slot] = None;
+        self.free.push(slot);
+    }
+
+    pub fn owner_of(&self, slot: usize) -> Option<u64> {
+        self.owner[slot]
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.capacity()).filter(|&s| self.owner[s].is_some()).collect()
+    }
+
+    /// Internal consistency check (used by property tests).
+    pub fn check_invariants(&self) -> bool {
+        let mut seen = vec![false; self.capacity()];
+        for &f in &self.free {
+            if f >= self.capacity() || seen[f] || self.owner[f].is_some() {
+                return false;
+            }
+            seen[f] = true;
+        }
+        self.free.len() + self.owner.iter().filter(|o| o.is_some()).count()
+            == self.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut sm = SlotMap::new(4);
+        let s0 = sm.acquire(10).unwrap();
+        let s1 = sm.acquire(11).unwrap();
+        assert_ne!(s0, s1);
+        assert_eq!(sm.active_count(), 2);
+        sm.release(s0, 10);
+        assert_eq!(sm.free_count(), 3);
+        assert!(sm.check_invariants());
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut sm = SlotMap::new(2);
+        assert!(sm.acquire(1).is_some());
+        assert!(sm.acquire(2).is_some());
+        assert!(sm.acquire(3).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_release_panics() {
+        let mut sm = SlotMap::new(2);
+        let s = sm.acquire(1).unwrap();
+        sm.release(s, 1);
+        sm.release(s, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn foreign_release_panics() {
+        let mut sm = SlotMap::new(2);
+        let s = sm.acquire(1).unwrap();
+        sm.release(s, 99);
+    }
+}

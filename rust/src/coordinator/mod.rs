@@ -1,0 +1,21 @@
+//! L3 coordinator: the serving-style rollout path (vLLM-router-shaped).
+//!
+//! Two execution paths exist for rollouts:
+//! * **bulk** — the fused `generate_*` artifacts (prefill + scan decode +
+//!   sampling inside one HLO module); the training loop uses this, zero
+//!   per-token host round-trips;
+//! * **step-wise** — [`StepEngine`] + [`Scheduler`]: continuous batching
+//!   over per-step prefill/decode artifacts with host-side sampling; this
+//!   is the serving demo (latency/throughput/occupancy metrics) and the
+//!   cross-validation target for the bulk path.
+
+pub mod engine;
+pub mod kv;
+pub mod request;
+pub mod sampler;
+pub mod scheduler;
+
+pub use engine::StepEngine;
+pub use kv::SlotMap;
+pub use request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
+pub use scheduler::Scheduler;

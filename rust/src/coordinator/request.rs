@@ -1,0 +1,68 @@
+//! Rollout request/response types for the serving-style scheduler.
+
+/// A generation request, vLLM-router style.
+#[derive(Clone, Debug)]
+pub struct RolloutRequest {
+    pub id: u64,
+    /// prompt token ids (BOS included), length <= max_prompt
+    pub prompt: Vec<i32>,
+    /// stop after this many generated tokens (EOS may stop earlier)
+    pub max_new: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+    /// per-request sampling seed (deterministic replay)
+    pub seed: u64,
+}
+
+/// Why a sequence stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxNew,
+    ContextLimit,
+}
+
+/// A completed rollout.
+#[derive(Clone, Debug)]
+pub struct RolloutResult {
+    pub id: u64,
+    /// generated token ids (EOS inclusive when present)
+    pub generated: Vec<i32>,
+    /// behavior logprob per generated token
+    pub logprobs: Vec<f32>,
+    pub finish: FinishReason,
+    /// scheduler bookkeeping (seconds)
+    pub queue_wait_s: f64,
+    pub service_s: f64,
+}
+
+/// Scheduler-level counters for the throughput/latency report.
+#[derive(Clone, Debug, Default)]
+pub struct SchedulerStats {
+    pub completed: usize,
+    pub decode_steps: usize,
+    pub prefill_calls: usize,
+    pub decode_calls: usize,
+    pub generated_tokens: usize,
+    /// sum over decode calls of occupied-slot fraction
+    pub occupancy_sum: f64,
+    pub wall_s: f64,
+}
+
+impl SchedulerStats {
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.decode_calls == 0 {
+            0.0
+        } else {
+            self.occupancy_sum / self.decode_calls as f64
+        }
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / self.wall_s
+        }
+    }
+}

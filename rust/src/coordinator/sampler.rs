@@ -1,0 +1,139 @@
+//! Host-side token sampler — mirrors the in-artifact sampler semantics
+//! (model.sample_token): temperature scaling, nucleus filtering, exact
+//! behavior logprobs, greedy at temp < 1e-7.
+//!
+//! Used by the per-step scheduler path; the bulk `generate_*` artifacts
+//! sample on-device.  Greedy decoding is bit-identical between the two
+//! paths (integration-tested); stochastic sampling matches in distribution
+//! (different RNG streams).
+
+use crate::util::rng::Pcg64;
+
+/// Sample one token from a logits row.  Returns (token, logprob under the
+/// actual sampling distribution).
+pub fn sample(logits: &[f32], temp: f32, top_p: f32, rng: &mut Pcg64)
+              -> (i32, f32) {
+    if temp < 1e-7 {
+        return greedy(logits);
+    }
+    let t = temp.max(1e-6);
+    // log-softmax of logits/t
+    let scaled: Vec<f64> = logits.iter().map(|&x| (x / t) as f64).collect();
+    let mx = scaled.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let lse = scaled.iter().map(|&x| (x - mx).exp()).sum::<f64>().ln() + mx;
+    let logp: Vec<f64> = scaled.iter().map(|&x| x - lse).collect();
+    let p: Vec<f64> = logp.iter().map(|&x| x.exp()).collect();
+
+    // nucleus: smallest prefix of the sorted distribution with mass >= top_p
+    // (threshold semantics identical to the artifact: keep p >= p_threshold)
+    let mut order: Vec<usize> = (0..p.len()).collect();
+    order.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+    let mut cum = 0.0;
+    let mut thresh = f64::INFINITY;
+    for &i in &order {
+        if cum < top_p as f64 {
+            thresh = p[i];
+        }
+        cum += p[i];
+    }
+    let keep: Vec<usize> =
+        (0..p.len()).filter(|&i| p[i] >= thresh).collect();
+    let mass: f64 = keep.iter().map(|&i| p[i]).sum();
+    // categorical over the renormalized nucleus
+    let mut x = rng.f64() * mass;
+    let mut chosen = *keep.last().unwrap();
+    for &i in &keep {
+        x -= p[i];
+        if x <= 0.0 {
+            chosen = i;
+            break;
+        }
+    }
+    (chosen as i32, (p[chosen] / mass).ln() as f32)
+}
+
+/// Greedy pick with the logprob under the untempered distribution.
+pub fn greedy(logits: &[f32]) -> (i32, f32) {
+    let mut best = 0usize;
+    for i in 1..logits.len() {
+        if logits[i] > logits[best] {
+            best = i;
+        }
+    }
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&x| ((x - mx) as f64).exp()).sum::<f64>().ln()
+        + mx as f64;
+    (best as i32, (logits[best] as f64 - lse) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let logits = [0.1f32, 2.5, -1.0, 2.4];
+        let (t, lp) = greedy(&logits);
+        assert_eq!(t, 1);
+        assert!(lp < 0.0 && lp > -1.0);
+    }
+
+    #[test]
+    fn temp_zero_is_greedy() {
+        let logits = [0.0f32, 3.0, 1.0];
+        let mut rng = Pcg64::new(1);
+        let (t, _) = sample(&logits, 0.0, 1.0, &mut rng);
+        assert_eq!(t, 1);
+    }
+
+    #[test]
+    fn full_top_p_matches_softmax_frequencies() {
+        let logits = [0.0f32, 1.0, 2.0];
+        let mut rng = Pcg64::new(2);
+        let mut counts = [0usize; 3];
+        let n = 60_000;
+        for _ in 0..n {
+            let (t, lp) = sample(&logits, 1.0, 1.0, &mut rng);
+            counts[t as usize] += 1;
+            assert!(lp <= 0.0);
+        }
+        let z: f64 = (0..3).map(|i| (logits[i] as f64).exp()).sum();
+        for i in 0..3 {
+            let expect = (logits[i] as f64).exp() / z;
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - expect).abs() < 0.01, "{i}: {got} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn top_p_filters_tail() {
+        // p = softmax([5, 0, 0, 0]) -> head has ~0.97 mass; top_p=0.5 keeps
+        // only the head
+        let logits = [5.0f32, 0.0, 0.0, 0.0];
+        let mut rng = Pcg64::new(3);
+        for _ in 0..2000 {
+            let (t, lp) = sample(&logits, 1.0, 0.5, &mut rng);
+            assert_eq!(t, 0);
+            assert!(lp.abs() < 1e-6); // renormalized singleton
+        }
+    }
+
+    #[test]
+    fn logprob_is_consistent_with_frequency() {
+        let logits = [1.0f32, 0.5, 0.0, -0.5];
+        let mut rng = Pcg64::new(4);
+        let mut lp_by_tok = std::collections::HashMap::new();
+        let mut counts = std::collections::HashMap::new();
+        let n = 80_000;
+        for _ in 0..n {
+            let (t, lp) = sample(&logits, 1.0, 0.8, &mut rng);
+            lp_by_tok.insert(t, lp);
+            *counts.entry(t).or_insert(0usize) += 1;
+        }
+        for (t, c) in counts {
+            let freq = (c as f64 / n as f64).ln();
+            let lp = lp_by_tok[&t] as f64;
+            assert!((freq - lp).abs() < 0.06, "tok {t}: {freq} vs {lp}");
+        }
+    }
+}

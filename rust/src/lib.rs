@@ -1,0 +1,30 @@
+//! # QuRL — Efficient Reinforcement Learning with Quantized Rollout
+//!
+//! Rust + JAX + Pallas reproduction of the QuRL paper (Li et al., 2026):
+//! RL training for LLMs where the *rollout* runs on a quantized actor
+//! (INT8/FP8) while policy updates stay full-precision, stabilized by
+//! Adaptive Clipping Range (ACR) and Update-Aware Quantization (UAQ).
+//!
+//! Layer map (see DESIGN.md):
+//! * [`runtime`] — PJRT execution of AOT artifacts (the L2/L1 compute),
+//! * [`coordinator`] — rollout engine: scheduling, batching, sampling,
+//! * [`rl`] — advantages, objectives (naive/TIS/ACR), the training loop,
+//! * [`quant`] — Rust mirrors of the quantizers + UAQ + analysis metrics,
+//! * [`tasks`] — synthetic verifiable-reward workloads + tokenizer,
+//! * [`perfmodel`] — GPU roofline simulator (paper Fig. 8),
+//! * [`metrics`], [`config`], [`util`] — support substrate.
+
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod perfmodel;
+pub mod quant;
+pub mod rl;
+pub mod runtime;
+pub mod tasks;
+pub mod util;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,351 @@
+//! QuRL command-line interface (the L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   pretrain   — SFT the base model the RL experiments start from
+//!   train      — run an RL experiment (preset or config file)
+//!   eval       — evaluate a checkpoint (greedy Avg@1 and Avg@K)
+//!   serve      — serving-style scheduler demo over random requests
+//!   throughput — Fig. 8 roofline sweep (+ measured CPU decode)
+//!   quantize   — quantize a checkpoint and report error statistics
+//!   info       — artifact/manifest summary
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use qurl::config;
+use qurl::coordinator::{RolloutRequest, Scheduler, StepEngine};
+use qurl::metrics::Recorder;
+use qurl::perfmodel::{self, DecodeConfig, Precision};
+use qurl::quant::analysis;
+use qurl::rl::{self, eval as rleval, Trainer, TrainerConfig};
+use qurl::runtime::{ParamStore, QuantMode, Runtime};
+use qurl::tasks::{Suite, Tokenizer};
+use qurl::util::cli::Cli;
+use qurl::util::timer::print_table;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+    match cmd {
+        "pretrain" => cmd_pretrain(rest),
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "throughput" => cmd_throughput(rest),
+        "quantize" => cmd_quantize(rest),
+        "info" => cmd_info(rest),
+        _ => {
+            eprintln!(
+                "qurl {} — Quantized Reinforcement Learning (QuRL) reproduction\n\n\
+                 usage: qurl <command> [--help]\n\n\
+                 commands:\n\
+                 \x20 pretrain    SFT the base model (required before RL)\n\
+                 \x20 train       run an RL experiment (presets: {})\n\
+                 \x20 eval        evaluate a checkpoint\n\
+                 \x20 serve       continuous-batching scheduler demo\n\
+                 \x20 throughput  Fig. 8 roofline sweep\n\
+                 \x20 quantize    quantization error report\n\
+                 \x20 info        manifest summary",
+                qurl::version(),
+                config::PRESETS.join(", ")
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &qurl::util::cli::Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts"))
+}
+
+/// Load the shared base checkpoint, or SFT-pretrain + cache it on demand.
+pub fn base_model(rt: &Runtime, path: &Path, sft_steps: usize, seed: u64)
+                  -> Result<ParamStore> {
+    if path.exists() {
+        let ps = ParamStore::load(path)?;
+        anyhow::ensure!(ps.params.len() == rt.manifest().n_params,
+                        "checkpoint size mismatch (rebuild with pretrain)");
+        return Ok(ps);
+    }
+    qurl::info!("main", "no base checkpoint at {path:?}; running SFT \
+                 pretraining ({sft_steps} steps)");
+    let init = rt.init_params(seed as i32)?;
+    let mut ps = ParamStore::new(rt.manifest(), init);
+    let suite = Suite::by_name("deepscaler").unwrap();
+    let mut rec = Recorder::ephemeral("sft");
+    let loss = rl::pretrain_sft(rt, &mut ps, &suite, sft_steps, 3e-4, seed,
+                                &mut rec)?;
+    qurl::info!("main", "SFT done, final loss {loss:.4}");
+    ps.reset_optimizer();
+    ps.save(path)?;
+    Ok(ps)
+}
+
+fn cmd_pretrain(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("qurl pretrain", "SFT-train the RL base model")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("out", "results/base_model.bin", "checkpoint path")
+        .opt("steps", "600", "SFT steps")
+        .opt("lr", "3e-4", "learning rate")
+        .opt("seed", "0", "seed")
+        .opt("suite", "deepscaler", "task suite");
+    let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::open(&artifacts_dir(&args))?;
+    let init = rt.init_params(args.u64("seed") as i32)?;
+    let mut ps = ParamStore::new(rt.manifest(), init);
+    let suite = Suite::by_name(&args.str("suite")).context("unknown suite")?;
+    let mut rec = Recorder::create(Path::new("results"), "pretrain")?;
+    let loss = rl::pretrain_sft(&rt, &mut ps, &suite, args.usize("steps"),
+                                args.f32("lr"), args.u64("seed"), &mut rec)?;
+    ps.reset_optimizer();
+    let out = PathBuf::from(args.str("out"));
+    ps.save(&out)?;
+    // quick greedy eval of the base model
+    let tk = Tokenizer::new();
+    let w = rt.engine_weights(QuantMode::Bf16, &ps.params)?;
+    let acc = rleval::greedy_accuracy(&rt, &w, &tk, &suite, 1234, 32)?;
+    println!("base model: sft_loss={loss:.4} greedy_acc={acc:.3} -> {out:?}");
+    Ok(())
+}
+
+fn train_cli() -> Cli {
+    Cli::new("qurl train", "run a QuRL RL experiment")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("preset", "deepscaler_grpo", "preset name or path to .json")
+        .opt("base", "results/base_model.bin", "base checkpoint")
+        .opt("run", "", "run name (default: derived)")
+        .opt("steps", "0", "override steps (0 = preset)")
+        .opt("objective", "", "override objective (onpolicy|naive|decoupled|tis|acr)")
+        .opt("rollout", "", "override rollout mode (bf16|int8|fp8)")
+        .opt("uaq", "-1", "override UAQ scale (-1 = preset)")
+        .opt("lr", "0", "override learning rate (0 = preset)")
+        .opt("seed", "0", "seed")
+        .opt("engine-noise", "-1", "override engine noise std (-1 = preset)")
+        .opt("sft-steps", "600", "SFT steps if base model missing")
+        .opt("save", "", "save final checkpoint here")
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let args = train_cli().parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::open(&artifacts_dir(&args))?;
+    let preset_name = args.str("preset");
+    let mut cfg: TrainerConfig = if preset_name.ends_with(".json") {
+        config::load(Path::new(&preset_name))?
+    } else {
+        config::preset(&preset_name)
+            .with_context(|| format!("unknown preset {preset_name:?}"))?
+    };
+    if args.usize("steps") > 0 {
+        cfg.steps = args.usize("steps");
+    }
+    if !args.str("objective").is_empty() {
+        cfg.objective.kind = rl::ObjectiveKind::parse(&args.str("objective"))
+            .context("bad --objective")?;
+    }
+    if !args.str("rollout").is_empty() {
+        cfg.rollout_mode =
+            QuantMode::parse(&args.str("rollout")).context("bad --rollout")?;
+    }
+    if args.f64("uaq") >= 0.0 {
+        cfg.uaq_scale = args.f32("uaq");
+    }
+    if args.f64("lr") > 0.0 {
+        cfg.objective.lr = args.f32("lr");
+    }
+    if args.f64("engine-noise") >= 0.0 {
+        cfg.engine_noise = args.f32("engine-noise");
+    }
+    cfg.seed = args.u64("seed");
+    let run = if args.str("run").is_empty() {
+        format!("{}_{}_{}_uaq{}", preset_name.trim_end_matches(".json"),
+                cfg.objective.kind.name(), cfg.rollout_mode.tag(),
+                cfg.uaq_scale)
+    } else {
+        args.str("run")
+    };
+    let base = base_model(&rt, Path::new(&args.str("base")),
+                          args.usize("sft-steps"), 0)?;
+    let rec = Recorder::create(Path::new("results"), &run)?;
+    config::save(&cfg, &Path::new("results").join(format!("{run}.config.json")))?;
+    let mut trainer = Trainer::new(&rt, cfg, base, rec)?;
+    let final_reward = trainer.run()?;
+    println!("run {run}: final training reward (tail mean) = {final_reward:.3}");
+    if !args.str("save").is_empty() {
+        trainer.ps.save(Path::new(&args.str("save")))?;
+    }
+    // artifact execution profile (L3 perf accounting)
+    for (name, calls, secs) in rt.store.stats().into_iter().take(6) {
+        qurl::info!("perf", "{name}: {calls} calls, {secs:.1}s");
+    }
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("qurl eval", "evaluate a checkpoint")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("ckpt", "results/base_model.bin", "checkpoint to evaluate")
+        .opt("suite", "deepscaler", "task suite")
+        .opt("mode", "bf16", "engine precision for eval rollouts")
+        .opt("k", "1", "Avg@K samples (1 = greedy)")
+        .opt("temp", "0.6", "sampling temperature for K>1")
+        .opt("top-p", "0.7", "nucleus for K>1")
+        .opt("n", "32", "problems per family")
+        .opt("seed", "1234", "test-set seed");
+    let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::open(&artifacts_dir(&args))?;
+    let ps = ParamStore::load(Path::new(&args.str("ckpt")))?;
+    let mode = QuantMode::parse(&args.str("mode")).context("bad --mode")?;
+    let w = rt.engine_weights(mode, &ps.params)?;
+    let suite = Suite::by_name(&args.str("suite")).context("unknown suite")?;
+    let tk = Tokenizer::new();
+    let k = args.usize("k");
+    let (temp, top_p) = if k <= 1 {
+        (0.0, 1.0)
+    } else {
+        (args.f32("temp"), args.f32("top-p"))
+    };
+    let per = rleval::per_family_accuracy(&rt, &w, &tk, &suite,
+                                          args.u64("seed"), args.usize("n"),
+                                          k.max(1), temp, top_p)?;
+    let mut rows = Vec::new();
+    let mut total = 0.0;
+    for (fam, (acc, n)) in &per {
+        rows.push(vec![fam.to_string(), format!("{:.3}", acc),
+                       n.to_string()]);
+        total += acc;
+    }
+    rows.push(vec!["AVG".into(), format!("{:.3}", total / per.len() as f64),
+                   String::new()]);
+    print_table(&format!("Avg@{k} ({} rollouts, {})", args.str("mode"),
+                         args.str("suite")),
+                &["family", "accuracy", "n"], &rows);
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("qurl serve", "continuous-batching scheduler demo")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("base", "results/base_model.bin", "checkpoint")
+        .opt("mode", "int8", "engine precision")
+        .opt("requests", "96", "number of requests")
+        .opt("max-new", "48", "max generated tokens per request")
+        .opt("min-batch", "8", "dynamic-batching admission threshold")
+        .opt("seed", "0", "seed");
+    let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::open(&artifacts_dir(&args))?;
+    let ps = base_model(&rt, Path::new(&args.str("base")), 600, 0)?;
+    let mode = QuantMode::parse(&args.str("mode")).context("bad --mode")?;
+    let w = rt.engine_weights(mode, &ps.params)?;
+    let mut engine = StepEngine::new(&rt, w);
+    let man = rt.manifest().clone();
+    let mut sched = Scheduler::new(&mut engine, man.max_seq, man.eos_id);
+    sched.min_prefill_batch = args.usize("min-batch");
+    let tk = Tokenizer::new();
+    let suite = Suite::by_name("deepscaler").unwrap();
+    let mut sampler = suite.train_sampler(args.u64("seed"));
+    let n = args.usize("requests");
+    for id in 0..n as u64 {
+        let (_, prob) = sampler.next();
+        sched.submit(RolloutRequest {
+            id,
+            prompt: tk.encode_prompt(&prob.prompt),
+            max_new: args.usize("max-new"),
+            temperature: 1.0,
+            top_p: 1.0,
+            seed: id ^ 0x5eed,
+        });
+    }
+    let results = sched.run_to_completion()?;
+    let st = &sched.stats;
+    println!("served {} requests: {:.1} tok/s, mean occupancy {:.2}, \
+              {} prefill calls, {} decode calls",
+             results.len(), st.tokens_per_s(), st.mean_occupancy(),
+             st.prefill_calls, st.decode_calls);
+    Ok(())
+}
+
+fn cmd_throughput(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("qurl throughput", "Fig. 8 roofline sweep")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("batch", "64", "decode batch")
+        .opt("ctx", "2048", "mean context length")
+        .opt("gen-len", "1024", "mean generation length");
+    let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = DecodeConfig {
+        batch: args.usize("batch"),
+        ctx: args.usize("ctx"),
+        gen_len: args.usize("gen-len"),
+    };
+    let mut rows = Vec::new();
+    for gpu in perfmodel::ALL_GPUS {
+        for scale in perfmodel::roofline::ALL_SCALES {
+            let bf16 = perfmodel::decode_throughput(gpu, scale, Precision::Bf16, &cfg);
+            let int8 = perfmodel::decode_throughput(gpu, scale, Precision::Int8, &cfg);
+            rows.push(vec![
+                gpu.spec().name.to_string(),
+                scale.name().to_string(),
+                format!("{bf16:.2}"),
+                format!("{int8:.2}"),
+                format!("+{:.0}%", (int8 / bf16 - 1.0) * 100.0),
+            ]);
+        }
+    }
+    print_table("Fig. 8 analog: decode throughput (queries/s, roofline)",
+                &["gpu", "model", "bf16 q/s", "int8 q/s", "speedup"], &rows);
+    let _ = artifacts_dir(&args); // measured CPU numbers live in the bench
+    println!("\n(measured CPU-testbed decode rates: cargo bench --bench \
+              fig8_throughput)");
+    Ok(())
+}
+
+fn cmd_quantize(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("qurl quantize", "quantization error report")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("ckpt", "results/base_model.bin", "checkpoint")
+        .opt("uaq", "1", "UAQ scale to compare (1 = off)");
+    let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::open(&artifacts_dir(&args))?;
+    let ps = ParamStore::load(Path::new(&args.str("ckpt")))?;
+    let man = rt.manifest().clone();
+    let mut rows = Vec::new();
+    for (label, params) in [
+        ("plain".to_string(), ps.params.clone()),
+        (format!("uaq_s={}", args.str("uaq")),
+         rt.uaq_scale(&ps.params, args.f32("uaq"))?),
+    ] {
+        let b = &params[man.a_size..];
+        for mode in [QuantMode::Int8, QuantMode::Fp8] {
+            let err = analysis::normalized_quant_error(&man, b, mode);
+            rows.push(vec![label.clone(), mode.tag().into(),
+                           format!("{err:.3e}")]);
+        }
+    }
+    print_table("normalized weight quantization error (Eq. 14)",
+                &["params", "mode", "error"], &rows);
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("qurl info", "artifact/manifest summary")
+        .opt("artifacts", "artifacts", "artifact directory");
+    let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
+    let dir = artifacts_dir(&args);
+    let rt = Runtime::open(&dir)?;
+    let m = rt.manifest();
+    println!("platform     : {}", rt.store.platform());
+    println!("model        : {} params ({} layers, d={}, {} heads, ff={})",
+             m.n_params, m.n_layers, m.d_model, m.n_heads, m.d_ff);
+    println!("context      : {} (prompt <= {}, max_new {})", m.max_seq,
+             m.max_prompt, m.max_new);
+    println!("rollout batch: {}", m.rollout_batch);
+    println!("quantized    : {} weights in {} matrices ({} scales)",
+             m.b_size, m.qscales.len(), m.n_qscales);
+    println!("artifacts    : {}", m.artifacts.len());
+    for (name, sig) in &m.artifacts {
+        println!("  {name:16} {} in / {} out", sig.inputs.len(),
+                 sig.outputs.len());
+    }
+    Ok(())
+}

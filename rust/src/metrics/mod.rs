@@ -1,0 +1,7 @@
+//! Experiment metric recording: JSONL event streams + CSV curves + run
+//! summaries.  Every bench/example writes through this module so
+//! EXPERIMENTS.md can be regenerated from `results/`.
+
+pub mod recorder;
+
+pub use recorder::{Recorder, Row};

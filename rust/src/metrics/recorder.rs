@@ -1,0 +1,179 @@
+//! JSONL/CSV metric recorder.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One metric row: step index + named values.
+#[derive(Clone, Debug, Default)]
+pub struct Row {
+    pub step: u64,
+    pub values: BTreeMap<String, f64>,
+    pub tags: BTreeMap<String, String>,
+}
+
+impl Row {
+    pub fn new(step: u64) -> Row {
+        Row { step, ..Default::default() }
+    }
+
+    pub fn set(mut self, key: &str, v: f64) -> Row {
+        self.values.insert(key.to_string(), v);
+        self
+    }
+
+    pub fn tag(mut self, key: &str, v: &str) -> Row {
+        self.tags.insert(key.to_string(), v.to_string());
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("step".into(), Json::Num(self.step as f64));
+        for (k, v) in &self.values {
+            m.insert(k.clone(), Json::Num(*v));
+        }
+        for (k, v) in &self.tags {
+            m.insert(k.clone(), Json::Str(v.clone()));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Appends rows to a `.jsonl` file and keeps them in memory for summaries.
+pub struct Recorder {
+    path: Option<PathBuf>,
+    pub rows: Vec<Row>,
+    pub run_name: String,
+}
+
+impl Recorder {
+    /// Recorder writing under `results/<run_name>.jsonl` (created).
+    pub fn create(dir: &Path, run_name: &str) -> Result<Recorder> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {dir:?}"))?;
+        let path = dir.join(format!("{run_name}.jsonl"));
+        std::fs::write(&path, "").context("truncating metric file")?;
+        Ok(Recorder {
+            path: Some(path),
+            rows: Vec::new(),
+            run_name: run_name.to_string(),
+        })
+    }
+
+    /// In-memory only (unit tests, quick benches).
+    pub fn ephemeral(run_name: &str) -> Recorder {
+        Recorder { path: None, rows: Vec::new(), run_name: run_name.to_string() }
+    }
+
+    pub fn log(&mut self, row: Row) {
+        if let Some(path) = &self.path {
+            if let Ok(mut f) =
+                std::fs::OpenOptions::new().append(true).open(path)
+            {
+                let _ = writeln!(f, "{}", row.to_json().to_string());
+            }
+        }
+        self.rows.push(row);
+    }
+
+    /// Series of one metric over steps (missing rows skipped).
+    pub fn series(&self, key: &str) -> Vec<(u64, f64)> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.values.get(key).map(|&v| (r.step, v)))
+            .collect()
+    }
+
+    /// Series filtered by a tag value.
+    pub fn series_where(&self, key: &str, tag: &str, value: &str) -> Vec<(u64, f64)> {
+        self.rows
+            .iter()
+            .filter(|r| r.tags.get(tag).map(|t| t == value).unwrap_or(false))
+            .filter_map(|r| r.values.get(key).map(|&v| (r.step, v)))
+            .collect()
+    }
+
+    pub fn last(&self, key: &str) -> Option<f64> {
+        self.series(key).last().map(|&(_, v)| v)
+    }
+
+    /// Mean of the final `k` values of a series (end-of-training estimate).
+    pub fn tail_mean(&self, key: &str, k: usize) -> Option<f64> {
+        let s = self.series(key);
+        if s.is_empty() {
+            return None;
+        }
+        let tail = &s[s.len().saturating_sub(k)..];
+        Some(tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Dump selected series as CSV (step,<keys...>) for plotting.
+    pub fn write_csv(&self, dir: &Path, keys: &[&str]) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir).ok();
+        let path = dir.join(format!("{}.csv", self.run_name));
+        let mut out = String::from("step");
+        for k in keys {
+            out.push(',');
+            out.push_str(k);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            if keys.iter().all(|k| !r.values.contains_key(*k)) {
+                continue;
+            }
+            out.push_str(&r.step.to_string());
+            for k in keys {
+                out.push(',');
+                if let Some(v) = r.values.get(*k) {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        std::fs::write(&path, out).context("writing csv")?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_and_tail() {
+        let mut r = Recorder::ephemeral("t");
+        for i in 0..10 {
+            r.log(Row::new(i).set("x", i as f64));
+        }
+        assert_eq!(r.series("x").len(), 10);
+        assert_eq!(r.last("x"), Some(9.0));
+        assert!((r.tail_mean("x", 4).unwrap() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tagged_series() {
+        let mut r = Recorder::ephemeral("t");
+        r.log(Row::new(0).set("acc", 0.5).tag("mode", "int8"));
+        r.log(Row::new(0).set("acc", 0.7).tag("mode", "bf16"));
+        let s = r.series_where("acc", "mode", "int8");
+        assert_eq!(s, vec![(0, 0.5)]);
+    }
+
+    #[test]
+    fn jsonl_file_roundtrip() {
+        let dir = std::env::temp_dir().join("qurl_rec_test");
+        let mut r = Recorder::create(&dir, "run1").unwrap();
+        r.log(Row::new(3).set("loss", 1.25).tag("phase", "rl"));
+        let text = std::fs::read_to_string(dir.join("run1.jsonl")).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.req("step").as_usize(), Some(3));
+        assert_eq!(j.req("loss").as_f64(), Some(1.25));
+        assert_eq!(j.req("phase").as_str(), Some("rl"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

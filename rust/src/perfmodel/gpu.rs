@@ -1,0 +1,83 @@
+//! Public datasheet specs for the GPUs in the paper's Fig. 8.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gpu {
+    A6000,
+    A100,
+    H100,
+}
+
+pub const ALL_GPUS: [Gpu; 3] = [Gpu::A6000, Gpu::A100, Gpu::H100];
+
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// HBM/GDDR bandwidth, bytes/s
+    pub mem_bw: f64,
+    /// dense fp16/bf16 tensor-core peak, FLOP/s
+    pub fp16_flops: f64,
+    /// dense INT8 tensor-core peak, OP/s
+    pub int8_ops: f64,
+    /// dense FP8 peak, FLOP/s (0 where unsupported — pre-Hopper)
+    pub fp8_flops: f64,
+    /// per-step kernel/runtime overhead, seconds (vLLM-like decode launch)
+    pub step_overhead: f64,
+}
+
+impl Gpu {
+    pub fn spec(&self) -> GpuSpec {
+        match self {
+            // RTX A6000: 768 GB/s GDDR6, 155 TFLOPS fp16 TC, 310 TOPS int8
+            Gpu::A6000 => GpuSpec {
+                name: "A6000",
+                mem_bw: 768e9,
+                fp16_flops: 155e12,
+                int8_ops: 310e12,
+                fp8_flops: 0.0,
+                step_overhead: 35e-6,
+            },
+            // A100-80GB SXM: 2039 GB/s HBM2e, 312 TFLOPS fp16, 624 TOPS int8
+            Gpu::A100 => GpuSpec {
+                name: "A100",
+                mem_bw: 2039e9,
+                fp16_flops: 312e12,
+                int8_ops: 624e12,
+                fp8_flops: 0.0,
+                step_overhead: 30e-6,
+            },
+            // H100 SXM: 3350 GB/s HBM3, 990 TFLOPS fp16, 1979 TOPS int8/fp8
+            Gpu::H100 => GpuSpec {
+                name: "H100",
+                mem_bw: 3350e9,
+                fp16_flops: 990e12,
+                int8_ops: 1979e12,
+                fp8_flops: 1979e12,
+                step_overhead: 25e-6,
+            },
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Gpu> {
+        match s.to_ascii_lowercase().as_str() {
+            "a6000" => Some(Gpu::A6000),
+            "a100" => Some(Gpu::A100),
+            "h100" => Some(Gpu::H100),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_ordering_sane() {
+        let a6000 = Gpu::A6000.spec();
+        let a100 = Gpu::A100.spec();
+        let h100 = Gpu::H100.spec();
+        assert!(a6000.mem_bw < a100.mem_bw && a100.mem_bw < h100.mem_bw);
+        assert!(a6000.fp16_flops < a100.fp16_flops);
+        assert!(h100.fp8_flops > 0.0 && a100.fp8_flops == 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! GPU decode-throughput roofline simulator — regenerates the paper's
+//! Fig. 8 (INT8 rollout acceleration across model sizes and GPUs).
+//!
+//! The paper measures vLLM + GuideLLM on real A6000/A100/H100 hardware; this
+//! testbed has none, so Fig. 8 is reproduced from first principles
+//! (DESIGN.md §2): autoregressive decode is modeled as
+//!
+//! ```text
+//! t_step = max(t_mem, t_compute) + t_overhead
+//! t_mem  = (weight_bytes + kv_bytes(batch, ctx)) / mem_bw
+//! t_comp = 2 * params * batch / peak_flops(precision)
+//! ```
+//!
+//! INT8 halves weight bytes and doubles peak math throughput; the KV cache
+//! stays 16-bit (the paper explicitly excludes KV quantization).  The
+//! paper's qualitative findings fall out of this model: larger models gain
+//! more (weight traffic dominates the un-quantized KV traffic) and
+//! higher-end GPUs gain more at large batch (compute roofline lifts).
+
+pub mod gpu;
+pub mod roofline;
+pub mod sweep;
+
+pub use gpu::{Gpu, GpuSpec, ALL_GPUS};
+pub use roofline::{decode_throughput, speedup, DecodeConfig, ModelScale, Precision};

@@ -1,0 +1,135 @@
+//! Fig. 8 sweep driver: full grids over GPU x scale x precision x batch x
+//! context, with CSV export for plotting — the machine-readable counterpart
+//! of the `fig8_throughput` bench.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::gpu::{Gpu, ALL_GPUS};
+use super::roofline::{decode_throughput, speedup, DecodeConfig, ModelScale,
+                      Precision, ALL_SCALES};
+
+/// One grid point of the Fig. 8 sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub gpu: Gpu,
+    pub scale: ModelScale,
+    pub precision: Precision,
+    pub batch: usize,
+    pub ctx: usize,
+    pub queries_per_s: f64,
+    pub speedup_vs_bf16: f64,
+}
+
+/// The paper's grid: {7,14,32}B x {A6000,A100,H100} x {bf16,int8,fp8} at a
+/// fixed serving load.
+pub fn paper_grid(cfg: &DecodeConfig) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for scale in ALL_SCALES {
+        for gpu in ALL_GPUS {
+            for precision in [Precision::Bf16, Precision::Int8, Precision::Fp8] {
+                out.push(SweepPoint {
+                    gpu,
+                    scale,
+                    precision,
+                    batch: cfg.batch,
+                    ctx: cfg.ctx,
+                    queries_per_s: decode_throughput(gpu, scale, precision, cfg),
+                    speedup_vs_bf16: speedup(gpu, scale, precision, cfg),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Sensitivity grid over batch and context (the "why bigger models gain
+/// more" decomposition).
+pub fn sensitivity_grid(gpu: Gpu, scale: ModelScale,
+                        batches: &[usize], ctxs: &[usize]) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &batch in batches {
+        for &ctx in ctxs {
+            let cfg = DecodeConfig { batch, ctx, gen_len: 1024 };
+            out.push(SweepPoint {
+                gpu,
+                scale,
+                precision: Precision::Int8,
+                batch,
+                ctx,
+                queries_per_s: decode_throughput(gpu, scale, Precision::Int8,
+                                                 &cfg),
+                speedup_vs_bf16: speedup(gpu, scale, Precision::Int8, &cfg),
+            });
+        }
+    }
+    out
+}
+
+/// Dump a sweep as CSV (plot-ready).
+pub fn write_csv(points: &[SweepPoint], path: &Path) -> Result<()> {
+    let mut s = String::from("gpu,model,precision,batch,ctx,queries_per_s,\
+                              speedup_vs_bf16\n");
+    for p in points {
+        s.push_str(&format!("{},{},{:?},{},{},{:.4},{:.4}\n",
+                            p.gpu.spec().name, p.scale.name(), p.precision,
+                            p.batch, p.ctx, p.queries_per_s,
+                            p.speedup_vs_bf16));
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    std::fs::write(path, s).context("writing sweep csv")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_shape() {
+        let pts = paper_grid(&DecodeConfig::default());
+        assert_eq!(pts.len(), 3 * 3 * 3);
+        // bf16 rows must have speedup exactly 1
+        for p in pts.iter().filter(|p| p.precision == Precision::Bf16) {
+            assert!((p.speedup_vs_bf16 - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn speedup_monotone_in_scale_on_every_gpu() {
+        let cfg = DecodeConfig::default();
+        for gpu in ALL_GPUS {
+            let pts = paper_grid(&cfg);
+            let s = |scale| {
+                pts.iter()
+                    .find(|p| p.gpu == gpu && p.scale == scale
+                          && p.precision == Precision::Int8)
+                    .unwrap()
+                    .speedup_vs_bf16
+            };
+            assert!(s(ModelScale::B32) > s(ModelScale::B7), "{gpu:?}");
+        }
+    }
+
+    #[test]
+    fn longer_context_erodes_speedup() {
+        // the fp16 KV cache is not quantized; more of it means less gain
+        let pts = sensitivity_grid(Gpu::A100, ModelScale::B7, &[64],
+                                   &[512, 8192]);
+        assert!(pts[0].speedup_vs_bf16 > pts[1].speedup_vs_bf16);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("qurl_sweep_test");
+        let path = dir.join("grid.csv");
+        let pts = paper_grid(&DecodeConfig::default());
+        write_csv(&pts, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), pts.len() + 1);
+        assert!(text.starts_with("gpu,model,precision"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,144 @@
+//! The paper's weight-update-vs-quantization-noise analysis (§4.3, Fig. 4,
+//! Appendix A Fig. 9).
+//!
+//! * NormalizedWeightUpdate(t)    = ||θ^{t+1} − θ^t||_F² / ||θ^t||_F²   (Eq. 13)
+//! * NormalizedWeightQuantError   = ||Q(θ^t) − θ^t||_F² / ||θ^t||_F²    (Eq. 14)
+//! * masked-update fraction: how many section-B weights change their INT8
+//!   code between steps — the paper's "quantization masks nearly all weight
+//!   updates" observation, measured directly.
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::QuantMode;
+
+use super::{fp8, int8};
+
+fn sq_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// Eq. 13 over the full flat parameter vector.
+pub fn normalized_weight_update(theta_t: &[f32], theta_t1: &[f32]) -> f64 {
+    assert_eq!(theta_t.len(), theta_t1.len());
+    let num: f64 = theta_t
+        .iter()
+        .zip(theta_t1)
+        .map(|(&a, &b)| {
+            let d = (b - a) as f64;
+            d * d
+        })
+        .sum();
+    num / sq_norm(theta_t).max(1e-30)
+}
+
+/// Dequantized section-B weights under `mode` (identity for Bf16).
+pub fn effective_weights(manifest: &Manifest, flat_b: &[f32],
+                         mode: QuantMode) -> Vec<f32> {
+    match mode {
+        QuantMode::Bf16 => flat_b.to_vec(),
+        QuantMode::Int8 => {
+            let mut out = vec![0.0f32; flat_b.len()];
+            for_each_mat(manifest, |name, off, k, n| {
+                let w = &flat_b[off..off + k * n];
+                let (q, s) = int8::weight_quant(w, k, n);
+                out[off..off + k * n]
+                    .copy_from_slice(&int8::dequant(&q, &s, k, n));
+                let _ = name;
+            });
+            out
+        }
+        QuantMode::Fp8 => {
+            let mut out = vec![0.0f32; flat_b.len()];
+            for_each_mat(manifest, |_, off, k, n| {
+                let w = &flat_b[off..off + k * n];
+                out[off..off + k * n].copy_from_slice(&fp8::weight_quant(w, k, n));
+            });
+            out
+        }
+    }
+}
+
+/// Eq. 14 over section B under the given quantization mode.
+pub fn normalized_quant_error(manifest: &Manifest, flat_b: &[f32],
+                              mode: QuantMode) -> f64 {
+    let deq = effective_weights(manifest, flat_b, mode);
+    let num: f64 = flat_b
+        .iter()
+        .zip(&deq)
+        .map(|(&a, &b)| {
+            let d = (b - a) as f64;
+            d * d
+        })
+        .sum();
+    num / sq_norm(flat_b).max(1e-30)
+}
+
+/// Fraction of section-B weights whose INT8 code actually changed between
+/// two parameter snapshots — the paper's "update masked by quantization"
+/// effect (near 0 without UAQ at small lr; UAQ raises it).
+pub fn int8_code_change_fraction(manifest: &Manifest, b_t: &[f32],
+                                 b_t1: &[f32]) -> f64 {
+    assert_eq!(b_t.len(), b_t1.len());
+    let mut changed = 0usize;
+    let mut total = 0usize;
+    for_each_mat(manifest, |_, off, k, n| {
+        let (q0, _) = int8::weight_quant(&b_t[off..off + k * n], k, n);
+        let (q1, _) = int8::weight_quant(&b_t1[off..off + k * n], k, n);
+        changed += q0.iter().zip(&q1).filter(|(a, b)| a != b).count();
+        total += q0.len();
+    });
+    changed as f64 / total.max(1) as f64
+}
+
+/// Iterate section-B matrices as (name, offset_in_b, K, N).
+pub fn for_each_mat(manifest: &Manifest, mut f: impl FnMut(&str, usize, usize, usize)) {
+    for p in &manifest.params {
+        if p.offset >= manifest.a_size {
+            assert_eq!(p.shape.len(), 2, "section B must be matrices");
+            f(&p.name, p.offset - manifest.a_size, p.shape[0], p.shape[1]);
+        }
+    }
+}
+
+/// Host-side UAQ mirror (Eq. 11) for tests: W/s on LN-fed matrices, gain*s
+/// on the feeding norms.  The runtime path uses the uaq_scale artifact.
+pub fn uaq_scale_host(manifest: &Manifest, params: &mut [f32], s: f32) {
+    for l in 0..manifest.n_layers {
+        for (name, div) in [
+            (format!("layer{l}.ln1"), false),
+            (format!("layer{l}.qkv"), true),
+            (format!("layer{l}.ln2"), false),
+            (format!("layer{l}.mlp_up"), true),
+        ] {
+            let p = manifest.param(&name).expect("manifest param");
+            let sl = &mut params[p.offset..p.offset + p.numel()];
+            if div {
+                sl.iter_mut().for_each(|x| *x /= s);
+            } else {
+                sl.iter_mut().for_each(|x| *x *= s);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_update_scales_quadratically() {
+        let a = vec![1.0f32; 100];
+        let mut b = a.clone();
+        b[0] += 0.1;
+        let u1 = normalized_weight_update(&a, &b);
+        let mut c = a.clone();
+        c[0] += 0.2;
+        let u2 = normalized_weight_update(&a, &c);
+        assert!((u2 / u1 - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_update_is_zero() {
+        let a = vec![0.5f32; 10];
+        assert_eq!(normalized_weight_update(&a, &a), 0.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Rust mirror of the e4m3fn fake quantizer (kernels/ref.py::quant_e4m3).
+//!
+//! Bit-level emulation: RNE onto the 3-mantissa-bit grid, exponent range
+//! [-6, 8], subnormal quantum 2^-9, saturation at +-448 (e4m3fn has no inf).
+
+pub const E4M3_MAX: f32 = 448.0;
+pub const SCALE_EPS: f32 = 1e-8;
+
+use super::int8::rne;
+
+/// Round one value onto the e4m3fn grid.
+pub fn quant_e4m3(x: f32) -> f32 {
+    if x == 0.0 || x.is_nan() {
+        return 0.0;
+    }
+    let a = x.abs();
+    let mut e = a.log2().floor();
+    e = e.clamp(-6.0, 8.0);
+    let step = (e - 3.0).exp2();
+    let q = rne(x / step) * step;
+    q.clamp(-E4M3_MAX, E4M3_MAX)
+}
+
+/// Per-output-channel scaled e4m3 fake quantization of [K, N] (row-major),
+/// matching ref.weight_quant_fp8 (scale folded back in).
+pub fn weight_quant(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * n);
+    let mut absmax = vec![0.0f32; n];
+    for row in w.chunks_exact(n) {
+        for (j, &x) in row.iter().enumerate() {
+            absmax[j] = absmax[j].max(x.abs());
+        }
+    }
+    let scale: Vec<f32> = absmax
+        .iter()
+        .map(|&a| a.max(SCALE_EPS) / E4M3_MAX)
+        .collect();
+    w.iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let s = scale[i % n];
+            quant_e4m3(x / s) * s
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn representable_values_fixed() {
+        // exact e4m3 values stay fixed
+        for v in [1.0f32, 1.125, 0.875, 448.0, -448.0, 2.0_f32.powi(-9),
+                  2.0_f32.powi(-6), 240.0] {
+            assert_eq!(quant_e4m3(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn saturates_not_inf() {
+        assert_eq!(quant_e4m3(1e6), 448.0);
+        assert_eq!(quant_e4m3(-1e6), -448.0);
+        assert_eq!(quant_e4m3(460.0), 448.0);
+    }
+
+    #[test]
+    fn subnormal_quantum() {
+        let q = 2.0_f32.powi(-9);
+        // halfway between 0 and the smallest subnormal rounds to even (0)
+        assert_eq!(quant_e4m3(q * 0.5), 0.0);
+        assert_eq!(quant_e4m3(q * 0.75), q);
+        assert_eq!(quant_e4m3(q * 1.4), q);
+        assert_eq!(quant_e4m3(q * 1.6), 2.0 * q);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // normal range: relative error <= 2^-4 (half of 3-bit mantissa ulp)
+        let mut x = 0.07f32;
+        while x < 400.0 {
+            let q = quant_e4m3(x);
+            assert!(((q - x) / x).abs() <= 1.0 / 16.0 + 1e-6, "{x} -> {q}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn weight_quant_idempotent() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(5);
+        let (k, n) = (8, 4);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let q1 = weight_quant(&w, k, n);
+        let q2 = weight_quant(&q1, k, n);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Rust mirror of the INT8 quantizer (kernels/ref.py::weight_quant_int8).
+//!
+//! The rollout engine quantizes through the `quantize_int8` artifact (so the
+//! request path stays on XLA); this mirror exists for (a) the weight-update
+//! vs quantization-noise analysis of Fig. 4/9, which runs per RL step on the
+//! host, and (b) cross-checking the artifact bit-for-bit in tests.
+
+pub const QMAX: f32 = 127.0;
+pub const SCALE_EPS: f32 = 1e-8;
+
+/// Round half to even (matches jnp.round / XLA round_nearest_even).
+#[inline]
+pub fn rne(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbor
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// Per-output-channel symmetric quantization of a [K, N] matrix (row-major).
+/// Returns (q: len K*N, scale: len N).
+pub fn weight_quant(w: &[f32], k: usize, n: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), k * n);
+    let mut scale = vec![0.0f32; n];
+    for row in w.chunks_exact(n) {
+        for (j, &x) in row.iter().enumerate() {
+            scale[j] = scale[j].max(x.abs());
+        }
+    }
+    for s in scale.iter_mut() {
+        *s = s.max(SCALE_EPS) / QMAX;
+    }
+    let mut q = vec![0i8; k * n];
+    for (i, &x) in w.iter().enumerate() {
+        let j = i % n;
+        q[i] = rne(x / scale[j]).clamp(-QMAX, QMAX) as i8;
+    }
+    (q, scale)
+}
+
+/// Dequantize back to f32 (the effective rollout weights).
+pub fn dequant(q: &[i8], scale: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(q.len(), k * n);
+    q.iter()
+        .enumerate()
+        .map(|(i, &v)| v as f32 * scale[i % n])
+        .collect()
+}
+
+/// Token-wise symmetric activation quantization of [M, K] (for tests of the
+/// Pallas kernel semantics).
+pub fn act_quant(x: &[f32], m: usize, kk: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len(), m * kk);
+    let mut q = vec![0i8; m * kk];
+    let mut scale = vec![0.0f32; m];
+    for (r, row) in x.chunks_exact(kk).enumerate() {
+        let absmax = row.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        let s = absmax.max(SCALE_EPS) / QMAX;
+        scale[r] = s;
+        for (j, &v) in row.iter().enumerate() {
+            q[r * kk + j] = rne(v / s).clamp(-QMAX, QMAX) as i8;
+        }
+    }
+    (q, scale)
+}
+
+/// Reference W8A8 matmul in integer arithmetic (i32 accumulate).
+pub fn matmul(x: &[f32], wq: &[i8], wscale: &[f32], m: usize, k: usize,
+              n: usize) -> Vec<f32> {
+    let (xq, ascale) = act_quant(x, m, k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            for l in 0..k {
+                acc += xq[i * k + l] as i32 * wq[l * n + j] as i32;
+            }
+            out[i * n + j] = acc as f32 * ascale[i] * wscale[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * 0.05).collect()
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        assert_eq!(rne(0.5), 0.0);
+        assert_eq!(rne(1.5), 2.0);
+        assert_eq!(rne(2.5), 2.0);
+        assert_eq!(rne(-0.5), 0.0);
+        assert_eq!(rne(-1.5), -2.0);
+        assert_eq!(rne(1.4), 1.0);
+        assert_eq!(rne(-1.6), -2.0);
+    }
+
+    #[test]
+    fn quant_bounds_and_scale() {
+        let mut rng = Pcg64::new(1);
+        let (k, n) = (16, 8);
+        let w = rand_mat(&mut rng, k * n);
+        let (q, s) = weight_quant(&w, k, n);
+        for &v in &q {
+            assert!((-127..=127).contains(&(v as i32)));
+        }
+        // per-channel max maps to +-127
+        for j in 0..n {
+            let col_max = (0..k).map(|i| w[i * n + j].abs()).fold(0.0f32, f32::max);
+            assert!((s[j] - col_max / QMAX).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dequant_error_within_half_step() {
+        let mut rng = Pcg64::new(2);
+        let (k, n) = (32, 16);
+        let w = rand_mat(&mut rng, k * n);
+        let (q, s) = weight_quant(&w, k, n);
+        let wd = dequant(&q, &s, k, n);
+        for i in 0..w.len() {
+            let step = s[i % n];
+            assert!((w[i] - wd[i]).abs() <= 0.5 * step + 1e-9);
+        }
+    }
+
+    #[test]
+    fn matmul_close_to_f32() {
+        let mut rng = Pcg64::new(3);
+        let (m, k, n) = (4, 32, 8);
+        let x = rand_mat(&mut rng, m * k);
+        let w = rand_mat(&mut rng, k * n);
+        let (q, s) = weight_quant(&w, k, n);
+        let yq = matmul(&x, &q, &s, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..k {
+                    acc += x[i * k + l] as f64 * w[l * n + j] as f64;
+                }
+                let err = (yq[i * n + j] as f64 - acc).abs();
+                assert!(err < 0.02, "err {err} at ({i},{j})");
+            }
+        }
+    }
+}

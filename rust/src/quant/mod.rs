@@ -1,0 +1,7 @@
+//! Quantization support: Rust mirrors of the L1 quantizers (bit-exact vs
+//! kernels/ref.py), the UAQ driver, and the weight-update analysis behind
+//! the paper's Fig. 4 / Fig. 9.
+
+pub mod analysis;
+pub mod fp8;
+pub mod int8;

@@ -1,0 +1,174 @@
+//! Advantage estimation: GRPO group normalization, RLOO, and GAE (PPO).
+//!
+//! Rewards here are RLVR-style: one scalar per sequence, granted at the
+//! final generated token.  Advantages are broadcast per-token (GRPO/RLOO) or
+//! computed per-token from values (GAE).
+
+use crate::util::stats;
+
+/// GRPO (Eq. 1 context): A_i = (r_i - mean(group)) / (std(group) + eps),
+/// identical for every token of sequence i.  `group_size` consecutive
+/// sequences share a prompt.
+pub fn grpo(rewards: &[f32], group_size: usize) -> Vec<f32> {
+    assert!(group_size > 0 && rewards.len() % group_size == 0,
+            "rewards {} not divisible by group {group_size}", rewards.len());
+    let mut adv = vec![0.0f32; rewards.len()];
+    for (g, chunk) in rewards.chunks_exact(group_size).enumerate() {
+        let xs: Vec<f64> = chunk.iter().map(|&r| r as f64).collect();
+        let m = stats::mean(&xs);
+        let s = stats::std_pop(&xs);
+        for (i, &r) in chunk.iter().enumerate() {
+            adv[g * group_size + i] = ((r as f64 - m) / (s + 1e-4)) as f32;
+        }
+    }
+    adv
+}
+
+/// RLOO: leave-one-out baseline, no std normalization.
+pub fn rloo(rewards: &[f32], group_size: usize) -> Vec<f32> {
+    assert!(group_size > 1 && rewards.len() % group_size == 0);
+    let mut adv = vec![0.0f32; rewards.len()];
+    for (g, chunk) in rewards.chunks_exact(group_size).enumerate() {
+        let sum: f64 = chunk.iter().map(|&r| r as f64).sum();
+        for (i, &r) in chunk.iter().enumerate() {
+            let baseline = (sum - r as f64) / (group_size - 1) as f64;
+            adv[g * group_size + i] = (r as f64 - baseline) as f32;
+        }
+    }
+    adv
+}
+
+/// Per-sequence GAE over the generated span (terminal-only reward).
+///
+/// `values[t]` is V(state before emitting token t) for t in the generated
+/// span (as produced by the logprob artifact); the sequence reward lands on
+/// the last generated token.  Returns (advantages, returns) aligned with
+/// `values`.
+pub fn gae(values: &[f32], reward: f32, gamma: f32, lam: f32)
+           -> (Vec<f32>, Vec<f32>) {
+    let n = values.len();
+    let mut adv = vec![0.0f32; n];
+    let mut ret = vec![0.0f32; n];
+    if n == 0 {
+        return (adv, ret);
+    }
+    let mut last_gae = 0.0f32;
+    for t in (0..n).rev() {
+        let next_v = if t + 1 < n { values[t + 1] } else { 0.0 };
+        let r_t = if t + 1 == n { reward } else { 0.0 };
+        let delta = r_t + gamma * next_v - values[t];
+        last_gae = delta + gamma * lam * last_gae;
+        adv[t] = last_gae;
+        ret[t] = adv[t] + values[t];
+    }
+    (adv, ret)
+}
+
+/// Broadcast per-sequence advantages onto [B, T] token grids using the
+/// generation mask.  Returns (adv_grid, returns_grid) where returns carry
+/// the discounted-to-go reward for value regression when `use_gae` is off.
+pub fn broadcast_sequence_adv(adv_seq: &[f32], rewards: &[f32], mask: &[f32],
+                              b: usize, t: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(adv_seq.len(), b);
+    assert_eq!(mask.len(), b * t);
+    let mut adv = vec![0.0f32; b * t];
+    let mut ret = vec![0.0f32; b * t];
+    for r in 0..b {
+        for c in 0..t {
+            let i = r * t + c;
+            if mask[i] > 0.5 {
+                adv[i] = adv_seq[r];
+                ret[i] = rewards[r]; // undiscounted terminal reward-to-go
+            }
+        }
+    }
+    (adv, ret)
+}
+
+/// Whiten advantages over masked tokens (PPO standard practice).
+pub fn whiten(adv: &mut [f32], mask: &[f32]) {
+    let vals: Vec<f64> = adv
+        .iter()
+        .zip(mask)
+        .filter(|(_, &m)| m > 0.5)
+        .map(|(&a, _)| a as f64)
+        .collect();
+    if vals.len() < 2 {
+        return;
+    }
+    let m = stats::mean(&vals);
+    let s = stats::std_pop(&vals).max(1e-6);
+    for (a, &mk) in adv.iter_mut().zip(mask) {
+        if mk > 0.5 {
+            *a = ((*a as f64 - m) / s) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grpo_zero_mean_per_group() {
+        let rewards = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let adv = grpo(&rewards, 4);
+        let g0: f32 = adv[..4].iter().sum();
+        let g1: f32 = adv[4..].iter().sum();
+        assert!(g0.abs() < 1e-5 && g1.abs() < 1e-5);
+        // correct answers get positive advantage
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+    }
+
+    #[test]
+    fn grpo_uniform_group_is_zeroish() {
+        let adv = grpo(&[1.0, 1.0, 1.0, 1.0], 4);
+        for a in adv {
+            assert!(a.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rloo_baseline() {
+        let adv = rloo(&[1.0, 0.0], 2);
+        assert!((adv[0] - 1.0).abs() < 1e-6);
+        assert!((adv[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_telescopes_at_lambda_one() {
+        // lambda=1, gamma=1: adv[t] = reward - values[t]
+        let values = [0.3f32, 0.5, 0.1];
+        let (adv, ret) = gae(&values, 1.0, 1.0, 1.0);
+        for t in 0..3 {
+            assert!((adv[t] - (1.0 - values[t])).abs() < 1e-5);
+            assert!((ret[t] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gae_zero_reward_zero_values() {
+        let (adv, ret) = gae(&[0.0; 5], 0.0, 1.0, 0.95);
+        assert!(adv.iter().all(|&a| a.abs() < 1e-6));
+        assert!(ret.iter().all(|&r| r.abs() < 1e-6));
+    }
+
+    #[test]
+    fn broadcast_respects_mask() {
+        let mask = [0., 1., 1., 0., 0., 0., 1., 0.];
+        let (adv, ret) = broadcast_sequence_adv(&[2.0, -1.0], &[1.0, 0.0],
+                                                &mask, 2, 4);
+        assert_eq!(adv, vec![0., 2., 2., 0., 0., 0., -1., 0.]);
+        assert_eq!(ret, vec![0., 1., 1., 0., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn whiten_masked_stats() {
+        let mut adv = vec![1.0, 2.0, 3.0, 100.0];
+        let mask = vec![1.0, 1.0, 1.0, 0.0];
+        whiten(&mut adv, &mask);
+        let m: f32 = adv[..3].iter().sum::<f32>() / 3.0;
+        assert!(m.abs() < 1e-5);
+        assert_eq!(adv[3], 100.0); // untouched outside mask
+    }
+}

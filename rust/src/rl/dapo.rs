@@ -1,0 +1,116 @@
+//! DAPO specifics (Yu et al., 2025): decoupled clip ranges
+//! (eps_high=0.28 > eps_low=0.2), token-mean aggregation and *dynamic
+//! sampling* — groups whose rewards are all identical carry zero GRPO
+//! advantage and are filtered out, with rollout repeated until the batch is
+//! full of informative groups.
+
+/// Returns indices of groups that carry signal (not all-same reward).
+pub fn informative_groups(rewards: &[f32], group_size: usize) -> Vec<usize> {
+    assert!(group_size > 0 && rewards.len() % group_size == 0);
+    rewards
+        .chunks_exact(group_size)
+        .enumerate()
+        .filter(|(_, chunk)| {
+            let first = chunk[0];
+            chunk.iter().any(|&r| (r - first).abs() > 1e-6)
+        })
+        .map(|(g, _)| g)
+        .collect()
+}
+
+/// Dynamic-sampling accumulator: feeds on rollout waves, keeps only
+/// informative groups, reports when `target_groups` have been collected.
+pub struct DynamicSampler {
+    pub group_size: usize,
+    pub target_groups: usize,
+    /// collected (sequence-major) data from informative groups
+    pub kept: Vec<usize>,
+    /// total groups seen / kept (the DAPO "sampling efficiency" metric)
+    pub seen_groups: usize,
+    /// safety valve: stop resampling after this many waves even if short
+    pub max_waves: usize,
+    pub waves: usize,
+}
+
+impl DynamicSampler {
+    pub fn new(group_size: usize, target_groups: usize) -> Self {
+        DynamicSampler {
+            group_size,
+            target_groups,
+            kept: Vec::new(),
+            seen_groups: 0,
+            max_waves: 8,
+            waves: 0,
+        }
+    }
+
+    /// Offer one wave of `rewards`; returns the group indices (within this
+    /// wave) that were kept.
+    pub fn offer(&mut self, rewards: &[f32]) -> Vec<usize> {
+        self.waves += 1;
+        self.seen_groups += rewards.len() / self.group_size;
+        let keep = informative_groups(rewards, self.group_size);
+        let room = self.target_groups.saturating_sub(self.kept.len());
+        let kept: Vec<usize> = keep.into_iter().take(room).collect();
+        self.kept.extend(kept.iter().copied());
+        kept
+    }
+
+    pub fn done(&self) -> bool {
+        self.kept.len() >= self.target_groups || self.waves >= self.max_waves
+    }
+
+    /// Fraction of sampled groups that were informative.
+    pub fn efficiency(&self) -> f64 {
+        if self.seen_groups == 0 {
+            0.0
+        } else {
+            self.kept.len() as f64 / self.seen_groups as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filters_uniform_groups() {
+        // group 0: all zero (filtered), group 1: mixed (kept),
+        // group 2: all one (filtered)
+        let rewards = [0., 0., 0., 0., 1., 0., 1., 1., 1., 1., 1., 1.];
+        let keep = informative_groups(&rewards, 4);
+        assert_eq!(keep, vec![1]);
+    }
+
+    #[test]
+    fn sampler_accumulates_until_target() {
+        let mut ds = DynamicSampler::new(2, 3);
+        assert!(!ds.done());
+        let k1 = ds.offer(&[0., 0., 1., 0.]); // one informative group
+        assert_eq!(k1, vec![1]);
+        let k2 = ds.offer(&[1., 0., 0., 1.]); // two informative groups
+        assert_eq!(k2, vec![0, 1]);
+        assert!(ds.done());
+        assert!((ds.efficiency() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampler_truncates_at_target() {
+        let mut ds = DynamicSampler::new(2, 1);
+        let k = ds.offer(&[1., 0., 0., 1.]);
+        assert_eq!(k.len(), 1);
+        assert!(ds.done());
+    }
+
+    #[test]
+    fn sampler_gives_up_after_max_waves() {
+        let mut ds = DynamicSampler::new(2, 5);
+        ds.max_waves = 2;
+        ds.offer(&[0., 0.]);
+        assert!(!ds.done());
+        ds.offer(&[1., 1.]);
+        assert!(ds.done()); // wave budget exhausted
+        assert_eq!(ds.kept.len(), 0);
+    }
+}

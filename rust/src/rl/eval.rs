@@ -1,0 +1,72 @@
+//! Evaluation protocols matching the paper: greedy Avg@1 and sampled Avg@K
+//! (temperature 1.0 / 0.6, top-p 0.7 — Table 2/3 settings).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::runtime::{EngineWeights, Runtime};
+use crate::tasks::{encode_batch, verify, Family, Problem, Suite, Tokenizer};
+
+/// Greedy (Avg@1) accuracy over the suite's test set.
+pub fn greedy_accuracy(rt: &Runtime, engine: &EngineWeights, tk: &Tokenizer,
+                       suite: &Suite, seed: u64, n_per_family: usize)
+                       -> Result<f64> {
+    let per = per_family_accuracy(rt, engine, tk, suite, seed, n_per_family,
+                                  1, 0.0, 1.0)?;
+    let total: f64 = per.values().map(|&(acc, _)| acc).sum();
+    Ok(total / per.len().max(1) as f64)
+}
+
+/// Avg@K accuracy per family: mean over K sampled generations per problem.
+/// Returns family -> (accuracy, n_problems).  K=1 with temp=0 is greedy.
+pub fn per_family_accuracy(rt: &Runtime, engine: &EngineWeights,
+                           tk: &Tokenizer, suite: &Suite, seed: u64,
+                           n_per_family: usize, k: usize, temp: f32,
+                           top_p: f32)
+                           -> Result<BTreeMap<&'static str, (f64, usize)>> {
+    let man = rt.manifest();
+    let (b, s) = (man.rollout_batch, man.max_seq);
+    let test = suite.test_set(seed, n_per_family);
+    // expand each problem K times, keep (family, problem index) per row
+    let mut jobs: Vec<(Family, usize)> = Vec::with_capacity(test.len() * k);
+    for (i, (fam, _)) in test.iter().enumerate() {
+        for _ in 0..k {
+            jobs.push((*fam, i));
+        }
+    }
+    let mut correct: Vec<f64> = vec![0.0; test.len()];
+    let mut seed_i = seed as i32 ^ 0x6576;
+    for wave in jobs.chunks(b) {
+        let refs: Vec<&Problem> =
+            wave.iter().map(|(_, i)| &test[*i].1).collect();
+        let (tokens, lens) = encode_batch(tk, &refs, b, s, man.max_prompt);
+        seed_i = seed_i.wrapping_add(1);
+        let gen = rt.generate(engine, &tokens, &lens, seed_i, temp, top_p)?;
+        for (r, (_, prob_i)) in wave.iter().enumerate() {
+            let row = &gen.tokens[r * s..(r + 1) * s];
+            let text = tk.decode_generation(row, lens[r] as usize);
+            correct[*prob_i] += verify(&test[*prob_i].1, &text) as f64;
+        }
+    }
+    let mut out: BTreeMap<&'static str, (f64, usize)> = BTreeMap::new();
+    for (i, (fam, _)) in test.iter().enumerate() {
+        let e = out.entry(fam.name()).or_insert((0.0, 0));
+        e.0 += correct[i] / k as f64;
+        e.1 += 1;
+    }
+    for (_, v) in out.iter_mut() {
+        v.0 /= v.1 as f64;
+    }
+    Ok(out)
+}
+
+/// The paper's Avg@K over one suite: average of per-family Avg@K.
+pub fn avg_at_k(rt: &Runtime, engine: &EngineWeights, tk: &Tokenizer,
+                suite: &Suite, seed: u64, n_per_family: usize, k: usize,
+                temp: f32, top_p: f32) -> Result<f64> {
+    let per = per_family_accuracy(rt, engine, tk, suite, seed, n_per_family,
+                                  k, temp, top_p)?;
+    let total: f64 = per.values().map(|&(acc, _)| acc).sum();
+    Ok(total / per.len().max(1) as f64)
+}

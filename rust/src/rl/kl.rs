@@ -1,0 +1,104 @@
+//! KL divergence estimators over sampled tokens (Schulman 2020 — the
+//! paper's k3 choice for GRPO regularization, plus k1/k2 for analysis).
+//!
+//! Given per-token logprobs of two policies on *sampled* tokens, estimate
+//! D_KL(p || q) where tokens were sampled from p:
+//!   k1 = log(p/q),   k2 = 0.5 (log p/q)^2,   k3 = (q/p) - 1 - log(q/p).
+
+/// Masked-mean k1 estimate: E_p[log p - log q].
+/// This is what the paper plots in Fig. 3(a) as D_KL(behav || prox).
+pub fn k1(lp_p: &[f32], lp_q: &[f32], mask: &[f32]) -> f64 {
+    masked_mean(lp_p, lp_q, mask, |d| d)
+}
+
+pub fn k2(lp_p: &[f32], lp_q: &[f32], mask: &[f32]) -> f64 {
+    masked_mean(lp_p, lp_q, mask, |d| 0.5 * d * d)
+}
+
+/// k3: unbiased and non-negative; the GRPO regularizer.
+pub fn k3(lp_p: &[f32], lp_q: &[f32], mask: &[f32]) -> f64 {
+    masked_mean(lp_p, lp_q, mask, |d| {
+        // d = log p - log q; q/p = exp(-d)
+        (-d).exp() - 1.0 + d
+    })
+}
+
+fn masked_mean(lp_p: &[f32], lp_q: &[f32], mask: &[f32],
+               f: impl Fn(f64) -> f64) -> f64 {
+    assert_eq!(lp_p.len(), lp_q.len());
+    assert_eq!(lp_p.len(), mask.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..lp_p.len() {
+        if mask[i] > 0.5 {
+            let d = (lp_p[i] - lp_q[i]) as f64;
+            num += f(d.clamp(-30.0, 30.0));
+            den += 1.0;
+        }
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Max proximal-to-behavior probability ratio over masked tokens — the
+/// paper's Fig. 3(b) series (reaches ~1e5 before collapse).
+pub fn max_ratio(lp_prox: &[f32], lp_behav: &[f32], mask: &[f32]) -> f64 {
+    let mut mx = 0.0f64;
+    for i in 0..lp_prox.len() {
+        if mask[i] > 0.5 {
+            let r = ((lp_prox[i] - lp_behav[i]) as f64).clamp(-30.0, 30.0).exp();
+            mx = mx.max(r);
+        }
+    }
+    mx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_policies_zero() {
+        let lp = vec![-1.0f32, -2.0, -0.5];
+        let m = vec![1.0f32; 3];
+        assert!(k1(&lp, &lp, &m).abs() < 1e-9);
+        assert!(k2(&lp, &lp, &m).abs() < 1e-9);
+        assert!(k3(&lp, &lp, &m).abs() < 1e-9);
+        assert!((max_ratio(&lp, &lp, &m) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k3_nonnegative() {
+        let lp_p = vec![-1.0f32, -3.0, -0.2, -5.0];
+        let lp_q = vec![-1.5f32, -2.0, -0.9, -4.0];
+        let m = vec![1.0f32; 4];
+        assert!(k3(&lp_p, &lp_q, &m) >= 0.0);
+        assert!(k2(&lp_p, &lp_q, &m) >= 0.0);
+    }
+
+    #[test]
+    fn mask_excludes_tokens() {
+        let lp_p = vec![0.0f32, -10.0];
+        let lp_q = vec![0.0f32, 0.0];
+        let m = vec![1.0f32, 0.0];
+        assert!(k1(&lp_p, &lp_q, &m).abs() < 1e-9);
+    }
+
+    #[test]
+    fn known_value_k1() {
+        // p assigns lp=-1, q lp=-2 on the single sampled token: k1 = 1
+        assert!((k1(&[-1.0], &[-2.0], &[1.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_ratio_picks_max() {
+        let lp_prox = vec![0.0f32, 0.0];
+        let lp_behav = vec![-2.0f32, -4.0];
+        let m = vec![1.0f32; 2];
+        let r = max_ratio(&lp_prox, &lp_behav, &m);
+        assert!((r - (4.0f64).exp()).abs() < 1e-6);
+    }
+}

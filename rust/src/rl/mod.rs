@@ -1,0 +1,14 @@
+//! The RL layer: objectives (paper §4 — naive / decoupled / TIS / ACR),
+//! advantage estimation (GRPO / RLOO / GAE), DAPO dynamic sampling, KL
+//! estimators, evaluation protocols and the training loop.
+
+pub mod advantage;
+pub mod dapo;
+pub mod eval;
+pub mod schedule;
+pub mod kl;
+pub mod objective;
+pub mod trainer;
+
+pub use objective::{Objective, ObjectiveKind};
+pub use trainer::{pretrain_sft, Algo, Sample, Trainer, TrainerConfig};

@@ -1,0 +1,228 @@
+//! RL objective configuration — the paper's axis of comparison (§4).
+//!
+//! The train_step artifact implements all variants behind a runtime flag
+//! vector; this module is the typed Rust side of that contract.
+
+use crate::runtime::manifest::FlagIndex;
+
+/// Which surrogate objective the train step optimizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// Eq. 1: standard PPO/GRPO clip against the full-precision old actor.
+    /// With a quantized rollout engine this *ignores* the behavior mismatch
+    /// (the paper's "RL" rows in Tables 1-3).
+    OnPolicy,
+    /// Eq. 3: importance sampling + clipping against the *quantized* old
+    /// actor — the unstable naive combination (collapses in Fig. 2).
+    NaiveQuant,
+    /// Eq. 4: decoupled PPO (behavior = quantized, proximal = fp) without
+    /// truncation — unbounded prox/behav gradient factor.
+    Decoupled,
+    /// Eq. 5: FlashRL's Truncated Importance Sampling (factor min(rho, C)).
+    Tis,
+    /// Eq. 9: QuRL's Adaptive Clipping Range — TIS + upper clip bound
+    /// (1+eps)/r for truncated tokens.
+    Acr,
+}
+
+impl ObjectiveKind {
+    pub fn mode_flag(&self) -> f32 {
+        match self {
+            ObjectiveKind::OnPolicy => 0.0,
+            ObjectiveKind::NaiveQuant => 1.0,
+            ObjectiveKind::Decoupled => 2.0,
+            ObjectiveKind::Tis => 3.0,
+            ObjectiveKind::Acr => 4.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjectiveKind::OnPolicy => "onpolicy",
+            ObjectiveKind::NaiveQuant => "naive",
+            ObjectiveKind::Decoupled => "decoupled",
+            ObjectiveKind::Tis => "tis",
+            ObjectiveKind::Acr => "acr",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ObjectiveKind> {
+        match s {
+            "onpolicy" | "rl" => Some(ObjectiveKind::OnPolicy),
+            "naive" => Some(ObjectiveKind::NaiveQuant),
+            "decoupled" => Some(ObjectiveKind::Decoupled),
+            "tis" | "flashrl" => Some(ObjectiveKind::Tis),
+            "acr" | "qurl" => Some(ObjectiveKind::Acr),
+            _ => None,
+        }
+    }
+}
+
+/// Full hyperparameter set of one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct Objective {
+    pub kind: ObjectiveKind,
+    pub eps_low: f32,
+    pub eps_high: f32,
+    /// TIS truncation cap C (Eq. 5/9)
+    pub tis_cap: f32,
+    pub kl_coef: f32,
+    pub vf_coef: f32,
+    pub ent_coef: f32,
+    /// DAPO token-mean aggregation (vs GRPO per-sequence mean)
+    pub token_mean: bool,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    pub weight_decay: f32,
+    pub value_clip: f32,
+    pub max_grad_norm: f32,
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        Objective {
+            kind: ObjectiveKind::Acr,
+            eps_low: 0.2,
+            eps_high: 0.2,
+            tis_cap: 2.0,
+            kl_coef: 0.0,
+            vf_coef: 0.0,
+            ent_coef: 0.0,
+            token_mean: false,
+            lr: 1e-6,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+            weight_decay: 0.0,
+            value_clip: 0.2,
+            max_grad_norm: 1.0,
+        }
+    }
+}
+
+impl Objective {
+    /// Encode into the artifact's flag vector.
+    pub fn to_flags(&self, idx: &FlagIndex) -> Vec<f32> {
+        let mut f = vec![0.0f32; idx.n];
+        f[idx.obj_mode] = self.kind.mode_flag();
+        f[idx.eps_low] = self.eps_low;
+        f[idx.eps_high] = self.eps_high;
+        f[idx.tis_cap] = self.tis_cap;
+        f[idx.kl_coef] = self.kl_coef;
+        f[idx.vf_coef] = self.vf_coef;
+        f[idx.ent_coef] = self.ent_coef;
+        f[idx.token_mean] = if self.token_mean { 1.0 } else { 0.0 };
+        f[idx.lr] = self.lr;
+        f[idx.beta1] = self.beta1;
+        f[idx.beta2] = self.beta2;
+        f[idx.adam_eps] = self.adam_eps;
+        f[idx.weight_decay] = self.weight_decay;
+        f[idx.value_clip] = self.value_clip;
+        f[idx.max_grad_norm] = self.max_grad_norm;
+        f
+    }
+}
+
+/// Host-side reference of the per-token surrogate (mirrors model.rl_loss);
+/// used by unit tests to validate the artifact and by the objective-algebra
+/// property tests (clip-bound ordering, ACR >= TIS surrogates, ...).
+pub fn surrogate_token(obj: &Objective, lp_theta: f32, lp_behav: f32,
+                       lp_prox: f32, adv: f32) -> f32 {
+    let clip20 = |x: f32| x.clamp(-20.0, 20.0);
+    let ratio_prox = clip20(lp_theta - lp_prox).exp();
+    let ratio_behav = clip20(lp_theta - lp_behav).exp();
+    let rho = clip20(lp_prox - lp_behav).exp();
+    let tis_w = rho.min(obj.tis_cap);
+    let r = tis_w / rho;
+    let (ratio, factor, hi) = match obj.kind {
+        ObjectiveKind::OnPolicy => (ratio_prox, 1.0, 1.0 + obj.eps_high),
+        ObjectiveKind::NaiveQuant => (ratio_behav, 1.0, 1.0 + obj.eps_high),
+        ObjectiveKind::Decoupled => (ratio_prox, rho, 1.0 + obj.eps_high),
+        ObjectiveKind::Tis => (ratio_prox, tis_w, 1.0 + obj.eps_high),
+        ObjectiveKind::Acr => (ratio_prox, tis_w, (1.0 + obj.eps_high) / r),
+    };
+    let lo = 1.0 - obj.eps_low;
+    factor * (ratio * adv).min(ratio.clamp(lo, hi) * adv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(kind: ObjectiveKind) -> Objective {
+        Objective { kind, eps_low: 0.2, eps_high: 0.28, tis_cap: 2.0,
+                    ..Default::default() }
+    }
+
+    #[test]
+    fn onpolicy_matches_ppo_clip() {
+        let o = obj(ObjectiveKind::OnPolicy);
+        // ratio 1.5 > 1.28 with positive advantage -> clipped at 1.28
+        let lp_theta = 0.405_f32; // ln(1.5)
+        let s = surrogate_token(&o, lp_theta, 0.0, 0.0, 1.0);
+        assert!((s - 1.28).abs() < 1e-4, "{s}");
+        // negative advantage: unclipped branch is the min
+        let s = surrogate_token(&o, lp_theta, 0.0, 0.0, -1.0);
+        assert!((s + 1.5).abs() < 1e-3, "{s}");
+    }
+
+    #[test]
+    fn acr_enlarges_upper_bound_when_truncated() {
+        // rho = 4 > C = 2 -> r = 0.5 -> ACR hi = 1.28/0.5 = 2.56
+        let lp_prox = 0.0_f32;
+        let lp_behav = -(4.0_f32.ln());
+        let lp_theta = 2.0_f32.ln(); // ratio_prox = 2.0
+        let adv = 1.0;
+        let tis = surrogate_token(&obj(ObjectiveKind::Tis), lp_theta, lp_behav,
+                                  lp_prox, adv);
+        let acr = surrogate_token(&obj(ObjectiveKind::Acr), lp_theta, lp_behav,
+                                  lp_prox, adv);
+        // TIS clips ratio 2.0 to 1.28 (x factor 2) = 2.56;
+        // ACR lets it through: 2.0 x 2 = 4.0
+        assert!((tis - 2.56).abs() < 1e-3, "{tis}");
+        assert!((acr - 4.0).abs() < 1e-3, "{acr}");
+        assert!(acr >= tis);
+    }
+
+    #[test]
+    fn acr_equals_tis_when_not_truncated() {
+        // rho <= C -> r = 1 -> identical objectives
+        for lp_theta in [-0.5f32, 0.0, 0.3] {
+            let tis = surrogate_token(&obj(ObjectiveKind::Tis), lp_theta,
+                                      -0.1, 0.0, 0.7);
+            let acr = surrogate_token(&obj(ObjectiveKind::Acr), lp_theta,
+                                      -0.1, 0.0, 0.7);
+            assert!((tis - acr).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn decoupled_factor_unbounded() {
+        // extreme rho shows the Fig. 3b gradient blow-up TIS prevents
+        let lp_behav = -10.0_f32;
+        let dec = surrogate_token(&obj(ObjectiveKind::Decoupled), 0.0,
+                                  lp_behav, 0.0, 1.0);
+        let tis = surrogate_token(&obj(ObjectiveKind::Tis), 0.0, lp_behav,
+                                  0.0, 1.0);
+        assert!(dec > 1000.0 * tis / 2.0, "dec={dec} tis={tis}");
+    }
+
+    #[test]
+    fn flags_roundtrip_indices() {
+        let idx = FlagIndex {
+            obj_mode: 0, eps_low: 1, eps_high: 2, tis_cap: 3, kl_coef: 4,
+            vf_coef: 5, ent_coef: 6, token_mean: 7, lr: 8, beta1: 9,
+            beta2: 10, adam_eps: 11, weight_decay: 12, value_clip: 13,
+            max_grad_norm: 14, n: 15,
+        };
+        let o = Objective { kind: ObjectiveKind::Tis, lr: 3e-6,
+                            token_mean: true, ..Default::default() };
+        let f = o.to_flags(&idx);
+        assert_eq!(f.len(), 15);
+        assert_eq!(f[0], 3.0);
+        assert_eq!(f[7], 1.0);
+        assert!((f[8] - 3e-6).abs() < 1e-12);
+    }
+}

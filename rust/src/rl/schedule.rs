@@ -1,0 +1,131 @@
+//! Multi-stage training schedules — the DeepScaleR recipe (§5.1): three
+//! stages at 8k/16k/24k context with growing rollouts per query.  This
+//! testbed's analog scales task *difficulty* and group size per stage
+//! (context length is fixed by the AOT artifacts; DESIGN.md §2).
+
+/// One stage of a staged RL run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stage {
+    /// first step (inclusive) this stage applies to
+    pub from_step: usize,
+    /// task difficulty fed to the problem sampler
+    pub difficulty: usize,
+    /// rollouts per prompt (the paper grows 8 -> 16)
+    pub group_size: usize,
+    /// sampling temperature for rollouts
+    pub temp: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    stages: Vec<Stage>,
+}
+
+impl Schedule {
+    /// Single-stage schedule (the default for PPO/DAPO experiments).
+    pub fn constant(difficulty: usize, group_size: usize, temp: f32) -> Self {
+        Schedule {
+            stages: vec![Stage { from_step: 0, difficulty, group_size, temp }],
+        }
+    }
+
+    /// The DeepScaleR 3-stage analog over a total horizon: the paper runs
+    /// 800 steps @8k/8 rollouts, then 400 @16k/16, then 400 @24k/16 —
+    /// proportions 0.5 / 0.25 / 0.25 of the horizon.
+    pub fn deepscaler(total_steps: usize, base_difficulty: usize,
+                      group_size: usize) -> Self {
+        let s1 = total_steps / 2;
+        let s2 = s1 + total_steps / 4;
+        Schedule {
+            stages: vec![
+                Stage { from_step: 0, difficulty: base_difficulty,
+                        group_size, temp: 1.0 },
+                Stage { from_step: s1, difficulty: base_difficulty + 1,
+                        group_size: group_size * 2, temp: 1.0 },
+                Stage { from_step: s2, difficulty: (base_difficulty + 2).min(3),
+                        group_size: group_size * 2, temp: 1.0 },
+            ],
+        }
+    }
+
+    pub fn from_stages(mut stages: Vec<Stage>) -> Self {
+        assert!(!stages.is_empty());
+        stages.sort_by_key(|s| s.from_step);
+        assert_eq!(stages[0].from_step, 0, "first stage must start at 0");
+        Schedule { stages }
+    }
+
+    /// The stage in effect at `step`.
+    pub fn at(&self, step: usize) -> Stage {
+        let mut cur = self.stages[0];
+        for s in &self.stages {
+            if s.from_step <= step {
+                cur = *s;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    /// True when `step` is the first step of a new stage (> 0) — trainers
+    /// reset optimizer state on stage boundaries like the paper's restarts.
+    pub fn is_boundary(&self, step: usize) -> bool {
+        step > 0 && self.stages.iter().any(|s| s.from_step == step)
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_flat() {
+        let s = Schedule::constant(2, 8, 1.0);
+        assert_eq!(s.at(0), s.at(10_000));
+        assert!(!s.is_boundary(500));
+    }
+
+    #[test]
+    fn deepscaler_three_stages() {
+        let s = Schedule::deepscaler(800, 1, 8);
+        assert_eq!(s.n_stages(), 3);
+        assert_eq!(s.at(0).difficulty, 1);
+        assert_eq!(s.at(0).group_size, 8);
+        assert_eq!(s.at(399).difficulty, 1);
+        assert_eq!(s.at(400).difficulty, 2);
+        assert_eq!(s.at(400).group_size, 16);
+        assert_eq!(s.at(799).difficulty, 3);
+        assert!(s.is_boundary(400));
+        assert!(s.is_boundary(600));
+        assert!(!s.is_boundary(401));
+    }
+
+    #[test]
+    fn difficulty_caps_at_three() {
+        let s = Schedule::deepscaler(100, 3, 8);
+        assert_eq!(s.at(99).difficulty, 3);
+    }
+
+    #[test]
+    fn stages_sorted_and_selected() {
+        let s = Schedule::from_stages(vec![
+            Stage { from_step: 50, difficulty: 2, group_size: 4, temp: 0.8 },
+            Stage { from_step: 0, difficulty: 0, group_size: 2, temp: 1.0 },
+        ]);
+        assert_eq!(s.at(49).difficulty, 0);
+        assert_eq!(s.at(50).temp, 0.8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn must_start_at_zero() {
+        let _ = Schedule::from_stages(vec![Stage {
+            from_step: 5, difficulty: 0, group_size: 2, temp: 1.0,
+        }]);
+    }
+}

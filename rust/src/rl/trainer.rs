@@ -1,0 +1,488 @@
+//! The QuRL training loop (paper Fig. 1): quantize the old actor, roll out
+//! on the quantized engine, score behavior/proximal/reference logprobs,
+//! estimate advantages (GRPO/PPO/DAPO), and update the full-precision actor
+//! with the selected objective (on-policy / naive / decoupled / TIS / ACR).
+//!
+//! Python never runs here: rollout, scoring, quantization and optimization
+//! are all AOT artifacts executed through the PJRT runtime.
+
+use anyhow::Result;
+
+use crate::metrics::{Recorder, Row};
+use crate::quant::analysis;
+use crate::runtime::{EngineWeights, ParamStore, QuantMode, Runtime, TrainBatch};
+use crate::tasks::{encode_batch, Problem, Suite, Tokenizer};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+use super::advantage;
+use super::dapo::DynamicSampler;
+use super::eval;
+use super::kl;
+use super::objective::Objective;
+
+/// RL algorithm family (the paper evaluates all three).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// GRPO: group-normalized advantages, optional KL-to-reference.
+    Grpo,
+    /// PPO: GAE advantages from the value head, clipped value loss.
+    Ppo,
+    /// DAPO: GRPO advantages + dynamic sampling + decoupled clip +
+    /// token-mean aggregation.
+    Dapo,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "grpo" => Some(Algo::Grpo),
+            "ppo" => Some(Algo::Ppo),
+            "dapo" => Some(Algo::Dapo),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Grpo => "grpo",
+            Algo::Ppo => "ppo",
+            Algo::Dapo => "dapo",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub algo: Algo,
+    pub objective: Objective,
+    /// rollout engine precision — the QuRL axis
+    pub rollout_mode: QuantMode,
+    pub suite: String,
+    /// UAQ invariant scale s (1.0 disables; paper default 1.5)
+    pub uaq_scale: f32,
+    pub steps: usize,
+    /// distinct prompts per RL step (each expanded group_size times)
+    pub prompts_per_step: usize,
+    pub group_size: usize,
+    pub temp: f32,
+    pub top_p: f32,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_problems_per_family: usize,
+    /// std-dev of Gaussian noise injected into behavior logprobs — the
+    /// controlled stand-in for FlashRL's training/inference engine mismatch
+    pub engine_noise: f32,
+    /// PPO-style epochs over each rollout batch (>1 makes clipping bind)
+    pub inner_epochs: usize,
+    /// GAE parameters (PPO)
+    pub gamma: f32,
+    pub gae_lambda: f32,
+    pub whiten_adv: bool,
+    /// dynamic sampling (DAPO) on/off
+    pub dynamic_sampling: bool,
+    /// re-quantize engine weights every k steps (1 = every step, paper setup)
+    pub requantize_every: usize,
+    /// compute Fig. 4/9 weight-change analysis every k steps (0 = never)
+    pub analyze_every: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            algo: Algo::Grpo,
+            objective: Objective::default(),
+            rollout_mode: QuantMode::Int8,
+            suite: "deepscaler".into(),
+            uaq_scale: 1.0,
+            steps: 100,
+            prompts_per_step: 8,
+            group_size: 8,
+            temp: 1.0,
+            top_p: 1.0,
+            seed: 0,
+            eval_every: 0,
+            eval_problems_per_family: 32,
+            engine_noise: 0.0,
+            inner_epochs: 2,
+            gamma: 1.0,
+            gae_lambda: 0.95,
+            whiten_adv: false,
+            dynamic_sampling: false,
+            requantize_every: 1,
+            analyze_every: 0,
+        }
+    }
+}
+
+/// One rolled-out sequence with its verification outcome.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub tokens: Vec<i32>,
+    pub lp_behav: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub prompt_len: usize,
+    pub reward: f32,
+    /// index of the problem (group id) this sample answers
+    pub group: usize,
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: TrainerConfig,
+    pub ps: ParamStore,
+    /// frozen reference policy for the KL term (the SFT base model)
+    pub ref_params: Vec<f32>,
+    pub tk: Tokenizer,
+    pub suite: Suite,
+    pub rec: Recorder,
+    rng: Pcg64,
+    rollout_seed: i32,
+    engine: Option<EngineWeights>,
+    engine_age: usize,
+    /// previous-step section-B snapshot for the Fig. 9 analysis
+    prev_params: Option<Vec<f32>>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainerConfig, base: ParamStore,
+               rec: Recorder) -> Result<Self> {
+        let suite = Suite::by_name(&cfg.suite)
+            .ok_or_else(|| anyhow::anyhow!("unknown suite {:?}", cfg.suite))?;
+        let mut ps = base;
+        // UAQ: one-shot invariant rescaling before RL begins (§4.3)
+        if (cfg.uaq_scale - 1.0).abs() > 1e-6 {
+            ps.params = rt.uaq_scale(&ps.params, cfg.uaq_scale)?;
+        }
+        ps.reset_optimizer();
+        let ref_params = ps.params.clone();
+        let rng = Pcg64::new(cfg.seed ^ 0x5152_4c00);
+        Ok(Trainer {
+            rt,
+            rng,
+            rollout_seed: (cfg.seed as i32) ^ 0x2f2f,
+            tk: Tokenizer::new(),
+            suite,
+            rec,
+            ps,
+            ref_params,
+            cfg,
+            engine: None,
+            engine_age: usize::MAX,
+            prev_params: None,
+        })
+    }
+
+    /// Quantized (or fp) rollout-engine weights, refreshed per the
+    /// requantize schedule.  This is the Q(theta_old) step of Fig. 1.
+    fn refresh_engine(&mut self) -> Result<()> {
+        if self.engine_age < self.cfg.requantize_every {
+            self.engine_age += 1;
+            return Ok(());
+        }
+        self.engine =
+            Some(self.rt.engine_weights(self.cfg.rollout_mode, &self.ps.params)?);
+        self.engine_age = 1;
+        Ok(())
+    }
+
+    /// Roll out `problems` (already group-expanded) in rollout_batch waves.
+    pub fn rollout(&mut self, problems: &[(usize, &Problem)]) -> Result<Vec<Sample>> {
+        let man = self.rt.manifest();
+        let (b, s) = (man.rollout_batch, man.max_seq);
+        let mut out = Vec::with_capacity(problems.len());
+        let engine = self.engine.as_ref().expect("engine not initialized");
+        for wave in problems.chunks(b) {
+            let refs: Vec<&Problem> = wave.iter().map(|(_, p)| *p).collect();
+            let (tokens, lens) = encode_batch(&self.tk, &refs, b, s, man.max_prompt);
+            self.rollout_seed = self.rollout_seed.wrapping_add(1);
+            let gen = self.rt.generate(engine, &tokens, &lens,
+                                       self.rollout_seed, self.cfg.temp,
+                                       self.cfg.top_p)?;
+            for (r, (group, prob)) in wave.iter().enumerate() {
+                let row = &gen.tokens[r * s..(r + 1) * s];
+                let mut lp = gen.logprob[r * s..(r + 1) * s].to_vec();
+                let mask = gen.mask[r * s..(r + 1) * s].to_vec();
+                // engine-mismatch simulation (FlashRL's HF-vs-vLLM gap)
+                if self.cfg.engine_noise > 0.0 {
+                    for (l, &m) in lp.iter_mut().zip(&mask) {
+                        if m > 0.5 {
+                            *l += (self.rng.normal() as f32) * self.cfg.engine_noise;
+                        }
+                    }
+                }
+                let plen = lens[r] as usize;
+                let gen_text = self.tk.decode_generation(row, plen);
+                let reward = crate::tasks::verify(prob, &gen_text);
+                out.push(Sample {
+                    tokens: row.to_vec(),
+                    lp_behav: lp,
+                    mask,
+                    prompt_len: plen,
+                    reward,
+                    group: *group,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Collect one RL step's samples (with DAPO dynamic sampling when on).
+    fn collect(&mut self, step: usize) -> Result<Vec<Sample>> {
+        let g = self.cfg.group_size;
+        let n_prompts = self.cfg.prompts_per_step;
+        let mut sampler = self.suite.train_sampler(self.cfg.seed
+            .wrapping_add(step as u64 * 7919));
+        if !self.cfg.dynamic_sampling {
+            let probs: Vec<Problem> =
+                (0..n_prompts).map(|_| sampler.next().1).collect();
+            let expanded: Vec<(usize, &Problem)> = probs
+                .iter()
+                .enumerate()
+                .flat_map(|(i, p)| std::iter::repeat((i, p)).take(g))
+                .collect();
+            return self.rollout(&expanded);
+        }
+        // DAPO: resample until enough informative groups
+        let mut ds = DynamicSampler::new(g, n_prompts);
+        let mut kept: Vec<Sample> = Vec::new();
+        while !ds.done() {
+            let probs: Vec<Problem> =
+                (0..n_prompts).map(|_| sampler.next().1).collect();
+            let expanded: Vec<(usize, &Problem)> = probs
+                .iter()
+                .enumerate()
+                .flat_map(|(i, p)| std::iter::repeat((i, p)).take(g))
+                .collect();
+            let samples = self.rollout(&expanded)?;
+            let rewards: Vec<f32> = samples.iter().map(|x| x.reward).collect();
+            let keep_groups = ds.offer(&rewards);
+            let base = kept.len() / g;
+            for (new_gid, gid) in keep_groups.iter().enumerate() {
+                for r in 0..g {
+                    let mut smp = samples[gid * g + r].clone();
+                    smp.group = base + new_gid;
+                    kept.push(smp);
+                }
+            }
+        }
+        if kept.is_empty() {
+            // degenerate (all groups uniform): fall back to the last wave
+            crate::warnln!("trainer", "dynamic sampling found no signal; \
+                            falling back to plain sampling");
+            let probs: Vec<Problem> =
+                (0..n_prompts).map(|_| sampler.next().1).collect();
+            let expanded: Vec<(usize, &Problem)> = probs
+                .iter()
+                .enumerate()
+                .flat_map(|(i, p)| std::iter::repeat((i, p)).take(g))
+                .collect();
+            kept = self.rollout(&expanded)?;
+        }
+        self.rec.log(Row::new(step as u64)
+            .set("dapo_efficiency", ds.efficiency())
+            .tag("phase", "sampling"));
+        Ok(kept)
+    }
+
+    /// Assemble [B, T] grids from samples (padding with inert rows).
+    fn grids(&self, samples: &[Sample]) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
+        let man = self.rt.manifest();
+        let (b, t) = (man.train_batch, man.max_seq);
+        assert!(samples.len() <= b);
+        let mut tokens = vec![crate::tasks::PAD; b * t];
+        let mut mask = vec![0.0f32; b * t];
+        let mut lp_behav = vec![0.0f32; b * t];
+        for (r, smp) in samples.iter().enumerate() {
+            tokens[r * t..(r + 1) * t].copy_from_slice(&smp.tokens);
+            mask[r * t..(r + 1) * t].copy_from_slice(&smp.mask);
+            lp_behav[r * t..(r + 1) * t].copy_from_slice(&smp.lp_behav);
+        }
+        for r in samples.len()..b {
+            tokens[r * t] = crate::tasks::BOS;
+        }
+        (tokens, mask, lp_behav)
+    }
+
+    /// Run one full RL step; returns the mean training reward.
+    pub fn step(&mut self, step: usize) -> Result<f64> {
+        let man = self.rt.manifest().clone();
+        let (bt, t) = (man.train_batch, man.max_seq);
+        self.refresh_engine()?;
+        let samples = self.collect(step)?;
+        let mean_reward =
+            stats::mean_f32(&samples.iter().map(|s| s.reward).collect::<Vec<_>>());
+
+        // Fig. 4/9 analysis: weight update vs quantization noise
+        if self.cfg.analyze_every > 0 && step % self.cfg.analyze_every == 0 {
+            let b_now = self.ps.section_b().to_vec();
+            if let Some(prev) = &self.prev_params {
+                let upd = analysis::normalized_weight_update(prev, &self.ps.params);
+                let prev_b = &prev[man.a_size..];
+                let code_change =
+                    analysis::int8_code_change_fraction(&man, prev_b, &b_now);
+                self.rec.log(Row::new(step as u64)
+                    .set("norm_weight_update", upd)
+                    .set("int8_code_change_frac", code_change)
+                    .tag("phase", "analysis"));
+            }
+            let qerr = analysis::normalized_quant_error(
+                &man, &b_now, self.cfg.rollout_mode);
+            self.rec.log(Row::new(step as u64)
+                .set("norm_quant_error", qerr)
+                .tag("phase", "analysis"));
+            self.prev_params = Some(self.ps.params.clone());
+        }
+
+        // process in train_batch chunks
+        let mut metric_acc: Vec<f64> = vec![0.0; man.metric_names.len()];
+        let mut metric_n = 0usize;
+        let mut kl_bp_acc = 0.0f64;
+        let mut rho_max_all = 0.0f64;
+        for chunk in samples.chunks(bt) {
+            let (tokens, mask, lp_behav) = self.grids(chunk);
+            // proximal policy = full-precision theta_old (pre-update)
+            let prox = self.rt.score_bf16(&self.ps.params, &tokens)?;
+            let lp_ref = if self.cfg.objective.kl_coef > 0.0 {
+                self.rt.score_bf16(&self.ref_params, &tokens)?.logprob
+            } else {
+                vec![0.0f32; bt * t]
+            };
+            kl_bp_acc += kl::k1(&lp_behav, &prox.logprob, &mask);
+            rho_max_all =
+                rho_max_all.max(kl::max_ratio(&prox.logprob, &lp_behav, &mask));
+
+            // advantages
+            let rewards: Vec<f32> = chunk.iter().map(|s| s.reward).collect();
+            let (mut adv, returns) = match self.cfg.algo {
+                Algo::Grpo | Algo::Dapo => {
+                    let g = self.cfg.group_size.min(rewards.len().max(1));
+                    let padded_g = if g > 0 && rewards.len() % g == 0 { g } else { 1 };
+                    let mut a = advantage::grpo(&rewards, padded_g);
+                    // pad to the full train grid (inert rows get zeros)
+                    let mut rw = rewards.clone();
+                    a.resize(bt, 0.0);
+                    rw.resize(bt, 0.0);
+                    advantage::broadcast_sequence_adv(&a, &rw, &mask, bt, t)
+                }
+                Algo::Ppo => {
+                    let mut adv = vec![0.0f32; bt * t];
+                    let mut ret = vec![0.0f32; bt * t];
+                    for (r, smp) in chunk.iter().enumerate() {
+                        // values over the generated span
+                        let span: Vec<usize> = (0..t)
+                            .filter(|&c| smp.mask[c] > 0.5)
+                            .collect();
+                        let vals: Vec<f32> =
+                            span.iter().map(|&c| prox.value[r * t + c]).collect();
+                        let (a, rt_) = advantage::gae(&vals, smp.reward,
+                                                      self.cfg.gamma,
+                                                      self.cfg.gae_lambda);
+                        for (k, &c) in span.iter().enumerate() {
+                            adv[r * t + c] = a[k];
+                            ret[r * t + c] = rt_[k];
+                        }
+                    }
+                    (adv, ret)
+                }
+            };
+            // pad adv grid to full [bt, t] (broadcast helper handled b<=bt)
+            adv.resize(bt * t, 0.0);
+            let mut returns = returns;
+            returns.resize(bt * t, 0.0);
+            if self.cfg.whiten_adv {
+                advantage::whiten(&mut adv, &mask);
+            }
+
+            let batch = TrainBatch {
+                tokens,
+                mask,
+                adv,
+                lp_behav,
+                lp_prox: prox.logprob.clone(),
+                lp_ref,
+                returns,
+                old_values: prox.value.clone(),
+            };
+            let flags = self.cfg.objective.to_flags(&man.flags);
+            for _ in 0..self.cfg.inner_epochs.max(1) {
+                let mets = self.rt.train_step(&mut self.ps, &batch, &flags)?;
+                for (i, &m) in mets.iter().enumerate() {
+                    if i < metric_acc.len() {
+                        metric_acc[i] += m as f64;
+                    }
+                }
+                metric_n += 1;
+            }
+        }
+
+        let chunks = samples.chunks(bt).len().max(1);
+        let mut row = Row::new(step as u64)
+            .set("reward", mean_reward)
+            .set("kl_behav_prox", kl_bp_acc / chunks as f64)
+            .set("rho_max", rho_max_all)
+            .set("n_samples", samples.len() as f64)
+            .tag("phase", "train");
+        if metric_n > 0 {
+            for (i, name) in man.metric_names.iter().enumerate() {
+                row = row.set(name, metric_acc[i] / metric_n as f64);
+            }
+        }
+        self.rec.log(row);
+
+        // periodic evaluation
+        if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+            let engine = self.engine.clone().expect("engine");
+            let acc = eval::greedy_accuracy(
+                self.rt, &engine, &self.tk, &self.suite,
+                self.cfg.seed, self.cfg.eval_problems_per_family)?;
+            self.rec.log(Row::new(step as u64)
+                .set("eval_acc", acc)
+                .tag("phase", "eval"));
+            crate::info!("trainer", "step {step}: reward {mean_reward:.3} \
+                          eval {acc:.3}");
+        }
+        Ok(mean_reward)
+    }
+
+    /// Run the configured number of steps; returns final training reward EMA.
+    pub fn run(&mut self) -> Result<f64> {
+        let mut last = 0.0;
+        for step in 0..self.cfg.steps {
+            last = self.step(step)?;
+        }
+        Ok(self.rec.tail_mean("reward", 8).unwrap_or(last))
+    }
+}
+
+/// Supervised pretraining: builds the "base model" (the paper's Qwen/
+/// DeepSeek starting checkpoints) by cross-entropy on (prompt, answer)
+/// pairs.  Returns the final CE loss.
+pub fn pretrain_sft(rt: &Runtime, ps: &mut ParamStore, suite: &Suite,
+                    steps: usize, lr: f32, seed: u64,
+                    rec: &mut Recorder) -> Result<f64> {
+    let man = rt.manifest();
+    let (b, s) = (man.train_batch, man.max_seq);
+    let tk = Tokenizer::new();
+    let mut sampler = suite.train_sampler(seed ^ 0x5f74);
+    let mut flags = vec![0.0f32; man.flags.n];
+    flags[man.flags.lr] = lr;
+    flags[man.flags.beta1] = 0.9;
+    flags[man.flags.beta2] = 0.999;
+    flags[man.flags.adam_eps] = 1e-8;
+    flags[man.flags.max_grad_norm] = 1.0;
+    let mut last = f64::NAN;
+    for step in 0..steps {
+        let problems = sampler.batch(b);
+        let (tokens, mask) = crate::tasks::encode_sft_batch(&tk, &problems, b, s);
+        let mets = rt.sft_step(ps, &tokens, &mask, &flags)?;
+        last = mets[0] as f64;
+        if step % 20 == 0 || step + 1 == steps {
+            rec.log(Row::new(step as u64)
+                .set("sft_loss", last)
+                .set("sft_token_prob", mets[1] as f64)
+                .tag("phase", "sft"));
+        }
+    }
+    Ok(last)
+}

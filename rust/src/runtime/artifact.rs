@@ -1,0 +1,131 @@
+//! Artifact registry: load HLO text, compile on the PJRT CPU client, cache
+//! the executables, and provide a shape-checked call interface.
+//!
+//! This is the only module that touches the `xla` crate's execution API;
+//! everything above it works with [`HostTensor`]s.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+pub struct ArtifactStore {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    /// cumulative (calls, seconds) per artifact — the L3 profile source
+    exec_stats: RefCell<HashMap<String, (u64, f64)>>,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn open(dir: &Path) -> Result<ArtifactStore> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(ArtifactStore {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        crate::debugln!("runtime", "compiled {name} in {:.2}s",
+                        t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `name` with the given inputs; returns the output tuple as
+    /// host tensors.  Inputs are shape/dtype-checked against the manifest.
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if let Some(sig) = self.manifest.artifacts.get(name) {
+            anyhow::ensure!(sig.inputs.len() == inputs.len(),
+                            "{name}: expected {} inputs, got {}",
+                            sig.inputs.len(), inputs.len());
+            for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
+                anyhow::ensure!(t.shape() == s.shape.as_slice(),
+                                "{name} input {i}: shape {:?} != manifest {:?}",
+                                t.shape(), s.shape);
+                anyhow::ensure!(t.dtype_str() == s.dtype,
+                                "{name} input {i}: dtype {} != manifest {}",
+                                t.dtype_str(), s.dtype);
+            }
+        }
+        self.ensure_compiled(name)?;
+        let t0 = Instant::now();
+        let lits = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name} result: {e:?}"))?;
+        let out = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.exec_stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        Ok(out)
+    }
+
+    /// (calls, total seconds) per artifact since start — used by the perf
+    /// report and the L3 "coordinator is not the bottleneck" check.
+    pub fn stats(&self) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<(String, u64, f64)> = self
+            .exec_stats
+            .borrow()
+            .iter()
+            .map(|(k, (n, s))| (k.clone(), *n, *s))
+            .collect();
+        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v
+    }
+
+    pub fn reset_stats(&self) {
+        self.exec_stats.borrow_mut().clear();
+    }
+}

@@ -1,0 +1,287 @@
+//! Typed call wrappers over the artifact store — the API the coordinator,
+//! trainer and benches program against.
+
+use anyhow::Result;
+
+use super::artifact::ArtifactStore;
+use super::tensor::HostTensor;
+
+/// Rollout precision mode (the paper's axis of comparison).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantMode {
+    Bf16,
+    Int8,
+    Fp8,
+}
+
+impl QuantMode {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            QuantMode::Bf16 => "bf16",
+            QuantMode::Int8 => "int8",
+            QuantMode::Fp8 => "fp8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QuantMode> {
+        match s {
+            "bf16" | "fp32" | "full" => Some(QuantMode::Bf16),
+            "int8" => Some(QuantMode::Int8),
+            "fp8" => Some(QuantMode::Fp8),
+            _ => None,
+        }
+    }
+}
+
+/// Rollout-engine weights in the precision the engine runs at.
+#[derive(Clone, Debug)]
+pub enum EngineWeights {
+    Bf16 { flat: Vec<f32> },
+    Int8 { a: Vec<f32>, qw: Vec<i8>, qs: Vec<f32> },
+    Fp8 { a: Vec<f32>, b_fq: Vec<f32> },
+}
+
+impl EngineWeights {
+    pub fn mode(&self) -> QuantMode {
+        match self {
+            EngineWeights::Bf16 { .. } => QuantMode::Bf16,
+            EngineWeights::Int8 { .. } => QuantMode::Int8,
+            EngineWeights::Fp8 { .. } => QuantMode::Fp8,
+        }
+    }
+
+    fn push_inputs(&self, inputs: &mut Vec<HostTensor>) {
+        match self {
+            EngineWeights::Bf16 { flat } => {
+                inputs.push(HostTensor::f32(&[flat.len()], flat.clone()));
+            }
+            EngineWeights::Int8 { a, qw, qs } => {
+                inputs.push(HostTensor::f32(&[a.len()], a.clone()));
+                inputs.push(HostTensor::i8(&[qw.len()], qw.clone()));
+                inputs.push(HostTensor::f32(&[qs.len()], qs.clone()));
+            }
+            EngineWeights::Fp8 { a, b_fq } => {
+                inputs.push(HostTensor::f32(&[a.len()], a.clone()));
+                inputs.push(HostTensor::f32(&[b_fq.len()], b_fq.clone()));
+            }
+        }
+    }
+}
+
+/// Result of one batched rollout wave.
+#[derive(Clone, Debug)]
+pub struct GenerateOut {
+    /// [B, S] tokens (prompt + generation, PAD elsewhere)
+    pub tokens: Vec<i32>,
+    /// [B, S] behavior logprobs on generated positions
+    pub logprob: Vec<f32>,
+    /// [B, S] 1.0 on generated positions (EOS inclusive)
+    pub mask: Vec<f32>,
+}
+
+/// Result of teacher-forced scoring.
+#[derive(Clone, Debug)]
+pub struct ScoreOut {
+    pub logprob: Vec<f32>,
+    pub value: Vec<f32>,
+    pub entropy: Vec<f32>,
+}
+
+/// One RL/SFT minibatch for train_step.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub lp_behav: Vec<f32>,
+    pub lp_prox: Vec<f32>,
+    pub lp_ref: Vec<f32>,
+    pub returns: Vec<f32>,
+    pub old_values: Vec<f32>,
+}
+
+pub struct Runtime {
+    pub store: ArtifactStore,
+}
+
+impl Runtime {
+    pub fn open(dir: &std::path::Path) -> Result<Runtime> {
+        Ok(Runtime { store: ArtifactStore::open(dir)? })
+    }
+
+    pub fn manifest(&self) -> &super::manifest::Manifest {
+        &self.store.manifest
+    }
+
+    /// Deterministic initial parameters from a seed.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let out = self.store.call("init_params", &[HostTensor::scalar_i32(seed)])?;
+        Ok(out.into_iter().next().unwrap().into_f32())
+    }
+
+    /// Quantize section-B weights to int8 (per-output-channel scales).
+    pub fn quantize_int8(&self, flat_b: &[f32]) -> Result<(Vec<i8>, Vec<f32>)> {
+        let out = self.store.call(
+            "quantize_int8",
+            &[HostTensor::f32(&[flat_b.len()], flat_b.to_vec())],
+        )?;
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap().into_i8(), it.next().unwrap().into_f32()))
+    }
+
+    /// Fake-quantize section-B weights onto the e4m3 grid.
+    pub fn quantize_fp8(&self, flat_b: &[f32]) -> Result<Vec<f32>> {
+        let out = self.store.call(
+            "quantize_fp8",
+            &[HostTensor::f32(&[flat_b.len()], flat_b.to_vec())],
+        )?;
+        Ok(out.into_iter().next().unwrap().into_f32())
+    }
+
+    /// Build rollout-engine weights from full-precision params.
+    pub fn engine_weights(&self, mode: QuantMode, params: &[f32]) -> Result<EngineWeights> {
+        let a_size = self.manifest().a_size;
+        match mode {
+            QuantMode::Bf16 => Ok(EngineWeights::Bf16 { flat: params.to_vec() }),
+            QuantMode::Int8 => {
+                let (qw, qs) = self.quantize_int8(&params[a_size..])?;
+                Ok(EngineWeights::Int8 { a: params[..a_size].to_vec(), qw, qs })
+            }
+            QuantMode::Fp8 => {
+                let b_fq = self.quantize_fp8(&params[a_size..])?;
+                Ok(EngineWeights::Fp8 { a: params[..a_size].to_vec(), b_fq })
+            }
+        }
+    }
+
+    /// UAQ invariant scaling (Eq. 11): returns the rescaled parameters.
+    pub fn uaq_scale(&self, params: &[f32], s: f32) -> Result<Vec<f32>> {
+        let out = self.store.call(
+            "uaq_scale",
+            &[
+                HostTensor::f32(&[params.len()], params.to_vec()),
+                HostTensor::scalar_f32(s),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap().into_f32())
+    }
+
+    /// Batched rollout (prefill + scan decode + sampling in one artifact).
+    ///
+    /// `tokens` is [B, S] with left-aligned prompts; `lens` their lengths.
+    pub fn generate(&self, w: &EngineWeights, tokens: &[i32], lens: &[i32],
+                    seed: i32, temp: f32, top_p: f32) -> Result<GenerateOut> {
+        let m = self.manifest();
+        let (b, s) = (m.rollout_batch, m.max_seq);
+        anyhow::ensure!(tokens.len() == b * s, "tokens must be [{b}, {s}]");
+        anyhow::ensure!(lens.len() == b);
+        let mut inputs = Vec::with_capacity(8);
+        w.push_inputs(&mut inputs);
+        inputs.push(HostTensor::i32(&[b, s], tokens.to_vec()));
+        inputs.push(HostTensor::i32(&[b], lens.to_vec()));
+        inputs.push(HostTensor::scalar_i32(seed));
+        inputs.push(HostTensor::scalar_f32(temp));
+        inputs.push(HostTensor::scalar_f32(top_p));
+        let name = format!("generate_{}", w.mode().tag());
+        let out = self.store.call(&name, &inputs)?;
+        let mut it = out.into_iter();
+        Ok(GenerateOut {
+            tokens: it.next().unwrap().into_i32(),
+            logprob: it.next().unwrap().into_f32(),
+            mask: it.next().unwrap().into_f32(),
+        })
+    }
+
+    /// Teacher-forced scoring under the full-precision actor:
+    /// per-token logprob, value and entropy ([B, T] each).
+    pub fn score_bf16(&self, params: &[f32], tokens: &[i32]) -> Result<ScoreOut> {
+        let m = self.manifest();
+        let (b, t) = (m.train_batch, m.max_seq);
+        anyhow::ensure!(tokens.len() == b * t, "tokens must be [{b}, {t}]");
+        let out = self.store.call(
+            "logprob_bf16",
+            &[
+                HostTensor::f32(&[params.len()], params.to_vec()),
+                HostTensor::i32(&[b, t], tokens.to_vec()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        Ok(ScoreOut {
+            logprob: it.next().unwrap().into_f32(),
+            value: it.next().unwrap().into_f32(),
+            entropy: it.next().unwrap().into_f32(),
+        })
+    }
+
+    /// Teacher-forced behavior logprobs under quantized engine weights
+    /// (used for Fig. 4b analysis and the engine-consistency tests).
+    pub fn score_engine(&self, w: &EngineWeights, tokens: &[i32]) -> Result<Vec<f32>> {
+        let m = self.manifest();
+        let (b, t) = (m.train_batch, m.max_seq);
+        anyhow::ensure!(tokens.len() == b * t);
+        let mut inputs = Vec::with_capacity(4);
+        w.push_inputs(&mut inputs);
+        inputs.push(HostTensor::i32(&[b, t], tokens.to_vec()));
+        let name = format!("logprob_{}", w.mode().tag());
+        let out = self.store.call(&name, &inputs)?;
+        Ok(out.into_iter().next().unwrap().into_f32())
+    }
+
+    /// One RL optimization step; updates `store` in place, returns metrics.
+    pub fn train_step(&self, ps: &mut super::params::ParamStore,
+                      batch: &TrainBatch, flags: &[f32]) -> Result<Vec<f32>> {
+        let m = self.manifest();
+        let (b, t) = (m.train_batch, m.max_seq);
+        anyhow::ensure!(batch.tokens.len() == b * t);
+        anyhow::ensure!(flags.len() == m.flags.n);
+        ps.step += 1;
+        let grid = |v: &Vec<f32>| HostTensor::f32(&[b, t], v.clone());
+        let n = ps.params.len();
+        let inputs = vec![
+            HostTensor::f32(&[n], ps.params.clone()),
+            HostTensor::f32(&[n], ps.m.clone()),
+            HostTensor::f32(&[n], ps.v.clone()),
+            HostTensor::scalar_f32(ps.step as f32),
+            HostTensor::i32(&[b, t], batch.tokens.clone()),
+            grid(&batch.mask),
+            grid(&batch.adv),
+            grid(&batch.lp_behav),
+            grid(&batch.lp_prox),
+            grid(&batch.lp_ref),
+            grid(&batch.returns),
+            grid(&batch.old_values),
+            HostTensor::f32(&[flags.len()], flags.to_vec()),
+        ];
+        let out = self.store.call("train_step", &inputs)?;
+        let mut it = out.into_iter();
+        ps.params = it.next().unwrap().into_f32();
+        ps.m = it.next().unwrap().into_f32();
+        ps.v = it.next().unwrap().into_f32();
+        Ok(it.next().unwrap().into_f32())
+    }
+
+    /// One supervised (cross-entropy) step — builds the RL base model.
+    pub fn sft_step(&self, ps: &mut super::params::ParamStore,
+                    tokens: &[i32], mask: &[f32], flags: &[f32]) -> Result<Vec<f32>> {
+        let m = self.manifest();
+        let (b, t) = (m.train_batch, m.max_seq);
+        anyhow::ensure!(tokens.len() == b * t);
+        ps.step += 1;
+        let n = ps.params.len();
+        let inputs = vec![
+            HostTensor::f32(&[n], ps.params.clone()),
+            HostTensor::f32(&[n], ps.m.clone()),
+            HostTensor::f32(&[n], ps.v.clone()),
+            HostTensor::scalar_f32(ps.step as f32),
+            HostTensor::i32(&[b, t], tokens.to_vec()),
+            HostTensor::f32(&[b, t], mask.to_vec()),
+            HostTensor::f32(&[flags.len()], flags.to_vec()),
+        ];
+        let out = self.store.call("sft_step", &inputs)?;
+        let mut it = out.into_iter();
+        ps.params = it.next().unwrap().into_f32();
+        ps.m = it.next().unwrap().into_f32();
+        ps.v = it.next().unwrap().into_f32();
+        Ok(it.next().unwrap().into_f32())
+    }
+}

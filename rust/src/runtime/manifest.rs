@@ -1,0 +1,263 @@
+//! Parse `artifacts/manifest.json` — the contract between the Python
+//! compile path and the Rust runtime.  All shapes, parameter layouts, flag
+//! indices and metric names come from here; the coordinator never
+//! hard-codes model dimensions.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ScaleEntry {
+    pub name: String,
+    pub offset: usize,
+    pub channels: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Flag indices into the train_step `flags` vector (mirrors
+/// python/compile/config.py::TrainFlags).
+#[derive(Clone, Debug)]
+pub struct FlagIndex {
+    pub obj_mode: usize,
+    pub eps_low: usize,
+    pub eps_high: usize,
+    pub tis_cap: usize,
+    pub kl_coef: usize,
+    pub vf_coef: usize,
+    pub ent_coef: usize,
+    pub token_mean: usize,
+    pub lr: usize,
+    pub beta1: usize,
+    pub beta2: usize,
+    pub adam_eps: usize,
+    pub weight_decay: usize,
+    pub value_clip: usize,
+    pub max_grad_norm: usize,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    // model dims
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub max_prompt: usize,
+    pub max_new: usize,
+    pub rollout_batch: usize,
+    pub train_batch: usize,
+    // flat layouts
+    pub a_size: usize,
+    pub b_size: usize,
+    pub n_params: usize,
+    pub n_qscales: usize,
+    pub params: Vec<ParamEntry>,
+    pub qscales: Vec<ScaleEntry>,
+    // misc
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub flags: FlagIndex,
+    pub metric_names: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(|v| v.as_usize())
+        .with_context(|| format!("manifest: missing numeric field {key:?}"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let cfg = j.req("config");
+        let params = cfg
+            .req("params")
+            .as_arr()
+            .context("config.params not an array")?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.req("name").as_str().unwrap_or_default().to_string(),
+                    shape: p
+                        .req("shape")
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                    offset: usize_of(p, "offset")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let qscales = cfg
+            .req("qscales")
+            .as_arr()
+            .context("config.qscales not an array")?
+            .iter()
+            .map(|p| {
+                Ok(ScaleEntry {
+                    name: p.req("name").as_str().unwrap_or_default().to_string(),
+                    offset: usize_of(p, "offset")?,
+                    channels: usize_of(p, "channels")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let fl = j.req("flags");
+        let flags = FlagIndex {
+            obj_mode: usize_of(fl, "OBJ_MODE")?,
+            eps_low: usize_of(fl, "EPS_LOW")?,
+            eps_high: usize_of(fl, "EPS_HIGH")?,
+            tis_cap: usize_of(fl, "TIS_CAP")?,
+            kl_coef: usize_of(fl, "KL_COEF")?,
+            vf_coef: usize_of(fl, "VF_COEF")?,
+            ent_coef: usize_of(fl, "ENT_COEF")?,
+            token_mean: usize_of(fl, "TOKEN_MEAN")?,
+            lr: usize_of(fl, "LR")?,
+            beta1: usize_of(fl, "BETA1")?,
+            beta2: usize_of(fl, "BETA2")?,
+            adam_eps: usize_of(fl, "ADAM_EPS")?,
+            weight_decay: usize_of(fl, "WEIGHT_DECAY")?,
+            value_clip: usize_of(fl, "VALUE_CLIP")?,
+            max_grad_norm: usize_of(fl, "MAX_GRAD_NORM")?,
+            n: usize_of(fl, "N")?,
+        };
+
+        let sp = j.req("special_tokens");
+        let metric_names = j
+            .req("metric_names")
+            .as_arr()
+            .context("metric_names")?
+            .iter()
+            .filter_map(|x| x.as_str().map(|s| s.to_string()))
+            .collect();
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(obj) = j.req("artifacts").as_obj() {
+            for (name, sig) in obj {
+                let parse_sigs = |key: &str| -> Result<Vec<TensorSig>> {
+                    sig.req(key)
+                        .as_arr()
+                        .context("artifact sig")?
+                        .iter()
+                        .map(|t| {
+                            Ok(TensorSig {
+                                shape: t
+                                    .req("shape")
+                                    .as_arr()
+                                    .context("shape")?
+                                    .iter()
+                                    .filter_map(|x| x.as_usize())
+                                    .collect(),
+                                dtype: t
+                                    .req("dtype")
+                                    .as_str()
+                                    .unwrap_or_default()
+                                    .to_string(),
+                            })
+                        })
+                        .collect()
+                };
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSig {
+                        inputs: parse_sigs("inputs")?,
+                        outputs: parse_sigs("outputs")?,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            vocab_size: usize_of(cfg, "vocab_size")?,
+            d_model: usize_of(cfg, "d_model")?,
+            n_heads: usize_of(cfg, "n_heads")?,
+            n_layers: usize_of(cfg, "n_layers")?,
+            d_ff: usize_of(cfg, "d_ff")?,
+            head_dim: usize_of(cfg, "head_dim")?,
+            max_seq: usize_of(cfg, "max_seq")?,
+            max_prompt: usize_of(cfg, "max_prompt")?,
+            max_new: usize_of(j, "max_new")?,
+            rollout_batch: usize_of(cfg, "rollout_batch")?,
+            train_batch: usize_of(cfg, "train_batch")?,
+            a_size: usize_of(cfg, "a_size")?,
+            b_size: usize_of(cfg, "b_size")?,
+            n_params: usize_of(cfg, "n_params")?,
+            n_qscales: usize_of(cfg, "n_qscales")?,
+            params,
+            qscales,
+            pad_id: usize_of(sp, "pad")? as i32,
+            bos_id: usize_of(sp, "bos")? as i32,
+            eos_id: usize_of(sp, "eos")? as i32,
+            flags,
+            metric_names,
+            artifacts,
+        })
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamEntry> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Consistency checks between layout arithmetic and declared sizes.
+    pub fn validate(&self) -> Result<()> {
+        let total: usize = self.params.iter().map(|p| p.numel()).sum();
+        anyhow::ensure!(total == self.n_params,
+                        "param layout sums to {total}, manifest says {}",
+                        self.n_params);
+        anyhow::ensure!(self.a_size + self.b_size == self.n_params,
+                        "a_size + b_size != n_params");
+        let qtotal: usize = self.qscales.iter().map(|s| s.channels).sum();
+        anyhow::ensure!(qtotal == self.n_qscales, "qscale layout mismatch");
+        anyhow::ensure!(self.max_prompt + self.max_new <= self.max_seq,
+                        "prompt + max_new exceeds context");
+        // offsets must be strictly increasing and contiguous
+        let mut off = 0;
+        for p in &self.params {
+            anyhow::ensure!(p.offset == off, "param {} offset gap", p.name);
+            off += p.numel();
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 runtime: load AOT artifacts (HLO text) and execute them via the PJRT
+//! CPU client.  Python never runs on this path — `make artifacts` is the
+//! only place jax executes.
+
+pub mod artifact;
+pub mod exec;
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+pub use artifact::ArtifactStore;
+pub use exec::{EngineWeights, GenerateOut, QuantMode, Runtime, ScoreOut, TrainBatch};
+pub use manifest::Manifest;
+pub use params::ParamStore;
+pub use tensor::HostTensor;

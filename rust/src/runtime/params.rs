@@ -1,0 +1,155 @@
+//! Flat parameter store + optimizer state + binary checkpoints.
+//!
+//! Parameters live as one contiguous `Vec<f32>` in the manifest's layout
+//! (section A: embeddings/norms/heads, then section B: quantized matrices).
+//! Checkpoints are a tiny self-describing binary format so examples and
+//! benches can share a pretrained base model.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+const MAGIC: &[u8; 8] = b"QURLCKP1";
+
+/// Actor parameters + Adam state + step counter.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+    pub a_size: usize,
+}
+
+impl ParamStore {
+    pub fn new(manifest: &Manifest, params: Vec<f32>) -> Self {
+        assert_eq!(params.len(), manifest.n_params);
+        let n = params.len();
+        ParamStore {
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            a_size: manifest.a_size,
+        }
+    }
+
+    /// Section A (never-quantized parameters).
+    pub fn section_a(&self) -> &[f32] {
+        &self.params[..self.a_size]
+    }
+
+    /// Section B (quantized matrices).
+    pub fn section_b(&self) -> &[f32] {
+        &self.params[self.a_size..]
+    }
+
+    /// Named view using the manifest layout.
+    pub fn view<'a>(&'a self, manifest: &Manifest, name: &str) -> Option<&'a [f32]> {
+        let p = manifest.param(name)?;
+        Some(&self.params[p.offset..p.offset + p.numel()])
+    }
+
+    /// Reset the optimizer (paper: fresh Adam state per RL stage).
+    pub fn reset_optimizer(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0;
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.params.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    // ---- checkpoint I/O ----------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.a_size as u64).to_le_bytes())?;
+        for v in [&self.params, &self.m, &self.v] {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a qurl checkpoint");
+        }
+        let mut u = [0u8; 8];
+        f.read_exact(&mut u)?;
+        let n = u64::from_le_bytes(u) as usize;
+        f.read_exact(&mut u)?;
+        let step = u64::from_le_bytes(u);
+        f.read_exact(&mut u)?;
+        let a_size = u64::from_le_bytes(u) as usize;
+        let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let mut out = vec![0.0f32; n];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+            }
+            Ok(out)
+        };
+        let params = read_vec(n)?;
+        let m = read_vec(n)?;
+        let v = read_vec(n)?;
+        Ok(ParamStore { params, m, v, step, a_size })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("qurl_test_ckpt");
+        let path = dir.join("t.bin");
+        let mut ps = ParamStore {
+            params: (0..100).map(|i| i as f32 * 0.5).collect(),
+            m: vec![0.25; 100],
+            v: vec![0.125; 100],
+            step: 7,
+            a_size: 40,
+        };
+        ps.params[3] = -1.5;
+        ps.save(&path).unwrap();
+        let back = ParamStore::load(&path).unwrap();
+        assert_eq!(back.params, ps.params);
+        assert_eq!(back.m, ps.m);
+        assert_eq!(back.v, ps.v);
+        assert_eq!(back.step, 7);
+        assert_eq!(back.a_size, 40);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("qurl_test_ckpt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

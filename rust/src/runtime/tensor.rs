@@ -1,0 +1,195 @@
+//! Host-side tensors and conversions to/from PJRT `Literal`s.
+//!
+//! The coordinator keeps model state (parameters, Adam moments, token
+//! batches, metrics) as plain Rust vectors and converts at artifact-call
+//! boundaries.  All conversions are shape-checked against the manifest.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+/// Dense host tensor; dtype is encoded in the variant.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    I8 { shape: Vec<usize>, data: Vec<i8> },
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i8(shape: &[usize], data: Vec<i8>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensor::I8 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. }
+            | HostTensor::I32 { shape, .. }
+            | HostTensor::I8 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "float32",
+            HostTensor::I32 { .. } => "int32",
+            HostTensor::I8 { .. } => "int8",
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            other => panic!("expected f32 tensor, got {}", other.dtype_str()),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32 { data, .. } => data,
+            other => panic!("expected i32 tensor, got {}", other.dtype_str()),
+        }
+    }
+
+    pub fn as_i8(&self) -> &[i8] {
+        match self {
+            HostTensor::I8 { data, .. } => data,
+            other => panic!("expected i8 tensor, got {}", other.dtype_str()),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            other => panic!("expected f32 tensor, got {}", other.dtype_str()),
+        }
+    }
+
+    pub fn into_i32(self) -> Vec<i32> {
+        match self {
+            HostTensor::I32 { data, .. } => data,
+            other => panic!("expected i32 tensor, got {}", other.dtype_str()),
+        }
+    }
+
+    pub fn into_i8(self) -> Vec<i8> {
+        match self {
+            HostTensor::I8 { data, .. } => data,
+            other => panic!("expected i8 tensor, got {}", other.dtype_str()),
+        }
+    }
+
+    /// Convert to a PJRT literal (copies).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let lit = match self {
+            HostTensor::F32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                               data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32, shape, bytes)?
+            }
+            HostTensor::I32 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                               data.len() * 4)
+                };
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::S32, shape, bytes)?
+            }
+            HostTensor::I8 { shape, data } => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                               data.len())
+                };
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::S8, shape, bytes)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert back from a PJRT literal.
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            ElementType::S8 => {
+                Ok(HostTensor::I8 { shape: dims, data: lit.to_vec::<i8>()? })
+            }
+            ty => bail!("unsupported literal element type {ty:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.as_f32(), t.as_f32());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(&[4], vec![-1, 0, 7, 42]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32(), t.as_i32());
+    }
+
+    #[test]
+    fn literal_roundtrip_i8() {
+        let t = HostTensor::i8(&[2, 2], vec![-128, -1, 0, 127]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i8(), t.as_i8());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert!(back.shape().is_empty());
+        assert_eq!(back.as_f32(), &[3.5]);
+    }
+}

@@ -1,0 +1,293 @@
+//! Synthetic verifiable-reward task families — the testbed's analog of the
+//! paper's math benchmarks (DESIGN.md §2 maps each family to a benchmark).
+//!
+//! Every family samples `(prompt, answer)` pairs from a seeded RNG with a
+//! difficulty knob; the reward is exact string match of the generated span
+//! (RLVR-style binary verification, like the paper's GSM8K/AIME/DeepScaleR
+//! setups).  Train and test splits use disjoint RNG streams.
+
+use crate::util::rng::Pcg64;
+
+/// A single RLVR problem.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Task family identifiers, ordered as reported in the Table 3 analog.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// chained +/- arithmetic — GSM8K analog (multi-step word-free math)
+    ArithChain,
+    /// modular arithmetic — AIME analog (competition-style number theory)
+    Modular,
+    /// multi-digit multiplication — MATH analog
+    MultiDigit,
+    /// min/max over a list — AMC analog (discrete comparison)
+    Compare,
+    /// greatest common divisor — Minerva analog
+    Gcd,
+    /// next term of a progression — OlympiadBench analog
+    Sequence,
+}
+
+pub const ALL_FAMILIES: [Family; 6] = [
+    Family::ArithChain,
+    Family::Modular,
+    Family::MultiDigit,
+    Family::Compare,
+    Family::Gcd,
+    Family::Sequence,
+];
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::ArithChain => "arith",
+            Family::Modular => "modular",
+            Family::MultiDigit => "multidigit",
+            Family::Compare => "compare",
+            Family::Gcd => "gcd",
+            Family::Sequence => "sequence",
+        }
+    }
+
+    /// Paper benchmark this family stands in for (Table 3 columns).
+    pub fn paper_analog(&self) -> &'static str {
+        match self {
+            Family::ArithChain => "MATH",
+            Family::Modular => "AIME24",
+            Family::MultiDigit => "AMC",
+            Family::Compare => "Minerva",
+            Family::Gcd => "Olympiad",
+            Family::Sequence => "GSM8K",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Family> {
+        ALL_FAMILIES.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// Sample one problem.  `difficulty` in [0, 3]: 0 is trivial (SFT
+    /// warm-up regime), higher stretches operand ranges / term counts so RL
+    /// has headroom, mirroring the paper's staged context-length schedule.
+    pub fn sample(&self, rng: &mut Pcg64, difficulty: usize) -> Problem {
+        let d = difficulty.min(3) as i64;
+        match self {
+            Family::ArithChain => {
+                let terms = 2 + d.min(2) + rng.range_i64(0, 1);
+                let hi = 9 + d * 21; // 9, 30, 51, 72
+                let mut acc = rng.range_i64(0, hi);
+                let mut s = format!("{acc}");
+                for _ in 1..terms {
+                    let v = rng.range_i64(0, hi);
+                    if rng.f64() < 0.5 {
+                        acc += v;
+                        s.push('+');
+                    } else {
+                        acc -= v;
+                        s.push('-');
+                    }
+                    s.push_str(&v.to_string());
+                }
+                s.push_str("=?");
+                Problem { prompt: s, answer: acc.to_string() }
+            }
+            Family::Modular => {
+                let hi = 9 + d * 13;
+                let a = rng.range_i64(1, hi);
+                let b = rng.range_i64(1, hi);
+                let c = rng.range_i64(0, hi);
+                let m = rng.range_i64(2, 7 + d * 3);
+                let ans = (a * b + c).rem_euclid(m);
+                Problem {
+                    prompt: format!("({a}*{b}+{c})%{m}=?"),
+                    answer: ans.to_string(),
+                }
+            }
+            Family::MultiDigit => {
+                let hi = 9 + d * 10; // up to 39x39
+                let a = rng.range_i64(2, hi);
+                let b = rng.range_i64(2, hi);
+                Problem {
+                    prompt: format!("{a}*{b}=?"),
+                    answer: (a * b).to_string(),
+                }
+            }
+            Family::Compare => {
+                let n = 3 + d as usize;
+                let hi = 50 + d * 150;
+                let xs: Vec<i64> = (0..n).map(|_| rng.range_i64(0, hi)).collect();
+                let use_max = rng.f64() < 0.5;
+                let ans = if use_max {
+                    *xs.iter().max().unwrap()
+                } else {
+                    *xs.iter().min().unwrap()
+                };
+                let list = xs
+                    .iter()
+                    .map(|x| x.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                Problem {
+                    prompt: format!("{}({list})=?", if use_max { "max" } else { "min" }),
+                    answer: ans.to_string(),
+                }
+            }
+            Family::Gcd => {
+                let hi = 12 + d * 20;
+                let g = rng.range_i64(1, 9 + d * 2);
+                let a = g * rng.range_i64(1, hi / 2);
+                let b = g * rng.range_i64(1, hi / 2);
+                let ans = gcd(a.max(1), b.max(1));
+                Problem {
+                    prompt: format!("gcd({},{})=?", a.max(1), b.max(1)),
+                    answer: ans.to_string(),
+                }
+            }
+            Family::Sequence => {
+                let start = rng.range_i64(0, 20 + d * 10);
+                let step = rng.range_i64(1, 4 + d * 4);
+                let geometric = d >= 2 && rng.f64() < 0.3;
+                let (xs, ans) = if geometric {
+                    let r = rng.range_i64(2, 3);
+                    let s0 = rng.range_i64(1, 5);
+                    let xs: Vec<i64> = (0..4).map(|i| s0 * r.pow(i as u32)).collect();
+                    let ans = s0 * r.pow(4);
+                    (xs, ans)
+                } else {
+                    let sign = if rng.f64() < 0.3 { -1 } else { 1 };
+                    let xs: Vec<i64> =
+                        (0..4).map(|i| start + sign * step * i).collect();
+                    (xs.clone(), start + sign * step * 4)
+                };
+                let list = xs
+                    .iter()
+                    .map(|x| x.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                Problem { prompt: format!("{list},?"), answer: ans.to_string() }
+            }
+        }
+    }
+}
+
+pub fn gcd(mut a: i64, mut b: i64) -> i64 {
+    while b != 0 {
+        let t = b;
+        b = a % t;
+        a = t;
+    }
+    a.abs()
+}
+
+/// Exact-match verifier (the RLVR reward function): 1.0 iff the generated
+/// span, trimmed, equals the reference answer.
+pub fn verify(problem: &Problem, generated: &str) -> f32 {
+    if generated.trim() == problem.answer {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answers_are_correct_arith() {
+        let mut rng = Pcg64::new(1);
+        for d in 0..4 {
+            for _ in 0..200 {
+                let p = Family::ArithChain.sample(&mut rng, d);
+                // re-evaluate the chain
+                let expr = p.prompt.trim_end_matches("=?");
+                let mut total = 0i64;
+                let mut cur = String::new();
+                let mut sign = 1;
+                for c in expr.chars().chain(std::iter::once('+')) {
+                    if c == '+' || c == '-' {
+                        total += sign * cur.parse::<i64>().unwrap();
+                        sign = if c == '+' { 1 } else { -1 };
+                        cur.clear();
+                    } else {
+                        cur.push(c);
+                    }
+                }
+                assert_eq!(total.to_string(), p.answer, "{}", p.prompt);
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_correct_modular() {
+        let mut rng = Pcg64::new(2);
+        for _ in 0..200 {
+            let p = Family::Modular.sample(&mut rng, 3);
+            let ans: i64 = p.answer.parse().unwrap();
+            assert!(ans >= 0);
+            let m: i64 = p.prompt[p.prompt.find('%').unwrap() + 1
+                ..p.prompt.find('=').unwrap()]
+                .parse()
+                .unwrap();
+            assert!(ans < m, "{} -> {}", p.prompt, p.answer);
+        }
+    }
+
+    #[test]
+    fn gcd_divides_operands() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..200 {
+            let p = Family::Gcd.sample(&mut rng, 2);
+            let inner = &p.prompt[4..p.prompt.len() - 3];
+            let (a, b) = inner.split_once(',').unwrap();
+            let (a, b): (i64, i64) = (a.parse().unwrap(), b.parse().unwrap());
+            let g: i64 = p.answer.parse().unwrap();
+            assert_eq!(a % g, 0);
+            assert_eq!(b % g, 0);
+            assert_eq!(g, gcd(a, b));
+        }
+    }
+
+    #[test]
+    fn prompts_fit_charset_and_length() {
+        use crate::tasks::tokenizer::Tokenizer;
+        let tk = Tokenizer::new();
+        let mut rng = Pcg64::new(4);
+        for fam in ALL_FAMILIES {
+            for d in 0..4 {
+                for _ in 0..100 {
+                    let p = fam.sample(&mut rng, d);
+                    let ids = tk.encode_prompt(&p.prompt);
+                    assert!(ids.len() <= 48, "prompt too long: {}", p.prompt);
+                    let a = tk.encode(&p.answer);
+                    assert!(a.len() <= 12, "answer too long: {}", p.answer);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn verify_exact_match_only() {
+        let p = Problem { prompt: "1+1=?".into(), answer: "2".into() };
+        assert_eq!(verify(&p, "2"), 1.0);
+        assert_eq!(verify(&p, " 2 "), 1.0);
+        assert_eq!(verify(&p, "3"), 0.0);
+        assert_eq!(verify(&p, "2.0"), 0.0);
+        assert_eq!(verify(&p, ""), 0.0);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        for fam in ALL_FAMILIES {
+            let pa = fam.sample(&mut a, 1);
+            let pb = fam.sample(&mut b, 1);
+            assert_eq!(pa.prompt, pb.prompt);
+            assert_eq!(pa.answer, pb.answer);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic verifiable-reward workloads (the paper's math benchmarks,
+//! simulated — see DESIGN.md §2) + the char-level tokenizer.
+
+pub mod families;
+pub mod suite;
+pub mod tokenizer;
+
+pub use families::{verify, Family, Problem, ALL_FAMILIES};
+pub use suite::{encode_batch, encode_sft_batch, ProblemSampler, Suite};
+pub use tokenizer::{Tokenizer, BOS, EOS, PAD};

@@ -1,0 +1,193 @@
+//! Task suites: named mixtures of families with difficulty + split handling.
+//!
+//! A suite is the analog of a paper dataset: `gsm8k` (single easy family),
+//! `aime` (single hard family), `deepscaler` (the 6-family mixture used for
+//! the Table 3 analog).  Train and test problems come from disjoint seeded
+//! RNG streams so evaluation never sees training prompts.
+
+use crate::util::rng::Pcg64;
+
+use super::families::{Family, Problem, ALL_FAMILIES};
+use super::tokenizer::Tokenizer;
+
+#[derive(Clone, Debug)]
+pub struct Suite {
+    pub name: String,
+    pub families: Vec<Family>,
+    pub difficulty: usize,
+}
+
+impl Suite {
+    pub fn by_name(name: &str) -> Option<Suite> {
+        let mk = |families: Vec<Family>, difficulty| Suite {
+            name: name.to_string(),
+            families,
+            difficulty,
+        };
+        match name {
+            // PPO experiment: single mid-difficulty family (GSM8K analog)
+            "gsm8k" => Some(mk(vec![Family::ArithChain], 1)),
+            // DAPO experiment: hard single family (AIME analog)
+            "aime" => Some(mk(vec![Family::Modular], 2)),
+            // GRPO experiment: the 5+1-task mixture (DeepScaleR analog)
+            "deepscaler" => Some(mk(ALL_FAMILIES.to_vec(), 2)),
+            // smoke/debug
+            "tiny" => Some(mk(vec![Family::Compare], 0)),
+            _ => {
+                // single-family suite by family name, e.g. "gcd"
+                Family::parse(name).map(|f| mk(vec![f], 2))
+            }
+        }
+    }
+
+    /// Deterministic train-split sampler (stream 0).
+    pub fn train_sampler(&self, seed: u64) -> ProblemSampler {
+        ProblemSampler {
+            rng: Pcg64::new(seed ^ 0x7261_696e),
+            families: self.families.clone(),
+            difficulty: self.difficulty,
+        }
+    }
+
+    /// Fixed, reproducible test set: `n` problems per family (stream 1).
+    pub fn test_set(&self, seed: u64, n_per_family: usize) -> Vec<(Family, Problem)> {
+        let mut rng = Pcg64::new(seed ^ 0x7465_7374);
+        let mut out = Vec::new();
+        for &fam in &self.families {
+            for _ in 0..n_per_family {
+                out.push((fam, fam.sample(&mut rng, self.difficulty)));
+            }
+        }
+        out
+    }
+}
+
+pub struct ProblemSampler {
+    rng: Pcg64,
+    families: Vec<Family>,
+    difficulty: usize,
+}
+
+impl ProblemSampler {
+    pub fn next(&mut self) -> (Family, Problem) {
+        let fam = self.families[self.rng.below(self.families.len() as u64) as usize];
+        let p = fam.sample(&mut self.rng, self.difficulty);
+        (fam, p)
+    }
+
+    pub fn batch(&mut self, n: usize) -> Vec<(Family, Problem)> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// Encode problems into a fixed [B, S] rollout batch (left-aligned prompts,
+/// PAD fill).  Returns (tokens, lens).  Panics if a prompt overflows
+/// max_prompt — families are tested to stay within it.
+pub fn encode_batch(tk: &Tokenizer, problems: &[&Problem], b: usize, s: usize,
+                    max_prompt: usize) -> (Vec<i32>, Vec<i32>) {
+    assert!(problems.len() <= b, "{} > batch {b}", problems.len());
+    let mut tokens = vec![super::tokenizer::PAD; b * s];
+    let mut lens = vec![1i32; b];
+    for (r, p) in problems.iter().enumerate() {
+        let ids = tk.encode_prompt(&p.prompt);
+        assert!(ids.len() <= max_prompt,
+                "prompt overflows max_prompt: {}", p.prompt);
+        tokens[r * s..r * s + ids.len()].copy_from_slice(&ids);
+        lens[r] = ids.len() as i32;
+    }
+    // unused rows: a lone BOS keeps prefill well-defined
+    for r in problems.len()..b {
+        tokens[r * s] = super::tokenizer::BOS;
+    }
+    (tokens, lens)
+}
+
+/// SFT pretraining batch: full (prompt + answer + EOS) sequences with the
+/// loss mask over answer+EOS positions.  This builds the "base model" the
+/// paper starts RL from (their Qwen/DeepSeek checkpoints).
+pub fn encode_sft_batch(tk: &Tokenizer, problems: &[(Family, Problem)],
+                        b: usize, s: usize) -> (Vec<i32>, Vec<f32>) {
+    assert!(problems.len() <= b);
+    let mut tokens = vec![super::tokenizer::PAD; b * s];
+    let mut mask = vec![0.0f32; b * s];
+    for (r, (_, p)) in problems.iter().enumerate() {
+        let mut ids = tk.encode_prompt(&p.prompt);
+        let plen = ids.len();
+        ids.extend(tk.encode(&p.answer));
+        ids.push(super::tokenizer::EOS);
+        assert!(ids.len() <= s);
+        tokens[r * s..r * s + ids.len()].copy_from_slice(&ids);
+        for t in plen..ids.len() {
+            mask[r * s + t] = 1.0;
+        }
+    }
+    for r in problems.len()..b {
+        tokens[r * s] = super::tokenizer::BOS;
+    }
+    (tokens, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_resolve() {
+        for name in ["gsm8k", "aime", "deepscaler", "tiny", "gcd"] {
+            let s = Suite::by_name(name).unwrap();
+            assert!(!s.families.is_empty());
+        }
+        assert!(Suite::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn train_test_disjoint_streams() {
+        let s = Suite::by_name("gsm8k").unwrap();
+        let mut tr = s.train_sampler(7);
+        let te = s.test_set(7, 50);
+        let train_prompts: std::collections::HashSet<String> =
+            (0..200).map(|_| tr.next().1.prompt).collect();
+        let overlap = te
+            .iter()
+            .filter(|(_, p)| train_prompts.contains(&p.prompt))
+            .count();
+        // prompts can collide by value; streams must not be identical
+        assert!(overlap < te.len() / 2);
+    }
+
+    #[test]
+    fn encode_batch_layout() {
+        let tk = Tokenizer::new();
+        let s = Suite::by_name("deepscaler").unwrap();
+        let probs = s.test_set(1, 2);
+        let refs: Vec<&crate::tasks::families::Problem> =
+            probs.iter().map(|(_, p)| p).collect();
+        let (tokens, lens) = encode_batch(&tk, &refs, 16, 128, 48);
+        assert_eq!(tokens.len(), 16 * 128);
+        for (r, p) in refs.iter().enumerate() {
+            let l = lens[r] as usize;
+            assert_eq!(tokens[r * 128], super::super::tokenizer::BOS);
+            let dec = tk.decode(&tokens[r * 128..r * 128 + l]);
+            assert_eq!(dec, p.prompt);
+        }
+        // unused rows are BOS-only
+        assert_eq!(tokens[15 * 128], super::super::tokenizer::BOS);
+        assert_eq!(tokens[15 * 128 + 1], super::super::tokenizer::PAD);
+    }
+
+    #[test]
+    fn sft_mask_covers_answer_and_eos() {
+        let tk = Tokenizer::new();
+        let s = Suite::by_name("gsm8k").unwrap();
+        let probs = s.test_set(2, 1);
+        let (tokens, mask) = encode_sft_batch(&tk, &probs, 4, 128);
+        let p = &probs[0].1;
+        let plen = tk.encode_prompt(&p.prompt).len();
+        let alen = tk.encode(&p.answer).len();
+        let row_mask: f32 = mask[..128].iter().sum();
+        assert_eq!(row_mask as usize, alen + 1); // answer + EOS
+        assert_eq!(tokens[plen + alen], super::super::tokenizer::EOS);
+        assert_eq!(mask[plen - 1], 0.0);
+        assert_eq!(mask[plen], 1.0);
+    }
+}

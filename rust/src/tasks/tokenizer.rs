@@ -1,0 +1,130 @@
+//! Character-level tokenizer over the 64-symbol vocabulary the artifacts
+//! were compiled for.  IDs 0/1/2 are PAD/BOS/EOS (mirrored in the manifest);
+//! the charset covers digits, arithmetic operators and lowercase letters —
+//! everything the synthetic task families emit.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+/// Characters mapped to ids 3..3+len; must stay within vocab_size-3 = 61.
+pub const CHARSET: &str = "0123456789+-*/=%()<>., ?abcdefghijklmnopqrstuvwxyz";
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    to_id: [i32; 128],
+    to_char: Vec<char>,
+    pub vocab_size: usize,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut to_id = [-1i32; 128];
+        let mut to_char = vec!['\0', '\u{1}', '\u{2}']; // specials
+        for (i, c) in CHARSET.chars().enumerate() {
+            to_id[c as usize] = 3 + i as i32;
+            to_char.push(c);
+        }
+        Tokenizer { to_id, to_char, vocab_size: 3 + CHARSET.len() }
+    }
+
+    /// Encode text (panics on out-of-charset characters — task generators
+    /// only emit CHARSET).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .map(|c| {
+                let id = if (c as usize) < 128 { self.to_id[c as usize] } else { -1 };
+                assert!(id >= 0, "character {c:?} not in charset");
+                id
+            })
+            .collect()
+    }
+
+    /// Encode a prompt with BOS: `[BOS] + chars`.
+    pub fn encode_prompt(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        out.extend(self.encode(text));
+        out
+    }
+
+    /// Decode ids, stopping at EOS/PAD; unknown ids render as '\u{fffd}'.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == EOS || id == PAD {
+                break;
+            }
+            if id == BOS {
+                continue;
+            }
+            out.push(
+                self.to_char
+                    .get(id as usize)
+                    .copied()
+                    .unwrap_or('\u{fffd}'),
+            );
+        }
+        out
+    }
+
+    /// Decode the generated span of a rollout row: tokens after `prompt_len`
+    /// up to EOS.
+    pub fn decode_generation(&self, row: &[i32], prompt_len: usize) -> String {
+        self.decode(&row[prompt_len.min(row.len())..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = Tokenizer::new();
+        let s = "12+34=? max(7,9)";
+        let ids = tk.encode(s);
+        assert_eq!(tk.decode(&ids), s);
+    }
+
+    #[test]
+    fn vocab_fits_model() {
+        let tk = Tokenizer::new();
+        assert!(tk.vocab_size <= 64, "vocab {} > 64", tk.vocab_size);
+        for c in CHARSET.chars() {
+            let ids = tk.encode(&c.to_string());
+            assert!(ids[0] >= 3 && (ids[0] as usize) < tk.vocab_size);
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let tk = Tokenizer::new();
+        let mut ids = tk.encode("42");
+        ids.push(EOS);
+        ids.extend(tk.encode("99"));
+        assert_eq!(tk.decode(&ids), "42");
+    }
+
+    #[test]
+    fn prompt_has_bos() {
+        let tk = Tokenizer::new();
+        let ids = tk.encode_prompt("1+1=?");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(tk.decode(&ids), "1+1=?");
+    }
+
+    #[test]
+    fn charset_ids_unique() {
+        let tk = Tokenizer::new();
+        let mut seen = std::collections::HashSet::new();
+        for c in CHARSET.chars() {
+            assert!(seen.insert(tk.encode(&c.to_string())[0]));
+        }
+    }
+}

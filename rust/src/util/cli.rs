@@ -1,0 +1,225 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated keys,
+//! and positional arguments.  Each binary declares its options and gets
+//! `--help` for free.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str,
+               help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.bin, self.about);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_flag) {
+                (_, true) => "(flag)".to_string(),
+                (Some(d), _) => format!("(default: {d})"),
+                (None, _) => "(required)".to_string(),
+            };
+            s.push_str(&format!("  --{:24} {} {}\n", o.name, o.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the binary name).
+    pub fn parse_from(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                let val = if spec.is_flag {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{key} needs a value"))?
+                };
+                args.values.entry(key).or_default().push(val);
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults & check required
+        for o in &self.opts {
+            if !args.values.contains_key(o.name) {
+                if let Some(d) = &o.default {
+                    args.values
+                        .entry(o.name.to_string())
+                        .or_default()
+                        .push(d.clone());
+                } else if !o.is_flag {
+                    return Err(format!("missing required --{}\n\n{}", o.name,
+                                       self.usage()));
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process argv; exits with usage on error or --help.
+    pub fn parse(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> String {
+        self.get(key).unwrap_or_default().to_string()
+    }
+
+    pub fn usize(&self, key: &str) -> usize {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("option --{key} must be an integer"))
+    }
+
+    pub fn u64(&self, key: &str) -> u64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("option --{key} must be an integer"))
+    }
+
+    pub fn f64(&self, key: &str) -> f64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("option --{key} must be a number"))
+    }
+
+    pub fn f32(&self, key: &str) -> f32 {
+        self.f64(key) as f32
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn all(&self, key: &str) -> Vec<String> {
+        self.values.get(key).cloned().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", "10", "steps")
+            .opt("lr", "0.1", "learning rate")
+            .flag("verbose", "verbosity")
+            .opt_req("mode", "mode")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = cli().parse_from(&v(&["--mode", "x", "--steps=25"])).unwrap();
+        assert_eq!(a.usize("steps"), 25);
+        assert_eq!(a.f64("lr"), 0.1);
+        assert_eq!(a.str("mode"), "x");
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = cli()
+            .parse_from(&v(&["--mode", "x", "--verbose", "pos1"]))
+            .unwrap();
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse_from(&v(&["--steps", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse_from(&v(&["--mode", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn repeated_keys_collected() {
+        let a = cli()
+            .parse_from(&v(&["--mode", "a", "--mode", "b"]))
+            .unwrap();
+        assert_eq!(a.all("mode"), vec!["a", "b"]);
+        assert_eq!(a.str("mode"), "b");
+    }
+}

@@ -1,0 +1,75 @@
+//! Leveled stderr logging with a global verbosity switch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(2); // Info
+
+pub fn set_level(l: Level) {
+    VERBOSITY.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    VERBOSITY.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, module: &str, msg: &str) {
+    if (l as u8) <= level() {
+        let t = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{t:.3}] {tag} {module}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $mod,
+                                   &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnln {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $mod,
+                                   &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debugln {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $mod,
+                                   &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        set_level(Level::Debug);
+        assert_eq!(level(), 3);
+        set_level(Level::Info);
+        assert_eq!(level(), 2);
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained infrastructure substrate.
+//!
+//! The offline build image ships only the `xla` crate and its transitive
+//! dependencies, so the usual ecosystem crates (rand, serde, clap, tokio,
+//! criterion, proptest) are unavailable.  This module provides the small,
+//! tested subset the coordinator needs; DESIGN.md §2 records the
+//! substitution.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod timer;

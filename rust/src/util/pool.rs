@@ -1,0 +1,138 @@
+//! Fixed-size worker thread pool with scoped parallel-for (tokio is
+//! unavailable offline; the coordinator's concurrency needs are CPU-bound
+//! fan-out + channels, which std threads cover).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("qurl-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool closed")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map over indexed chunks using plain scoped threads (no pool
+/// needed — used by CPU-side quantization mirrors over parameter slabs).
+pub fn par_chunks<T: Sync, R: Send>(
+    data: &[T],
+    chunk: usize,
+    threads: usize,
+    f: impl Fn(usize, &[T]) -> R + Sync,
+) -> Vec<R> {
+    assert!(chunk > 0);
+    let chunks: Vec<(usize, &[T])> = data.chunks(chunk).enumerate().collect();
+    let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(chunks.len()));
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads.max(1) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= chunks.len() {
+                    break;
+                }
+                let (idx, slice) = chunks[i];
+                let r = f(idx, slice);
+                results.lock().unwrap().push((idx, r));
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_chunks_ordered() {
+        let data: Vec<u64> = (0..1000).collect();
+        let sums = par_chunks(&data, 100, 4, |_, xs| xs.iter().sum::<u64>());
+        assert_eq!(sums.len(), 10);
+        assert_eq!(sums.iter().sum::<u64>(), 499_500);
+        assert_eq!(sums[0], (0..100).sum::<u64>());
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.len(), 2);
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,225 @@
+//! Property-based testing helper (proptest is unavailable offline).
+//!
+//! A `Gen` produces random values from a seeded [`Pcg64`]; [`check`] runs a
+//! property over N generated cases and, on failure, performs greedy
+//! shrinking via the value's [`Shrink`] implementation before reporting the
+//! minimal counterexample.  Used by the coordinator/RL invariant tests
+//! (DESIGN.md §7).
+
+use super::rng::Pcg64;
+
+/// Random value generator.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+}
+
+/// Shrinking: yield "smaller" candidate values, nearest-first.
+pub trait Shrink: Sized {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(self / 2);
+            out.push(if *self > 0 { self - 1 } else { self + 1 });
+            if *self < 0 {
+                out.push(-self);
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+            if self.fract() != 0.0 {
+                out.push(self.trunc());
+            }
+        }
+        out
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            let mut minus_last = self.clone();
+            minus_last.pop();
+            out.push(minus_last);
+            // shrink one element at a time (first few positions)
+            for i in 0..self.len().min(4) {
+                for cand in self[i].shrink() {
+                    let mut v = self.clone();
+                    v[i] = cand;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+// ---- ready-made generators -------------------------------------------------
+
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        rng.range_i64(self.0 as i64, self.1 as i64) as usize
+    }
+}
+
+pub struct F64In(pub f64, pub f64);
+
+impl Gen for F64In {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        self.0 + rng.f64() * (self.1 - self.0)
+    }
+}
+
+pub struct VecOf<G: Gen>(pub G, pub usize, pub usize);
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        let n = rng.range_i64(self.1 as i64, self.2 as i64) as usize;
+        (0..n).map(|_| self.0.generate(rng)).collect()
+    }
+}
+
+pub struct Pair<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum CheckResult<V> {
+    Pass { cases: usize },
+    Fail { original: V, minimal: V, shrinks: usize },
+}
+
+/// Run `prop` over `cases` random values; shrink on first failure.
+pub fn check<G>(seed: u64, cases: usize, gen: &G,
+                prop: impl Fn(&G::Value) -> bool) -> CheckResult<G::Value>
+where
+    G: Gen,
+    G::Value: Shrink,
+{
+    let mut rng = Pcg64::new(seed);
+    for _ in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            // greedy shrink
+            let original = v.clone();
+            let mut current = v;
+            let mut shrinks = 0;
+            'outer: loop {
+                for cand in current.shrink() {
+                    if !prop(&cand) {
+                        current = cand;
+                        shrinks += 1;
+                        if shrinks > 1000 {
+                            break 'outer;
+                        }
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return CheckResult::Fail { original, minimal: current, shrinks };
+        }
+    }
+    CheckResult::Pass { cases }
+}
+
+/// Assert helper for tests: panics with the minimal counterexample.
+pub fn assert_prop<G>(name: &str, seed: u64, cases: usize, gen: &G,
+                      prop: impl Fn(&G::Value) -> bool)
+where
+    G: Gen,
+    G::Value: Shrink,
+{
+    match check(seed, cases, gen, prop) {
+        CheckResult::Pass { .. } => {}
+        CheckResult::Fail { original, minimal, shrinks } => panic!(
+            "property {name} failed\n  original: {original:?}\n  minimal \
+             (after {shrinks} shrinks): {minimal:?}"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        assert_prop("sum-nonneg", 1, 200, &VecOf(UsizeIn(0, 100), 0, 20),
+                    |v| v.iter().sum::<usize>() < usize::MAX);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // fails whenever the vec contains an element >= 10; minimal case is
+        // a short vector
+        let r = check(3, 500, &VecOf(UsizeIn(0, 100), 0, 20), |v| {
+            v.iter().all(|&x| x < 10)
+        });
+        match r {
+            CheckResult::Fail { minimal, .. } => {
+                assert!(minimal.len() <= 2, "minimal={minimal:?}");
+            }
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn f64_gen_in_range() {
+        let mut rng = Pcg64::new(4);
+        let g = F64In(-2.0, 3.0);
+        for _ in 0..1000 {
+            let x = g.generate(&mut rng);
+            assert!((-2.0..3.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Wall-clock timing helpers + the bench harness used by `cargo bench`
+//! targets (criterion is unavailable offline; every bench is a
+//! `harness = false` binary built on this module).
+
+use std::time::Instant;
+
+/// Scope timer: `let _t = Timer::new("phase");` logs on drop.
+pub struct Timer {
+    label: String,
+    start: Instant,
+    pub silent: bool,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Self {
+        Timer { label: label.to_string(), start: Instant::now(), silent: false }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if !self.silent {
+            eprintln!("[timer] {}: {:.3}s", self.label, self.elapsed_s());
+        }
+    }
+}
+
+/// Measure a closure: returns (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Micro-bench result for one case.
+#[derive(Clone, Debug)]
+pub struct BenchStat {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStat {
+    pub fn throughput_line(&self, unit: &str, per_iter: f64) -> String {
+        format!(
+            "{:40} {:10.3} ms/iter   {:12.1} {unit}/s",
+            self.name,
+            self.mean_s * 1e3,
+            per_iter / self.mean_s
+        )
+    }
+}
+
+/// Run `f` repeatedly: a warmup pass, then up to `max_iters` or
+/// `budget_s` seconds, whichever hits first.  Each iteration should do a
+/// full unit of work (the harness does no sub-sampling like criterion —
+/// artifact executions are milliseconds-scale, far above timer noise).
+pub fn bench(name: &str, warmup: usize, max_iters: usize, budget_s: f64,
+             mut f: impl FnMut()) -> BenchStat {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < max_iters && start.elapsed().as_secs_f64() < budget_s
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchStat {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: samples.get(n / 2).copied().unwrap_or(0.0),
+        min_s: samples.first().copied().unwrap_or(0.0),
+        max_s: samples.last().copied().unwrap_or(0.0),
+    }
+}
+
+/// Pretty-print a table of rows with a header; used by the table benches to
+/// print the same rows as the paper.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let stat = bench("noop", 1, 16, 0.5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(stat.iters > 0);
+        assert!(stat.min_s <= stat.mean_s && stat.mean_s <= stat.max_s + 1e-12);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

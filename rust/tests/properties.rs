@@ -1,0 +1,235 @@
+//! Property-based tests (propcheck) over coordinator + RL invariants.
+//! These run without artifacts — pure host logic.
+
+use qurl::coordinator::SlotMap;
+use qurl::rl::advantage;
+use qurl::rl::dapo;
+use qurl::rl::objective::{surrogate_token, Objective, ObjectiveKind};
+use qurl::tasks::{Family, Tokenizer, ALL_FAMILIES};
+use qurl::util::propcheck::{assert_prop, F64In, Pair, UsizeIn, VecOf};
+use qurl::util::rng::Pcg64;
+
+/// Slot allocator: any acquire/release trace preserves the partition
+/// invariant and never double-allocates.
+#[test]
+fn prop_slotmap_partition() {
+    // value = (capacity, ops) where op < 2*cap: acquire (op < cap) or
+    // release the op-cap-th active slot
+    let g = Pair(UsizeIn(1, 16), VecOf(UsizeIn(0, 31), 0, 200));
+    assert_prop("slotmap-partition", 0xA11, 300, &g, |(cap, ops)| {
+        let cap = (*cap).max(1);
+        let mut sm = SlotMap::new(cap);
+        let mut active: Vec<(usize, u64)> = Vec::new();
+        let mut next_id = 0u64;
+        for &op in ops {
+            if op % 2 == 0 {
+                if let Some(slot) = sm.acquire(next_id) {
+                    if active.iter().any(|&(s, _)| s == slot) {
+                        return false; // double allocation!
+                    }
+                    active.push((slot, next_id));
+                    next_id += 1;
+                }
+            } else if !active.is_empty() {
+                let (slot, id) = active.remove(op % active.len());
+                sm.release(slot, id);
+            }
+            if !sm.check_invariants() {
+                return false;
+            }
+            if sm.active_count() != active.len() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// GRPO advantages: zero mean within every group; zero for uniform groups;
+/// sign matches reward deviation.
+#[test]
+fn prop_grpo_group_mean_zero() {
+    let g = Pair(UsizeIn(2, 8), VecOf(F64In(0.0, 1.0), 2, 8));
+    assert_prop("grpo-zero-mean", 0xB22, 500, &g, |(gsize, rewards_f)| {
+        let gsize = (*gsize).max(2);
+        // build a rewards vector with len = k * gsize
+        let k = (rewards_f.len().max(1) + gsize - 1) / gsize;
+        let rewards: Vec<f32> = (0..k * gsize)
+            .map(|i| rewards_f.get(i % rewards_f.len().max(1))
+                 .copied()
+                 .unwrap_or(0.0)
+                 .round() as f32)
+            .collect();
+        let adv = advantage::grpo(&rewards, gsize);
+        for chunk in adv.chunks_exact(gsize) {
+            let sum: f32 = chunk.iter().sum();
+            if sum.abs() > 1e-3 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// GAE with gamma=lambda=1 telescopes to reward - value.
+#[test]
+fn prop_gae_telescopes() {
+    let g = VecOf(F64In(-1.0, 1.0), 1, 30);
+    assert_prop("gae-telescope", 0xC33, 300, &g, |values_f| {
+        let values: Vec<f32> = values_f.iter().map(|&v| v as f32).collect();
+        let (adv, ret) = advantage::gae(&values, 1.0, 1.0, 1.0);
+        for t in 0..values.len() {
+            if (adv[t] - (1.0 - values[t])).abs() > 1e-4 {
+                return false;
+            }
+            if (ret[t] - 1.0).abs() > 1e-4 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// ACR's clip window contains TIS's: with positive advantage the ACR
+/// surrogate is >= the TIS surrogate; they coincide when rho <= C.
+#[test]
+fn prop_acr_dominates_tis_positive_adv() {
+    let g = VecOf(F64In(-3.0, 3.0), 3, 3);
+    assert_prop("acr>=tis", 0xD44, 2000, &g, |v| {
+        let (lp_theta, lp_behav, lp_prox) = (v[0] as f32, v[1] as f32, v[2] as f32);
+        let mk = |kind| Objective { kind, tis_cap: 2.0, eps_low: 0.2,
+                                    eps_high: 0.28, ..Objective::default() };
+        let adv = 1.0;
+        let tis = surrogate_token(&mk(ObjectiveKind::Tis), lp_theta, lp_behav,
+                                  lp_prox, adv);
+        let acr = surrogate_token(&mk(ObjectiveKind::Acr), lp_theta, lp_behav,
+                                  lp_prox, adv);
+        if acr < tis - 1e-5 {
+            return false;
+        }
+        // no truncation -> identical
+        let rho = (lp_prox - lp_behav).exp();
+        if rho <= 2.0 && (acr - tis).abs() > 1e-5 {
+            return false;
+        }
+        true
+    });
+}
+
+/// TIS surrogate magnitude is bounded by C x |clip window x adv|, unlike
+/// decoupled (the Fig. 3b blow-up).
+#[test]
+fn prop_tis_bounded() {
+    let g = VecOf(F64In(-8.0, 8.0), 3, 3);
+    assert_prop("tis-bounded", 0xE55, 2000, &g, |v| {
+        let obj = Objective { kind: ObjectiveKind::Tis, tis_cap: 2.0,
+                              eps_low: 0.2, eps_high: 0.28,
+                              ..Objective::default() };
+        let s = surrogate_token(&obj, v[0] as f32, v[1] as f32, v[2] as f32,
+                                1.0);
+        // ratio clipped to <= 1.28 only on the min side for adv>0;
+        // unclipped branch can exceed but the min picks the smaller:
+        // bound = C * max(ratio_clip_hi * adv) with ratio <= e^20 clamp...
+        // practical bound: C * (1 + eps_high) when clipped branch wins, or
+        // C * ratio when ratio < hi; either way <= C * max(hi, ratio<=hi)
+        s <= 2.0 * 1.28 + 1e-4
+    });
+}
+
+/// Dynamic sampling keeps exactly the informative groups.
+#[test]
+fn prop_dapo_filter_correct() {
+    let g = Pair(UsizeIn(2, 6), VecOf(F64In(0.0, 1.0), 4, 48));
+    assert_prop("dapo-filter", 0xF66, 500, &g, |(gsize, vals)| {
+        let gsize = (*gsize).max(2);
+        let n_groups = vals.len() / gsize;
+        if n_groups == 0 {
+            return true;
+        }
+        let rewards: Vec<f32> = vals[..n_groups * gsize]
+            .iter()
+            .map(|&v| if v > 0.5 { 1.0 } else { 0.0 })
+            .collect();
+        let keep = dapo::informative_groups(&rewards, gsize);
+        for g_i in 0..n_groups {
+            let chunk = &rewards[g_i * gsize..(g_i + 1) * gsize];
+            let uniform = chunk.iter().all(|&r| r == chunk[0]);
+            let kept = keep.contains(&g_i);
+            if uniform == kept {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Tokenizer round-trip over arbitrary problem strings.
+#[test]
+fn prop_tokenizer_roundtrip_all_families() {
+    let g = Pair(UsizeIn(0, 5), UsizeIn(0, 3));
+    let tk = Tokenizer::new();
+    assert_prop("tokenizer-roundtrip", 0x1A7, 1500, &g, |(fam_i, diff)| {
+        let fam: Family = ALL_FAMILIES[fam_i % ALL_FAMILIES.len()];
+        let mut rng = Pcg64::new((fam_i * 131 + diff) as u64);
+        let p = fam.sample(&mut rng, *diff);
+        let ids = tk.encode(&p.prompt);
+        tk.decode(&ids) == p.prompt && {
+            let a = tk.encode(&p.answer);
+            tk.decode(&a) == p.answer
+        }
+    });
+}
+
+/// Reward verifier: generated answer == reference iff reward is 1.
+#[test]
+fn prop_verifier_exactness() {
+    let g = UsizeIn(0, 10_000);
+    assert_prop("verifier-exact", 0x1B8, 800, &g, |seed| {
+        let mut rng = Pcg64::new(*seed as u64);
+        for fam in ALL_FAMILIES {
+            let p = fam.sample(&mut rng, 2);
+            if qurl::tasks::verify(&p, &p.answer) != 1.0 {
+                return false;
+            }
+            let wrong = format!("{}9", p.answer);
+            if qurl::tasks::verify(&p, &wrong) != 0.0 {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Quantization mirrors: dequantized int8 error bounded by half a step;
+/// e4m3 idempotent; both preserve sign.
+#[test]
+fn prop_quant_bounds() {
+    use qurl::quant::{fp8, int8};
+    let g = Pair(UsizeIn(1, 64), UsizeIn(0, 10_000));
+    assert_prop("quant-bounds", 0x1C9, 200, &g, |(k, seed)| {
+        let k = (*k).max(1);
+        let n = 8;
+        let mut rng = Pcg64::new(*seed as u64);
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| rng.normal() as f32 * 0.05)
+            .collect();
+        let (q, s) = int8::weight_quant(&w, k, n);
+        let deq = int8::dequant(&q, &s, k, n);
+        for i in 0..w.len() {
+            if (w[i] - deq[i]).abs() > 0.5 * s[i % n] + 1e-9 {
+                return false;
+            }
+        }
+        let fq = fp8::weight_quant(&w, k, n);
+        let fq2 = fp8::weight_quant(&fq, k, n);
+        for i in 0..w.len() {
+            if (fq[i] - fq2[i]).abs() > 1e-6 {
+                return false;
+            }
+            if fq[i] != 0.0 && w[i] != 0.0 && fq[i].signum() != w[i].signum() {
+                return false;
+            }
+        }
+        true
+    });
+}
