@@ -330,14 +330,6 @@ def decode_step(cfg: ModelConfig, w: Weights, cache_k, cache_v, pos, tok):
 # sampling + generation (the rollout artifact)
 # --------------------------------------------------------------------------
 
-def _cumsum_tri(x):
-    """Cumulative sum along the last axis via a lower-triangular matmul —
-    avoids HLO reduce_window for the 0.5.1 text parser (V is tiny)."""
-    v = x.shape[-1]
-    tri = jnp.tril(jnp.ones((v, v), dtype=jnp.float32))
-    return x @ tri.T
-
-
 def sample_token(logits, key, temp, top_p):
     """Temperature + nucleus sampling with exact behavior logprobs.
 
@@ -351,14 +343,25 @@ def sample_token(logits, key, temp, top_p):
     lt = logits / t_safe
     logp = jax.nn.log_softmax(lt, axis=-1)
     p = jnp.exp(logp)
-    # nucleus: keep the smallest prefix of the sorted distribution with
-    # cumulative mass >= top_p; implemented with sort + tri-matmul cumsum.
-    p_sorted = -jnp.sort(-p, axis=-1)                      # descending
-    cum = _cumsum_tri(p_sorted)                            # inclusive
-    # threshold = probability of the last kept sorted entry
-    kept = (cum - p_sorted) < top_p                        # [B, V] sorted dom.
-    thresh = jnp.min(jnp.where(kept, p_sorted, 2.0), axis=-1)   # [B]
-    keep = p >= thresh[:, None]
+    # nucleus: keep the smallest prefix of the probability-sorted
+    # distribution with cumulative mass >= top_p.  Boundary ties break by
+    # sort order (equal probabilities keep ascending token id) — mirrored
+    # exactly by the host-side scheduler sampler (coordinator/sampler.rs);
+    # a `p >= threshold` filter would keep every boundary-tied token and
+    # inflate the nucleus past the minimal set.
+    # Sort/gather-free formulation for the 0.5.1 parser (V is tiny): token
+    # i is kept iff the mass of tokens strictly preceding it in the
+    # descending (p, -index) order is < top_p.
+    idx = jnp.arange(v)
+    pi = p[:, :, None]                                     # [B, V(i), 1]
+    pj = p[:, None, :]                                     # [B, 1, V(j)]
+    precedes = (pj > pi) | (
+        (pj == pi) & (idx[None, None, :] < idx[None, :, None]))
+    mass_before = jnp.sum(jnp.where(precedes, pj, 0.0), axis=-1)  # [B, V]
+    # the first-ranked token (mass_before == 0) is always kept so the
+    # nucleus is never empty even at top_p <= 0 (no NaN logprobs) —
+    # matching the host sampler's never-empty prefix
+    keep = (mass_before < top_p) | (mass_before == 0.0)
     filt_logp = jnp.where(keep, logp, _NEG_INF)
     filt_logp = jax.nn.log_softmax(filt_logp, axis=-1)     # renormalized
     g = jax.random.gumbel(key, (b, v), dtype=jnp.float32)

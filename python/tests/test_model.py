@@ -164,6 +164,34 @@ def test_sampling_top_p_restricts_support(weights):
     assert bool(jnp.all(lp <= 0.0))
 
 
+def test_sampling_tied_logits_minimal_nucleus():
+    """Boundary ties break by sort order: a three-way tie at the top with
+    top_p=0.4 keeps exactly two tokens (ids 0 and 1, mass 2/3 >= 0.4) and
+    never the third — the kept set is the minimal nucleus, matching the
+    host-side scheduler sampler."""
+    row = np.full((CFG.vocab_size,), -30.0, np.float32)
+    row[:3] = 2.0
+    logits = jnp.asarray(np.tile(row, (8, 1)))
+    for s in range(6):
+        toks, lp = M.sample_token(logits, jax.random.PRNGKey(s),
+                                  jnp.float32(1.0), jnp.float32(0.4))
+        assert bool(jnp.all(toks < 2)), np.asarray(toks)
+        # renormalized two-token nucleus: lp == ln(1/2)
+        np.testing.assert_allclose(np.asarray(lp), np.log(0.5), atol=1e-5)
+
+
+def test_sampling_top_p_zero_keeps_top_token():
+    """Degenerate top_p: the nucleus is never empty — the top token is kept
+    with a finite renormalized logprob (0.0), never NaN."""
+    row = np.zeros((CFG.vocab_size,), np.float32)
+    row[5] = 3.0
+    logits = jnp.asarray(np.tile(row, (4, 1)))
+    toks, lp = M.sample_token(logits, jax.random.PRNGKey(1),
+                              jnp.float32(1.0), jnp.float32(0.0))
+    assert bool(jnp.all(toks == 5))
+    np.testing.assert_allclose(np.asarray(lp), 0.0, atol=1e-6)
+
+
 def test_objective_modes_differ(params):
     """The five objective modes must induce different losses when behavior
     and proximal policies diverge."""

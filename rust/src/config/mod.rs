@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::rl::{Algo, Objective, ObjectiveKind, TrainerConfig};
+use crate::rl::{Algo, Objective, ObjectiveKind, RolloutPath, TrainerConfig};
 use crate::runtime::QuantMode;
 use crate::util::json::Json;
 
@@ -137,6 +137,7 @@ pub fn to_json(cfg: &TrainerConfig) -> Json {
         ("lr", Json::num(cfg.objective.lr as f64)),
         ("max_grad_norm", Json::num(cfg.objective.max_grad_norm as f64)),
         ("rollout_mode", Json::str(cfg.rollout_mode.tag())),
+        ("rollout_path", Json::str(cfg.rollout_path.name())),
         ("suite", Json::str(&cfg.suite)),
         ("uaq_scale", Json::num(cfg.uaq_scale as f64)),
         ("steps", Json::num(cfg.steps as f64)),
@@ -171,6 +172,9 @@ pub fn from_json(j: &Json) -> Result<TrainerConfig> {
     }
     if let Some(m) = j.get("rollout_mode").and_then(|v| v.as_str()) {
         cfg.rollout_mode = QuantMode::parse(m).context("bad rollout_mode")?;
+    }
+    if let Some(p) = j.get("rollout_path").and_then(|v| v.as_str()) {
+        cfg.rollout_path = RolloutPath::parse(p).context("bad rollout_path")?;
     }
     if let Some(s) = j.get("suite").and_then(|v| v.as_str()) {
         cfg.suite = s.to_string();
@@ -230,12 +234,14 @@ mod tests {
 
     #[test]
     fn json_roundtrip_preserves_fields() {
-        let cfg = dapo_aime();
+        let mut cfg = dapo_aime();
+        cfg.rollout_path = RolloutPath::Scheduler;
         let j = to_json(&cfg);
         let back = from_json(&j).unwrap();
         assert_eq!(back.algo, cfg.algo);
         assert_eq!(back.objective.kind, cfg.objective.kind);
         assert_eq!(back.rollout_mode, cfg.rollout_mode);
+        assert_eq!(back.rollout_path, cfg.rollout_path);
         assert_eq!(back.suite, cfg.suite);
         assert!((back.uaq_scale - cfg.uaq_scale).abs() < 1e-6);
         assert_eq!(back.dynamic_sampling, cfg.dynamic_sampling);

@@ -7,6 +7,27 @@ use anyhow::Result;
 
 use crate::runtime::{EngineWeights, HostTensor, Runtime};
 
+/// What the [`Scheduler`](super::Scheduler) needs from an execution backend:
+/// a fixed number of KV slots, batched prefill into chosen slots, and one
+/// lockstep decode step over (slot, pos, token) rows.
+///
+/// [`StepEngine`] is the production implementation (PJRT artifacts);
+/// [`MockEngine`](super::mock::MockEngine) is the artifact-free stand-in the
+/// property tests drive random request mixes through.
+pub trait DecodeEngine {
+    /// Number of concurrent KV slots (the continuous-batching width B).
+    fn slot_count(&self) -> usize;
+
+    /// Prefill `prompts[i]` into `slots[i]`; returns the last-position
+    /// logits per slot (the distribution of the first generated token).
+    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
+               -> Result<Vec<Vec<f32>>>;
+
+    /// One decode step: for each (slot, pos, token), write KV at `pos` and
+    /// return next-token logits per row, in row order.
+    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>>;
+}
+
 /// Persistent decode state across steps.
 pub struct StepEngine<'rt> {
     rt: &'rt Runtime,
@@ -53,12 +74,17 @@ impl<'rt> StepEngine<'rt> {
         v
     }
 
+}
+
+impl<'rt> DecodeEngine for StepEngine<'rt> {
+    fn slot_count(&self) -> usize {
+        self.batch
+    }
+
     /// Prefill prompts into the given slots, merging only those rows into
-    /// the persistent cache.  `prompts[i]` goes to `slots[i]`.  Returns the
-    /// last-position logits per slot (the distribution of the first
-    /// generated token).
-    pub fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
-                   -> Result<Vec<Vec<f32>>> {
+    /// the persistent cache.  `prompts[i]` goes to `slots[i]`.
+    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
+               -> Result<Vec<Vec<f32>>> {
         assert_eq!(slots.len(), prompts.len());
         let m = self.rt.manifest();
         let (b, p, v) = (m.rollout_batch, m.max_prompt, m.vocab_size);
@@ -108,12 +134,19 @@ impl<'rt> StepEngine<'rt> {
     /// (pos=0, PAD) probe whose cache row is never merged back... but the
     /// artifact updates all rows, so inactive slots' caches are only safe
     /// because a future prefill overwrites them before reuse (tested).
-    pub fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
+    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
         let m = self.rt.manifest();
         let (b, v) = (m.rollout_batch, m.vocab_size);
         let mut pos = vec![0i32; b];
         let mut tok = vec![m.pad_id; b];
         for &(slot, p, t) in rows {
+            // KV capacity guard: the cache has exactly max_seq rows per
+            // slot; a decode at p >= max_seq would write out of range in
+            // the artifact's dynamic-update (silently clamped by XLA, which
+            // would corrupt the last KV row instead of failing loudly).
+            assert!((p as usize) < m.max_seq && slot < b,
+                    "decode position {p} out of range (slot {slot}, \
+                     max_seq {})", m.max_seq);
             pos[slot] = p;
             tok[slot] = t;
         }

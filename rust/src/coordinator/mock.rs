@@ -1,0 +1,102 @@
+//! Artifact-free [`DecodeEngine`] for scheduler tests and propcheck runs.
+//!
+//! Logits are a pure function of the per-slot sequence state (a rolling
+//! hash of the tokens fed so far), so a sequence's output is independent of
+//! whatever else is co-scheduled — the same isolation contract the real
+//! engine provides.  The mock also enforces the engine-side invariants the
+//! artifacts would only fail on silently: slot indices in range, decode
+//! positions strictly below `max_seq`, and prefill only into distinct slots.
+
+use anyhow::Result;
+
+use super::engine::DecodeEngine;
+
+/// Deterministic in-memory engine: B slots over a tiny vocabulary.
+pub struct MockEngine {
+    batch: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub eos_id: i32,
+    /// rolling per-slot sequence hash (drives the logits)
+    state: Vec<u64>,
+    /// bookkeeping the tests assert on
+    pub prefill_calls: usize,
+    pub decode_calls: usize,
+    pub max_pos_seen: i32,
+}
+
+fn mix(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(27)
+}
+
+impl MockEngine {
+    /// `eos_id` inside `[0, vocab)` surfaces with probability ~1/vocab per
+    /// step; an id outside the vocabulary simply never fires (useful for
+    /// forcing ContextLimit in tests).
+    pub fn new(batch: usize, vocab: usize, max_seq: usize, eos_id: i32)
+               -> MockEngine {
+        MockEngine {
+            batch,
+            vocab,
+            max_seq,
+            eos_id,
+            state: vec![0; batch],
+            prefill_calls: 0,
+            decode_calls: 0,
+            max_pos_seen: 0,
+        }
+    }
+
+    /// Logits for the next token of a sequence whose rolling hash is `h`.
+    /// Greedy-decoding this stream yields a pseudo-random but fully
+    /// deterministic token sequence; EOS surfaces with probability
+    /// ~1/vocab per step so request lifetimes vary.
+    fn logits_for(&self, h: u64) -> Vec<f32> {
+        (0..self.vocab)
+            .map(|v| (mix(h, v as u64 + 1) % 1024) as f32 / 1024.0)
+            .collect()
+    }
+}
+
+impl DecodeEngine for MockEngine {
+    fn slot_count(&self) -> usize {
+        self.batch
+    }
+
+    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
+               -> Result<Vec<Vec<f32>>> {
+        assert_eq!(slots.len(), prompts.len());
+        self.prefill_calls += 1;
+        let mut out = Vec::with_capacity(slots.len());
+        for (i, &slot) in slots.iter().enumerate() {
+            assert!(slot < self.batch, "prefill into bad slot {slot}");
+            assert!(slots[..i].iter().all(|&s| s != slot),
+                    "duplicate slot {slot} in one prefill");
+            assert!(!prompts[i].is_empty() && prompts[i].len() < self.max_seq,
+                    "prompt length {} out of range", prompts[i].len());
+            let mut h = 0x51_6d0c;
+            for &t in &prompts[i] {
+                h = mix(h, t as u64);
+            }
+            self.state[slot] = h;
+            out.push(self.logits_for(h));
+        }
+        Ok(out)
+    }
+
+    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
+        self.decode_calls += 1;
+        assert!(rows.len() <= self.batch, "decode wider than slot count");
+        let mut out = Vec::with_capacity(rows.len());
+        for &(slot, pos, tok) in rows {
+            assert!(slot < self.batch, "decode into bad slot {slot}");
+            assert!(pos >= 0 && (pos as usize) < self.max_seq,
+                    "decode position {pos} out of KV range (max_seq {})",
+                    self.max_seq);
+            self.max_pos_seen = self.max_pos_seen.max(pos);
+            self.state[slot] = mix(self.state[slot], tok as u64);
+            out.push(self.logits_for(self.state[slot]));
+        }
+        Ok(out)
+    }
+}

@@ -2,20 +2,26 @@
 //!
 //! Two execution paths exist for rollouts:
 //! * **bulk** — the fused `generate_*` artifacts (prefill + scan decode +
-//!   sampling inside one HLO module); the training loop uses this, zero
-//!   per-token host round-trips;
+//!   sampling inside one HLO module); every wave pays the fused scan's
+//!   full trip count, so mixed-length batches wait for their longest
+//!   member;
 //! * **step-wise** — [`StepEngine`] + [`Scheduler`]: continuous batching
-//!   over per-step prefill/decode artifacts with host-side sampling; this
-//!   is the serving demo (latency/throughput/occupancy metrics) and the
-//!   cross-validation target for the bulk path.
+//!   over per-step prefill/decode artifacts with host-side sampling.
+//!   Early-finished sequences free their KV slot immediately and queued
+//!   requests backfill it, which is why the trainer can route its rollouts
+//!   here (`TrainerConfig::rollout_path = Scheduler`); greedy decode is
+//!   bit-identical to the bulk path (integration-tested), making the two
+//!   paths interchangeable serving backends.
 
 pub mod engine;
 pub mod kv;
+pub mod mock;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
 
-pub use engine::StepEngine;
+pub use engine::{DecodeEngine, StepEngine};
 pub use kv::SlotMap;
+pub use mock::MockEngine;
 pub use request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 pub use scheduler::Scheduler;

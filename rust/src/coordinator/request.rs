@@ -36,9 +36,12 @@ pub struct RolloutResult {
     pub service_s: f64,
 }
 
-/// Scheduler-level counters for the throughput/latency report.
+/// Scheduler-level counters for the throughput/latency report.  The trainer
+/// merges these into its per-step `Recorder` rows (`sched_*` fields) when
+/// rollouts run through the scheduler path.
 #[derive(Clone, Debug, Default)]
 pub struct SchedulerStats {
+    pub submitted: usize,
     pub completed: usize,
     pub decode_steps: usize,
     pub prefill_calls: usize,
@@ -46,6 +49,8 @@ pub struct SchedulerStats {
     pub generated_tokens: usize,
     /// sum over decode calls of occupied-slot fraction
     pub occupancy_sum: f64,
+    /// sum over completed requests of time spent queued before prefill
+    pub queue_wait_sum_s: f64,
     pub wall_s: f64,
 }
 
@@ -58,11 +63,33 @@ impl SchedulerStats {
         }
     }
 
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.queue_wait_sum_s / self.completed as f64
+        }
+    }
+
     pub fn tokens_per_s(&self) -> f64 {
         if self.wall_s == 0.0 {
             0.0
         } else {
             self.generated_tokens as f64 / self.wall_s
         }
+    }
+
+    /// Accumulate another scheduler run's counters (the trainer may drive
+    /// several scheduler runs per RL step under DAPO resampling).
+    pub fn merge(&mut self, other: &SchedulerStats) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.decode_steps += other.decode_steps;
+        self.prefill_calls += other.prefill_calls;
+        self.decode_calls += other.decode_calls;
+        self.generated_tokens += other.generated_tokens;
+        self.occupancy_sum += other.occupancy_sum;
+        self.queue_wait_sum_s += other.queue_wait_sum_s;
+        self.wall_s += other.wall_s;
     }
 }

@@ -24,20 +24,24 @@ pub fn sample(logits: &[f32], temp: f32, top_p: f32, rng: &mut Pcg64)
     let logp: Vec<f64> = scaled.iter().map(|&x| x - lse).collect();
     let p: Vec<f64> = logp.iter().map(|&x| x.exp()).collect();
 
-    // nucleus: smallest prefix of the sorted distribution with mass >= top_p
-    // (threshold semantics identical to the artifact: keep p >= p_threshold)
+    // nucleus: smallest prefix of the sorted distribution with mass >= top_p.
+    // Ties at the boundary are broken by sorted order (the stable sort keeps
+    // ascending token-id order among equal probabilities), never by
+    // threshold comparison — a `p >= thresh` filter would keep EVERY token
+    // tied with the boundary probability, inflating the kept set past the
+    // minimal nucleus and diverging from the artifact sampler on tied
+    // logits.
     let mut order: Vec<usize> = (0..p.len()).collect();
     order.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+    let mut keep: Vec<usize> = Vec::new();
     let mut cum = 0.0;
-    let mut thresh = f64::INFINITY;
     for &i in &order {
-        if cum < top_p as f64 {
-            thresh = p[i];
-        }
+        keep.push(i);
         cum += p[i];
+        if cum >= top_p as f64 {
+            break;
+        }
     }
-    let keep: Vec<usize> =
-        (0..p.len()).filter(|&i| p[i] >= thresh).collect();
     let mass: f64 = keep.iter().map(|&i| p[i]).sum();
     // categorical over the renormalized nucleus
     let mut x = rng.f64() * mass;
@@ -115,6 +119,37 @@ mod tests {
             let (t, lp) = sample(&logits, 1.0, 0.5, &mut rng);
             assert_eq!(t, 0);
             assert!(lp.abs() < 1e-6); // renormalized singleton
+        }
+    }
+
+    #[test]
+    fn tied_logits_keep_minimal_nucleus() {
+        // three-way tie at the top: p ~ [1/3, 1/3, 1/3, ~0].  top_p = 0.4
+        // needs two tokens (mass 2/3 >= 0.4); the old `p >= thresh` filter
+        // kept all three tied tokens.  Ties break by sorted order, which is
+        // stable: ascending token id among equals -> tokens {0, 1} only.
+        let logits = [2.0f32, 2.0, 2.0, -30.0];
+        let mut rng = Pcg64::new(11);
+        let mut seen = [false; 4];
+        for _ in 0..4000 {
+            let (t, lp) = sample(&logits, 1.0, 0.4, &mut rng);
+            seen[t as usize] = true;
+            // renormalized two-token nucleus: logprob == ln(1/2)
+            assert!((lp - 0.5f32.ln()).abs() < 1e-5, "lp {lp}");
+        }
+        assert!(seen[0] && seen[1], "both nucleus members sampled");
+        assert!(!seen[2] && !seen[3], "tie leaked past the nucleus");
+    }
+
+    #[test]
+    fn top_p_zero_keeps_top_token() {
+        // degenerate top_p: the minimal prefix is never empty
+        let logits = [0.0f32, 1.0, 0.5];
+        let mut rng = Pcg64::new(12);
+        for _ in 0..200 {
+            let (t, lp) = sample(&logits, 1.0, 0.0, &mut rng);
+            assert_eq!(t, 1);
+            assert!(lp.abs() < 1e-6);
         }
     }
 

@@ -3,11 +3,17 @@
 //! lockstep decode over all active slots, per-request sampling state, and
 //! service metrics.
 //!
+//! Generic over [`DecodeEngine`], so the same scheduling logic serves the
+//! PJRT [`StepEngine`](super::StepEngine) in production (the trainer's
+//! `--rollout-path scheduler` and `qurl serve`) and the artifact-free
+//! [`MockEngine`](super::mock::MockEngine) in property tests.
+//!
 //! Invariants (tested in rust/tests + propcheck):
 //! * every submitted request completes exactly once;
 //! * a request's output is independent of co-scheduled requests (greedy
 //!   decode matches the fused generate artifact bit-for-bit);
-//! * slots recycle only after completion; occupancy never exceeds B.
+//! * slots recycle only after completion; occupancy never exceeds B;
+//! * decode positions stay strictly below `max_seq` (KV capacity).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -16,7 +22,7 @@ use anyhow::Result;
 
 use crate::util::rng::Pcg64;
 
-use super::engine::StepEngine;
+use super::engine::DecodeEngine;
 use super::kv::SlotMap;
 use super::request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 use super::sampler;
@@ -35,8 +41,33 @@ struct ActiveSeq {
     started_at: Instant,
 }
 
-pub struct Scheduler<'rt, 'eng> {
-    engine: &'eng mut StepEngine<'rt>,
+/// Why (if at all) a sequence must stop after accepting the token at `pos`
+/// (`n_generated` tokens emitted so far).  Priority: EOS > MaxNew >
+/// ContextLimit.
+///
+/// KV-capacity audit: continuing from `pos` makes the engine decode with a
+/// KV write at `pos` and logits for the token at `pos + 1`, so both indices
+/// must stay below `max_seq`.  Stopping when `pos + 1 >= max_seq` admits
+/// `pos <= max_seq - 2` into decode — the write lands in range and the
+/// final context position `max_seq - 1` is still reachable by sampling.
+/// The naive `pos >= max_seq` guard would instead decode at
+/// `pos = max_seq - 1` and sample a token at index `max_seq`, one past the
+/// cache (covered by tests below and the assert in `StepEngine::decode`).
+fn finish_reason(tok: i32, eos_id: i32, n_generated: usize, max_new: usize,
+                 pos: usize, max_seq: usize) -> Option<FinishReason> {
+    if tok == eos_id {
+        Some(FinishReason::Eos)
+    } else if n_generated >= max_new {
+        Some(FinishReason::MaxNew)
+    } else if pos + 1 >= max_seq {
+        Some(FinishReason::ContextLimit)
+    } else {
+        None
+    }
+}
+
+pub struct Scheduler<'eng, E: DecodeEngine> {
+    engine: &'eng mut E,
     slots: SlotMap,
     queue: VecDeque<(RolloutRequest, Instant)>,
     active: Vec<ActiveSeq>,
@@ -48,10 +79,9 @@ pub struct Scheduler<'rt, 'eng> {
     pub min_prefill_batch: usize,
 }
 
-impl<'rt, 'eng> Scheduler<'rt, 'eng> {
-    pub fn new(engine: &'eng mut StepEngine<'rt>, max_seq: usize,
-               eos_id: i32) -> Self {
-        let b = engine.batch;
+impl<'eng, E: DecodeEngine> Scheduler<'eng, E> {
+    pub fn new(engine: &'eng mut E, max_seq: usize, eos_id: i32) -> Self {
+        let b = engine.slot_count();
         Scheduler {
             engine,
             slots: SlotMap::new(b),
@@ -65,6 +95,7 @@ impl<'rt, 'eng> Scheduler<'rt, 'eng> {
     }
 
     pub fn submit(&mut self, req: RolloutRequest) {
+        self.stats.submitted += 1;
         self.queue.push_back((req, Instant::now()));
     }
 
@@ -131,25 +162,20 @@ impl<'rt, 'eng> Scheduler<'rt, 'eng> {
             a.logprobs.push(lp);
             a.pos += 1; // the new token's index
             self.stats.generated_tokens += 1;
-            let finish = if tok == self.eos_id {
-                Some(FinishReason::Eos)
-            } else if a.generated.len() >= a.req.max_new {
-                Some(FinishReason::MaxNew)
-            } else if a.pos + 1 >= self.max_seq {
-                Some(FinishReason::ContextLimit)
-            } else {
-                None
-            };
+            let finish = finish_reason(tok, self.eos_id, a.generated.len(),
+                                       a.req.max_new, a.pos, self.max_seq);
             if let Some(reason) = finish {
                 let a = self.active.swap_remove(i);
                 self.slots.release(a.slot, a.req.id);
                 self.stats.completed += 1;
+                let queue_wait_s = (a.started_at - a.enqueued_at).as_secs_f64();
+                self.stats.queue_wait_sum_s += queue_wait_s;
                 finished.push(RolloutResult {
                     id: a.req.id,
                     generated: a.generated,
                     logprobs: a.logprobs,
                     finish: reason,
-                    queue_wait_s: (a.started_at - a.enqueued_at).as_secs_f64(),
+                    queue_wait_s,
                     service_s: a.started_at.elapsed().as_secs_f64(),
                 });
             } else {
@@ -162,10 +188,10 @@ impl<'rt, 'eng> Scheduler<'rt, 'eng> {
         if !decode_rows.is_empty() {
             self.stats.decode_calls += 1;
             self.stats.occupancy_sum +=
-                decode_rows.len() as f64 / self.engine.batch as f64;
+                decode_rows.len() as f64 / self.engine.slot_count() as f64;
             let logits = self.engine.decode(&decode_rows)?;
-            for (k, &idx) in decode_idx.iter().enumerate() {
-                self.active[idx].pending_logits = logits[k].clone();
+            for (&idx, lg) in decode_idx.iter().zip(logits) {
+                self.active[idx].pending_logits = lg;
             }
         }
         self.stats.decode_steps += 1;
@@ -182,5 +208,95 @@ impl<'rt, 'eng> Scheduler<'rt, 'eng> {
         }
         self.stats.wall_s += t0.elapsed().as_secs_f64();
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mock::MockEngine;
+    use super::*;
+
+    const MAX_SEQ: usize = 16;
+    const EOS: i32 = 2;
+
+    fn req(id: u64, prompt_len: usize, max_new: usize) -> RolloutRequest {
+        RolloutRequest {
+            id,
+            prompt: (0..prompt_len).map(|i| 3 + (i as i32 % 5)).collect(),
+            max_new,
+            // greedy: the mock's argmax stream is deterministic and can hit
+            // EOS, exercising all three finish reasons
+            temperature: 0.0,
+            top_p: 1.0,
+            seed: id ^ 0x5eed,
+        }
+    }
+
+    /// Boundary case from the KV-capacity audit: prompt_len + max_new ==
+    /// max_seq must complete without any decode position reaching max_seq,
+    /// and generation may legitimately fill the very last context slot.
+    #[test]
+    fn context_boundary_no_out_of_range_decode() {
+        for prompt_len in [1usize, 4, MAX_SEQ - 1] {
+            let mut eng = MockEngine::new(2, 8, MAX_SEQ, EOS);
+            let mut sched = Scheduler::new(&mut eng, MAX_SEQ, EOS);
+            sched.submit(req(0, prompt_len, MAX_SEQ - prompt_len));
+            let results = sched.run_to_completion().unwrap();
+            assert_eq!(results.len(), 1);
+            let r = &results[0];
+            assert!(r.generated.len() <= MAX_SEQ - prompt_len);
+            // last accepted token index stays in context
+            assert!(prompt_len - 1 + r.generated.len() <= MAX_SEQ - 1);
+            // MockEngine::decode asserts pos < max_seq; double-check here
+            assert!((eng.max_pos_seen as usize) < MAX_SEQ);
+        }
+    }
+
+    /// An unbounded request must stop via ContextLimit exactly when the
+    /// last context index is consumed — never one token later.
+    #[test]
+    fn context_limit_fires_at_last_index() {
+        let prompt_len = 5;
+        let mut eng = MockEngine::new(1, 8, MAX_SEQ, 127 /* unreachable eos */);
+        let mut sched = Scheduler::new(&mut eng, MAX_SEQ, 127);
+        sched.submit(req(0, prompt_len, usize::MAX));
+        let results = sched.run_to_completion().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].finish, FinishReason::ContextLimit);
+        assert_eq!(results[0].generated.len(), MAX_SEQ - prompt_len);
+        assert!((eng.max_pos_seen as usize) < MAX_SEQ);
+    }
+
+    /// finish_reason truth table around the boundary.
+    #[test]
+    fn finish_reason_priorities() {
+        // EOS wins over everything
+        assert_eq!(finish_reason(EOS, EOS, 1, 1, MAX_SEQ - 1, MAX_SEQ),
+                   Some(FinishReason::Eos));
+        // MaxNew before ContextLimit when both bind
+        assert_eq!(finish_reason(5, EOS, 4, 4, MAX_SEQ - 1, MAX_SEQ),
+                   Some(FinishReason::MaxNew));
+        // last usable index triggers ContextLimit...
+        assert_eq!(finish_reason(5, EOS, 1, 8, MAX_SEQ - 1, MAX_SEQ),
+                   Some(FinishReason::ContextLimit));
+        // ...one before it does not (decode at max_seq-2 is in range)
+        assert_eq!(finish_reason(5, EOS, 1, 8, MAX_SEQ - 2, MAX_SEQ), None);
+    }
+
+    /// More requests than slots: all complete exactly once, slots recycle.
+    #[test]
+    fn oversubscribed_queue_drains() {
+        let mut eng = MockEngine::new(3, 8, MAX_SEQ, EOS);
+        let mut sched = Scheduler::new(&mut eng, MAX_SEQ, EOS);
+        for id in 0..10u64 {
+            sched.submit(req(id, 1 + (id as usize % 4), 6));
+        }
+        let mut results = sched.run_to_completion().unwrap();
+        results.sort_by_key(|r| r.id);
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert_eq!(sched.stats.completed, sched.stats.submitted);
+        assert!(sched.stats.mean_occupancy() <= 1.0 + 1e-9);
+        assert!(sched.stats.mean_queue_wait_s() >= 0.0);
     }
 }

@@ -18,7 +18,7 @@ use qurl::coordinator::{RolloutRequest, Scheduler, StepEngine};
 use qurl::metrics::Recorder;
 use qurl::perfmodel::{self, DecodeConfig, Precision};
 use qurl::quant::analysis;
-use qurl::rl::{self, eval as rleval, Trainer, TrainerConfig};
+use qurl::rl::{self, eval as rleval, RolloutPath, Trainer, TrainerConfig};
 use qurl::runtime::{ParamStore, QuantMode, Runtime};
 use qurl::tasks::{Suite, Tokenizer};
 use qurl::util::cli::Cli;
@@ -111,7 +111,17 @@ fn cmd_pretrain(argv: &[String]) -> Result<()> {
 }
 
 fn train_cli() -> Cli {
-    Cli::new("qurl train", "run a QuRL RL experiment")
+    // --rollout-path fused:     lockstep waves via the fused generate
+    //                           artifact (the paper's baseline serving).
+    // --rollout-path scheduler: continuous batching — prompts become
+    //                           RolloutRequests, early-finished sequences
+    //                           free KV slots immediately, and each step's
+    //                           Recorder row gains sched_occupancy,
+    //                           sched_queue_wait_s, sched_prefill_calls,
+    //                           sched_decode_calls, sched_generated_tokens
+    //                           and sched_tokens_per_s.
+    Cli::new("qurl train", "run a QuRL RL experiment (rollouts served by \
+              the fused artifact or the continuous-batching scheduler)")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("preset", "deepscaler_grpo", "preset name or path to .json")
         .opt("base", "results/base_model.bin", "base checkpoint")
@@ -119,6 +129,10 @@ fn train_cli() -> Cli {
         .opt("steps", "0", "override steps (0 = preset)")
         .opt("objective", "", "override objective (onpolicy|naive|decoupled|tis|acr)")
         .opt("rollout", "", "override rollout mode (bf16|int8|fp8)")
+        .opt("rollout-path", "",
+             "rollout serving path: fused waves or continuous-batching \
+              scheduler with sched_* metrics (fused|scheduler; \
+              default preset)")
         .opt("uaq", "-1", "override UAQ scale (-1 = preset)")
         .opt("lr", "0", "override learning rate (0 = preset)")
         .opt("seed", "0", "seed")
@@ -147,6 +161,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if !args.str("rollout").is_empty() {
         cfg.rollout_mode =
             QuantMode::parse(&args.str("rollout")).context("bad --rollout")?;
+    }
+    if !args.str("rollout-path").is_empty() {
+        cfg.rollout_path = RolloutPath::parse(&args.str("rollout-path"))
+            .context("bad --rollout-path (fused|scheduler)")?;
     }
     if args.f64("uaq") >= 0.0 {
         cfg.uaq_scale = args.f32("uaq");

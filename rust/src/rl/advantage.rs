@@ -24,6 +24,37 @@ pub fn grpo(rewards: &[f32], group_size: usize) -> Vec<f32> {
     adv
 }
 
+/// GRPO over an explicit group labeling: sequence `i` belongs to group
+/// `groups[i]`, and each maximal contiguous run of equal labels is
+/// normalized independently (runs are how the trainer lays groups out).
+///
+/// This is the shape-robust form the trainer uses when a minibatch is NOT
+/// an exact multiple of `group_size` — the old fallback treated such
+/// batches as singleton groups, whose advantages are identically zero
+/// (r - mean(r) == 0), silently dropping the whole chunk's learning
+/// signal.  Here a ragged tail group still normalizes over its actual
+/// members; only true singletons degenerate to zero.
+pub fn grpo_by_group(rewards: &[f32], groups: &[usize]) -> Vec<f32> {
+    assert_eq!(rewards.len(), groups.len(),
+               "rewards/groups length mismatch");
+    let mut adv = vec![0.0f32; rewards.len()];
+    let mut start = 0usize;
+    while start < rewards.len() {
+        let mut end = start + 1;
+        while end < rewards.len() && groups[end] == groups[start] {
+            end += 1;
+        }
+        let xs: Vec<f64> = rewards[start..end].iter().map(|&r| r as f64).collect();
+        let m = stats::mean(&xs);
+        let s = stats::std_pop(&xs);
+        for i in start..end {
+            adv[i] = ((rewards[i] as f64 - m) / (s + 1e-4)) as f32;
+        }
+        start = end;
+    }
+    adv
+}
+
 /// RLOO: leave-one-out baseline, no std normalization.
 pub fn rloo(rewards: &[f32], group_size: usize) -> Vec<f32> {
     assert!(group_size > 1 && rewards.len() % group_size == 0);
@@ -126,6 +157,34 @@ mod tests {
         for a in adv {
             assert!(a.abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn grpo_by_group_matches_uniform_grouping() {
+        let rewards = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let groups = [0, 0, 0, 0, 1, 1, 1, 1];
+        assert_eq!(grpo_by_group(&rewards, &groups), grpo(&rewards, 4));
+    }
+
+    /// Regression for the `padded_g = 1` bug: a ragged tail (here 2 full
+    /// groups of 4 plus a final group of 2 — sample count 10, not a
+    /// multiple of 4) must still get a nonzero learning signal on the tail.
+    /// The old modulo fallback normalized every sequence as its own
+    /// singleton group, which makes ALL advantages identically zero.
+    #[test]
+    fn grpo_by_group_ragged_tail_nonzero() {
+        let rewards = [1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, /* tail: */ 1.0, 0.0];
+        let groups = [0, 0, 0, 0, 1, 1, 1, 1, 2, 2];
+        let adv = grpo_by_group(&rewards, &groups);
+        // tail group normalizes over its two actual members
+        assert!(adv[8] > 0.5, "tail winner advantage {}", adv[8]);
+        assert!(adv[9] < -0.5, "tail loser advantage {}", adv[9]);
+        assert!((adv[8] + adv[9]).abs() < 1e-5, "tail zero-mean");
+        // full groups are unaffected by the ragged tail
+        assert_eq!(adv[..8], grpo(&rewards[..8], 4)[..]);
+        // true singleton still degenerates to zero (no intra-group signal)
+        let single = grpo_by_group(&[0.7], &[5]);
+        assert!(single[0].abs() < 1e-6);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use anyhow::Result;
 
+use crate::coordinator::{RolloutRequest, Scheduler, SchedulerStats, StepEngine};
 use crate::metrics::{Recorder, Row};
 use crate::quant::analysis;
 use crate::runtime::{EngineWeights, ParamStore, QuantMode, Runtime, TrainBatch};
@@ -52,12 +53,48 @@ impl Algo {
     }
 }
 
+/// Which serving path generates the trainer's rollouts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RolloutPath {
+    /// The fused `generate_*` artifact: fixed lockstep waves of
+    /// `rollout_batch` prompts; every wave pays the full decode scan, so
+    /// short sequences wait for the longest one in their wave.
+    Fused,
+    /// The continuous-batching [`Scheduler`]: all of a step's
+    /// group-expanded prompts are submitted as [`RolloutRequest`]s with
+    /// per-request derived seeds; early-finished sequences free their KV
+    /// slot immediately and queued prompts backfill it.  Greedy decode is
+    /// bit-identical to the fused path (integration-tested); serving
+    /// metrics land in the step's `sched_*` Recorder fields.
+    Scheduler,
+}
+
+impl RolloutPath {
+    pub fn parse(s: &str) -> Option<RolloutPath> {
+        match s {
+            "fused" => Some(RolloutPath::Fused),
+            "scheduler" | "sched" => Some(RolloutPath::Scheduler),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RolloutPath::Fused => "fused",
+            RolloutPath::Scheduler => "scheduler",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TrainerConfig {
     pub algo: Algo,
     pub objective: Objective,
     /// rollout engine precision — the QuRL axis
     pub rollout_mode: QuantMode,
+    /// rollout serving path — fused waves or the continuous-batching
+    /// scheduler
+    pub rollout_path: RolloutPath,
     pub suite: String,
     /// UAQ invariant scale s (1.0 disables; paper default 1.5)
     pub uaq_scale: f32,
@@ -93,6 +130,7 @@ impl Default for TrainerConfig {
             algo: Algo::Grpo,
             objective: Objective::default(),
             rollout_mode: QuantMode::Int8,
+            rollout_path: RolloutPath::Fused,
             suite: "deepscaler".into(),
             uaq_scale: 1.0,
             steps: 100,
@@ -140,6 +178,14 @@ pub struct Trainer<'rt> {
     rollout_seed: i32,
     engine: Option<EngineWeights>,
     engine_age: usize,
+    /// persistent scheduler-path engine (KV caches + a copy of `engine`'s
+    /// weights), reused across rollout calls and steps; invalidated by
+    /// `refresh_engine` whenever the weights requantize.  Stale KV rows are
+    /// safe: prefill overwrites a slot's rows before reuse (tested).
+    step_engine: Option<StepEngine<'rt>>,
+    /// scheduler-path serving stats accumulated over the current step's
+    /// rollout calls (DAPO may run several), drained into a Recorder row
+    sched_stats: Option<SchedulerStats>,
     /// previous-step section-B snapshot for the Fig. 9 analysis
     prev_params: Option<Vec<f32>>,
 }
@@ -169,8 +215,16 @@ impl<'rt> Trainer<'rt> {
             cfg,
             engine: None,
             engine_age: usize::MAX,
+            step_engine: None,
+            sched_stats: None,
             prev_params: None,
         })
+    }
+
+    /// Build (or refresh) the rollout engine without running a step — lets
+    /// callers drive [`Trainer::rollout`] directly (parity tests, benches).
+    pub fn prepare(&mut self) -> Result<()> {
+        self.refresh_engine()
     }
 
     /// Quantized (or fp) rollout-engine weights, refreshed per the
@@ -183,46 +237,128 @@ impl<'rt> Trainer<'rt> {
         self.engine =
             Some(self.rt.engine_weights(self.cfg.rollout_mode, &self.ps.params)?);
         self.engine_age = 1;
+        // the scheduler-path engine holds a copy of the old weights
+        self.step_engine = None;
         Ok(())
     }
 
-    /// Roll out `problems` (already group-expanded) in rollout_batch waves.
+    /// Roll out `problems` (already group-expanded) through the configured
+    /// serving path.  Both paths produce identical [`Sample`] layout, so
+    /// everything downstream — scoring, advantages, objectives — is
+    /// path-agnostic.
     pub fn rollout(&mut self, problems: &[(usize, &Problem)]) -> Result<Vec<Sample>> {
-        let man = self.rt.manifest();
-        let (b, s) = (man.rollout_batch, man.max_seq);
+        match self.cfg.rollout_path {
+            RolloutPath::Fused => self.rollout_fused(problems),
+            RolloutPath::Scheduler => self.rollout_scheduler(problems),
+        }
+    }
+
+    /// Final [`Sample`] assembly shared by both rollout paths: engine-noise
+    /// injection on behavior logprobs (FlashRL's HF-vs-vLLM gap, simulated),
+    /// then decode + verify for the reward.
+    fn finish_sample(&mut self, tokens: Vec<i32>, mut lp: Vec<f32>,
+                     mask: Vec<f32>, prompt_len: usize, prob: &Problem,
+                     group: usize) -> Sample {
+        if self.cfg.engine_noise > 0.0 {
+            for (l, &m) in lp.iter_mut().zip(&mask) {
+                if m > 0.5 {
+                    *l += (self.rng.normal() as f32) * self.cfg.engine_noise;
+                }
+            }
+        }
+        let gen_text = self.tk.decode_generation(&tokens, prompt_len);
+        let reward = crate::tasks::verify(prob, &gen_text);
+        Sample { tokens, lp_behav: lp, mask, prompt_len, reward, group }
+    }
+
+    /// Fused path: fixed lockstep waves through the `generate_*` artifact.
+    fn rollout_fused(&mut self, problems: &[(usize, &Problem)]) -> Result<Vec<Sample>> {
+        let m = self.rt.manifest();
+        let (b, s, max_prompt) = (m.rollout_batch, m.max_seq, m.max_prompt);
         let mut out = Vec::with_capacity(problems.len());
-        let engine = self.engine.as_ref().expect("engine not initialized");
         for wave in problems.chunks(b) {
             let refs: Vec<&Problem> = wave.iter().map(|(_, p)| *p).collect();
-            let (tokens, lens) = encode_batch(&self.tk, &refs, b, s, man.max_prompt);
+            let (tokens, lens) = encode_batch(&self.tk, &refs, b, s, max_prompt);
             self.rollout_seed = self.rollout_seed.wrapping_add(1);
-            let gen = self.rt.generate(engine, &tokens, &lens,
-                                       self.rollout_seed, self.cfg.temp,
-                                       self.cfg.top_p)?;
+            let gen = {
+                let engine = self.engine.as_ref().expect("engine not initialized");
+                self.rt.generate(engine, &tokens, &lens, self.rollout_seed,
+                                 self.cfg.temp, self.cfg.top_p)?
+            };
             for (r, (group, prob)) in wave.iter().enumerate() {
-                let row = &gen.tokens[r * s..(r + 1) * s];
-                let mut lp = gen.logprob[r * s..(r + 1) * s].to_vec();
+                let row = gen.tokens[r * s..(r + 1) * s].to_vec();
+                let lp = gen.logprob[r * s..(r + 1) * s].to_vec();
                 let mask = gen.mask[r * s..(r + 1) * s].to_vec();
-                // engine-mismatch simulation (FlashRL's HF-vs-vLLM gap)
-                if self.cfg.engine_noise > 0.0 {
-                    for (l, &m) in lp.iter_mut().zip(&mask) {
-                        if m > 0.5 {
-                            *l += (self.rng.normal() as f32) * self.cfg.engine_noise;
-                        }
-                    }
-                }
                 let plen = lens[r] as usize;
-                let gen_text = self.tk.decode_generation(row, plen);
-                let reward = crate::tasks::verify(prob, &gen_text);
-                out.push(Sample {
-                    tokens: row.to_vec(),
-                    lp_behav: lp,
-                    mask,
-                    prompt_len: plen,
-                    reward,
-                    group: *group,
-                });
+                out.push(self.finish_sample(row, lp, mask, plen, prob, *group));
             }
+        }
+        Ok(out)
+    }
+
+    /// Scheduler path: submit every group-expanded prompt as a
+    /// [`RolloutRequest`] with a per-request derived seed, drive the
+    /// continuous-batching [`Scheduler`] to completion, and convert
+    /// [`RolloutResult`]s back into [`Sample`]s.  Serving stats accumulate
+    /// into `sched_stats` for the step's Recorder row.
+    fn rollout_scheduler(&mut self, problems: &[(usize, &Problem)])
+                         -> Result<Vec<Sample>> {
+        let m = self.rt.manifest();
+        let (s, eos_id, max_prompt, max_new) =
+            (m.max_seq, m.eos_id, m.max_prompt, m.max_new);
+        if self.step_engine.is_none() {
+            let weights = self.engine.clone().expect("engine not initialized");
+            self.step_engine = Some(StepEngine::new(self.rt, weights));
+        }
+        let mut sched = Scheduler::new(self.step_engine.as_mut().unwrap(),
+                                       s, eos_id);
+        // one seed domain per rollout call (mirrors the fused path's
+        // per-wave seed bump), split into per-request streams
+        self.rollout_seed = self.rollout_seed.wrapping_add(1);
+        let base = (self.rollout_seed as u32 as u64) << 32;
+        let mut prompts: Vec<Vec<i32>> = Vec::with_capacity(problems.len());
+        for (id, (_, prob)) in problems.iter().enumerate() {
+            let ids = self.tk.encode_prompt(&prob.prompt);
+            assert!(ids.len() <= max_prompt,
+                    "prompt overflows max_prompt: {}", prob.prompt);
+            sched.submit(RolloutRequest {
+                id: id as u64,
+                prompt: ids.clone(),
+                max_new,
+                temperature: self.cfg.temp,
+                top_p: self.cfg.top_p,
+                seed: (base | id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            });
+            prompts.push(ids);
+        }
+        let mut results = sched.run_to_completion()?;
+        results.sort_by_key(|r| r.id);
+        // hard check: a miscounting scheduler must fail loudly, never feed
+        // misattributed rewards into training
+        anyhow::ensure!(results.len() == problems.len(),
+                        "scheduler returned {} results for {} requests",
+                        results.len(), problems.len());
+        self.sched_stats
+            .get_or_insert_with(SchedulerStats::default)
+            .merge(&sched.stats);
+
+        let mut out = Vec::with_capacity(problems.len());
+        for res in &results {
+            let (group, prob) = problems[res.id as usize];
+            let prompt = &prompts[res.id as usize];
+            let plen = prompt.len();
+            let mut tokens = vec![crate::tasks::PAD; s];
+            tokens[..plen].copy_from_slice(prompt);
+            let mut lp = vec![0.0f32; s];
+            let mut mask = vec![0.0f32; s];
+            for (i, (&tok, &l)) in
+                res.generated.iter().zip(&res.logprobs).enumerate()
+            {
+                tokens[plen + i] = tok;
+                lp[plen + i] = l;
+                mask[plen + i] = 1.0;
+            }
+            out.push(self.finish_sample(tokens, lp, mask, plen, prob, group));
         }
         Ok(out)
     }
@@ -334,11 +470,31 @@ impl<'rt> Trainer<'rt> {
             self.prev_params = Some(self.ps.params.clone());
         }
 
+        // GRPO/DAPO advantages over the TRUE group structure, computed once
+        // for the whole step before chunking.  Deriving group boundaries per
+        // chunk from `rewards.len() % group_size` is wrong twice over: a
+        // ragged final chunk used to collapse to singleton groups (whose
+        // advantages are identically zero — the silent zero-advantage bug),
+        // and a group straddling two train_batch chunks would be normalized
+        // against the wrong members.  `Sample::group` runs are contiguous
+        // across the step's samples, so chunk slices below stay aligned.
+        let adv_seq_all: Vec<f32> = match self.cfg.algo {
+            Algo::Grpo | Algo::Dapo => {
+                let rewards_all: Vec<f32> =
+                    samples.iter().map(|s| s.reward).collect();
+                let groups: Vec<usize> =
+                    samples.iter().map(|s| s.group).collect();
+                advantage::grpo_by_group(&rewards_all, &groups)
+            }
+            Algo::Ppo => Vec::new(),
+        };
+
         // process in train_batch chunks
         let mut metric_acc: Vec<f64> = vec![0.0; man.metric_names.len()];
         let mut metric_n = 0usize;
         let mut kl_bp_acc = 0.0f64;
         let mut rho_max_all = 0.0f64;
+        let mut chunk_off = 0usize;
         for chunk in samples.chunks(bt) {
             let (tokens, mask, lp_behav) = self.grids(chunk);
             // proximal policy = full-precision theta_old (pre-update)
@@ -356,9 +512,8 @@ impl<'rt> Trainer<'rt> {
             let rewards: Vec<f32> = chunk.iter().map(|s| s.reward).collect();
             let (mut adv, returns) = match self.cfg.algo {
                 Algo::Grpo | Algo::Dapo => {
-                    let g = self.cfg.group_size.min(rewards.len().max(1));
-                    let padded_g = if g > 0 && rewards.len() % g == 0 { g } else { 1 };
-                    let mut a = advantage::grpo(&rewards, padded_g);
+                    let mut a =
+                        adv_seq_all[chunk_off..chunk_off + chunk.len()].to_vec();
                     // pad to the full train grid (inert rows get zeros)
                     let mut rw = rewards.clone();
                     a.resize(bt, 0.0);
@@ -414,6 +569,19 @@ impl<'rt> Trainer<'rt> {
                 }
                 metric_n += 1;
             }
+            chunk_off += chunk.len();
+        }
+
+        // scheduler-path serving metrics for this step's rollouts
+        if let Some(st) = self.sched_stats.take() {
+            self.rec.log(Row::new(step as u64)
+                .set("sched_occupancy", st.mean_occupancy())
+                .set("sched_queue_wait_s", st.mean_queue_wait_s())
+                .set("sched_prefill_calls", st.prefill_calls as f64)
+                .set("sched_decode_calls", st.decode_calls as f64)
+                .set("sched_generated_tokens", st.generated_tokens as f64)
+                .set("sched_tokens_per_s", st.tokens_per_s())
+                .tag("phase", "rollout"));
         }
 
         let chunks = samples.chunks(bt).len().max(1);

@@ -6,10 +6,11 @@
 use std::path::Path;
 
 use qurl::coordinator::{RolloutRequest, Scheduler, StepEngine};
+use qurl::metrics::Recorder;
 use qurl::quant::{analysis, fp8 as qfp8, int8 as qint8};
-use qurl::rl::{Objective, ObjectiveKind};
+use qurl::rl::{Objective, ObjectiveKind, RolloutPath, Trainer, TrainerConfig};
 use qurl::runtime::{ParamStore, QuantMode, Runtime, TrainBatch};
-use qurl::tasks::{encode_batch, Suite, Tokenizer};
+use qurl::tasks::{encode_batch, Problem, Suite, Tokenizer};
 
 fn runtime() -> Runtime {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -121,6 +122,86 @@ fn scheduler_matches_bulk_generate_greedy() {
         assert!(n > 0, "request {r} generated nothing");
         assert_eq!(&bulk_gen[..n], &step_gen[..n],
                    "greedy divergence on request {r}");
+    }
+}
+
+/// Tentpole parity: with temp=0 the trainer's scheduler rollout path must
+/// reproduce the fused path's completions, masks and rewards bit-for-bit,
+/// so `--rollout-path scheduler` changes serving, not learning.
+#[test]
+fn trainer_scheduler_path_matches_fused_greedy() {
+    let rt = runtime();
+    let man = rt.manifest().clone();
+    let params = rt.init_params(21).unwrap();
+    let suite = Suite::by_name("deepscaler").unwrap();
+    let mut sampler = suite.train_sampler(99);
+    let probs: Vec<Problem> = (0..3).map(|_| sampler.next().1).collect();
+    let g = 2usize;
+    let expanded: Vec<(usize, &Problem)> = probs
+        .iter()
+        .enumerate()
+        .flat_map(|(i, p)| std::iter::repeat((i, p)).take(g))
+        .collect();
+    let rollout_with = |path: RolloutPath| -> Vec<qurl::rl::Sample> {
+        let cfg = TrainerConfig {
+            temp: 0.0,
+            top_p: 1.0,
+            rollout_mode: QuantMode::Int8,
+            rollout_path: path,
+            group_size: g,
+            ..TrainerConfig::default()
+        };
+        let base = ParamStore::new(&man, params.clone());
+        let mut t = Trainer::new(&rt, cfg, base,
+                                 Recorder::ephemeral("parity")).unwrap();
+        t.prepare().unwrap();
+        t.rollout(&expanded).unwrap()
+    };
+    let fused = rollout_with(RolloutPath::Fused);
+    let sched = rollout_with(RolloutPath::Scheduler);
+    assert_eq!(fused.len(), sched.len());
+    for (i, (a, b)) in fused.iter().zip(&sched).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "greedy token divergence on {i}");
+        assert_eq!(a.mask, b.mask, "mask divergence on {i}");
+        assert_eq!(a.prompt_len, b.prompt_len);
+        assert_eq!(a.reward, b.reward, "reward divergence on {i}");
+        assert_eq!(a.group, b.group);
+    }
+}
+
+/// KV-capacity boundary through the real artifacts: a request sized to the
+/// exact context edge (prompt_len + max_new == max_seq) must complete with
+/// no out-of-range decode position (StepEngine::decode asserts pos <
+/// max_seq) and never emit past the context.
+#[test]
+fn scheduler_context_boundary_with_artifacts() {
+    let rt = runtime();
+    let man = rt.manifest().clone();
+    let params = rt.init_params(23).unwrap();
+    let w = rt.engine_weights(QuantMode::Int8, &params).unwrap();
+    let (tokens, _, plens) = test_prompts(&rt, 2);
+    let mut engine = StepEngine::new(&rt, w);
+    let mut sched = Scheduler::new(&mut engine, man.max_seq, man.eos_id);
+    let s = man.max_seq;
+    for (r, &plen) in plens.iter().enumerate() {
+        sched.submit(RolloutRequest {
+            id: r as u64,
+            prompt: tokens[r * s..r * s + plen].to_vec(),
+            // exactly to the context edge (larger than the fused max_new)
+            max_new: man.max_seq - plen,
+            temperature: 0.0,
+            top_p: 1.0,
+            seed: r as u64,
+        });
+    }
+    let results = sched.run_to_completion().unwrap();
+    assert_eq!(results.len(), plens.len());
+    assert_eq!(sched.stats.completed, sched.stats.submitted);
+    for res in &results {
+        let plen = plens[res.id as usize];
+        assert!(!res.generated.is_empty());
+        assert!(plen + res.generated.len() <= man.max_seq,
+                "generation past the context edge");
     }
 }
 

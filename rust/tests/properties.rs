@@ -1,7 +1,7 @@
 //! Property-based tests (propcheck) over coordinator + RL invariants.
 //! These run without artifacts — pure host logic.
 
-use qurl::coordinator::SlotMap;
+use qurl::coordinator::{MockEngine, RolloutRequest, Scheduler, SlotMap};
 use qurl::rl::advantage;
 use qurl::rl::dapo;
 use qurl::rl::objective::{surrogate_token, Objective, ObjectiveKind};
@@ -40,6 +40,94 @@ fn prop_slotmap_partition() {
             if sm.active_count() != active.len() {
                 return false;
             }
+        }
+        true
+    });
+}
+
+/// Scheduler + mock engine over random request mixes, capacities and
+/// admission thresholds: every submitted request completes exactly once,
+/// mean occupancy never exceeds 1, per-request token budgets are honored,
+/// and no decode position reaches the KV capacity (the mock asserts).
+#[test]
+fn prop_scheduler_serves_all_requests() {
+    let max_seq = 16usize;
+    // ((slots, min_prefill_batch), [(prompt_len, max_new); n])
+    let g = Pair(Pair(UsizeIn(1, 8), UsizeIn(1, 3)),
+                 VecOf(Pair(UsizeIn(1, 6), UsizeIn(1, 10)), 0, 24));
+    assert_prop("scheduler-serves-all", 0x5C4ED, 120, &g,
+                |((slots, minb), reqs)| {
+        let mut eng = MockEngine::new((*slots).max(1), 8, max_seq, 2);
+        let mut sched = Scheduler::new(&mut eng, max_seq, 2);
+        sched.min_prefill_batch = (*minb).max(1);
+        for (i, &(plen, max_new)) in reqs.iter().enumerate() {
+            sched.submit(RolloutRequest {
+                id: i as u64,
+                prompt: (0..plen.clamp(1, max_seq - 1))
+                    .map(|k| 3 + (k as i32 % 5))
+                    .collect(),
+                max_new: max_new.max(1),
+                temperature: 0.0,
+                top_p: 1.0,
+                seed: i as u64,
+            });
+        }
+        let mut results = sched.run_to_completion().unwrap();
+        results.sort_by_key(|r| r.id);
+        if results.len() != reqs.len()
+            || sched.stats.completed != sched.stats.submitted
+            || sched.stats.submitted != reqs.len()
+            || sched.stats.mean_occupancy() > 1.0 + 1e-9
+        {
+            return false;
+        }
+        for (i, r) in results.iter().enumerate() {
+            if r.id != i as u64 || r.generated.is_empty() {
+                return false; // lost, duplicated or empty request
+            }
+            if r.generated.len() > reqs[i].1.max(1) {
+                return false; // max_new overrun
+            }
+            if r.generated.len() != r.logprobs.len() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Regression property for the trainer's old `padded_g = 1` fallback: on a
+/// ragged batch (len % group_size != 0) the grouped-advantage path must
+/// preserve per-group zero mean AND emit a nonzero signal whenever a group
+/// has reward variance — the singleton fallback zeroed every advantage in
+/// the chunk.
+#[test]
+fn prop_grpo_by_group_ragged() {
+    let g = Pair(UsizeIn(2, 6), VecOf(F64In(0.0, 1.0), 2, 40));
+    assert_prop("grpo-grouped-ragged", 0xBADC, 500, &g, |(gsize, vals)| {
+        let gsize = (*gsize).max(2);
+        if vals.len() < 2 {
+            return true;
+        }
+        let rewards: Vec<f32> =
+            vals.iter().map(|&v| if v > 0.5 { 1.0 } else { 0.0 }).collect();
+        let groups: Vec<usize> = (0..rewards.len()).map(|i| i / gsize).collect();
+        let adv = advantage::grpo_by_group(&rewards, &groups);
+        // per-group zero mean, including the ragged tail
+        let mut start = 0;
+        while start < rewards.len() {
+            let end = (start + gsize).min(rewards.len());
+            let sum: f32 = adv[start..end].iter().sum();
+            if sum.abs() > 1e-3 {
+                return false;
+            }
+            let chunk = &rewards[start..end];
+            let mixed = chunk.iter().any(|&r| r != chunk[0]);
+            let has_signal = adv[start..end].iter().any(|&a| a.abs() > 1e-3);
+            if mixed != has_signal {
+                return false; // variance <=> nonzero advantages
+            }
+            start = end;
         }
         true
     });
