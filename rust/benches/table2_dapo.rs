@@ -7,7 +7,7 @@
 
 use qurl::benchkit as bk;
 use qurl::config;
-use qurl::rl::{eval as rleval, ObjectiveKind};
+use qurl::rl::{eval as rleval, ObjectiveKind, RolloutPath};
 use qurl::runtime::QuantMode;
 use qurl::tasks::{Suite, Tokenizer};
 use qurl::util::timer::print_table;
@@ -72,5 +72,39 @@ fn main() -> anyhow::Result<()> {
     println!("\npaper reference (7B, 200 steps, INT8): BF16 33.3/31.7 | \
               naive 0.0 | FlashRL 26.7/30.3 | QuRL w/o UAQ 33.3/30.6 | \
               QuRL w/ UAQ 33.3/31.3");
+
+    // ---- DAPO rollout serving: in-flight pruning vs post-hoc filtering --
+    // Same preset on the service path, with and without prune-as-you-
+    // generate: cancelling reward-decided groups mid-flight recovers the
+    // decode budget DAPO's dynamic sampling would otherwise discard after
+    // the fact.  Counters are per-run sums of the sched_* Recorder rows.
+    let sum_of = |tr: &qurl::rl::Trainer, key: &str| -> f64 {
+        tr.rec.series(key).iter().map(|&(_, v)| v).sum()
+    };
+    let mut rows = Vec::new();
+    for prune in [false, true] {
+        let mut cfg = config::dapo_aime();
+        cfg.steps = steps.min(4);
+        cfg.rollout_path = RolloutPath::Scheduler;
+        cfg.prune_rollouts = prune;
+        cfg.eval_every = 0;
+        let run = format!("table2_sched_prune_{prune}");
+        let (tr, _) = bk::run_variant(&rt, &base, cfg, &run)?;
+        rows.push(vec![
+            String::from(if prune { "prune in flight" } else
+                         { "post-hoc filter" }),
+            format!("{:.0}", sum_of(&tr, "sched_generated_tokens")),
+            format!("{:.0}", sum_of(&tr, "sched_prefill_calls")),
+            format!("{:.0}", sum_of(&tr, "sched_prefill_rows")),
+            format!("{:.0}", sum_of(&tr, "sched_cancelled")),
+            format!("{:.0}", sum_of(&tr, "sched_pruned_groups")),
+            format!("{:.3}", tr.rec.last("dapo_efficiency").unwrap_or(0.0)),
+        ]);
+    }
+    print_table("DAPO rollout serving (scheduler path): prune-as-you-\
+                 generate vs post-hoc group filtering",
+                &["policy", "decoded tokens", "prefill calls",
+                  "prefill rows", "cancelled", "pruned groups",
+                  "dapo efficiency"], &rows);
     Ok(())
 }

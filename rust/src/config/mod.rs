@@ -155,6 +155,10 @@ pub fn to_json(cfg: &TrainerConfig) -> Json {
         ("gae_lambda", Json::num(cfg.gae_lambda as f64)),
         ("whiten_adv", Json::Bool(cfg.whiten_adv)),
         ("dynamic_sampling", Json::Bool(cfg.dynamic_sampling)),
+        ("prune_rollouts", Json::Bool(cfg.prune_rollouts)),
+        ("prune_min_finished", Json::num(cfg.prune_min_finished as f64)),
+        ("rollout_engines", Json::num(cfg.rollout_engines as f64)),
+        ("min_prefill_batch", Json::num(cfg.min_prefill_batch as f64)),
         ("requantize_every", Json::num(cfg.requantize_every as f64)),
         ("analyze_every", Json::num(cfg.analyze_every as f64)),
     ])
@@ -204,6 +208,10 @@ pub fn from_json(j: &Json) -> Result<TrainerConfig> {
     cfg.gae_lambda = get_f("gae_lambda", 0.95) as f32;
     cfg.whiten_adv = get_b("whiten_adv", false);
     cfg.dynamic_sampling = get_b("dynamic_sampling", false);
+    cfg.prune_rollouts = get_b("prune_rollouts", true);
+    cfg.prune_min_finished = get_f("prune_min_finished", 0.0).max(0.0) as usize;
+    cfg.rollout_engines = get_f("rollout_engines", 1.0).max(1.0) as usize;
+    cfg.min_prefill_batch = get_f("min_prefill_batch", 1.0).max(1.0) as usize;
     cfg.requantize_every = get_f("requantize_every", 1.0) as usize;
     cfg.analyze_every = get_f("analyze_every", 0.0) as usize;
     Ok(cfg)
@@ -236,8 +244,16 @@ mod tests {
     fn json_roundtrip_preserves_fields() {
         let mut cfg = dapo_aime();
         cfg.rollout_path = RolloutPath::Scheduler;
+        cfg.rollout_engines = 3;
+        cfg.min_prefill_batch = 4;
+        cfg.prune_rollouts = false;
+        cfg.prune_min_finished = 5;
         let j = to_json(&cfg);
         let back = from_json(&j).unwrap();
+        assert_eq!(back.rollout_engines, 3);
+        assert_eq!(back.min_prefill_batch, 4);
+        assert!(!back.prune_rollouts);
+        assert_eq!(back.prune_min_finished, 5);
         assert_eq!(back.algo, cfg.algo);
         assert_eq!(back.objective.kind, cfg.objective.kind);
         assert_eq!(back.rollout_mode, cfg.rollout_mode);

@@ -26,6 +26,37 @@ pub trait DecodeEngine {
     /// One decode step: for each (slot, pos, token), write KV at `pos` and
     /// return next-token logits per row, in row order.
     fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>>;
+
+    /// Copy `src_slot`'s KV rows into every slot in `dst_slots` (group-
+    /// shared prefix prefill): after prefilling one member of a group, the
+    /// scheduler forks its prompt KV into the sibling slots instead of
+    /// prefilling the same prompt `group_size` times.  Valid only while
+    /// `src_slot` still holds exactly the prefilled prompt state (the
+    /// scheduler forks within a single admission batch, before any decode
+    /// tick advances the source).
+    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()>;
+}
+
+/// Forward through mutable references so callers can keep owning an engine
+/// while lending it to a [`Scheduler`](super::Scheduler) (which owns its
+/// `E: DecodeEngine` — a borrowed engine is just `E = &mut Engine`).
+impl<E: DecodeEngine> DecodeEngine for &mut E {
+    fn slot_count(&self) -> usize {
+        (**self).slot_count()
+    }
+
+    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
+               -> Result<Vec<Vec<f32>>> {
+        (**self).prefill(slots, prompts)
+    }
+
+    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
+        (**self).decode(rows)
+    }
+
+    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()> {
+        (**self).fork_kv(src_slot, dst_slots)
+    }
 }
 
 /// Persistent decode state across steps.
@@ -156,7 +187,21 @@ impl<'rt> DecodeEngine for StepEngine<'rt> {
         inputs.push(HostTensor::i32(&[b], pos));
         inputs.push(HostTensor::i32(&[b], tok));
         let name = format!("decode_{}", self.weights.mode().tag());
-        let out = self.rt.store.call(&name, &inputs)?;
+        let out = match self.rt.store.call(&name, &inputs) {
+            Ok(out) => out,
+            Err(e) => {
+                // The caches were moved into `inputs` above (avoiding a copy
+                // of the full KV tensors per decode), so a failed artifact
+                // call would otherwise leave this engine with empty caches
+                // and silently poison every later decode.  Reinstall them
+                // before propagating: inputs end with [.., ck, cv, pos, tok].
+                let _tok = inputs.pop();
+                let _pos = inputs.pop();
+                self.cache_v = inputs.pop().expect("cv input").into_f32();
+                self.cache_k = inputs.pop().expect("ck input").into_f32();
+                return Err(e);
+            }
+        };
         let mut it = out.into_iter();
         self.cache_k = it.next().unwrap().into_f32();
         self.cache_v = it.next().unwrap().into_f32();
@@ -165,5 +210,34 @@ impl<'rt> DecodeEngine for StepEngine<'rt> {
             .iter()
             .map(|&(slot, _, _)| logits[slot * v..(slot + 1) * v].to_vec())
             .collect())
+    }
+
+    /// Host-side cache-row copy: duplicate `src_slot`'s K/V rows (every
+    /// layer) into the destination slots.  Batched prefill writes identical
+    /// KV for identical prompts regardless of slot index, so a fork is
+    /// bit-for-bit equal to prefilling the prompt again (integration-tested
+    /// against a fresh prefill).
+    ///
+    /// The copy spans the full `max_seq` row, not just the prompt prefix:
+    /// that makes the destination byte-identical to a fresh prefill merge
+    /// by construction, with no reliance on the attention mask zeroing
+    /// stale tail positions exactly.  A prefix-limited copy (prompt_len
+    /// per head) would cut host-copy cost ~max_seq/prompt_len x if that
+    /// masking guarantee is ever established against the artifacts.
+    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()> {
+        let (l, b) = (self.kv_shape[0], self.kv_shape[1]);
+        let row_sz = self.kv_shape[2] * self.kv_shape[3] * self.kv_shape[4];
+        assert!(src_slot < b, "fork from bad slot {src_slot}");
+        for layer in 0..l {
+            let src = (layer * b + src_slot) * row_sz;
+            for &dst_slot in dst_slots {
+                assert!(dst_slot < b && dst_slot != src_slot,
+                        "fork into bad slot {dst_slot}");
+                let dst = (layer * b + dst_slot) * row_sz;
+                self.cache_k.copy_within(src..src + row_sz, dst);
+                self.cache_v.copy_within(src..src + row_sz, dst);
+            }
+        }
+        Ok(())
     }
 }

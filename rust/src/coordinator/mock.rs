@@ -21,6 +21,9 @@ pub struct MockEngine {
     state: Vec<u64>,
     /// bookkeeping the tests assert on
     pub prefill_calls: usize,
+    pub prefill_rows: usize,
+    pub fork_calls: usize,
+    pub forked_slots: usize,
     pub decode_calls: usize,
     pub max_pos_seen: i32,
 }
@@ -42,6 +45,9 @@ impl MockEngine {
             eos_id,
             state: vec![0; batch],
             prefill_calls: 0,
+            prefill_rows: 0,
+            fork_calls: 0,
+            forked_slots: 0,
             decode_calls: 0,
             max_pos_seen: 0,
         }
@@ -67,6 +73,7 @@ impl DecodeEngine for MockEngine {
                -> Result<Vec<Vec<f32>>> {
         assert_eq!(slots.len(), prompts.len());
         self.prefill_calls += 1;
+        self.prefill_rows += slots.len();
         let mut out = Vec::with_capacity(slots.len());
         for (i, &slot) in slots.iter().enumerate() {
             assert!(slot < self.batch, "prefill into bad slot {slot}");
@@ -98,5 +105,20 @@ impl DecodeEngine for MockEngine {
             out.push(self.logits_for(self.state[slot]));
         }
         Ok(out)
+    }
+
+    /// Forking the per-slot sequence hash reproduces exactly the state a
+    /// fresh prefill of the same prompt would leave, mirroring the real
+    /// engine's cache-row copy.
+    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()> {
+        assert!(src_slot < self.batch, "fork from bad slot {src_slot}");
+        self.fork_calls += 1;
+        self.forked_slots += dst_slots.len();
+        for &dst in dst_slots {
+            assert!(dst < self.batch && dst != src_slot,
+                    "fork into bad slot {dst}");
+            self.state[dst] = self.state[src_slot];
+        }
+        Ok(())
     }
 }

@@ -5,13 +5,33 @@
 //!   sampling inside one HLO module); every wave pays the fused scan's
 //!   full trip count, so mixed-length batches wait for their longest
 //!   member;
-//! * **step-wise** — [`StepEngine`] + [`Scheduler`]: continuous batching
-//!   over per-step prefill/decode artifacts with host-side sampling.
-//!   Early-finished sequences free their KV slot immediately and queued
-//!   requests backfill it, which is why the trainer can route its rollouts
-//!   here (`TrainerConfig::rollout_path = Scheduler`); greedy decode is
-//!   bit-identical to the bulk path (integration-tested), making the two
-//!   paths interchangeable serving backends.
+//! * **step-wise** — the layered serving stack the trainer's
+//!   `--rollout-path scheduler` and `qurl serve` run on:
+//!
+//! ```text
+//! rl::Trainer ── GroupSpec ──▶ RolloutService      (service.rs)
+//!                                │  groups, rewards, in-flight pruning,
+//!                                │  round-robin striping over engines
+//!                                ├──▶ Scheduler #0  (scheduler.rs)
+//!                                │     │  FIFO queue → KV slots, batched
+//!                                │     │  shared-prefix prefill (fork_kv),
+//!                                │     │  lockstep decode, cancel()
+//!                                │     └──▶ DecodeEngine (engine.rs)
+//!                                │            StepEngine: PJRT artifacts
+//!                                │            MockEngine: propcheck stand-in
+//!                                └──▶ Scheduler #1 ──▶ DecodeEngine ...
+//! ```
+//!
+//! The [`Scheduler`] stays a request-level primitive: continuous batching
+//! over per-step prefill/decode artifacts with host-side sampling, where
+//! early-finished (or cancelled) sequences free their KV slot immediately
+//! and queued requests backfill it.  [`RolloutService`] adds the RL-aware
+//! layer on top — it understands *groups*, scores members as they finish,
+//! prunes decided groups mid-flight, and stripes groups across several
+//! engines behind one submission interface.  Greedy decode through the
+//! whole stack is bit-identical to the bulk path (integration-tested,
+//! including fork_kv prefill), making the paths interchangeable serving
+//! backends.
 
 pub mod engine;
 pub mod kv;
@@ -19,9 +39,12 @@ pub mod mock;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
+pub mod service;
 
 pub use engine::{DecodeEngine, StepEngine};
 pub use kv::SlotMap;
 pub use mock::MockEngine;
 pub use request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 pub use scheduler::Scheduler;
+pub use service::{GroupMember, GroupResult, GroupSpec, PrunePolicy,
+                  RolloutService};

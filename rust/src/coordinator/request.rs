@@ -20,6 +20,13 @@ pub enum FinishReason {
     Eos,
     MaxNew,
     ContextLimit,
+    /// Cancelled in flight via [`Scheduler::cancel`](super::Scheduler::cancel)
+    /// (online rollout pruning).  Cancelled requests never surface in the
+    /// scheduler's completion results; this reason only appears on the
+    /// partial [`RolloutResult`] that `cancel` itself returns, which the
+    /// [`RolloutService`](super::RolloutService) records as the member's
+    /// outcome.
+    Cancelled,
 }
 
 /// A completed rollout.
@@ -43,10 +50,22 @@ pub struct RolloutResult {
 pub struct SchedulerStats {
     pub submitted: usize,
     pub completed: usize,
+    /// requests removed in flight by [`Scheduler::cancel`]; on a drained
+    /// scheduler `completed + cancelled == submitted` (property-tested)
+    pub cancelled: usize,
     pub decode_steps: usize,
     pub prefill_calls: usize,
+    /// rows actually prefilled (post prefix-sharing); mean prefill batch
+    /// size is `prefill_rows / prefill_calls`
+    pub prefill_rows: usize,
+    /// slots whose prompt KV was forked from a sibling instead of
+    /// prefilled — each is one prefill row saved by prefix sharing
+    pub forked: usize,
     pub decode_calls: usize,
     pub generated_tokens: usize,
+    /// groups whose in-flight remainder was cancelled by the service's
+    /// prune policy (bumped by [`RolloutService`], not the scheduler)
+    pub pruned_groups: usize,
     /// sum over decode calls of occupied-slot fraction
     pub occupancy_sum: f64,
     /// sum over completed requests of time spent queued before prefill
@@ -60,6 +79,16 @@ impl SchedulerStats {
             0.0
         } else {
             self.occupancy_sum / self.decode_calls as f64
+        }
+    }
+
+    /// Mean rows per prefill call (the dynamic-batching health metric the
+    /// `--min-prefill-batch` knob steers).
+    pub fn mean_prefill_batch(&self) -> f64 {
+        if self.prefill_calls == 0 {
+            0.0
+        } else {
+            self.prefill_rows as f64 / self.prefill_calls as f64
         }
     }
 
@@ -84,10 +113,14 @@ impl SchedulerStats {
     pub fn merge(&mut self, other: &SchedulerStats) {
         self.submitted += other.submitted;
         self.completed += other.completed;
+        self.cancelled += other.cancelled;
         self.decode_steps += other.decode_steps;
         self.prefill_calls += other.prefill_calls;
+        self.prefill_rows += other.prefill_rows;
+        self.forked += other.forked;
         self.decode_calls += other.decode_calls;
         self.generated_tokens += other.generated_tokens;
+        self.pruned_groups += other.pruned_groups;
         self.occupancy_sum += other.occupancy_sum;
         self.queue_wait_sum_s += other.queue_wait_sum_s;
         self.wall_s += other.wall_s;

@@ -9,10 +9,14 @@
 //! [`MockEngine`](super::mock::MockEngine) in property tests.
 //!
 //! Invariants (tested in rust/tests + propcheck):
-//! * every submitted request completes exactly once;
+//! * every submitted request resolves exactly once — completed in tick
+//!   results or cancelled via [`Scheduler::cancel`], never both
+//!   (`completed + cancelled == submitted` once drained);
 //! * a request's output is independent of co-scheduled requests (greedy
-//!   decode matches the fused generate artifact bit-for-bit);
-//! * slots recycle only after completion; occupancy never exceeds B;
+//!   decode matches the fused generate artifact bit-for-bit), including
+//!   requests admitted through shared-prefix fork_kv prefill;
+//! * slots recycle only after completion or cancellation; occupancy never
+//!   exceeds B;
 //! * decode positions stay strictly below `max_seq` (KV capacity).
 
 use std::collections::VecDeque;
@@ -66,8 +70,8 @@ fn finish_reason(tok: i32, eos_id: i32, n_generated: usize, max_new: usize,
     }
 }
 
-pub struct Scheduler<'eng, E: DecodeEngine> {
-    engine: &'eng mut E,
+pub struct Scheduler<E: DecodeEngine> {
+    engine: E,
     slots: SlotMap,
     queue: VecDeque<(RolloutRequest, Instant)>,
     active: Vec<ActiveSeq>,
@@ -77,10 +81,19 @@ pub struct Scheduler<'eng, E: DecodeEngine> {
     /// admit new requests only when at least this many can prefill together
     /// (dynamic batching knob; 1 = admit eagerly)
     pub min_prefill_batch: usize,
+    /// group-shared prefix prefill: within one admission batch, requests
+    /// with identical prompts prefill once and fork their KV rows into the
+    /// sibling slots ([`DecodeEngine::fork_kv`]).  Exact for greedy AND
+    /// sampled decode (prefill logits/KV depend only on the prompt; sampling
+    /// state stays per-request).  Off reproduces the PR-1 per-request
+    /// prefill for baseline comparisons.
+    pub share_prefix: bool,
 }
 
-impl<'eng, E: DecodeEngine> Scheduler<'eng, E> {
-    pub fn new(engine: &'eng mut E, max_seq: usize, eos_id: i32) -> Self {
+impl<E: DecodeEngine> Scheduler<E> {
+    /// Takes the engine by value; pass `&mut engine` to lend a caller-owned
+    /// engine (the blanket `DecodeEngine for &mut E` impl forwards).
+    pub fn new(engine: E, max_seq: usize, eos_id: i32) -> Self {
         let b = engine.slot_count();
         Scheduler {
             engine,
@@ -91,6 +104,7 @@ impl<'eng, E: DecodeEngine> Scheduler<'eng, E> {
             max_seq,
             eos_id,
             min_prefill_batch: 1,
+            share_prefix: true,
         }
     }
 
@@ -103,7 +117,46 @@ impl<'eng, E: DecodeEngine> Scheduler<'eng, E> {
         self.queue.len() + self.active.len()
     }
 
-    /// Admit queued requests into free slots (batched prefill).
+    /// Remove a request wherever it currently lives — still queued (its
+    /// prefill never happens) or actively decoding (its KV slot frees
+    /// immediately).  Returns the partial output with
+    /// [`FinishReason::Cancelled`], or `None` when the id is unknown or
+    /// already completed.  Cancelled requests never appear in
+    /// [`Scheduler::tick`] results; on a drained scheduler
+    /// `completed + cancelled == submitted`.
+    pub fn cancel(&mut self, id: u64) -> Option<RolloutResult> {
+        if let Some(qi) = self.queue.iter().position(|(r, _)| r.id == id) {
+            let (req, t_enq) = self.queue.remove(qi).unwrap();
+            self.stats.cancelled += 1;
+            return Some(RolloutResult {
+                id: req.id,
+                generated: Vec::new(),
+                logprobs: Vec::new(),
+                finish: FinishReason::Cancelled,
+                queue_wait_s: t_enq.elapsed().as_secs_f64(),
+                service_s: 0.0,
+            });
+        }
+        if let Some(ai) = self.active.iter().position(|a| a.req.id == id) {
+            let a = self.active.swap_remove(ai);
+            self.slots.release(a.slot, a.req.id);
+            self.stats.cancelled += 1;
+            return Some(RolloutResult {
+                id: a.req.id,
+                generated: a.generated,
+                logprobs: a.logprobs,
+                finish: FinishReason::Cancelled,
+                queue_wait_s: (a.started_at - a.enqueued_at).as_secs_f64(),
+                service_s: a.started_at.elapsed().as_secs_f64(),
+            });
+        }
+        None
+    }
+
+    /// Admit queued requests into free slots (batched prefill).  With
+    /// `share_prefix`, duplicate prompts within the batch prefill once and
+    /// fork KV into the sibling slots — `prefill_rows` counts only the
+    /// representative rows, `forked` the rows saved.
     fn admit(&mut self) -> Result<()> {
         let admissible = self.queue.len().min(self.slots.free_count());
         if admissible == 0
@@ -112,23 +165,52 @@ impl<'eng, E: DecodeEngine> Scheduler<'eng, E> {
         {
             return Ok(());
         }
-        let mut slots = Vec::new();
-        let mut prompts = Vec::new();
         let mut newly = Vec::new();
         for _ in 0..admissible {
             let (req, t_enq) = self.queue.pop_front().unwrap();
             let slot = self.slots.acquire(req.id).expect("free slot");
-            slots.push(slot);
-            prompts.push(req.prompt.clone());
             newly.push((req, t_enq, slot));
         }
+        // cluster identical prompts: reps[k] is the newly-index of cluster
+        // k's representative; rep_for[i] is request i's cluster
+        let mut reps: Vec<usize> = Vec::new();
+        let mut rep_for: Vec<usize> = Vec::with_capacity(newly.len());
+        for i in 0..newly.len() {
+            let found = if self.share_prefix {
+                reps.iter()
+                    .position(|&r| newly[r].0.prompt == newly[i].0.prompt)
+            } else {
+                None
+            };
+            match found {
+                Some(k) => rep_for.push(k),
+                None => {
+                    rep_for.push(reps.len());
+                    reps.push(i);
+                }
+            }
+        }
+        let slots: Vec<usize> = reps.iter().map(|&i| newly[i].2).collect();
+        let prompts: Vec<Vec<i32>> =
+            reps.iter().map(|&i| newly[i].0.prompt.clone()).collect();
         self.stats.prefill_calls += 1;
+        self.stats.prefill_rows += reps.len();
         let logits = self.engine.prefill(&slots, &prompts)?;
-        for ((req, t_enq, slot), lg) in newly.into_iter().zip(logits) {
+        for (k, &ri) in reps.iter().enumerate() {
+            let dsts: Vec<usize> = (0..newly.len())
+                .filter(|&i| i != ri && rep_for[i] == k)
+                .map(|i| newly[i].2)
+                .collect();
+            if !dsts.is_empty() {
+                self.engine.fork_kv(newly[ri].2, &dsts)?;
+                self.stats.forked += dsts.len();
+            }
+        }
+        for (i, (req, t_enq, slot)) in newly.into_iter().enumerate() {
             let rng = Pcg64::new(req.seed);
             self.active.push(ActiveSeq {
                 pos: req.prompt.len() - 1,
-                pending_logits: lg,
+                pending_logits: logits[rep_for[i]].clone(),
                 generated: Vec::new(),
                 logprobs: Vec::new(),
                 rng,
@@ -281,6 +363,64 @@ mod tests {
                    Some(FinishReason::ContextLimit));
         // ...one before it does not (decode at max_seq-2 is in range)
         assert_eq!(finish_reason(5, EOS, 1, 8, MAX_SEQ - 2, MAX_SEQ), None);
+    }
+
+    /// Identical prompts admitted together prefill once and fork KV into
+    /// the sibling slots; greedy outputs match per-request prefill exactly
+    /// (the fork_kv ≡ fresh-prefill contract, mock side).
+    #[test]
+    fn shared_prefix_fork_matches_fresh_prefill() {
+        let run = |share: bool| {
+            let mut eng = MockEngine::new(4, 8, MAX_SEQ, EOS);
+            let mut sched = Scheduler::new(&mut eng, MAX_SEQ, EOS);
+            sched.share_prefix = share;
+            for id in 0..4u64 {
+                let mut r = req(0, 5, 8);
+                r.id = id; // same prompt in every request
+                sched.submit(r);
+            }
+            let mut results = sched.run_to_completion().unwrap();
+            results.sort_by_key(|r| r.id);
+            let toks: Vec<Vec<i32>> =
+                results.iter().map(|r| r.generated.clone()).collect();
+            (toks, eng.prefill_rows, eng.forked_slots)
+        };
+        let (shared, rows_shared, forked) = run(true);
+        let (plain, rows_plain, forked_off) = run(false);
+        assert_eq!(shared, plain, "fork_kv diverged from fresh prefill");
+        assert_eq!((rows_shared, forked), (1, 3));
+        assert_eq!((rows_plain, forked_off), (4, 0));
+        // greedy group members are identical sequences
+        assert!(shared.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    /// cancel() removes queued requests before prefill and active requests
+    /// mid-decode; cancelled ids never surface in tick results and the
+    /// drained ledger balances (completed + cancelled == submitted).
+    #[test]
+    fn cancel_queued_and_active() {
+        let mut eng = MockEngine::new(2, 8, MAX_SEQ, 127 /* no eos */);
+        let mut sched = Scheduler::new(&mut eng, MAX_SEQ, 127);
+        for id in 0..4u64 {
+            sched.submit(req(id, 3, 6));
+        }
+        // first tick admits 2 of 4 (B = 2); the rest stay queued
+        let t = sched.tick().unwrap();
+        assert!(t.is_empty());
+        let c_active = sched.cancel(0).unwrap();
+        assert_eq!(c_active.finish, FinishReason::Cancelled);
+        assert!(!c_active.generated.is_empty(), "active had begun decoding");
+        let c_queued = sched.cancel(3).unwrap();
+        assert!(c_queued.generated.is_empty(), "queued never decoded");
+        assert!(sched.cancel(3).is_none(), "double cancel must be a no-op");
+        let mut results = sched.run_to_completion().unwrap();
+        results.sort_by_key(|r| r.id);
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2], "cancelled ids leaked into results");
+        assert!(results.iter().all(|r| r.finish != FinishReason::Cancelled));
+        assert_eq!(sched.stats.cancelled, 2);
+        assert_eq!(sched.stats.completed + sched.stats.cancelled,
+                   sched.stats.submitted);
     }
 
     /// More requests than slots: all complete exactly once, slots recycle.

@@ -1,0 +1,492 @@
+//! Reward-aware rollout service: the layer between the RL trainer and the
+//! continuous-batching [`Scheduler`]s.
+//!
+//! The scheduler is a request-level primitive — it knows nothing about RL.
+//! QuRL's rollouts, however, come in *groups* (`group_size` samples of one
+//! prompt for GRPO/DAPO advantages), and that structure is worth money at
+//! serving time:
+//!
+//! * **group-shared prefix prefill** — all members of a group share the
+//!   full prompt, so the service submits them together and the scheduler
+//!   prefills the prompt once, forking its KV rows into the sibling slots
+//!   ([`DecodeEngine::fork_kv`]); prefill work drops ~`group_size`×;
+//! * **in-flight pruning ("Prune as You Generate")** — DAPO discards
+//!   groups whose rewards are all identical (they carry zero advantage).
+//!   Instead of filtering *after* every member has burned its full decode
+//!   budget, the service scores each member the moment it finishes (the
+//!   caller's reward closure) and, once [`PrunePolicy::min_finished`]
+//!   members agree, cancels the group's queued/active remainder via
+//!   [`Scheduler::cancel`] — freeing slots for groups that still matter;
+//! * **multi-engine striping** — the service fronts several engines (one
+//!   scheduler each, e.g. one per precision or replica) behind a single
+//!   submission interface, striping whole groups round-robin (fork_kv is
+//!   intra-engine) and merging the per-engine [`SchedulerStats`].
+//!
+//! The trainer's rollout path reduces to "submit [`GroupSpec`]s, collect
+//! [`GroupResult`]s"; group expansion, per-member seeds and reward-driven
+//! cancellation all live here.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engine::DecodeEngine;
+use super::request::{FinishReason, RolloutRequest, RolloutResult,
+                     SchedulerStats};
+use super::scheduler::Scheduler;
+
+/// One prompt to roll out `group_size` times (a GRPO/DAPO group).
+#[derive(Clone, Debug)]
+pub struct GroupSpec {
+    /// caller-chosen id echoed back on the [`GroupResult`]
+    pub group_id: usize,
+    /// prompt token ids (BOS included), shared by every member
+    pub prompt: Vec<i32>,
+    pub group_size: usize,
+    pub max_new: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+    /// base sampling seed; member `i` decodes with a stream derived from
+    /// `seed + i` so siblings diverge under temperature sampling
+    pub seed: u64,
+}
+
+/// Outcome of one group member.
+#[derive(Clone, Debug)]
+pub struct GroupMember {
+    /// completed rollout, or the partial output at cancellation time
+    /// (`finish == Cancelled`)
+    pub result: RolloutResult,
+    /// reward reported by the caller's reward closure; `None` for
+    /// cancelled members (they were never scored)
+    pub reward: Option<f32>,
+}
+
+/// A resolved group: every member either completed or was cancelled.
+#[derive(Clone, Debug)]
+pub struct GroupResult {
+    pub group_id: usize,
+    /// engine index the group was striped onto
+    pub engine: usize,
+    /// member order matches submission order within the group
+    pub members: Vec<GroupMember>,
+    /// true when the prune policy cancelled part of the group in flight
+    pub pruned: bool,
+}
+
+impl GroupResult {
+    /// Every member ran to completion (nothing was pruned away).
+    pub fn complete(&self) -> bool {
+        self.members
+            .iter()
+            .all(|m| m.result.finish != FinishReason::Cancelled)
+    }
+
+    /// DAPO signal: at least two scored members disagree on reward.
+    pub fn informative(&self) -> bool {
+        let mut first: Option<f32> = None;
+        for m in self.members.iter().filter_map(|m| m.reward) {
+            match first {
+                None => first = Some(m),
+                Some(f) if (m - f).abs() > 1e-6 => return true,
+                Some(_) => {}
+            }
+        }
+        false
+    }
+
+    /// Decode tokens this group consumed (completed + cancelled partials).
+    pub fn generated_tokens(&self) -> usize {
+        self.members.iter().map(|m| m.result.generated.len()).sum()
+    }
+}
+
+/// When the service may cancel the in-flight remainder of a group.
+#[derive(Clone, Copy, Debug)]
+pub struct PrunePolicy {
+    pub enabled: bool,
+    /// minimum finished members, all with identical reward, before the
+    /// group is predicted uninformative and its siblings cancelled.
+    /// Higher = fewer mispredictions (a late member could still have
+    /// differed), lower = more decode budget recovered — the PAYG
+    /// trade-off.
+    pub min_finished: usize,
+}
+
+impl PrunePolicy {
+    pub fn off() -> PrunePolicy {
+        PrunePolicy { enabled: false, min_finished: usize::MAX }
+    }
+
+    pub fn online(min_finished: usize) -> PrunePolicy {
+        PrunePolicy { enabled: true, min_finished: min_finished.max(2) }
+    }
+}
+
+struct GroupState {
+    group_id: usize,
+    engine: usize,
+    size: usize,
+    /// scheduler request id per member
+    uids: Vec<u64>,
+    outcomes: Vec<Option<GroupMember>>,
+    finished: usize,
+    cancelled: usize,
+    pruned: bool,
+}
+
+pub struct RolloutService<E: DecodeEngine> {
+    scheds: Vec<Scheduler<E>>,
+    groups: Vec<GroupState>,
+    /// request id -> (group index, member index)
+    by_uid: HashMap<u64, (usize, usize)>,
+    next_uid: u64,
+    /// round-robin striping cursor
+    next_engine: usize,
+    pub prune: PrunePolicy,
+    /// service-loop wall time, merged into the drained stats
+    wall_s: f64,
+}
+
+impl<E: DecodeEngine> RolloutService<E> {
+    pub fn new(engines: Vec<E>, max_seq: usize, eos_id: i32) -> Self {
+        assert!(!engines.is_empty(), "service needs at least one engine");
+        let scheds = engines
+            .into_iter()
+            .map(|e| Scheduler::new(e, max_seq, eos_id))
+            .collect();
+        RolloutService {
+            scheds,
+            groups: Vec::new(),
+            by_uid: HashMap::new(),
+            next_uid: 0,
+            next_engine: 0,
+            prune: PrunePolicy::off(),
+            wall_s: 0.0,
+        }
+    }
+
+    pub fn engines(&self) -> usize {
+        self.scheds.len()
+    }
+
+    /// Apply the dynamic-batching admission floor to every engine queue.
+    pub fn set_min_prefill_batch(&mut self, n: usize) {
+        for s in &mut self.scheds {
+            s.min_prefill_batch = n.max(1);
+        }
+    }
+
+    /// Toggle group-shared prefix prefill (on by default; off reproduces
+    /// the per-request PR-1 prefill for baselines).
+    pub fn set_share_prefix(&mut self, on: bool) {
+        for s in &mut self.scheds {
+            s.share_prefix = on;
+        }
+    }
+
+    /// Submit a group.  All members land on one engine (fork_kv is an
+    /// intra-engine cache copy) contiguously, so they admit together and
+    /// share one prefill whenever slots allow; groups stripe round-robin
+    /// across engines.
+    pub fn submit_group(&mut self, spec: GroupSpec) {
+        assert!(spec.group_size > 0, "empty group");
+        let engine = self.next_engine;
+        self.next_engine = (self.next_engine + 1) % self.scheds.len();
+        let gi = self.groups.len();
+        let mut uids = Vec::with_capacity(spec.group_size);
+        for member in 0..spec.group_size {
+            let uid = self.next_uid;
+            self.next_uid += 1;
+            self.by_uid.insert(uid, (gi, member));
+            self.scheds[engine].submit(RolloutRequest {
+                id: uid,
+                prompt: spec.prompt.clone(),
+                max_new: spec.max_new,
+                temperature: spec.temperature,
+                top_p: spec.top_p,
+                seed: spec
+                    .seed
+                    .wrapping_add(member as u64)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            });
+            uids.push(uid);
+        }
+        self.groups.push(GroupState {
+            group_id: spec.group_id,
+            engine,
+            size: spec.group_size,
+            uids,
+            outcomes: vec![None; spec.group_size],
+            finished: 0,
+            cancelled: 0,
+            pruned: false,
+        });
+    }
+
+    /// Drive every engine to completion, scoring members with `reward_fn`
+    /// (called once per completed member, with the caller's `group_id`) and
+    /// pruning decided groups in flight per [`Self::prune`].  Returns the
+    /// resolved groups in submission order.
+    pub fn run<F>(&mut self, mut reward_fn: F) -> Result<Vec<GroupResult>>
+    where
+        F: FnMut(usize, &RolloutResult) -> f32,
+    {
+        let t0 = Instant::now();
+        loop {
+            let mut progressed = false;
+            for e in 0..self.scheds.len() {
+                if self.scheds[e].pending() == 0 {
+                    continue;
+                }
+                progressed = true;
+                let finished = self.scheds[e].tick()?;
+                for res in finished {
+                    self.absorb(res, &mut reward_fn);
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        self.wall_s += t0.elapsed().as_secs_f64();
+        self.by_uid.clear();
+        let mut out = Vec::with_capacity(self.groups.len());
+        for g in self.groups.drain(..) {
+            assert_eq!(g.finished + g.cancelled, g.size,
+                       "group {} resolved {}/{} members",
+                       g.group_id, g.finished + g.cancelled, g.size);
+            out.push(GroupResult {
+                group_id: g.group_id,
+                engine: g.engine,
+                members: g
+                    .outcomes
+                    .into_iter()
+                    .map(|o| o.expect("member unresolved"))
+                    .collect(),
+                pruned: g.pruned,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Record one completed member; if its group is now decided-uniform,
+    /// cancel the group's queued/active remainder.
+    fn absorb<F>(&mut self, res: RolloutResult, reward_fn: &mut F)
+    where
+        F: FnMut(usize, &RolloutResult) -> f32,
+    {
+        let (gi, mi) = self.by_uid[&res.id];
+        let reward = reward_fn(self.groups[gi].group_id, &res);
+        {
+            let g = &mut self.groups[gi];
+            g.finished += 1;
+            g.outcomes[mi] =
+                Some(GroupMember { result: res, reward: Some(reward) });
+        }
+        if !self.prune.enabled {
+            return;
+        }
+        let (engine, to_cancel) = {
+            let g = &self.groups[gi];
+            if g.pruned
+                || g.finished < self.prune.min_finished
+                || g.finished + g.cancelled >= g.size
+            {
+                return;
+            }
+            let rewards: Vec<f32> = g
+                .outcomes
+                .iter()
+                .flatten()
+                .filter_map(|m| m.reward)
+                .collect();
+            let uniform =
+                rewards.iter().all(|&r| (r - rewards[0]).abs() <= 1e-6);
+            if !uniform {
+                return;
+            }
+            let to_cancel: Vec<(usize, u64)> = g
+                .uids
+                .iter()
+                .enumerate()
+                .filter(|&(m, _)| g.outcomes[m].is_none())
+                .map(|(m, &u)| (m, u))
+                .collect();
+            (g.engine, to_cancel)
+        };
+        // Cancel first, flag after: siblings may have completed in the same
+        // tick batch (cancel returns None for them), and a group where no
+        // cancel landed saved nothing — it must not count as pruned in the
+        // stats or carry `GroupResult::pruned`.
+        let mut any_cancelled = false;
+        for (m, uid) in to_cancel {
+            if let Some(partial) = self.scheds[engine].cancel(uid) {
+                any_cancelled = true;
+                let g = &mut self.groups[gi];
+                g.cancelled += 1;
+                g.outcomes[m] =
+                    Some(GroupMember { result: partial, reward: None });
+            }
+        }
+        if any_cancelled {
+            self.groups[gi].pruned = true;
+            self.scheds[engine].stats.pruned_groups += 1;
+        }
+    }
+
+    /// Drain the merged per-engine counters (plus the service-loop wall
+    /// time), resetting them for the next run — the trainer logs one
+    /// `sched_*` Recorder row per RL step from this.
+    pub fn take_stats(&mut self) -> SchedulerStats {
+        let mut out = SchedulerStats::default();
+        for s in &mut self.scheds {
+            let st = std::mem::take(&mut s.stats);
+            out.merge(&st);
+        }
+        out.wall_s += self.wall_s;
+        self.wall_s = 0.0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mock::MockEngine;
+    use super::*;
+
+    const MAX_SEQ: usize = 24;
+    const VOCAB: usize = 8;
+    const EOS: i32 = 2;
+
+    fn spec(group_id: usize, prompt_sig: i32, g: usize, temp: f32)
+            -> GroupSpec {
+        GroupSpec {
+            group_id,
+            prompt: vec![1, 3 + (prompt_sig % 5), 4, 5],
+            group_size: g,
+            max_new: 12,
+            temperature: temp,
+            top_p: 1.0,
+            seed: 0x5eed ^ ((group_id as u64) << 8),
+        }
+    }
+
+    fn service(n_engines: usize, slots: usize)
+               -> RolloutService<MockEngine> {
+        let engines: Vec<MockEngine> = (0..n_engines)
+            .map(|_| MockEngine::new(slots, VOCAB, MAX_SEQ, EOS))
+            .collect();
+        RolloutService::new(engines, MAX_SEQ, EOS)
+    }
+
+    /// Striping over several engines: every group resolves completely, on
+    /// its round-robin engine, and the merged ledger balances.
+    #[test]
+    fn striped_groups_all_complete() {
+        let mut svc = service(3, 4);
+        let (n_groups, g) = (7, 4);
+        for gid in 0..n_groups {
+            svc.submit_group(spec(gid, gid as i32, g, 1.0));
+        }
+        let results = svc.run(|_, res| res.generated.len() as f32).unwrap();
+        assert_eq!(results.len(), n_groups);
+        for (i, gr) in results.iter().enumerate() {
+            assert_eq!(gr.group_id, i, "submission order preserved");
+            assert_eq!(gr.engine, i % 3, "round-robin striping");
+            assert_eq!(gr.members.len(), g);
+            assert!(gr.complete());
+            assert!(!gr.pruned);
+            assert!(gr.members.iter().all(|m| m.reward.is_some()));
+        }
+        let st = svc.take_stats();
+        assert_eq!(st.submitted, n_groups * g);
+        assert_eq!(st.completed, st.submitted);
+        assert_eq!(st.cancelled, 0);
+        // shared prefill: members share prompts, so rows < submissions
+        assert!(st.prefill_rows < st.submitted);
+        assert_eq!(st.prefill_rows + st.forked, st.submitted);
+        // second take_stats is empty (drained)
+        assert_eq!(svc.take_stats().submitted, 0);
+    }
+
+    /// A reward that is constant for some groups and member-dependent for
+    /// others: pruning must cancel only the uniform groups' remainders,
+    /// keep the ledger balanced, and strictly reduce decoded tokens vs the
+    /// same workload without pruning.
+    #[test]
+    fn pruning_cancels_uniform_groups_and_saves_tokens() {
+        let run = |prune: bool| {
+            let mut svc = service(1, 3); // B=3 < g: siblings queue
+            svc.prune = if prune { PrunePolicy::online(2) } else {
+                PrunePolicy::off()
+            };
+            let (n_groups, g) = (6, 6);
+            for gid in 0..n_groups {
+                svc.submit_group(spec(gid, gid as i32, g, 1.0));
+            }
+            // groups 0, 2, 4 uniform (uninformative); 1, 3, 5 vary by member
+            let results = svc
+                .run(|gid, res| {
+                    if gid % 2 == 0 {
+                        1.0
+                    } else {
+                        (res.generated.len() % 3) as f32
+                    }
+                })
+                .unwrap();
+            let tokens: usize =
+                results.iter().map(|r| r.generated_tokens()).sum();
+            (results, svc.take_stats(), tokens)
+        };
+        let (pruned_res, pruned_st, pruned_tokens) = run(true);
+        let (plain_res, plain_st, plain_tokens) = run(false);
+        assert_eq!(plain_st.cancelled, 0);
+        assert_eq!(pruned_st.completed + pruned_st.cancelled,
+                   pruned_st.submitted);
+        assert!(pruned_st.cancelled > 0, "nothing was pruned");
+        assert!(pruned_st.pruned_groups >= 3,
+                "uniform groups not pruned: {}", pruned_st.pruned_groups);
+        assert!(pruned_tokens < plain_tokens,
+                "pruning saved no decode tokens: {pruned_tokens} vs \
+                 {plain_tokens}");
+        for gr in &pruned_res {
+            if gr.pruned {
+                assert!(!gr.complete());
+                assert!(gr.members.iter().any(
+                    |m| m.result.finish == FinishReason::Cancelled));
+                // cancelled members are unscored
+                assert!(gr
+                    .members
+                    .iter()
+                    .filter(|m| m.result.finish == FinishReason::Cancelled)
+                    .all(|m| m.reward.is_none()));
+            }
+        }
+        // un-pruned run: informativeness matches the reward construction
+        for gr in &plain_res {
+            assert!(gr.complete());
+        }
+        assert!(plain_res.iter().filter(|r| !r.informative()).count() >= 3);
+    }
+
+    /// With pruning off and greedy decode, all members of a group are
+    /// identical (fork ≡ fresh prefill at the service level too).
+    #[test]
+    fn greedy_group_members_identical() {
+        let mut svc = service(2, 4);
+        for gid in 0..4 {
+            svc.submit_group(spec(gid, gid as i32, 4, 0.0));
+        }
+        let results = svc.run(|_, _| 0.0).unwrap();
+        for gr in &results {
+            let first = &gr.members[0].result.generated;
+            for m in &gr.members {
+                assert_eq!(&m.result.generated, first,
+                           "greedy siblings diverged in group {}",
+                           gr.group_id);
+            }
+        }
+    }
+}

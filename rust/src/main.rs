@@ -4,7 +4,8 @@
 //!   pretrain   — SFT the base model the RL experiments start from
 //!   train      — run an RL experiment (preset or config file)
 //!   eval       — evaluate a checkpoint (greedy Avg@1 and Avg@K)
-//!   serve      — serving-style scheduler demo over random requests
+//!   serve      — rollout-service demo over random requests (continuous
+//!                batching, group-shared prefill, multi-engine striping)
 //!   throughput — Fig. 8 roofline sweep (+ measured CPU decode)
 //!   quantize   — quantize a checkpoint and report error statistics
 //!   info       — artifact/manifest summary
@@ -14,7 +15,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use qurl::config;
-use qurl::coordinator::{RolloutRequest, Scheduler, StepEngine};
+use qurl::coordinator::{GroupSpec, RolloutService, StepEngine};
 use qurl::metrics::Recorder;
 use qurl::perfmodel::{self, DecodeConfig, Precision};
 use qurl::quant::analysis;
@@ -44,7 +45,8 @@ fn main() -> Result<()> {
                  \x20 pretrain    SFT the base model (required before RL)\n\
                  \x20 train       run an RL experiment (presets: {})\n\
                  \x20 eval        evaluate a checkpoint\n\
-                 \x20 serve       continuous-batching scheduler demo\n\
+                 \x20 serve       rollout-service demo (continuous batching,\n\
+                 \x20             shared prefill, multi-engine striping)\n\
                  \x20 throughput  Fig. 8 roofline sweep\n\
                  \x20 quantize    quantization error report\n\
                  \x20 info        manifest summary",
@@ -130,9 +132,21 @@ fn train_cli() -> Cli {
         .opt("objective", "", "override objective (onpolicy|naive|decoupled|tis|acr)")
         .opt("rollout", "", "override rollout mode (bf16|int8|fp8)")
         .opt("rollout-path", "",
-             "rollout serving path: fused waves or continuous-batching \
-              scheduler with sched_* metrics (fused|scheduler; \
-              default preset)")
+             "rollout serving path: fused waves or the group-aware rollout \
+              service over continuous-batching schedulers, with sched_* \
+              metrics (fused|scheduler; default preset)")
+        .opt("rollout-engines", "0",
+             "engine replicas behind the rollout service; groups stripe \
+              round-robin (scheduler path; 0 = preset)")
+        .opt("min-prefill-batch", "0",
+             "scheduler admission floor: wait until this many requests can \
+              prefill together (0 = preset)")
+        .opt("prune", "",
+             "in-flight rollout pruning under DAPO dynamic sampling on the \
+              scheduler path (on|off; default preset)")
+        .opt("prune-min-finished", "0",
+             "members that must finish with identical reward before a group \
+              is pruned (0 = auto: max(2, group_size/2))")
         .opt("uaq", "-1", "override UAQ scale (-1 = preset)")
         .opt("lr", "0", "override learning rate (0 = preset)")
         .opt("seed", "0", "seed")
@@ -165,6 +179,21 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if !args.str("rollout-path").is_empty() {
         cfg.rollout_path = RolloutPath::parse(&args.str("rollout-path"))
             .context("bad --rollout-path (fused|scheduler)")?;
+    }
+    if args.usize("rollout-engines") > 0 {
+        cfg.rollout_engines = args.usize("rollout-engines");
+    }
+    if args.usize("min-prefill-batch") > 0 {
+        cfg.min_prefill_batch = args.usize("min-prefill-batch");
+    }
+    match args.str("prune").as_str() {
+        "" => {}
+        "on" | "true" | "1" => cfg.prune_rollouts = true,
+        "off" | "false" | "0" => cfg.prune_rollouts = false,
+        other => anyhow::bail!("bad --prune {other:?} (on|off)"),
+    }
+    if args.usize("prune-min-finished") > 0 {
+        cfg.prune_min_finished = args.usize("prune-min-finished");
     }
     if args.f64("uaq") >= 0.0 {
         cfg.uaq_scale = args.f32("uaq");
@@ -243,11 +272,15 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let cli = Cli::new("qurl serve", "continuous-batching scheduler demo")
+    let cli = Cli::new("qurl serve",
+                       "rollout-service demo: continuous batching, \
+                        group-shared prefill, multi-engine striping")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("base", "results/base_model.bin", "checkpoint")
         .opt("mode", "int8", "engine precision")
         .opt("requests", "96", "number of requests")
+        .opt("group", "1", "rollouts per request prompt (shared prefill)")
+        .opt("engines", "1", "engine replicas (groups stripe round-robin)")
         .opt("max-new", "48", "max generated tokens per request")
         .opt("min-batch", "8", "dynamic-batching admission threshold")
         .opt("seed", "0", "seed");
@@ -256,31 +289,38 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let ps = base_model(&rt, Path::new(&args.str("base")), 600, 0)?;
     let mode = QuantMode::parse(&args.str("mode")).context("bad --mode")?;
     let w = rt.engine_weights(mode, &ps.params)?;
-    let mut engine = StepEngine::new(&rt, w);
     let man = rt.manifest().clone();
-    let mut sched = Scheduler::new(&mut engine, man.max_seq, man.eos_id);
-    sched.min_prefill_batch = args.usize("min-batch");
+    let n_engines = args.usize("engines").max(1);
+    let engines: Vec<StepEngine> = (0..n_engines)
+        .map(|_| StepEngine::new(&rt, w.clone()))
+        .collect();
+    let mut svc = RolloutService::new(engines, man.max_seq, man.eos_id);
+    svc.set_min_prefill_batch(args.usize("min-batch"));
     let tk = Tokenizer::new();
     let suite = Suite::by_name("deepscaler").unwrap();
     let mut sampler = suite.train_sampler(args.u64("seed"));
-    let n = args.usize("requests");
-    for id in 0..n as u64 {
+    let group = args.usize("group").max(1);
+    let n = args.usize("requests").div_ceil(group);
+    for gid in 0..n {
         let (_, prob) = sampler.next();
-        sched.submit(RolloutRequest {
-            id,
+        svc.submit_group(GroupSpec {
+            group_id: gid,
             prompt: tk.encode_prompt(&prob.prompt),
+            group_size: group,
             max_new: args.usize("max-new"),
             temperature: 1.0,
             top_p: 1.0,
-            seed: id ^ 0x5eed,
+            seed: (gid as u64) ^ 0x5eed,
         });
     }
-    let results = sched.run_to_completion()?;
-    let st = &sched.stats;
-    println!("served {} requests: {:.1} tok/s, mean occupancy {:.2}, \
-              {} prefill calls, {} decode calls",
-             results.len(), st.tokens_per_s(), st.mean_occupancy(),
-             st.prefill_calls, st.decode_calls);
+    let results = svc.run(|_, _| 0.0)?;
+    let st = svc.take_stats();
+    let served: usize = results.iter().map(|g| g.members.len()).sum();
+    println!("served {served} requests ({n} groups x {group}, {n_engines} \
+              engine(s)): {:.1} tok/s, mean occupancy {:.2}, {} prefill \
+              calls ({:.1} rows/call, {} rows forked), {} decode calls",
+             st.tokens_per_s(), st.mean_occupancy(), st.prefill_calls,
+             st.mean_prefill_batch(), st.forked, st.decode_calls);
     Ok(())
 }
 

@@ -18,14 +18,22 @@ pub fn informative_groups(rewards: &[f32], group_size: usize) -> Vec<usize> {
         .collect()
 }
 
-/// Dynamic-sampling accumulator: feeds on rollout waves, keeps only
-/// informative groups, reports when `target_groups` have been collected.
+/// Dynamic-sampling accumulator: feeds on resolved groups (either a whole
+/// post-hoc wave of rewards, or one group at a time as the
+/// [`RolloutService`](crate::coordinator::RolloutService) resolves them),
+/// keeps only informative ones, reports when `target_groups` have been
+/// collected.
+///
+/// Bookkeeping is by *count*, not by stored group indices — wave-local
+/// indices from different waves collide and are meaningless as identifiers
+/// (the old `kept: Vec<usize>` stored exactly those, so `efficiency()` was
+/// only accidentally right and callers could not trust the ids).
 pub struct DynamicSampler {
     pub group_size: usize,
     pub target_groups: usize,
-    /// collected (sequence-major) data from informative groups
-    pub kept: Vec<usize>,
-    /// total groups seen / kept (the DAPO "sampling efficiency" metric)
+    /// informative groups kept so far, across all waves
+    kept_groups: usize,
+    /// total groups seen (the DAPO "sampling efficiency" denominator)
     pub seen_groups: usize,
     /// safety valve: stop resampling after this many waves even if short
     pub max_waves: usize,
@@ -37,27 +45,54 @@ impl DynamicSampler {
         DynamicSampler {
             group_size,
             target_groups,
-            kept: Vec::new(),
+            kept_groups: 0,
             seen_groups: 0,
             max_waves: 8,
             waves: 0,
         }
     }
 
-    /// Offer one wave of `rewards`; returns the group indices (within this
-    /// wave) that were kept.
+    /// Post-hoc filtering (fused rollout path): offer one wave of
+    /// sequence-major `rewards`; returns the wave-local indices of the
+    /// groups kept this wave (valid only against this wave's layout).
     pub fn offer(&mut self, rewards: &[f32]) -> Vec<usize> {
         self.waves += 1;
         self.seen_groups += rewards.len() / self.group_size;
         let keep = informative_groups(rewards, self.group_size);
-        let room = self.target_groups.saturating_sub(self.kept.len());
+        let room = self.target_groups.saturating_sub(self.kept_groups);
         let kept: Vec<usize> = keep.into_iter().take(room).collect();
-        self.kept.extend(kept.iter().copied());
+        self.kept_groups += kept.len();
         kept
     }
 
+    /// Online policy (service rollout path): count a service wave.  The
+    /// wave budget (`max_waves`) is what bounds DAPO resampling, so each
+    /// batch of submitted groups must be announced.
+    pub fn begin_wave(&mut self) {
+        self.waves += 1;
+    }
+
+    /// Online policy: record one resolved group; returns whether the
+    /// caller should keep it (informative and still under target).
+    /// Pruned/incomplete groups are recorded as uninformative — they count
+    /// against efficiency exactly like a post-hoc filtered group.
+    pub fn record_group(&mut self, informative: bool) -> bool {
+        self.seen_groups += 1;
+        if informative && self.kept_groups < self.target_groups {
+            self.kept_groups += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Informative groups kept so far (across waves).
+    pub fn kept(&self) -> usize {
+        self.kept_groups
+    }
+
     pub fn done(&self) -> bool {
-        self.kept.len() >= self.target_groups || self.waves >= self.max_waves
+        self.kept_groups >= self.target_groups || self.waves >= self.max_waves
     }
 
     /// Fraction of sampled groups that were informative.
@@ -65,7 +100,7 @@ impl DynamicSampler {
         if self.seen_groups == 0 {
             0.0
         } else {
-            self.kept.len() as f64 / self.seen_groups as f64
+            self.kept_groups as f64 / self.seen_groups as f64
         }
     }
 }
@@ -111,6 +146,44 @@ mod tests {
         assert!(!ds.done());
         ds.offer(&[1., 1.]);
         assert!(ds.done()); // wave budget exhausted
-        assert_eq!(ds.kept.len(), 0);
+        assert_eq!(ds.kept(), 0);
+    }
+
+    /// Regression for the wave-local-index bug: the same group index kept
+    /// in several waves must count as distinct groups, so efficiency over
+    /// multi-wave runs is kept/seen — not distorted by index collisions.
+    #[test]
+    fn efficiency_across_multiple_waves() {
+        let mut ds = DynamicSampler::new(2, 4);
+        // three waves of 2 groups each; the kept group is index 0 in every
+        // wave (the colliding-id case the old Vec<usize> stored blindly)
+        for _ in 0..3 {
+            let k = ds.offer(&[1., 0., 1., 1.]);
+            assert_eq!(k, vec![0]);
+        }
+        assert_eq!(ds.kept(), 3);
+        assert_eq!(ds.seen_groups, 6);
+        assert!((ds.efficiency() - 0.5).abs() < 1e-9);
+        assert!(!ds.done());
+    }
+
+    /// The online (service-path) policy matches post-hoc filtering counts:
+    /// groups recorded one at a time accumulate the same kept/seen/
+    /// efficiency, and the keep decision honors the target cap.
+    #[test]
+    fn online_record_matches_posthoc_counts() {
+        let mut ds = DynamicSampler::new(4, 2);
+        ds.begin_wave();
+        assert!(ds.record_group(true));
+        assert!(!ds.record_group(false));
+        ds.begin_wave();
+        assert!(ds.record_group(true));
+        assert!(ds.done(), "target reached");
+        // over target: informative groups are no longer kept
+        assert!(!ds.record_group(true));
+        assert_eq!(ds.kept(), 2);
+        assert_eq!(ds.seen_groups, 4);
+        assert_eq!(ds.waves, 2);
+        assert!((ds.efficiency() - 0.5).abs() < 1e-9);
     }
 }

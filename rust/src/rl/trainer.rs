@@ -8,7 +8,10 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{RolloutRequest, Scheduler, SchedulerStats, StepEngine};
+use crate::coordinator::{GroupSpec, PrunePolicy, RolloutService,
+                         SchedulerStats, StepEngine};
+use crate::coordinator::request::RolloutResult;
+use crate::coordinator::service::{GroupMember, GroupResult};
 use crate::metrics::{Recorder, Row};
 use crate::quant::analysis;
 use crate::runtime::{EngineWeights, ParamStore, QuantMode, Runtime, TrainBatch};
@@ -60,12 +63,15 @@ pub enum RolloutPath {
     /// `rollout_batch` prompts; every wave pays the full decode scan, so
     /// short sequences wait for the longest one in their wave.
     Fused,
-    /// The continuous-batching [`Scheduler`]: all of a step's
-    /// group-expanded prompts are submitted as [`RolloutRequest`]s with
-    /// per-request derived seeds; early-finished sequences free their KV
-    /// slot immediately and queued prompts backfill it.  Greedy decode is
-    /// bit-identical to the fused path (integration-tested); serving
-    /// metrics land in the step's `sched_*` Recorder fields.
+    /// The [`RolloutService`] over continuous-batching schedulers: each
+    /// prompt is submitted as a [`GroupSpec`] and the service owns group
+    /// expansion, per-member seeds, group-shared prefix prefill (fork_kv),
+    /// striping across `rollout_engines` engine replicas, and — under DAPO
+    /// dynamic sampling — in-flight pruning of reward-decided groups.
+    /// Early-finished or cancelled sequences free their KV slot
+    /// immediately and queued prompts backfill it.  Greedy decode without
+    /// pruning is bit-identical to the fused path (integration-tested);
+    /// serving metrics land in the step's `sched_*` Recorder fields.
     Scheduler,
 }
 
@@ -118,6 +124,21 @@ pub struct TrainerConfig {
     pub whiten_adv: bool,
     /// dynamic sampling (DAPO) on/off
     pub dynamic_sampling: bool,
+    /// in-flight rollout pruning ("Prune as You Generate"): under DAPO
+    /// dynamic sampling on the scheduler path, cancel the remainder of a
+    /// group once enough members finished with identical rewards
+    pub prune_rollouts: bool,
+    /// members that must finish (all with identical reward) before a group
+    /// is predicted uninformative and pruned; 0 = auto
+    /// (`max(2, group_size / 2)` — a majority, so sparse-reward workloads
+    /// don't mispredict on the first two zero-reward finishers)
+    pub prune_min_finished: usize,
+    /// engine replicas behind the rollout service (scheduler path); groups
+    /// stripe round-robin across them
+    pub rollout_engines: usize,
+    /// scheduler admission floor: wait until this many requests can
+    /// prefill together (1 = admit eagerly)
+    pub min_prefill_batch: usize,
     /// re-quantize engine weights every k steps (1 = every step, paper setup)
     pub requantize_every: usize,
     /// compute Fig. 4/9 weight-change analysis every k steps (0 = never)
@@ -147,10 +168,25 @@ impl Default for TrainerConfig {
             gae_lambda: 0.95,
             whiten_adv: false,
             dynamic_sampling: false,
+            prune_rollouts: true,
+            prune_min_finished: 0,
+            rollout_engines: 1,
+            min_prefill_batch: 1,
             requantize_every: 1,
             analyze_every: 0,
         }
     }
+}
+
+/// One prompt group prepared for the rollout service: the trainer-side
+/// bookkeeping (problem + encoded prompt) matching a submitted
+/// [`GroupSpec`], indexed by the spec's `group_id`.
+struct PromptGroup<'p> {
+    /// group index the resulting samples carry (`Sample::group`)
+    group: usize,
+    prob: &'p Problem,
+    prompt: Vec<i32>,
+    size: usize,
 }
 
 /// One rolled-out sequence with its verification outcome.
@@ -178,11 +214,13 @@ pub struct Trainer<'rt> {
     rollout_seed: i32,
     engine: Option<EngineWeights>,
     engine_age: usize,
-    /// persistent scheduler-path engine (KV caches + a copy of `engine`'s
+    /// persistent scheduler-path rollout service (`rollout_engines`
+    /// StepEngine replicas, each with KV caches + a copy of `engine`'s
     /// weights), reused across rollout calls and steps; invalidated by
     /// `refresh_engine` whenever the weights requantize.  Stale KV rows are
-    /// safe: prefill overwrites a slot's rows before reuse (tested).
-    step_engine: Option<StepEngine<'rt>>,
+    /// safe: prefill (or fork_kv) overwrites a slot's rows before reuse
+    /// (tested).
+    service: Option<RolloutService<StepEngine<'rt>>>,
     /// scheduler-path serving stats accumulated over the current step's
     /// rollout calls (DAPO may run several), drained into a Recorder row
     sched_stats: Option<SchedulerStats>,
@@ -215,7 +253,7 @@ impl<'rt> Trainer<'rt> {
             cfg,
             engine: None,
             engine_age: usize::MAX,
-            step_engine: None,
+            service: None,
             sched_stats: None,
             prev_params: None,
         })
@@ -237,8 +275,27 @@ impl<'rt> Trainer<'rt> {
         self.engine =
             Some(self.rt.engine_weights(self.cfg.rollout_mode, &self.ps.params)?);
         self.engine_age = 1;
-        // the scheduler-path engine holds a copy of the old weights
-        self.step_engine = None;
+        // the service's engines hold copies of the old weights
+        self.service = None;
+        Ok(())
+    }
+
+    /// Build the rollout service on demand: `rollout_engines` StepEngine
+    /// replicas of the current quantized weights behind one submission
+    /// interface.
+    fn ensure_service(&mut self) -> Result<()> {
+        if self.service.is_some() {
+            return Ok(());
+        }
+        let weights = self.engine.clone().expect("engine not initialized");
+        let n = self.cfg.rollout_engines.max(1);
+        let engines: Vec<StepEngine<'rt>> = (0..n)
+            .map(|_| StepEngine::new(self.rt, weights.clone()))
+            .collect();
+        let m = self.rt.manifest();
+        let mut svc = RolloutService::new(engines, m.max_seq, m.eos_id);
+        svc.set_min_prefill_batch(self.cfg.min_prefill_batch);
+        self.service = Some(svc);
         Ok(())
     }
 
@@ -253,12 +310,23 @@ impl<'rt> Trainer<'rt> {
         }
     }
 
-    /// Final [`Sample`] assembly shared by both rollout paths: engine-noise
-    /// injection on behavior logprobs (FlashRL's HF-vs-vLLM gap, simulated),
-    /// then decode + verify for the reward.
-    fn finish_sample(&mut self, tokens: Vec<i32>, mut lp: Vec<f32>,
+    /// Final [`Sample`] assembly (fused path): decode + verify for the
+    /// reward, then the shared noise/layout step.
+    fn finish_sample(&mut self, tokens: Vec<i32>, lp: Vec<f32>,
                      mask: Vec<f32>, prompt_len: usize, prob: &Problem,
                      group: usize) -> Sample {
+        let gen_text = self.tk.decode_generation(&tokens, prompt_len);
+        let reward = crate::tasks::verify(prob, &gen_text);
+        self.finish_sample_scored(tokens, lp, mask, prompt_len, reward, group)
+    }
+
+    /// Shared tail of sample assembly: engine-noise injection on behavior
+    /// logprobs (FlashRL's HF-vs-vLLM gap, simulated) around an
+    /// already-computed reward.  The service path lands here directly with
+    /// the reward its prune policy acted on — verified exactly once.
+    fn finish_sample_scored(&mut self, tokens: Vec<i32>, mut lp: Vec<f32>,
+                            mask: Vec<f32>, prompt_len: usize, reward: f32,
+                            group: usize) -> Sample {
         if self.cfg.engine_noise > 0.0 {
             for (l, &m) in lp.iter_mut().zip(&mask) {
                 if m > 0.5 {
@@ -266,8 +334,6 @@ impl<'rt> Trainer<'rt> {
                 }
             }
         }
-        let gen_text = self.tk.decode_generation(&tokens, prompt_len);
-        let reward = crate::tasks::verify(prob, &gen_text);
         Sample { tokens, lp_behav: lp, mask, prompt_len, reward, group }
     }
 
@@ -296,71 +362,122 @@ impl<'rt> Trainer<'rt> {
         Ok(out)
     }
 
-    /// Scheduler path: submit every group-expanded prompt as a
-    /// [`RolloutRequest`] with a per-request derived seed, drive the
-    /// continuous-batching [`Scheduler`] to completion, and convert
-    /// [`RolloutResult`]s back into [`Sample`]s.  Serving stats accumulate
-    /// into `sched_stats` for the step's Recorder row.
+    /// Scheduler path: reconstruct the group structure from the expanded
+    /// problem list (contiguous runs of one group index), hand the groups
+    /// to the [`RolloutService`] with pruning off, and flatten the
+    /// [`GroupResult`]s back into [`Sample`]s in submission order — so the
+    /// flat API stays interchangeable with the fused path.
     fn rollout_scheduler(&mut self, problems: &[(usize, &Problem)])
                          -> Result<Vec<Sample>> {
-        let m = self.rt.manifest();
-        let (s, eos_id, max_prompt, max_new) =
-            (m.max_seq, m.eos_id, m.max_prompt, m.max_new);
-        if self.step_engine.is_none() {
-            let weights = self.engine.clone().expect("engine not initialized");
-            self.step_engine = Some(StepEngine::new(self.rt, weights));
+        let mut groups: Vec<PromptGroup> = Vec::new();
+        for &(group, prob) in problems {
+            match groups.last_mut() {
+                // merge only true group members: same group id AND the same
+                // problem — two different problems sharing a group id must
+                // not collapse into one prompt (each still rolls out)
+                Some(pg) if pg.group == group
+                    && std::ptr::eq(pg.prob, prob) => pg.size += 1,
+                _ => groups.push(PromptGroup {
+                    group,
+                    prob,
+                    prompt: self.tk.encode_prompt(&prob.prompt),
+                    size: 1,
+                }),
+            }
         }
-        let mut sched = Scheduler::new(self.step_engine.as_mut().unwrap(),
-                                       s, eos_id);
+        let results = self.run_groups(&groups, false)?;
+        let mut out = Vec::with_capacity(problems.len());
+        for (gr, pg) in results.into_iter().zip(&groups) {
+            anyhow::ensure!(gr.complete(),
+                            "service cancelled members with pruning off");
+            for m in gr.members {
+                out.push(self.result_to_sample(m, &pg.prompt, pg.group));
+            }
+        }
+        anyhow::ensure!(out.len() == problems.len(),
+                        "service returned {} samples for {} requests",
+                        out.len(), problems.len());
+        Ok(out)
+    }
+
+    /// Submit prepared groups to the service, score completions with the
+    /// task verifier as they finish (the signal the prune policy acts on),
+    /// and drain serving stats into `sched_stats`.  Results come back in
+    /// submission order with `group_id` = index into `groups`.
+    fn run_groups(&mut self, groups: &[PromptGroup], prune: bool)
+                  -> Result<Vec<GroupResult>> {
+        self.ensure_service()?;
+        let m = self.rt.manifest();
+        let (max_prompt, max_new) = (m.max_prompt, m.max_new);
         // one seed domain per rollout call (mirrors the fused path's
-        // per-wave seed bump), split into per-request streams
+        // per-wave seed bump), split into per-member streams by the service
         self.rollout_seed = self.rollout_seed.wrapping_add(1);
         let base = (self.rollout_seed as u32 as u64) << 32;
-        let mut prompts: Vec<Vec<i32>> = Vec::with_capacity(problems.len());
-        for (id, (_, prob)) in problems.iter().enumerate() {
-            let ids = self.tk.encode_prompt(&prob.prompt);
-            assert!(ids.len() <= max_prompt,
-                    "prompt overflows max_prompt: {}", prob.prompt);
-            sched.submit(RolloutRequest {
-                id: id as u64,
-                prompt: ids.clone(),
+        let min_finished = if self.cfg.prune_min_finished > 0 {
+            self.cfg.prune_min_finished
+        } else {
+            // auto: a majority of the group must agree before pruning, so
+            // sparse rewards (first two members zero) don't throw away
+            // groups a later member would have made informative
+            (self.cfg.group_size / 2).max(2)
+        };
+        let svc = self.service.as_mut().unwrap();
+        svc.prune = if prune {
+            PrunePolicy::online(min_finished)
+        } else {
+            PrunePolicy::off()
+        };
+        let mut offset = 0u64;
+        for (gid, pg) in groups.iter().enumerate() {
+            assert!(pg.prompt.len() <= max_prompt,
+                    "prompt overflows max_prompt: {}", pg.prob.prompt);
+            svc.submit_group(GroupSpec {
+                group_id: gid,
+                prompt: pg.prompt.clone(),
+                group_size: pg.size,
                 max_new,
                 temperature: self.cfg.temp,
                 top_p: self.cfg.top_p,
-                seed: (base | id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                seed: base | offset,
             });
-            prompts.push(ids);
+            offset += pg.size as u64;
         }
-        let mut results = sched.run_to_completion()?;
-        results.sort_by_key(|r| r.id);
-        // hard check: a miscounting scheduler must fail loudly, never feed
-        // misattributed rewards into training
-        anyhow::ensure!(results.len() == problems.len(),
-                        "scheduler returned {} results for {} requests",
-                        results.len(), problems.len());
+        let tk = &self.tk;
+        let results = svc.run(|gid, res: &RolloutResult| {
+            let text = tk.decode(&res.generated);
+            crate::tasks::verify(groups[gid].prob, &text)
+        })?;
+        let stats = svc.take_stats();
         self.sched_stats
             .get_or_insert_with(SchedulerStats::default)
-            .merge(&sched.stats);
+            .merge(&stats);
+        anyhow::ensure!(results.len() == groups.len(),
+                        "service resolved {} of {} groups",
+                        results.len(), groups.len());
+        Ok(results)
+    }
 
-        let mut out = Vec::with_capacity(problems.len());
-        for res in &results {
-            let (group, prob) = problems[res.id as usize];
-            let prompt = &prompts[res.id as usize];
-            let plen = prompt.len();
-            let mut tokens = vec![crate::tasks::PAD; s];
-            tokens[..plen].copy_from_slice(prompt);
-            let mut lp = vec![0.0f32; s];
-            let mut mask = vec![0.0f32; s];
-            for (i, (&tok, &l)) in
-                res.generated.iter().zip(&res.logprobs).enumerate()
-            {
-                tokens[plen + i] = tok;
-                lp[plen + i] = l;
-                mask[plen + i] = 1.0;
-            }
-            out.push(self.finish_sample(tokens, lp, mask, plen, prob, group));
+    /// Convert one service rollout back into the fused-path [`Sample`]
+    /// grid layout (prompt + generated span in a max_seq row), reusing the
+    /// reward the service's closure already verified.
+    fn result_to_sample(&mut self, member: GroupMember, prompt: &[i32],
+                        group: usize) -> Sample {
+        let reward = member.reward.expect("completed member unscored");
+        let res = member.result;
+        let s = self.rt.manifest().max_seq;
+        let plen = prompt.len();
+        let mut tokens = vec![crate::tasks::PAD; s];
+        tokens[..plen].copy_from_slice(prompt);
+        let mut lp = vec![0.0f32; s];
+        let mut mask = vec![0.0f32; s];
+        for (i, (&tok, &l)) in
+            res.generated.iter().zip(&res.logprobs).enumerate()
+        {
+            tokens[plen + i] = tok;
+            lp[plen + i] = l;
+            mask[plen + i] = 1.0;
         }
-        Ok(out)
+        self.finish_sample_scored(tokens, lp, mask, plen, reward, group)
     }
 
     /// Collect one RL step's samples (with DAPO dynamic sampling when on).
@@ -385,6 +502,40 @@ impl<'rt> Trainer<'rt> {
         while !ds.done() {
             let probs: Vec<Problem> =
                 (0..n_prompts).map(|_| sampler.next().1).collect();
+            if self.cfg.rollout_path == RolloutPath::Scheduler {
+                // online policy: the service scores members as they finish
+                // and (with prune_rollouts) cancels reward-decided groups
+                // mid-flight, so uninformative groups never burn their full
+                // decode budget before being filtered
+                ds.begin_wave();
+                let groups: Vec<PromptGroup> = probs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| PromptGroup {
+                        group: i,
+                        prob: p,
+                        prompt: self.tk.encode_prompt(&p.prompt),
+                        size: g,
+                    })
+                    .collect();
+                let results =
+                    self.run_groups(&groups, self.cfg.prune_rollouts)?;
+                for gr in results {
+                    let keep = ds.record_group(
+                        gr.complete() && gr.informative());
+                    if !keep {
+                        continue;
+                    }
+                    let new_gid = kept.len() / g;
+                    let pg = &groups[gr.group_id];
+                    for m in gr.members {
+                        kept.push(self.result_to_sample(m, &pg.prompt,
+                                                        new_gid));
+                    }
+                }
+                continue;
+            }
+            // fused path: post-hoc wave filtering
             let expanded: Vec<(usize, &Problem)> = probs
                 .iter()
                 .enumerate()
@@ -578,6 +729,11 @@ impl<'rt> Trainer<'rt> {
                 .set("sched_occupancy", st.mean_occupancy())
                 .set("sched_queue_wait_s", st.mean_queue_wait_s())
                 .set("sched_prefill_calls", st.prefill_calls as f64)
+                .set("sched_prefill_rows", st.prefill_rows as f64)
+                .set("sched_mean_prefill_batch", st.mean_prefill_batch())
+                .set("sched_forked", st.forked as f64)
+                .set("sched_cancelled", st.cancelled as f64)
+                .set("sched_pruned_groups", st.pruned_groups as f64)
                 .set("sched_decode_calls", st.decode_calls as f64)
                 .set("sched_generated_tokens", st.generated_tokens as f64)
                 .set("sched_tokens_per_s", st.tokens_per_s())

@@ -1,7 +1,8 @@
 //! Property-based tests (propcheck) over coordinator + RL invariants.
 //! These run without artifacts — pure host logic.
 
-use qurl::coordinator::{MockEngine, RolloutRequest, Scheduler, SlotMap};
+use qurl::coordinator::{FinishReason, GroupSpec, MockEngine, PrunePolicy,
+                        RolloutRequest, RolloutService, Scheduler, SlotMap};
 use qurl::rl::advantage;
 use qurl::rl::dapo;
 use qurl::rl::objective::{surrogate_token, Objective, ObjectiveKind};
@@ -96,6 +97,200 @@ fn prop_scheduler_serves_all_requests() {
     });
 }
 
+/// Cancellation invariants under random interleavings of ticks and
+/// cancels: `completed + cancelled == submitted` on the drained scheduler,
+/// a cancelled request never appears in tick results, every slot is
+/// recycled (free capacity fully restored), and cancel() itself returns
+/// the partial exactly once (double-cancel is None).
+#[test]
+fn prop_scheduler_cancellation_invariants() {
+    let max_seq = 16usize;
+    // ((slots, n_requests), [op; m]) — op even: tick, odd: cancel id op/2
+    let g = Pair(Pair(UsizeIn(1, 6), UsizeIn(1, 20)),
+                 VecOf(UsizeIn(0, 63), 4, 80));
+    assert_prop("scheduler-cancel", 0xCA7CE1, 150, &g,
+                |((slots, n_req), ops)| {
+        let slots = (*slots).max(1);
+        let n_req = (*n_req).max(1);
+        let mut eng = MockEngine::new(slots, 8, max_seq, 2);
+        let mut sched = Scheduler::new(&mut eng, max_seq, 2);
+        for i in 0..n_req {
+            sched.submit(RolloutRequest {
+                id: i as u64,
+                prompt: (0..1 + i % 5).map(|k| 3 + (k as i32 % 5)).collect(),
+                max_new: 1 + i % 8,
+                temperature: 0.0,
+                top_p: 1.0,
+                seed: i as u64,
+            });
+        }
+        let mut completed: Vec<u64> = Vec::new();
+        let mut cancelled: Vec<u64> = Vec::new();
+        for &op in ops {
+            if op % 2 == 0 {
+                completed.extend(sched.tick().unwrap().iter().map(|r| r.id));
+            } else {
+                let id = (op / 2) as u64 % n_req as u64;
+                if let Some(partial) = sched.cancel(id) {
+                    if partial.finish != FinishReason::Cancelled {
+                        return false;
+                    }
+                    cancelled.push(id);
+                    // a second cancel of the same id must be a no-op
+                    if sched.cancel(id).is_some() {
+                        return false;
+                    }
+                }
+            }
+        }
+        completed.extend(sched.run_to_completion().unwrap()
+                         .iter().map(|r| r.id));
+        // ledger: every request resolved exactly once, never both ways
+        if completed.len() + cancelled.len() != n_req {
+            return false;
+        }
+        if sched.stats.completed + sched.stats.cancelled
+            != sched.stats.submitted
+        {
+            return false;
+        }
+        if completed.iter().any(|id| cancelled.contains(id)) {
+            return false; // cancelled request leaked into results
+        }
+        let mut all: Vec<u64> = completed.iter().chain(&cancelled).copied()
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        all.len() == n_req // no duplicates either way
+    });
+}
+
+/// The headline QuRL serving win, asserted end-to-end on the mock engine:
+/// on a DAPO-shaped workload where >= 1/3 of the groups are uninformative
+/// (uniform reward), the reward-aware service path — group-shared fork_kv
+/// prefill + in-flight pruning — must decode strictly fewer tokens, issue
+/// strictly fewer prefill calls AND strictly fewer prefill rows than the
+/// PR-1 per-request scheduler path (share_prefix off, no pruning) on the
+/// identical workload.
+#[test]
+fn service_prunes_and_forks_beat_plain_scheduler() {
+    let max_seq = 32usize;
+    let (n_groups, g, slots) = (9usize, 6usize, 4usize);
+    let run = |payg: bool| {
+        let engines = vec![MockEngine::new(slots, 8, max_seq, 2)];
+        let mut svc = RolloutService::new(engines, max_seq, 2);
+        svc.set_share_prefix(payg);
+        // wave-structured admission (wait for a full slot-width batch):
+        // identical wave boundaries in both runs, so the prefill-call
+        // comparison measures pruning, not admission-dribble timing
+        svc.set_min_prefill_batch(slots);
+        svc.prune = if payg { PrunePolicy::online(2) } else {
+            PrunePolicy::off()
+        };
+        for gid in 0..n_groups {
+            svc.submit_group(GroupSpec {
+                group_id: gid,
+                prompt: (0..3 + gid % 4).map(|k| 3 + (k as i32 % 5)).collect(),
+                group_size: g,
+                max_new: 20,
+                temperature: 1.0,
+                top_p: 1.0,
+                seed: 0xFEED ^ ((gid as u64) << 8),
+            });
+        }
+        // every 3rd group uniform-rewarded (DAPO-uninformative by
+        // construction); the rest vary by member outcome
+        let results = svc.run(|gid, res| {
+            if gid % 3 == 0 { 1.0 } else { (res.generated.len() % 2) as f32 }
+        }).unwrap();
+        assert_eq!(results.len(), n_groups);
+        (svc.take_stats(), results)
+    };
+    let (service, service_res) = run(true);
+    let (plain, plain_res) = run(false);
+    assert_eq!(plain.cancelled, 0);
+    assert!(plain_res.iter().all(|r| r.complete()));
+    assert_eq!(service.completed + service.cancelled, service.submitted);
+    assert!(service.pruned_groups >= 3,
+            "only {} groups pruned", service.pruned_groups);
+    assert!(service_res.iter().filter(|r| r.pruned).count() >= 3);
+    assert!(service.generated_tokens < plain.generated_tokens,
+            "pruning saved no decode tokens: {} vs {}",
+            service.generated_tokens, plain.generated_tokens);
+    assert!(service.prefill_calls < plain.prefill_calls,
+            "pruning+forking saved no prefill calls: {} vs {}",
+            service.prefill_calls, plain.prefill_calls);
+    assert!(service.prefill_rows < plain.prefill_rows,
+            "prefix sharing saved no prefill rows: {} vs {}",
+            service.prefill_rows, plain.prefill_rows);
+    assert_eq!(plain.prefill_rows, plain.submitted);
+}
+
+/// Service invariants over random group mixes, engine counts and prune
+/// policies: every group resolves with exactly `group_size` member
+/// outcomes, results preserve submission order, cancelled members appear
+/// only in pruned groups, and the merged ledger balances.
+#[test]
+fn prop_service_groups_resolve() {
+    let max_seq = 16usize;
+    // ((engines, slots), (prune, [group_size; n]))
+    let g = Pair(Pair(UsizeIn(1, 3), UsizeIn(1, 5)),
+                 Pair(UsizeIn(0, 1), VecOf(UsizeIn(1, 5), 1, 10)));
+    assert_prop("service-groups-resolve", 0x5E2C, 120, &g,
+                |((engines, slots), (prune, sizes))| {
+        let n_eng = (*engines).max(1);
+        let slots = (*slots).max(1);
+        let engs: Vec<MockEngine> = (0..n_eng)
+            .map(|_| MockEngine::new(slots, 8, max_seq, 2))
+            .collect();
+        let mut svc = RolloutService::new(engs, max_seq, 2);
+        if *prune == 1 {
+            svc.prune = PrunePolicy::online(2);
+        }
+        let mut submitted = 0usize;
+        for (gid, &sz) in sizes.iter().enumerate() {
+            let sz = sz.max(1);
+            submitted += sz;
+            svc.submit_group(GroupSpec {
+                group_id: gid,
+                prompt: vec![3 + (gid as i32 % 5); 2 + gid % 3],
+                group_size: sz,
+                max_new: 1 + gid % 9,
+                temperature: 1.0,
+                top_p: 1.0,
+                seed: gid as u64,
+            });
+        }
+        let results = svc.run(|gid, _| (gid % 2) as f32).unwrap();
+        if results.len() != sizes.len() {
+            return false;
+        }
+        for (i, (gr, &sz)) in results.iter().zip(sizes).enumerate() {
+            if gr.group_id != i || gr.members.len() != sz.max(1) {
+                return false;
+            }
+            if gr.engine != i % n_eng {
+                return false; // round-robin striping broken
+            }
+            let n_cancelled = gr.members.iter()
+                .filter(|m| m.result.finish == FinishReason::Cancelled)
+                .count();
+            if gr.pruned != (n_cancelled > 0) {
+                return false; // pruned flag <=> a cancel actually landed
+            }
+            if gr.members.iter().any(|m| {
+                (m.result.finish == FinishReason::Cancelled)
+                    != m.reward.is_none()
+            }) {
+                return false; // scored <=> completed
+            }
+        }
+        let st = svc.take_stats();
+        st.submitted == submitted
+            && st.completed + st.cancelled == st.submitted
+    });
+}
+
 /// Regression property for the trainer's old `padded_g = 1` fallback: on a
 /// ragged batch (len % group_size != 0) the grouped-advantage path must
 /// preserve per-group zero mean AND emit a nonzero signal whenever a group
@@ -141,7 +336,7 @@ fn prop_grpo_group_mean_zero() {
     assert_prop("grpo-zero-mean", 0xB22, 500, &g, |(gsize, rewards_f)| {
         let gsize = (*gsize).max(2);
         // build a rewards vector with len = k * gsize
-        let k = (rewards_f.len().max(1) + gsize - 1) / gsize;
+        let k = rewards_f.len().max(1).div_ceil(gsize);
         let rewards: Vec<f32> = (0..k * gsize)
             .map(|i| rewards_f.get(i % rewards_f.len().max(1))
                  .copied()
