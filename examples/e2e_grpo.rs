@@ -22,7 +22,7 @@ fn main() -> Result<()> {
     let rl_steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);
     let sft_steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(600);
 
-    let rt = Runtime::open(&bk::artifacts_dir())?;
+    let rt = std::sync::Arc::new(Runtime::open(&bk::artifacts_dir())?);
     let man = rt.manifest().clone();
     let tk = Tokenizer::new();
     let suite = Suite::by_name("deepscaler").unwrap();

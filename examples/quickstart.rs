@@ -14,7 +14,9 @@ use qurl::tasks::Tokenizer;
 
 fn main() -> Result<()> {
     // 1. the runtime executes HLO artifacts via PJRT; Python is build-only
-    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    //    (Arc: the trainer and its rollout engines share the handle)
+    let rt = std::sync::Arc::new(
+        Runtime::open(std::path::Path::new("artifacts"))?);
     let man = rt.manifest().clone();
     println!("model: {} params | rollout batch {} | context {}",
              man.n_params, man.rollout_batch, man.max_seq);

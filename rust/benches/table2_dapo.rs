@@ -7,7 +7,8 @@
 
 use qurl::benchkit as bk;
 use qurl::config;
-use qurl::rl::{eval as rleval, ObjectiveKind, RolloutPath};
+use qurl::coordinator::StripePolicy;
+use qurl::rl::{eval as rleval, ObjectiveKind, RolloutExec, RolloutPath};
 use qurl::runtime::QuantMode;
 use qurl::tasks::{Suite, Tokenizer};
 use qurl::util::timer::print_table;
@@ -106,5 +107,54 @@ fn main() -> anyhow::Result<()> {
                 &["policy", "decoded tokens", "prefill calls",
                   "prefill rows", "cancelled", "pruned groups",
                   "dapo efficiency"], &rows);
+
+    // ---- fused vs rollout service, exec backend and stripe policy -------
+    // The ROADMAP gap this closes: the DAPO table compared fused waves
+    // only.  Same preset per row; thread count = engine replicas when the
+    // executor is threaded, 1 when inline or fused.  Rewards at temp>0
+    // differ across paths by sampling-stream construction, so the columns
+    // to compare are serving counters and wall-clock, not accuracy.
+    let serving: [(&str, RolloutPath, usize, RolloutExec, StripePolicy); 4] = [
+        ("fused waves", RolloutPath::Fused, 1,
+         RolloutExec::Inline, StripePolicy::RoundRobin),
+        ("service inline rr", RolloutPath::Scheduler, 2,
+         RolloutExec::Inline, StripePolicy::RoundRobin),
+        ("service threaded rr", RolloutPath::Scheduler, 2,
+         RolloutExec::Threaded, StripePolicy::RoundRobin),
+        ("service threaded least-loaded", RolloutPath::Scheduler, 2,
+         RolloutExec::Threaded, StripePolicy::LeastLoaded),
+    ];
+    let mut rows = Vec::new();
+    for (label, path, engines, exec, stripe) in serving {
+        let mut cfg = config::dapo_aime();
+        cfg.steps = steps.min(4);
+        cfg.rollout_path = path;
+        cfg.rollout_engines = engines;
+        cfg.rollout_exec = exec;
+        cfg.rollout_stripe = stripe;
+        cfg.eval_every = 0;
+        let run = format!("table2_serve_{}_{}_{}", path.name(), exec.name(),
+                          stripe.name());
+        let t0 = std::time::Instant::now();
+        let (tr, reward) = bk::run_variant(&rt, &base, cfg, &run)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let threads = if exec == RolloutExec::Threaded { engines } else { 1 };
+        rows.push(vec![
+            label.to_string(),
+            format!("{threads}"),
+            stripe.name().to_string(),
+            format!("{wall:.1}"),
+            format!("{:.0}", sum_of(&tr, "sched_generated_tokens")),
+            format!("{:.0}", sum_of(&tr, "sched_decode_calls")),
+            format!("{:.0}",
+                    tr.rec.last("sched_weight_epoch").unwrap_or(0.0)),
+            format!("{reward:.3}"),
+        ]);
+    }
+    print_table("DAPO serving paths: fused vs rollout service (exec \
+                 backend x stripe policy)",
+                &["path", "threads", "stripe", "wall s", "sched tokens",
+                  "sched decode calls", "weight epoch", "train reward"],
+                &rows);
     Ok(())
 }

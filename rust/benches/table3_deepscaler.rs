@@ -7,7 +7,8 @@
 
 use qurl::benchkit as bk;
 use qurl::config;
-use qurl::rl::{eval as rleval, ObjectiveKind};
+use qurl::coordinator::StripePolicy;
+use qurl::rl::{eval as rleval, ObjectiveKind, RolloutExec, RolloutPath};
 use qurl::runtime::QuantMode;
 use qurl::tasks::{Suite, Tokenizer, ALL_FAMILIES};
 use qurl::util::timer::print_table;
@@ -75,5 +76,54 @@ fn main() -> anyhow::Result<()> {
     println!("\npaper reference (1.5B, avg): Base 48.8 | RL bf16 56.4 | RL \
               int8 52.3 | FlashRL 53.8 | QuRL w/o UAQ 54.8 | QuRL w/ UAQ \
               55.5");
+
+    // ---- fused vs rollout service on the GRPO preset --------------------
+    // Closes the ROADMAP gap "DAPO/DeepScaleR tables compare fused waves
+    // only": the same short GRPO run served by fused waves and by the
+    // rollout service (inline and threaded executor, rr and least-loaded
+    // placement).  Thread count = engine replicas when threaded, else 1.
+    // Greedy parity guarantees identical learning at temp 0; at the
+    // preset's temp the comparison is serving counters + wall-clock.
+    let sum_of = |tr: &qurl::rl::Trainer, key: &str| -> f64 {
+        tr.rec.series(key).iter().map(|&(_, v)| v).sum()
+    };
+    let serving: [(&str, RolloutPath, usize, RolloutExec, StripePolicy); 3] = [
+        ("fused waves", RolloutPath::Fused, 1,
+         RolloutExec::Inline, StripePolicy::RoundRobin),
+        ("service inline rr", RolloutPath::Scheduler, 2,
+         RolloutExec::Inline, StripePolicy::RoundRobin),
+        ("service threaded least-loaded", RolloutPath::Scheduler, 2,
+         RolloutExec::Threaded, StripePolicy::LeastLoaded),
+    ];
+    let mut rows = Vec::new();
+    for (label, path, engines, exec, stripe) in serving {
+        let mut cfg = config::deepscaler_grpo();
+        cfg.steps = steps.min(4);
+        cfg.rollout_path = path;
+        cfg.rollout_engines = engines;
+        cfg.rollout_exec = exec;
+        cfg.rollout_stripe = stripe;
+        cfg.eval_every = 0;
+        cfg.analyze_every = 0;
+        let run = format!("table3_serve_{}_{}_{}", path.name(), exec.name(),
+                          stripe.name());
+        let t0 = std::time::Instant::now();
+        let (tr, reward) = bk::run_variant(&rt, &base, cfg, &run)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let threads = if exec == RolloutExec::Threaded { engines } else { 1 };
+        rows.push(vec![
+            label.to_string(),
+            format!("{threads}"),
+            stripe.name().to_string(),
+            format!("{wall:.1}"),
+            format!("{:.0}", sum_of(&tr, "sched_generated_tokens")),
+            format!("{:.0}", sum_of(&tr, "sched_decode_calls")),
+            format!("{reward:.3}"),
+        ]);
+    }
+    print_table("DeepScaleR serving paths: fused vs rollout service (exec \
+                 backend x stripe policy)",
+                &["path", "threads", "stripe", "wall s", "sched tokens",
+                  "sched decode calls", "train reward"], &rows);
     Ok(())
 }

@@ -9,6 +9,7 @@
 //!   QURL_EVAL_K  — samples for Avg@K evaluations
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -50,8 +51,10 @@ pub fn results_dir() -> PathBuf {
 }
 
 /// Open the runtime + shared SFT base checkpoint (pretraining on demand).
-pub fn setup() -> Result<(Runtime, ParamStore)> {
-    let rt = Runtime::open(&artifacts_dir())?;
+/// The runtime comes back in an `Arc` — the trainer and `StepEngine` share
+/// it by handle since the threaded-rollout refactor.
+pub fn setup() -> Result<(Arc<Runtime>, ParamStore)> {
+    let rt = Arc::new(Runtime::open(&artifacts_dir())?);
     let path = results_dir().join("base_model.bin");
     let ps = if path.exists() {
         let ps = ParamStore::load(&path)?;
@@ -74,9 +77,9 @@ pub fn setup() -> Result<(Runtime, ParamStore)> {
 }
 
 /// Train one experiment variant, recording to results/<run>.jsonl.
-pub fn run_variant<'rt>(rt: &'rt Runtime, base: &ParamStore,
-                        cfg: TrainerConfig, run: &str)
-                        -> Result<(Trainer<'rt>, f64)> {
+pub fn run_variant(rt: &Arc<Runtime>, base: &ParamStore,
+                   cfg: TrainerConfig, run: &str)
+                   -> Result<(Trainer, f64)> {
     eprintln!("[benchkit] variant {run}: {} steps, obj={}, rollout={}, \
                uaq={}", cfg.steps, cfg.objective.kind.name(),
               cfg.rollout_mode.tag(), cfg.uaq_scale);

@@ -5,7 +5,9 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::rl::{Algo, Objective, ObjectiveKind, RolloutPath, TrainerConfig};
+use crate::coordinator::StripePolicy;
+use crate::rl::{Algo, Objective, ObjectiveKind, RolloutExec, RolloutPath,
+                TrainerConfig};
 use crate::runtime::QuantMode;
 use crate::util::json::Json;
 
@@ -158,6 +160,8 @@ pub fn to_json(cfg: &TrainerConfig) -> Json {
         ("prune_rollouts", Json::Bool(cfg.prune_rollouts)),
         ("prune_min_finished", Json::num(cfg.prune_min_finished as f64)),
         ("rollout_engines", Json::num(cfg.rollout_engines as f64)),
+        ("rollout_exec", Json::str(cfg.rollout_exec.name())),
+        ("rollout_stripe", Json::str(cfg.rollout_stripe.name())),
         ("min_prefill_batch", Json::num(cfg.min_prefill_batch as f64)),
         ("requantize_every", Json::num(cfg.requantize_every as f64)),
         ("analyze_every", Json::num(cfg.analyze_every as f64)),
@@ -179,6 +183,13 @@ pub fn from_json(j: &Json) -> Result<TrainerConfig> {
     }
     if let Some(p) = j.get("rollout_path").and_then(|v| v.as_str()) {
         cfg.rollout_path = RolloutPath::parse(p).context("bad rollout_path")?;
+    }
+    if let Some(x) = j.get("rollout_exec").and_then(|v| v.as_str()) {
+        cfg.rollout_exec = RolloutExec::parse(x).context("bad rollout_exec")?;
+    }
+    if let Some(s) = j.get("rollout_stripe").and_then(|v| v.as_str()) {
+        cfg.rollout_stripe =
+            StripePolicy::parse(s).context("bad rollout_stripe")?;
     }
     if let Some(s) = j.get("suite").and_then(|v| v.as_str()) {
         cfg.suite = s.to_string();
@@ -245,13 +256,21 @@ mod tests {
         let mut cfg = dapo_aime();
         cfg.rollout_path = RolloutPath::Scheduler;
         cfg.rollout_engines = 3;
+        cfg.rollout_exec = RolloutExec::Threaded;
+        cfg.rollout_stripe = StripePolicy::LeastLoaded;
         cfg.min_prefill_batch = 4;
         cfg.prune_rollouts = false;
         cfg.prune_min_finished = 5;
         let j = to_json(&cfg);
         let back = from_json(&j).unwrap();
         assert_eq!(back.rollout_engines, 3);
+        assert_eq!(back.rollout_exec, RolloutExec::Threaded);
+        assert_eq!(back.rollout_stripe, StripePolicy::LeastLoaded);
         assert_eq!(back.min_prefill_batch, 4);
+        // defaults stay inline/round-robin (absent keys)
+        let d = from_json(&Json::obj(vec![])).unwrap();
+        assert_eq!(d.rollout_exec, RolloutExec::Inline);
+        assert_eq!(d.rollout_stripe, StripePolicy::RoundRobin);
         assert!(!back.prune_rollouts);
         assert_eq!(back.prune_min_finished, 5);
         assert_eq!(back.algo, cfg.algo);

@@ -3,18 +3,27 @@
 //! scheduler drives (continuous batching); bulk training rollouts use the
 //! fused `generate_*` artifacts instead (runtime::exec::generate).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::runtime::{EngineWeights, HostTensor, Runtime};
 
 /// What the [`Scheduler`](super::Scheduler) needs from an execution backend:
-/// a fixed number of KV slots, batched prefill into chosen slots, and one
-/// lockstep decode step over (slot, pos, token) rows.
+/// a fixed number of KV slots, batched prefill into chosen slots, one
+/// lockstep decode step over (slot, pos, token) rows, and an in-flight
+/// weight swap (hot requantization).
 ///
 /// [`StepEngine`] is the production implementation (PJRT artifacts);
 /// [`MockEngine`](super::mock::MockEngine) is the artifact-free stand-in the
 /// property tests drive random request mixes through.
 pub trait DecodeEngine {
+    /// Weight payload [`DecodeEngine::swap_weights`] installs.  `Send +
+    /// 'static` because the threaded [`RolloutService`](super::RolloutService)
+    /// ships fresh weights to engine-owning worker threads over a channel;
+    /// `Clone` because one requantization fans out to every replica.
+    type Weights: Clone + Send + 'static;
+
     /// Number of concurrent KV slots (the continuous-batching width B).
     fn slot_count(&self) -> usize;
 
@@ -35,12 +44,22 @@ pub trait DecodeEngine {
     /// scheduler forks within a single admission batch, before any decode
     /// tick advances the source).
     fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()>;
+
+    /// Install freshly (re)quantized weights without touching the KV caches
+    /// or slot state — the in-flight requantization step (QuRL
+    /// `requantize_every` at sub-step granularity).  Sequences already
+    /// decoding continue under the new weights from their next step; their
+    /// prompt KV stays as computed under the old weights, which is exactly
+    /// the bounded off-policy drift the QuRL objectives (TIS/ACR) absorb.
+    fn swap_weights(&mut self, w: Self::Weights);
 }
 
 /// Forward through mutable references so callers can keep owning an engine
 /// while lending it to a [`Scheduler`](super::Scheduler) (which owns its
 /// `E: DecodeEngine` — a borrowed engine is just `E = &mut Engine`).
 impl<E: DecodeEngine> DecodeEngine for &mut E {
+    type Weights = E::Weights;
+
     fn slot_count(&self) -> usize {
         (**self).slot_count()
     }
@@ -57,11 +76,20 @@ impl<E: DecodeEngine> DecodeEngine for &mut E {
     fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()> {
         (**self).fork_kv(src_slot, dst_slots)
     }
+
+    fn swap_weights(&mut self, w: Self::Weights) {
+        (**self).swap_weights(w)
+    }
 }
 
 /// Persistent decode state across steps.
-pub struct StepEngine<'rt> {
-    rt: &'rt Runtime,
+///
+/// Owns its runtime handle (`Arc<Runtime>`) rather than borrowing it, so an
+/// engine is `'static` and a worker thread can build one around a runtime it
+/// opened itself — the PJRT client and artifact cache never cross a thread
+/// boundary (they are not `Send`); only plain weight/request data does.
+pub struct StepEngine {
+    rt: Arc<Runtime>,
     pub weights: EngineWeights,
     /// [L, B, H, S, Dh] caches, host-resident between artifact calls
     cache_k: Vec<f32>,
@@ -70,14 +98,29 @@ pub struct StepEngine<'rt> {
     pub batch: usize,
 }
 
-impl<'rt> StepEngine<'rt> {
-    pub fn new(rt: &'rt Runtime, weights: EngineWeights) -> StepEngine<'rt> {
+impl StepEngine {
+    /// Worker factory for the threaded
+    /// [`RolloutService`](super::RolloutService): runs *inside* the worker
+    /// thread, opening a private `Runtime` from `dir` (PJRT clients and
+    /// compiled executables are not `Send`, so every worker must own its
+    /// whole artifact stack) and wrapping `weights` in a fresh engine.
+    /// This is the single definition of that invariant — the trainer and
+    /// `qurl serve` both build their worker fleets from it.
+    pub fn factory(dir: std::path::PathBuf, weights: EngineWeights)
+                   -> super::service::EngineFactory<StepEngine> {
+        Box::new(move || -> Result<StepEngine> {
+            let rt = Arc::new(Runtime::open(&dir)?);
+            Ok(StepEngine::new(&rt, weights))
+        })
+    }
+
+    pub fn new(rt: &Arc<Runtime>, weights: EngineWeights) -> StepEngine {
         let m = rt.manifest();
         let kv_shape = vec![m.n_layers, m.rollout_batch, m.n_heads, m.max_seq,
                             m.head_dim];
         let n: usize = kv_shape.iter().product();
         StepEngine {
-            rt,
+            rt: rt.clone(),
             weights,
             cache_k: vec![0.0; n],
             cache_v: vec![0.0; n],
@@ -107,7 +150,9 @@ impl<'rt> StepEngine<'rt> {
 
 }
 
-impl<'rt> DecodeEngine for StepEngine<'rt> {
+impl DecodeEngine for StepEngine {
+    type Weights = EngineWeights;
+
     fn slot_count(&self) -> usize {
         self.batch
     }
@@ -239,5 +284,15 @@ impl<'rt> DecodeEngine for StepEngine<'rt> {
             }
         }
         Ok(())
+    }
+
+    /// Hot weight swap: replace only the weight tensors fed to the next
+    /// prefill/decode artifact call.  KV caches and slot assignments are
+    /// untouched, so a requantization no longer costs an engine rebuild (the
+    /// pre-refactor `service = None` teardown re-allocated and re-zeroed
+    /// every replica's caches).  The precision mode may change too — the
+    /// artifact name is derived from the installed weights per call.
+    fn swap_weights(&mut self, w: EngineWeights) {
+        self.weights = w;
     }
 }

@@ -19,6 +19,11 @@ pub struct MockEngine {
     pub eos_id: i32,
     /// rolling per-slot sequence hash (drives the logits)
     state: Vec<u64>,
+    /// "weight" signature mixed into every logit; 0 (the default) is the
+    /// identity, so unswapped behavior matches the pre-swap_weights engine
+    /// bit-for-bit.  [`DecodeEngine::swap_weights`] replaces it — tests
+    /// observe a hot requantization as a change in greedy outputs.
+    weights: u64,
     /// bookkeeping the tests assert on
     pub prefill_calls: usize,
     pub prefill_rows: usize,
@@ -26,6 +31,9 @@ pub struct MockEngine {
     pub forked_slots: usize,
     pub decode_calls: usize,
     pub max_pos_seen: i32,
+    /// fail the next N decode calls with an error (worker/tick error-path
+    /// tests); each failure consumes one count, so the engine recovers
+    pub fail_decodes: usize,
 }
 
 fn mix(h: u64, x: u64) -> u64 {
@@ -44,27 +52,33 @@ impl MockEngine {
             max_seq,
             eos_id,
             state: vec![0; batch],
+            weights: 0,
             prefill_calls: 0,
             prefill_rows: 0,
             fork_calls: 0,
             forked_slots: 0,
             decode_calls: 0,
             max_pos_seen: 0,
+            fail_decodes: 0,
         }
     }
 
-    /// Logits for the next token of a sequence whose rolling hash is `h`.
-    /// Greedy-decoding this stream yields a pseudo-random but fully
-    /// deterministic token sequence; EOS surfaces with probability
-    /// ~1/vocab per step so request lifetimes vary.
+    /// Logits for the next token of a sequence whose rolling hash is `h`,
+    /// under the currently installed weight signature.  Greedy-decoding
+    /// this stream yields a pseudo-random but fully deterministic token
+    /// sequence; EOS surfaces with probability ~1/vocab per step so request
+    /// lifetimes vary.
     fn logits_for(&self, h: u64) -> Vec<f32> {
         (0..self.vocab)
-            .map(|v| (mix(h, v as u64 + 1) % 1024) as f32 / 1024.0)
+            .map(|v| (mix(h ^ self.weights, v as u64 + 1) % 1024) as f32
+                 / 1024.0)
             .collect()
     }
 }
 
 impl DecodeEngine for MockEngine {
+    type Weights = u64;
+
     fn slot_count(&self) -> usize {
         self.batch
     }
@@ -92,6 +106,10 @@ impl DecodeEngine for MockEngine {
     }
 
     fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
+        if self.fail_decodes > 0 {
+            self.fail_decodes -= 1;
+            anyhow::bail!("injected decode failure (fail_decodes)");
+        }
         self.decode_calls += 1;
         assert!(rows.len() <= self.batch, "decode wider than slot count");
         let mut out = Vec::with_capacity(rows.len());
@@ -120,5 +138,11 @@ impl DecodeEngine for MockEngine {
             self.state[dst] = self.state[src_slot];
         }
         Ok(())
+    }
+
+    /// Swap the weight signature; per-slot sequence state survives, exactly
+    /// like the real engine's KV caches survive a hot requantization.
+    fn swap_weights(&mut self, w: u64) {
+        self.weights = w;
     }
 }

@@ -9,17 +9,28 @@
 //!   `--rollout-path scheduler` and `qurl serve` run on:
 //!
 //! ```text
-//! rl::Trainer ── GroupSpec ──▶ RolloutService      (service.rs)
-//!                                │  groups, rewards, in-flight pruning,
-//!                                │  round-robin striping over engines
-//!                                ├──▶ Scheduler #0  (scheduler.rs)
-//!                                │     │  FIFO queue → KV slots, batched
-//!                                │     │  shared-prefix prefill (fork_kv),
-//!                                │     │  lockstep decode, cancel()
-//!                                │     └──▶ DecodeEngine (engine.rs)
-//!                                │            StepEngine: PJRT artifacts
-//!                                │            MockEngine: propcheck stand-in
-//!                                └──▶ Scheduler #1 ──▶ DecodeEngine ...
+//! rl::Trainer ── GroupSpec ──▶ RolloutService            (service.rs)
+//!   │                            │ groups, rewards, in-flight pruning,
+//!   │ requantize:                │ placement: --stripe rr|least-loaded
+//!   │ push_weights(W)            │ (deterministic, submission-order)
+//!   │ ──▶ WeightEpoch++          │
+//!   │                            ├─ cmd chan ──▶ worker thread 0
+//!   │   commands: Submit(group)  │               owns: Runtime (own PJRT
+//!   │     Cancel(uid)            │               client), DecodeEngine,
+//!   │     SwapWeights(W, epoch)  │               Scheduler  (scheduler.rs)
+//!   │     TakeStats / AbortAll   │                 │ FIFO queue → KV slots,
+//!   │                            │                 │ shared-prefix prefill
+//!   │   events: Finished(result) │                 │ (fork_kv), lockstep
+//!   │     CancelOutcome, Stats,  │                 │ decode, cancel(),
+//!   │     TickError, Aborted     │                 │ swap_weights()
+//!   │                            │                 └──▶ DecodeEngine
+//!   │                            │                       (engine.rs)
+//!   │                            ├─ cmd chan ──▶ worker thread 1 ─▶ ...
+//!   │                            │
+//!   │                            └─ inline backend: same schedulers,
+//!   │                               ticked round-robin on this thread
+//!   ▼                              (reference semantics, parity-tested)
+//! GroupResults (submission order, bit-identical across backends)
 //! ```
 //!
 //! The [`Scheduler`] stays a request-level primitive: continuous batching
@@ -27,11 +38,25 @@
 //! early-finished (or cancelled) sequences free their KV slot immediately
 //! and queued requests backfill it.  [`RolloutService`] adds the RL-aware
 //! layer on top — it understands *groups*, scores members as they finish,
-//! prunes decided groups mid-flight, and stripes groups across several
-//! engines behind one submission interface.  Greedy decode through the
-//! whole stack is bit-identical to the bulk path (integration-tested,
-//! including fork_kv prefill), making the paths interchangeable serving
-//! backends.
+//! prunes decided groups mid-flight (issuing cross-thread cancel
+//! directives on the threaded backend), places groups across replicas per
+//! [`StripePolicy`], and hot-swaps freshly requantized weights into live
+//! engines ([`RolloutService::push_weights`] → [`WeightEpoch`]) instead of
+//! tearing replicas down.
+//!
+//! Threading model: PJRT clients, compiled executables and the artifact
+//! cache are **not `Send`**, so the threaded backend never moves an engine
+//! across threads — each worker runs an [`EngineFactory`] *inside* its
+//! thread (for [`StepEngine`] that opens a private `Runtime`) and only
+//! plain data (requests, weights, results, stats) crosses the channels.
+//! [`MockEngine`] workers are plain values and exercise the same machinery
+//! in the host-only test suites.
+//!
+//! Greedy decode through the whole stack is bit-identical to the bulk path
+//! (integration-tested, including fork_kv prefill), and all service
+//! outputs are bit-identical across inline/threaded execution and stripe
+//! policies (property-tested) — placement and thread interleaving change
+//! wall-clock, never learning.
 
 pub mod engine;
 pub mod kv;
@@ -46,5 +71,5 @@ pub use kv::SlotMap;
 pub use mock::MockEngine;
 pub use request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 pub use scheduler::Scheduler;
-pub use service::{GroupMember, GroupResult, GroupSpec, PrunePolicy,
-                  RolloutService};
+pub use service::{EngineFactory, GroupMember, GroupResult, GroupSpec,
+                  PrunePolicy, RolloutService, StripePolicy, WeightEpoch};

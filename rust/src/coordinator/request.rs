@@ -71,6 +71,12 @@ pub struct SchedulerStats {
     /// sum over completed requests of time spent queued before prefill
     pub queue_wait_sum_s: f64,
     pub wall_s: f64,
+    /// weight generation the engine currently decodes with (the service's
+    /// [`WeightEpoch`](super::service::WeightEpoch) counter at the last
+    /// [`Scheduler::swap_weights`]); 0 = the weights the engine was built
+    /// with.  A *level*, not a delta: merging takes the max, and
+    /// [`Scheduler::take_stats`] preserves it across drains.
+    pub weight_epoch: u64,
 }
 
 impl SchedulerStats {
@@ -124,5 +130,6 @@ impl SchedulerStats {
         self.occupancy_sum += other.occupancy_sum;
         self.queue_wait_sum_s += other.queue_wait_sum_s;
         self.wall_s += other.wall_s;
+        self.weight_epoch = self.weight_epoch.max(other.weight_epoch);
     }
 }

@@ -117,6 +117,47 @@ impl<E: DecodeEngine> Scheduler<E> {
         self.queue.len() + self.active.len()
     }
 
+    /// Install freshly quantized engine weights between ticks (hot
+    /// requantization).  `epoch` is the service's
+    /// [`WeightEpoch`](super::service::WeightEpoch) counter, surfaced in
+    /// [`SchedulerStats::weight_epoch`] so metric rows show which weight
+    /// generation served each step.  Queued and active requests are
+    /// untouched; their next decode simply runs under the new weights.
+    pub fn swap_weights(&mut self, w: E::Weights, epoch: u64) {
+        self.engine.swap_weights(w);
+        self.stats.weight_epoch = epoch;
+    }
+
+    /// Cancel every queued and active request at once (error recovery /
+    /// shutdown): all KV slots recycle, every removed request counts as
+    /// cancelled, so the `completed + cancelled == submitted` ledger stays
+    /// balanced even after an aborted run.  Returns how many requests were
+    /// aborted.  Unlike [`Scheduler::cancel`] the partials are dropped —
+    /// callers abort precisely when the outputs are no longer trustworthy.
+    pub fn abort_all(&mut self) -> usize {
+        let mut n = 0;
+        while self.queue.pop_front().is_some() {
+            self.stats.cancelled += 1;
+            n += 1;
+        }
+        for a in self.active.drain(..) {
+            self.slots.release(a.slot, a.req.id);
+            self.stats.cancelled += 1;
+            n += 1;
+        }
+        n
+    }
+
+    /// Drain the counters for this scheduler, preserving the weight-epoch
+    /// *level* (it is a generation marker, not a per-run delta — resetting
+    /// it to 0 would make a later stats row claim the engine regressed to
+    /// its initial weights).
+    pub fn take_stats(&mut self) -> SchedulerStats {
+        let st = std::mem::take(&mut self.stats);
+        self.stats.weight_epoch = st.weight_epoch;
+        st
+    }
+
     /// Remove a request wherever it currently lives — still queued (its
     /// prefill never happens) or actively decoding (its KV slot frees
     /// immediately).  Returns the partial output with

@@ -17,19 +17,60 @@
 //!   caller's reward closure) and, once [`PrunePolicy::min_finished`]
 //!   members agree, cancels the group's queued/active remainder via
 //!   [`Scheduler::cancel`] — freeing slots for groups that still matter;
-//! * **multi-engine striping** — the service fronts several engines (one
-//!   scheduler each, e.g. one per precision or replica) behind a single
-//!   submission interface, striping whole groups round-robin (fork_kv is
-//!   intra-engine) and merging the per-engine [`SchedulerStats`].
+//! * **multi-engine execution** — the service fronts several engines (one
+//!   scheduler each) behind a single submission interface, placing whole
+//!   groups per [`StripePolicy`] (fork_kv is intra-engine) and merging the
+//!   per-engine [`SchedulerStats`].
+//!
+//! # Execution backends
+//!
+//! The service runs its engines through one of two backends:
+//!
+//! * **inline** ([`RolloutService::new`]) — one thread round-robins the
+//!   schedulers; zero threading overhead, works for borrowed engines, and
+//!   is the reference semantics every other mode is parity-tested against;
+//! * **threaded** ([`RolloutService::threaded`]) — one worker thread per
+//!   engine replica.  Each worker *constructs its own engine* from a
+//!   `Send` factory (for [`StepEngine`](super::StepEngine) that means
+//!   opening its own `Runtime`: PJRT clients are not `Send`, so no XLA
+//!   state ever crosses a thread), owns a [`Scheduler`], and ticks it
+//!   whenever work is pending.  The control thread feeds it over an mpsc
+//!   command channel (submissions, cancels, weight swaps, stats drains)
+//!   and collects [`RolloutResult`]s from a shared completion channel, so
+//!   reward scoring and cross-thread pruning stay online while all
+//!   replicas decode in parallel.
+//!
+//! **Determinism:** a request's output depends only on its prompt, seed
+//! and the engine weights (the scheduler isolation contract), and group
+//! placement is computed from submission-time load estimates — never from
+//! live queue depths.  Completed outputs are therefore bit-for-bit
+//! identical across inline/threaded and across stripe policies
+//! (property-tested); threading changes wall-clock and the *lengths of
+//! cancelled partials* (a cancel directive lands asynchronously), never a
+//! completed member.
+//!
+//! # In-flight requantization
+//!
+//! [`RolloutService::push_weights`] ships freshly quantized weights to
+//! every engine and bumps the monotone [`WeightEpoch`]; workers install
+//! them between ticks ([`DecodeEngine::swap_weights`]) without touching KV
+//! state, so `requantize_every` works at sub-step granularity and the old
+//! "tear the service down and rebuild every replica" path is gone.  The
+//! epoch lands in [`SchedulerStats::weight_epoch`] for observability.
 //!
 //! The trainer's rollout path reduces to "submit [`GroupSpec`]s, collect
-//! [`GroupResult`]s"; group expansion, per-member seeds and reward-driven
-//! cancellation all live here.
+//! [`GroupResult`]s"; group expansion, per-member seeds
+//! ([`member_seed`]), reward-driven cancellation and placement all live
+//! here.
 
 use std::collections::HashMap;
-use std::time::Instant;
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+
+use crate::util::rng::member_seed;
 
 use super::engine::DecodeEngine;
 use super::request::{FinishReason, RolloutRequest, RolloutResult,
@@ -47,8 +88,9 @@ pub struct GroupSpec {
     pub max_new: usize,
     pub temperature: f32,
     pub top_p: f32,
-    /// base sampling seed; member `i` decodes with a stream derived from
-    /// `seed + i` so siblings diverge under temperature sampling
+    /// base sampling seed; member `i` decodes with the stream
+    /// [`member_seed`]`(seed, i)` so siblings diverge under temperature
+    /// sampling
     pub seed: u64,
 }
 
@@ -67,7 +109,7 @@ pub struct GroupMember {
 #[derive(Clone, Debug)]
 pub struct GroupResult {
     pub group_id: usize,
-    /// engine index the group was striped onto
+    /// engine index the group was placed on
     pub engine: usize,
     /// member order matches submission order within the group
     pub members: Vec<GroupMember>,
@@ -124,6 +166,55 @@ impl PrunePolicy {
     }
 }
 
+/// How `submit_group` places groups onto engine replicas.
+///
+/// Both policies are *deterministic in the submission sequence*: placement
+/// never reads live queue depth or completion timing, so a workload's
+/// placement (and therefore its outputs) is identical across inline and
+/// threaded execution and across repeated runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StripePolicy {
+    /// Blind rotation: group `k` lands on engine `k % n`.
+    RoundRobin,
+    /// Place each group on the engine with the fewest *estimated*
+    /// outstanding decode tokens, `min(prompt_len + max_new, max_seq) ×
+    /// group_size` summed over the groups already placed this run.  A
+    /// heavy group (long prompt, large budget, big group) stops attracting
+    /// neighbors until the other replicas catch up — round-robin instead
+    /// piles every `n`-th heavy group onto the same engine.
+    LeastLoaded,
+}
+
+impl StripePolicy {
+    pub fn parse(s: &str) -> Option<StripePolicy> {
+        match s {
+            "rr" | "round-robin" | "roundrobin" => Some(StripePolicy::RoundRobin),
+            "least-loaded" | "ll" | "leastloaded" => Some(StripePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StripePolicy::RoundRobin => "rr",
+            StripePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Monotone counter identifying the weight generation engines decode with.
+/// Bumped by [`RolloutService::push_weights`]; observable per engine in
+/// [`SchedulerStats::weight_epoch`].  Epoch 0 is the weights the engines
+/// were built with.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct WeightEpoch(pub u64);
+
+/// Factory an engine worker thread runs to build its own engine.  `Send`
+/// so it can move into the thread; the engine it returns never leaves that
+/// thread, which is what lets non-`Send` engines (PJRT-backed
+/// [`StepEngine`](super::StepEngine)) run threaded.
+pub type EngineFactory<E> = Box<dyn FnOnce() -> Result<E> + Send>;
+
 struct GroupState {
     group_id: usize,
     engine: usize,
@@ -134,84 +225,356 @@ struct GroupState {
     finished: usize,
     cancelled: usize,
     pruned: bool,
+    /// cancel directives were already issued for this group (at most once)
+    cancel_requested: bool,
+}
+
+/// Control-thread → worker commands (threaded backend).
+enum Command<W> {
+    /// submit a whole group's requests (contiguous, so they co-admit and
+    /// share one prefix prefill whenever slots allow)
+    Submit(Vec<RolloutRequest>),
+    Cancel(u64),
+    SwapWeights(W, WeightEpoch),
+    Configure { min_prefill_batch: usize, share_prefix: bool },
+    TakeStats,
+    AbortAll,
+    Shutdown,
+}
+
+/// Worker → control-thread events.  Not generic: only plain result data
+/// crosses back.
+enum Event {
+    /// startup handshake: the factory ran (engine built or failed)
+    Ready(usize, Result<()>),
+    Finished(usize, RolloutResult),
+    /// reply to `Cancel`: `None` means the request had already completed
+    /// (its `Finished` event is in flight or was already delivered)
+    CancelOutcome(u64, Option<RolloutResult>),
+    /// a tick failed; the worker aborted its scheduler (slots recycled,
+    /// ledger balanced) before reporting, and stays servable
+    TickError(usize, anyhow::Error),
+    Stats(usize, SchedulerStats),
+    Aborted(usize),
+}
+
+struct WorkerHandle<W> {
+    cmd: Sender<Command<W>>,
+    join: Option<JoinHandle<()>>,
+}
+
+enum Backend<E: DecodeEngine> {
+    Inline(Vec<Scheduler<E>>),
+    Threaded {
+        workers: Vec<WorkerHandle<E::Weights>>,
+        events: Receiver<Event>,
+    },
+}
+
+/// Engine-worker main loop: build the engine, own a scheduler, drain
+/// commands (they outrank decode work — a cancel or weight swap must land
+/// before the next tick), tick when requests are pending, block when idle.
+fn worker_loop<E: DecodeEngine>(idx: usize, factory: EngineFactory<E>,
+                                cmds: Receiver<Command<E::Weights>>,
+                                events: Sender<Event>, max_seq: usize,
+                                eos_id: i32) {
+    let engine = match factory() {
+        Ok(e) => {
+            let _ = events.send(Event::Ready(idx, Ok(())));
+            e
+        }
+        Err(e) => {
+            let _ = events.send(Event::Ready(idx, Err(e)));
+            return;
+        }
+    };
+    let mut sched = Scheduler::new(engine, max_seq, eos_id);
+    loop {
+        let cmd = if sched.pending() == 0 {
+            // idle: park until the next command (or service drop)
+            match cmds.recv() {
+                Ok(c) => Some(c),
+                Err(_) => return,
+            }
+        } else {
+            match cmds.try_recv() {
+                Ok(c) => Some(c),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        };
+        if let Some(cmd) = cmd {
+            match cmd {
+                Command::Submit(reqs) => {
+                    for r in reqs {
+                        sched.submit(r);
+                    }
+                }
+                Command::Cancel(uid) => {
+                    let out = sched.cancel(uid);
+                    if events.send(Event::CancelOutcome(uid, out)).is_err() {
+                        return;
+                    }
+                }
+                Command::SwapWeights(w, epoch) => {
+                    sched.swap_weights(w, epoch.0);
+                }
+                Command::Configure { min_prefill_batch, share_prefix } => {
+                    sched.min_prefill_batch = min_prefill_batch.max(1);
+                    sched.share_prefix = share_prefix;
+                }
+                Command::TakeStats => {
+                    let st = sched.take_stats();
+                    if events.send(Event::Stats(idx, st)).is_err() {
+                        return;
+                    }
+                }
+                Command::AbortAll => {
+                    sched.abort_all();
+                    if events.send(Event::Aborted(idx)).is_err() {
+                        return;
+                    }
+                }
+                Command::Shutdown => return,
+            }
+            continue; // drain every queued command before the next tick
+        }
+        match sched.tick() {
+            Ok(done) => {
+                for r in done {
+                    if events.send(Event::Finished(idx, r)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(e) => {
+                // leave no half-decoded state behind: abort everything
+                // (slots recycle, ledger balances) before reporting, so
+                // this worker stays servable for the next run
+                sched.abort_all();
+                if events.send(Event::TickError(idx, e)).is_err() {
+                    return;
+                }
+            }
+        }
+    }
 }
 
 pub struct RolloutService<E: DecodeEngine> {
-    scheds: Vec<Scheduler<E>>,
+    backend: Backend<E>,
     groups: Vec<GroupState>,
     /// request id -> (group index, member index)
     by_uid: HashMap<u64, (usize, usize)>,
     next_uid: u64,
-    /// round-robin striping cursor
+    /// round-robin placement cursor
     next_engine: usize,
+    /// estimated outstanding decode tokens per engine, accumulated from
+    /// submissions and reset when a run drains — NEVER decremented on
+    /// completion (that would make placement depend on thread timing)
+    est_load: Vec<u64>,
+    pub stripe: StripePolicy,
+    epoch: WeightEpoch,
+    /// groups whose in-flight remainder was pruned, per engine; folded
+    /// into the drained stats (service-side so both backends agree)
+    pruned_groups: Vec<usize>,
+    /// per-engine view of the last [`Self::take_stats`] drain
+    last_engine_stats: Vec<SchedulerStats>,
+    max_seq: usize,
+    /// last applied scheduler knobs — threaded Configure commands resend
+    /// absolute values, so each setter must know the other's current state
+    cfg_min_prefill: usize,
+    cfg_share_prefix: bool,
     pub prune: PrunePolicy,
     /// service-loop wall time, merged into the drained stats
     wall_s: f64,
 }
 
 impl<E: DecodeEngine> RolloutService<E> {
+    /// Inline backend: the calling thread drives all schedulers
+    /// round-robin.  Reference semantics; works for borrowed engines.
     pub fn new(engines: Vec<E>, max_seq: usize, eos_id: i32) -> Self {
         assert!(!engines.is_empty(), "service needs at least one engine");
-        let scheds = engines
+        let scheds: Vec<Scheduler<E>> = engines
             .into_iter()
             .map(|e| Scheduler::new(e, max_seq, eos_id))
             .collect();
+        let n = scheds.len();
+        Self::with_backend(Backend::Inline(scheds), n, max_seq)
+    }
+
+    fn with_backend(backend: Backend<E>, n: usize, max_seq: usize) -> Self {
         RolloutService {
-            scheds,
+            backend,
             groups: Vec::new(),
             by_uid: HashMap::new(),
             next_uid: 0,
             next_engine: 0,
+            est_load: vec![0; n],
+            stripe: StripePolicy::RoundRobin,
+            epoch: WeightEpoch::default(),
+            pruned_groups: vec![0; n],
+            last_engine_stats: Vec::new(),
+            max_seq,
+            cfg_min_prefill: 1,
+            cfg_share_prefix: true,
             prune: PrunePolicy::off(),
             wall_s: 0.0,
         }
     }
 
     pub fn engines(&self) -> usize {
-        self.scheds.len()
+        self.est_load.len()
+    }
+
+    /// True when engine replicas decode on their own worker threads.
+    pub fn is_threaded(&self) -> bool {
+        matches!(self.backend, Backend::Threaded { .. })
+    }
+
+    /// Current weight generation (bumped by [`Self::push_weights`]).
+    pub fn weight_epoch(&self) -> WeightEpoch {
+        self.epoch
+    }
+
+    /// Per-engine counters from the last [`Self::take_stats`] drain — the
+    /// per-replica observability view (striping imbalance, per-engine
+    /// decode volume, weight epoch).
+    pub fn last_engine_stats(&self) -> &[SchedulerStats] {
+        &self.last_engine_stats
     }
 
     /// Apply the dynamic-batching admission floor to every engine queue.
     pub fn set_min_prefill_batch(&mut self, n: usize) {
-        for s in &mut self.scheds {
-            s.min_prefill_batch = n.max(1);
-        }
+        self.configure(n.max(1), None);
     }
 
     /// Toggle group-shared prefix prefill (on by default; off reproduces
     /// the per-request PR-1 prefill for baselines).
     pub fn set_share_prefix(&mut self, on: bool) {
-        for s in &mut self.scheds {
-            s.share_prefix = on;
+        self.configure(0, Some(on));
+    }
+
+    fn configure(&mut self, min_prefill_batch: usize, share: Option<bool>) {
+        match &mut self.backend {
+            Backend::Inline(scheds) => {
+                for s in scheds.iter_mut() {
+                    if min_prefill_batch > 0 {
+                        s.min_prefill_batch = min_prefill_batch;
+                    }
+                    if let Some(on) = share {
+                        s.share_prefix = on;
+                    }
+                }
+            }
+            Backend::Threaded { workers, .. } => {
+                // workers need absolute values: resend both knobs
+                for w in workers.iter() {
+                    let _ = w.cmd.send(Command::Configure {
+                        min_prefill_batch: if min_prefill_batch > 0 {
+                            min_prefill_batch
+                        } else {
+                            self.cfg_min_prefill
+                        },
+                        share_prefix: share.unwrap_or(self.cfg_share_prefix),
+                    });
+                }
+            }
         }
+        if min_prefill_batch > 0 {
+            self.cfg_min_prefill = min_prefill_batch;
+        }
+        if let Some(on) = share {
+            self.cfg_share_prefix = on;
+        }
+    }
+
+    /// Push freshly (re)quantized weights to every engine replica and bump
+    /// the [`WeightEpoch`].  Inline engines swap immediately; threaded
+    /// workers swap between ticks when the command reaches them — either
+    /// way no KV cache, slot state or thread is rebuilt (this replaces the
+    /// old requantize path's full service teardown).  Returns the new
+    /// epoch.
+    pub fn push_weights(&mut self, w: E::Weights) -> WeightEpoch {
+        self.epoch.0 += 1;
+        let epoch = self.epoch;
+        match &mut self.backend {
+            Backend::Inline(scheds) => {
+                for s in scheds.iter_mut() {
+                    s.swap_weights(w.clone(), epoch.0);
+                }
+            }
+            Backend::Threaded { workers, .. } => {
+                for wk in workers.iter() {
+                    let _ = wk.cmd.send(Command::SwapWeights(w.clone(), epoch));
+                }
+            }
+        }
+        epoch
+    }
+
+    /// Deterministic placement for one group; updates the load estimate.
+    fn place(&mut self, spec: &GroupSpec) -> usize {
+        let n = self.est_load.len();
+        let engine = match self.stripe {
+            StripePolicy::RoundRobin => {
+                let e = self.next_engine;
+                self.next_engine = (e + 1) % n;
+                e
+            }
+            StripePolicy::LeastLoaded => {
+                let mut best = 0;
+                for e in 1..n {
+                    if self.est_load[e] < self.est_load[best] {
+                        best = e;
+                    }
+                }
+                best
+            }
+        };
+        let per_member = spec
+            .prompt
+            .len()
+            .saturating_add(spec.max_new)
+            .min(self.max_seq) as u64;
+        let cost = per_member.saturating_mul(spec.group_size as u64);
+        self.est_load[engine] = self.est_load[engine].saturating_add(cost);
+        engine
     }
 
     /// Submit a group.  All members land on one engine (fork_kv is an
     /// intra-engine cache copy) contiguously, so they admit together and
-    /// share one prefill whenever slots allow; groups stripe round-robin
-    /// across engines.
+    /// share one prefill whenever slots allow; groups are placed per
+    /// [`Self::stripe`].  Threaded workers may start prefilling
+    /// immediately — submission streams.
     pub fn submit_group(&mut self, spec: GroupSpec) {
         assert!(spec.group_size > 0, "empty group");
-        let engine = self.next_engine;
-        self.next_engine = (self.next_engine + 1) % self.scheds.len();
+        let engine = self.place(&spec);
         let gi = self.groups.len();
         let mut uids = Vec::with_capacity(spec.group_size);
+        let mut reqs = Vec::with_capacity(spec.group_size);
         for member in 0..spec.group_size {
             let uid = self.next_uid;
             self.next_uid += 1;
             self.by_uid.insert(uid, (gi, member));
-            self.scheds[engine].submit(RolloutRequest {
+            reqs.push(RolloutRequest {
                 id: uid,
                 prompt: spec.prompt.clone(),
                 max_new: spec.max_new,
                 temperature: spec.temperature,
                 top_p: spec.top_p,
-                seed: spec
-                    .seed
-                    .wrapping_add(member as u64)
-                    .wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                seed: member_seed(spec.seed, member),
             });
             uids.push(uid);
+        }
+        match &mut self.backend {
+            Backend::Inline(scheds) => {
+                for r in reqs {
+                    scheds[engine].submit(r);
+                }
+            }
+            Backend::Threaded { workers, .. } => {
+                let _ = workers[engine].cmd.send(Command::Submit(reqs));
+            }
         }
         self.groups.push(GroupState {
             group_id: spec.group_id,
@@ -222,6 +585,7 @@ impl<E: DecodeEngine> RolloutService<E> {
             finished: 0,
             cancelled: 0,
             pruned: false,
+            cancel_requested: false,
         });
     }
 
@@ -229,29 +593,267 @@ impl<E: DecodeEngine> RolloutService<E> {
     /// (called once per completed member, with the caller's `group_id`) and
     /// pruning decided groups in flight per [`Self::prune`].  Returns the
     /// resolved groups in submission order.
+    ///
+    /// On an engine error the service aborts every outstanding request,
+    /// clears its group ledger and returns the error — internal state stays
+    /// consistent and the service is immediately reusable (tested).
     pub fn run<F>(&mut self, mut reward_fn: F) -> Result<Vec<GroupResult>>
     where
         F: FnMut(usize, &RolloutResult) -> f32,
     {
         let t0 = Instant::now();
+        let threaded = self.is_threaded();
+        let out = if threaded {
+            self.run_threaded(&mut reward_fn)
+        } else {
+            self.run_inline(&mut reward_fn)
+        };
+        self.wall_s += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn run_inline<F>(&mut self, reward_fn: &mut F) -> Result<Vec<GroupResult>>
+    where
+        F: FnMut(usize, &RolloutResult) -> f32,
+    {
         loop {
             let mut progressed = false;
-            for e in 0..self.scheds.len() {
-                if self.scheds[e].pending() == 0 {
-                    continue;
-                }
+            for e in 0..self.engines() {
+                let finished = {
+                    let Backend::Inline(scheds) = &mut self.backend else {
+                        unreachable!("inline run on threaded backend")
+                    };
+                    if scheds[e].pending() == 0 {
+                        continue;
+                    }
+                    match scheds[e].tick() {
+                        Ok(f) => f,
+                        Err(err) => return self.fail(err),
+                    }
+                };
                 progressed = true;
-                let finished = self.scheds[e].tick()?;
                 for res in finished {
-                    self.absorb(res, &mut reward_fn);
+                    let directives = self.absorb(res, reward_fn);
+                    for (engine, uid) in directives {
+                        let partial = {
+                            let Backend::Inline(scheds) = &mut self.backend
+                            else {
+                                unreachable!()
+                            };
+                            scheds[engine].cancel(uid)
+                        };
+                        if let Some(p) = partial {
+                            self.record_cancel(uid, p);
+                        }
+                    }
                 }
             }
             if !progressed {
                 break;
             }
         }
-        self.wall_s += t0.elapsed().as_secs_f64();
+        self.drain_groups()
+    }
+
+    fn run_threaded<F>(&mut self, reward_fn: &mut F)
+                       -> Result<Vec<GroupResult>>
+    where
+        F: FnMut(usize, &RolloutResult) -> f32,
+    {
+        let mut unresolved: usize = self
+            .groups
+            .iter()
+            .map(|g| g.size - g.finished - g.cancelled)
+            .sum();
+        while unresolved > 0 {
+            let ev = {
+                let Backend::Threaded { events, .. } = &self.backend else {
+                    unreachable!("threaded run on inline backend")
+                };
+                // bounded wait so a dead worker (thread panic = contract
+                // violation in its engine) can't wedge the control loop
+                events.recv_timeout(Duration::from_secs(1))
+            };
+            match ev {
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let dead = {
+                        let Backend::Threaded { workers, .. } = &self.backend
+                        else {
+                            unreachable!()
+                        };
+                        workers.iter().any(|w| match &w.join {
+                            Some(j) => j.is_finished(),
+                            None => true,
+                        })
+                    };
+                    if dead {
+                        return self.fail(anyhow!(
+                            "engine worker thread died with requests \
+                             outstanding"));
+                    }
+                }
+                // a Finished/CancelOutcome for a uid no longer in by_uid is
+                // a straggler from an aborted previous run (fail() clears
+                // the ledger; a >10s-wedged worker can deliver after the
+                // abort drain gave up) — drop it, never count it against
+                // this run.  uids are globally unique (next_uid never
+                // resets), so a stale uid can't collide with a live one.
+                Ok(Event::Finished(_, res))
+                    if !self.by_uid.contains_key(&res.id) => {}
+                Ok(Event::Finished(_, res)) => {
+                    let directives = self.absorb(res, reward_fn);
+                    unresolved -= 1;
+                    for (engine, uid) in directives {
+                        let sent = {
+                            let Backend::Threaded { workers, .. } =
+                                &self.backend
+                            else {
+                                unreachable!()
+                            };
+                            workers[engine]
+                                .cmd
+                                .send(Command::Cancel(uid))
+                                .is_ok()
+                        };
+                        if !sent {
+                            return self.fail(anyhow!(
+                                "engine worker {engine} disappeared"));
+                        }
+                    }
+                }
+                Ok(Event::CancelOutcome(uid, Some(partial))) => {
+                    if self.by_uid.contains_key(&uid) {
+                        self.record_cancel(uid, partial);
+                        unresolved -= 1;
+                    }
+                }
+                // the member completed before the cancel landed; its
+                // Finished event resolves it
+                Ok(Event::CancelOutcome(_, None)) => {}
+                Ok(Event::TickError(i, e)) => {
+                    return self.fail(
+                        e.context(format!("engine worker {i} tick failed")));
+                }
+                // stale acks from a previous abort/stats exchange
+                Ok(Event::Stats(..)) | Ok(Event::Aborted(..))
+                | Ok(Event::Ready(..)) => {}
+                Err(_) => {
+                    return self.fail(anyhow!(
+                        "all engine workers disconnected"));
+                }
+            }
+        }
+        self.drain_groups()
+    }
+
+    /// Record one completed member; returns `(engine, uid)` cancel
+    /// directives for the group's outstanding siblings when the prune
+    /// policy decides the group (at most once per group).
+    fn absorb<F>(&mut self, res: RolloutResult, reward_fn: &mut F)
+                 -> Vec<(usize, u64)>
+    where
+        F: FnMut(usize, &RolloutResult) -> f32,
+    {
+        let (gi, mi) = self.by_uid[&res.id];
+        let reward = reward_fn(self.groups[gi].group_id, &res);
+        {
+            let g = &mut self.groups[gi];
+            g.finished += 1;
+            g.outcomes[mi] =
+                Some(GroupMember { result: res, reward: Some(reward) });
+        }
+        if !self.prune.enabled {
+            return Vec::new();
+        }
+        let g = &mut self.groups[gi];
+        if g.cancel_requested
+            || g.finished < self.prune.min_finished
+            || g.finished + g.cancelled >= g.size
+        {
+            return Vec::new();
+        }
+        let rewards: Vec<f32> = g
+            .outcomes
+            .iter()
+            .flatten()
+            .filter_map(|m| m.reward)
+            .collect();
+        let uniform =
+            rewards.iter().all(|&r| (r - rewards[0]).abs() <= 1e-6);
+        if !uniform {
+            return Vec::new();
+        }
+        g.cancel_requested = true;
+        g.uids
+            .iter()
+            .enumerate()
+            .filter(|&(m, _)| g.outcomes[m].is_none())
+            .map(|(_, &u)| (g.engine, u))
+            .collect()
+    }
+
+    /// A cancel directive landed: record the partial.  The group counts as
+    /// pruned only now — a directive that raced with completion saved
+    /// nothing and must not flag the group (same semantics as the old
+    /// synchronous path, where `cancel` returning `None` left the flag
+    /// unset).
+    fn record_cancel(&mut self, uid: u64, partial: RolloutResult) {
+        let (gi, mi) = self.by_uid[&uid];
+        let g = &mut self.groups[gi];
+        g.cancelled += 1;
+        g.outcomes[mi] =
+            Some(GroupMember { result: partial, reward: None });
+        if !g.pruned {
+            g.pruned = true;
+            self.pruned_groups[g.engine] += 1;
+        }
+    }
+
+    /// Error recovery: cancel everything outstanding on every engine and
+    /// clear the group ledger, so `by_uid`/`groups` are never left
+    /// half-absorbed and the service is reusable after a failed run.
+    fn fail(&mut self, err: anyhow::Error) -> Result<Vec<GroupResult>> {
+        match &mut self.backend {
+            Backend::Inline(scheds) => {
+                for s in scheds.iter_mut() {
+                    s.abort_all();
+                }
+            }
+            Backend::Threaded { workers, events } => {
+                let mut expect = 0usize;
+                for w in workers.iter() {
+                    if w.cmd.send(Command::AbortAll).is_ok() {
+                        expect += 1;
+                    }
+                }
+                // drain in-flight completions until every live worker has
+                // acknowledged the abort (per-sender FIFO: an ack follows
+                // everything that worker sent before it)
+                let mut acked = 0usize;
+                while acked < expect {
+                    match events.recv_timeout(Duration::from_secs(10)) {
+                        Ok(Event::Aborted(_)) => acked += 1,
+                        Ok(_) => {}
+                        Err(_) => break, // dead/wedged worker: stop waiting
+                    }
+                }
+            }
+        }
+        self.groups.clear();
         self.by_uid.clear();
+        for l in &mut self.est_load {
+            *l = 0;
+        }
+        Err(err)
+    }
+
+    /// Resolve the drained groups in submission order and reset per-run
+    /// placement state.
+    fn drain_groups(&mut self) -> Result<Vec<GroupResult>> {
+        self.by_uid.clear();
+        for l in &mut self.est_load {
+            *l = 0;
+        }
         let mut out = Vec::with_capacity(self.groups.len());
         for g in self.groups.drain(..) {
             assert_eq!(g.finished + g.cancelled, g.size,
@@ -271,83 +873,146 @@ impl<E: DecodeEngine> RolloutService<E> {
         Ok(out)
     }
 
-    /// Record one completed member; if its group is now decided-uniform,
-    /// cancel the group's queued/active remainder.
-    fn absorb<F>(&mut self, res: RolloutResult, reward_fn: &mut F)
-    where
-        F: FnMut(usize, &RolloutResult) -> f32,
-    {
-        let (gi, mi) = self.by_uid[&res.id];
-        let reward = reward_fn(self.groups[gi].group_id, &res);
-        {
-            let g = &mut self.groups[gi];
-            g.finished += 1;
-            g.outcomes[mi] =
-                Some(GroupMember { result: res, reward: Some(reward) });
-        }
-        if !self.prune.enabled {
-            return;
-        }
-        let (engine, to_cancel) = {
-            let g = &self.groups[gi];
-            if g.pruned
-                || g.finished < self.prune.min_finished
-                || g.finished + g.cancelled >= g.size
-            {
-                return;
-            }
-            let rewards: Vec<f32> = g
-                .outcomes
-                .iter()
-                .flatten()
-                .filter_map(|m| m.reward)
-                .collect();
-            let uniform =
-                rewards.iter().all(|&r| (r - rewards[0]).abs() <= 1e-6);
-            if !uniform {
-                return;
-            }
-            let to_cancel: Vec<(usize, u64)> = g
-                .uids
-                .iter()
-                .enumerate()
-                .filter(|&(m, _)| g.outcomes[m].is_none())
-                .map(|(m, &u)| (m, u))
-                .collect();
-            (g.engine, to_cancel)
-        };
-        // Cancel first, flag after: siblings may have completed in the same
-        // tick batch (cancel returns None for them), and a group where no
-        // cancel landed saved nothing — it must not count as pruned in the
-        // stats or carry `GroupResult::pruned`.
-        let mut any_cancelled = false;
-        for (m, uid) in to_cancel {
-            if let Some(partial) = self.scheds[engine].cancel(uid) {
-                any_cancelled = true;
-                let g = &mut self.groups[gi];
-                g.cancelled += 1;
-                g.outcomes[m] =
-                    Some(GroupMember { result: partial, reward: None });
-            }
-        }
-        if any_cancelled {
-            self.groups[gi].pruned = true;
-            self.scheds[engine].stats.pruned_groups += 1;
-        }
-    }
-
     /// Drain the merged per-engine counters (plus the service-loop wall
     /// time), resetting them for the next run — the trainer logs one
-    /// `sched_*` Recorder row per RL step from this.
+    /// `sched_*` Recorder row per RL step from this.  The undrained
+    /// per-replica breakdown stays available via
+    /// [`Self::last_engine_stats`].
     pub fn take_stats(&mut self) -> SchedulerStats {
+        let mut per: Vec<SchedulerStats> = match &mut self.backend {
+            Backend::Inline(scheds) => {
+                scheds.iter_mut().map(|s| s.take_stats()).collect()
+            }
+            Backend::Threaded { workers, events } => {
+                // with groups outstanding, workers may be emitting Finished
+                // events right now; the drain below would swallow them and
+                // the members could never resolve — a stats drain is only
+                // legal between runs (every event still in the channel is
+                // then a stale straggler and safe to drop)
+                assert!(self.groups.is_empty(),
+                        "take_stats with {} groups outstanding — drain the \
+                         run first", self.groups.len());
+                let mut expect = 0usize;
+                for w in workers.iter() {
+                    if w.cmd.send(Command::TakeStats).is_ok() {
+                        expect += 1;
+                    }
+                }
+                let mut per =
+                    vec![SchedulerStats::default(); workers.len()];
+                let mut got = 0usize;
+                while got < expect {
+                    match events.recv_timeout(Duration::from_secs(10)) {
+                        Ok(Event::Stats(i, st)) => {
+                            per[i] = st;
+                            got += 1;
+                        }
+                        Ok(_) => {} // stale stragglers from an aborted run
+                        Err(_) => break,
+                    }
+                }
+                per
+            }
+        };
+        for (p, n) in per.iter_mut().zip(self.pruned_groups.iter_mut()) {
+            p.pruned_groups += *n;
+            *n = 0;
+        }
         let mut out = SchedulerStats::default();
-        for s in &mut self.scheds {
-            let st = std::mem::take(&mut s.stats);
-            out.merge(&st);
+        for p in &per {
+            out.merge(p);
         }
         out.wall_s += self.wall_s;
         self.wall_s = 0.0;
+        self.last_engine_stats = per;
         out
+    }
+}
+
+impl<E: DecodeEngine + 'static> RolloutService<E> {
+    /// Threaded backend: one worker thread per factory, each owning the
+    /// engine its factory builds *inside the thread* plus that engine's
+    /// [`Scheduler`].  Fails fast if any factory errors (all spawned
+    /// workers are shut down and joined before returning).
+    pub fn threaded(factories: Vec<EngineFactory<E>>, max_seq: usize,
+                    eos_id: i32) -> Result<Self> {
+        assert!(!factories.is_empty(), "service needs at least one engine");
+        let n = factories.len();
+        let (evt_tx, evt_rx) = mpsc::channel();
+        let mut workers: Vec<WorkerHandle<E::Weights>> =
+            Vec::with_capacity(n);
+        for (i, f) in factories.into_iter().enumerate() {
+            let (cmd_tx, cmd_rx) = mpsc::channel();
+            let tx = evt_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("rollout-w{i}"))
+                .spawn(move || {
+                    worker_loop::<E>(i, f, cmd_rx, tx, max_seq, eos_id)
+                })?;
+            workers.push(WorkerHandle { cmd: cmd_tx, join: Some(join) });
+        }
+        // the service holds no event sender: recv() erroring from here on
+        // means every worker is gone
+        drop(evt_tx);
+        let mut failed: Option<anyhow::Error> = None;
+        for _ in 0..n {
+            // bounded: a panicking factory never sends its Ready, and a
+            // hung handshake must fail the build, not wedge the caller
+            match evt_rx.recv_timeout(Duration::from_secs(120)) {
+                Ok(Event::Ready(_, Ok(()))) => {}
+                Ok(Event::Ready(i, Err(e))) => {
+                    failed = Some(e.context(format!(
+                        "engine worker {i} failed to start")));
+                }
+                Ok(_) => unreachable!("non-handshake event at startup"),
+                Err(_) => {
+                    failed = failed.or_else(|| {
+                        Some(anyhow!("engine workers died or hung during \
+                                      startup"))
+                    });
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failed {
+            // tell the healthy workers to exit, then join only threads
+            // that are already done — a hung factory must not convert a
+            // failed build into a deadlocked one (its thread is detached
+            // and exits when its command channel drops)
+            for w in workers.iter() {
+                let _ = w.cmd.send(Command::Shutdown);
+            }
+            for w in workers.iter_mut() {
+                let finished = match &w.join {
+                    Some(j) => j.is_finished(),
+                    None => true,
+                };
+                if finished {
+                    if let Some(j) = w.join.take() {
+                        let _ = j.join();
+                    }
+                }
+            }
+            return Err(e);
+        }
+        Ok(Self::with_backend(
+            Backend::Threaded { workers, events: evt_rx }, n, max_seq))
+    }
+}
+
+impl<E: DecodeEngine> Drop for RolloutService<E> {
+    /// Join worker threads on the way out (inline backend: no-op).
+    fn drop(&mut self) {
+        if let Backend::Threaded { workers, .. } = &mut self.backend {
+            for w in workers.iter() {
+                let _ = w.cmd.send(Command::Shutdown);
+            }
+            for w in workers.iter_mut() {
+                if let Some(j) = w.join.take() {
+                    let _ = j.join();
+                }
+            }
+        }
     }
 }
 
@@ -381,6 +1046,38 @@ mod tests {
         RolloutService::new(engines, MAX_SEQ, EOS)
     }
 
+    fn threaded_service(n_engines: usize, slots: usize)
+                        -> RolloutService<MockEngine> {
+        let factories: Vec<EngineFactory<MockEngine>> = (0..n_engines)
+            .map(|_| {
+                Box::new(move || Ok(MockEngine::new(slots, VOCAB, MAX_SEQ,
+                                                    EOS)))
+                    as EngineFactory<MockEngine>
+            })
+            .collect();
+        RolloutService::threaded(factories, MAX_SEQ, EOS).unwrap()
+    }
+
+    /// (tokens, logprob bits, finish, reward, engine) per member — the
+    /// cross-backend comparison key.  Logprobs compare as bit patterns:
+    /// parity is *bit-for-bit*, not approximate.
+    fn fingerprint(results: &[GroupResult])
+                   -> Vec<(Vec<i32>, Vec<u32>, FinishReason, Option<u32>,
+                           usize)> {
+        results
+            .iter()
+            .flat_map(|gr| {
+                gr.members.iter().map(move |m| {
+                    (m.result.generated.clone(),
+                     m.result.logprobs.iter().map(|l| l.to_bits()).collect(),
+                     m.result.finish,
+                     m.reward.map(|r| r.to_bits()),
+                     gr.engine)
+                })
+            })
+            .collect()
+    }
+
     /// Striping over several engines: every group resolves completely, on
     /// its round-robin engine, and the merged ledger balances.
     #[test]
@@ -407,6 +1104,11 @@ mod tests {
         // shared prefill: members share prompts, so rows < submissions
         assert!(st.prefill_rows < st.submitted);
         assert_eq!(st.prefill_rows + st.forked, st.submitted);
+        // per-engine breakdown covers every replica and sums to the merge
+        assert_eq!(svc.last_engine_stats().len(), 3);
+        let sub: usize =
+            svc.last_engine_stats().iter().map(|s| s.submitted).sum();
+        assert_eq!(sub, st.submitted);
         // second take_stats is empty (drained)
         assert_eq!(svc.take_stats().submitted, 0);
     }
@@ -488,5 +1190,227 @@ mod tests {
                            gr.group_id);
             }
         }
+    }
+
+    /// The tentpole parity contract: a threaded run (one worker thread per
+    /// engine) produces bit-for-bit the same completed members — tokens,
+    /// logprobs, finish reasons, rewards, engine placement — as the inline
+    /// single-threaded run, for greedy AND sampled decode.  Threading may
+    /// only change wall-clock.
+    #[test]
+    fn threaded_matches_inline_bitwise() {
+        let workload = |svc: &mut RolloutService<MockEngine>| {
+            for gid in 0..8 {
+                // mix greedy and sampled groups
+                let temp = if gid % 2 == 0 { 0.0 } else { 1.0 };
+                svc.submit_group(spec(gid, gid as i32, 4, temp));
+            }
+            svc.run(|gid, res| {
+                (gid % 3) as f32 + (res.generated.len() % 2) as f32
+            })
+            .unwrap()
+        };
+        let mut inline = service(3, 3);
+        let mut threaded = threaded_service(3, 3);
+        assert!(threaded.is_threaded() && !inline.is_threaded());
+        let a = workload(&mut inline);
+        let b = workload(&mut threaded);
+        assert_eq!(fingerprint(&a), fingerprint(&b),
+                   "threaded execution changed rollout outputs");
+        let (sa, sb) = (inline.take_stats(), threaded.take_stats());
+        assert_eq!(sa.submitted, sb.submitted);
+        assert_eq!(sa.completed, sb.completed);
+        assert_eq!(sa.generated_tokens, sb.generated_tokens);
+    }
+
+    /// Least-loaded placement: a heavy group stops attracting neighbors
+    /// until the other replica catches up, placement is deterministic, and
+    /// outputs are identical to round-robin placement (requests are
+    /// engine-independent by the isolation contract).
+    #[test]
+    fn least_loaded_balances_and_preserves_outputs() {
+        let heavy = GroupSpec {
+            group_id: 0,
+            prompt: vec![1, 3, 4, 5],
+            group_size: 6,
+            max_new: 12, // cost = min(4+12, 24) * 6 = 96
+            temperature: 0.0,
+            top_p: 1.0,
+            seed: 7,
+        };
+        let small = |gid: usize| GroupSpec {
+            group_id: gid,
+            prompt: vec![1, 3, 4, 5],
+            group_size: 1,
+            max_new: 2, // cost = 6
+            temperature: 0.0,
+            top_p: 1.0,
+            seed: 7 + gid as u64,
+        };
+        let run = |stripe: StripePolicy| {
+            let mut svc = service(2, 4);
+            svc.stripe = stripe;
+            svc.submit_group(heavy.clone());
+            for gid in 1..5 {
+                svc.submit_group(small(gid));
+            }
+            let results = svc.run(|_, _| 0.0).unwrap();
+            let engines: Vec<usize> =
+                results.iter().map(|r| r.engine).collect();
+            (engines, fingerprint(&results)
+                 .into_iter()
+                 .map(|(t, l, f, r, _)| (t, l, f, r)) // drop engine field
+                 .collect::<Vec<_>>())
+        };
+        let (ll_engines, ll_out) = run(StripePolicy::LeastLoaded);
+        let (rr_engines, rr_out) = run(StripePolicy::RoundRobin);
+        // the heavy group (cost 96) pins engine 0; all four small groups
+        // (cost 6 each) flow to engine 1
+        assert_eq!(ll_engines, vec![0, 1, 1, 1, 1]);
+        assert_eq!(rr_engines, vec![0, 1, 0, 1, 0]);
+        assert_eq!(ll_out, rr_out,
+                   "stripe policy changed rollout outputs");
+    }
+
+    /// Hot requantization, inline backend: push_weights swaps engine
+    /// weights in place (epoch visible in the drained stats, per replica
+    /// and merged) and changes subsequent greedy outputs, with no service
+    /// rebuild.
+    #[test]
+    fn hot_swap_changes_outputs_and_bumps_epoch() {
+        let submit_all = |svc: &mut RolloutService<MockEngine>| {
+            for gid in 0..4 {
+                svc.submit_group(spec(gid, gid as i32, 3, 0.0));
+            }
+        };
+        let mut baseline = service(2, 4);
+        submit_all(&mut baseline);
+        let out0 = fingerprint(&baseline.run(|_, _| 0.0).unwrap());
+        assert_eq!(baseline.take_stats().weight_epoch, 0);
+
+        let mut swapped = service(2, 4);
+        assert_eq!(swapped.weight_epoch(), WeightEpoch(0));
+        let e = swapped.push_weights(0xD00D_F00D);
+        assert_eq!(e, WeightEpoch(1));
+        submit_all(&mut swapped);
+        let out1 = fingerprint(&swapped.run(|_, _| 0.0).unwrap());
+        assert_ne!(out0, out1, "weight swap did not change outputs");
+        let st = swapped.take_stats();
+        assert_eq!(st.weight_epoch, 1);
+        assert!(swapped
+            .last_engine_stats()
+            .iter()
+            .all(|s| s.weight_epoch == 1), "a replica missed the swap");
+        // the epoch level survives the drain (it is not a per-run delta)
+        swapped.submit_group(spec(9, 9, 2, 0.0));
+        swapped.run(|_, _| 0.0).unwrap();
+        assert_eq!(swapped.take_stats().weight_epoch, 1);
+    }
+
+    /// Hot requantization, threaded backend: a swap pushed while groups
+    /// are already streaming to the workers lands between ticks —
+    /// mid-step, in flight, no teardown — and every group still resolves.
+    #[test]
+    fn threaded_mid_flight_swap_resolves_with_epoch() {
+        let mut svc = threaded_service(2, 3);
+        for gid in 0..6 {
+            svc.submit_group(spec(gid, gid as i32, 4, 1.0));
+        }
+        // workers may already be decoding the early groups
+        assert_eq!(svc.push_weights(0xBEEF), WeightEpoch(1));
+        let results = svc.run(|_, res| res.generated.len() as f32).unwrap();
+        assert_eq!(results.len(), 6);
+        assert!(results.iter().all(|r| r.complete()));
+        let st = svc.take_stats();
+        assert_eq!(st.completed, st.submitted);
+        assert_eq!(st.weight_epoch, 1);
+    }
+
+    /// Error hardening, inline backend: a failing engine tick aborts the
+    /// run with an error, but leaves the service internally consistent —
+    /// the ledger balances and the very same service serves the next
+    /// workload.
+    #[test]
+    fn inline_tick_error_leaves_service_reusable() {
+        // eos outside the vocab: every member must decode, so the injected
+        // failure cannot be dodged by an immediate greedy EOS
+        let mut eng = MockEngine::new(3, VOCAB, MAX_SEQ, 127);
+        eng.fail_decodes = 1;
+        let mut svc = RolloutService::new(vec![eng], MAX_SEQ, 127);
+        for gid in 0..2 {
+            svc.submit_group(spec(gid, gid as i32, 2, 0.0));
+        }
+        assert!(svc.run(|_, _| 0.0).is_err(), "injected failure vanished");
+        let st = svc.take_stats();
+        assert_eq!(st.submitted, 4);
+        assert_eq!(st.completed + st.cancelled, st.submitted,
+                   "aborted run unbalanced the ledger");
+        // reusable: the injected failure is consumed, next run completes
+        for gid in 0..3 {
+            svc.submit_group(spec(10 + gid, gid as i32, 2, 0.0));
+        }
+        let results = svc.run(|_, _| 0.0).unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| r.complete()));
+        let st = svc.take_stats();
+        assert_eq!(st.completed, st.submitted);
+    }
+
+    /// Error hardening, threaded backend: one worker's tick failure fails
+    /// the run; every other worker is aborted and acknowledged, state is
+    /// drained consistently, and the same workers serve the next run.
+    #[test]
+    fn threaded_tick_error_leaves_service_reusable() {
+        let factories: Vec<EngineFactory<MockEngine>> = (0..2)
+            .map(|i| {
+                Box::new(move || {
+                    // eos outside the vocab: no lucky early EOS can dodge
+                    // the injected decode failure on worker 0
+                    let mut e = MockEngine::new(2, VOCAB, MAX_SEQ, 127);
+                    if i == 0 {
+                        e.fail_decodes = 1;
+                    }
+                    Ok(e)
+                }) as EngineFactory<MockEngine>
+            })
+            .collect();
+        let mut svc =
+            RolloutService::<MockEngine>::threaded(factories, MAX_SEQ, 127)
+                .unwrap();
+        for gid in 0..4 {
+            svc.submit_group(spec(gid, gid as i32, 2, 0.0));
+        }
+        assert!(svc.run(|_, _| 0.0).is_err(), "worker failure vanished");
+        let st = svc.take_stats();
+        assert_eq!(st.completed + st.cancelled, st.submitted,
+                   "aborted threaded run unbalanced the ledger");
+        // same workers, fresh workload
+        for gid in 0..4 {
+            svc.submit_group(spec(20 + gid, gid as i32, 2, 0.0));
+        }
+        let results = svc.run(|_, _| 0.0).unwrap();
+        assert_eq!(results.len(), 4);
+        assert!(results.iter().all(|r| r.complete()));
+        let st = svc.take_stats();
+        assert_eq!(st.completed, st.submitted);
+    }
+
+    /// A factory error at spawn time fails construction fast (no orphaned
+    /// worker threads, no half-built service).
+    #[test]
+    fn threaded_startup_failure_fails_fast() {
+        let factories: Vec<EngineFactory<MockEngine>> = (0..2)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 1 {
+                        anyhow::bail!("no artifacts on this worker");
+                    }
+                    Ok(MockEngine::new(2, VOCAB, MAX_SEQ, EOS))
+                }) as EngineFactory<MockEngine>
+            })
+            .collect();
+        let err =
+            RolloutService::<MockEngine>::threaded(factories, MAX_SEQ, EOS);
+        assert!(err.is_err(), "startup failure was swallowed");
     }
 }

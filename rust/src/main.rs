@@ -11,15 +11,18 @@
 //!   info       — artifact/manifest summary
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use qurl::config;
-use qurl::coordinator::{GroupSpec, RolloutService, StepEngine};
+use qurl::coordinator::{EngineFactory, GroupSpec, RolloutService, StepEngine,
+                        StripePolicy};
 use qurl::metrics::Recorder;
 use qurl::perfmodel::{self, DecodeConfig, Precision};
 use qurl::quant::analysis;
-use qurl::rl::{self, eval as rleval, RolloutPath, Trainer, TrainerConfig};
+use qurl::rl::{self, eval as rleval, RolloutExec, RolloutPath, Trainer,
+               TrainerConfig};
 use qurl::runtime::{ParamStore, QuantMode, Runtime};
 use qurl::tasks::{Suite, Tokenizer};
 use qurl::util::cli::Cli;
@@ -136,8 +139,18 @@ fn train_cli() -> Cli {
               service over continuous-batching schedulers, with sched_* \
               metrics (fused|scheduler; default preset)")
         .opt("rollout-engines", "0",
-             "engine replicas behind the rollout service; groups stripe \
-              round-robin (scheduler path; 0 = preset)")
+             "engine replicas behind the rollout service (scheduler path; \
+              0 = preset)")
+        .opt("rollout-exec", "",
+             "rollout service execution: inline (one thread ticks all \
+              schedulers) or threaded (one worker thread per engine \
+              replica, parallel decode; outputs bit-identical) \
+              (inline|threaded; default preset)")
+        .opt("stripe", "",
+             "group placement across engine replicas: rr (round-robin) or \
+              least-loaded (fewest estimated outstanding decode tokens, \
+              prompt-length + max_new aware) (rr|least-loaded; default \
+              preset)")
         .opt("min-prefill-batch", "0",
              "scheduler admission floor: wait until this many requests can \
               prefill together (0 = preset)")
@@ -157,7 +170,7 @@ fn train_cli() -> Cli {
 
 fn cmd_train(argv: &[String]) -> Result<()> {
     let args = train_cli().parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
-    let rt = Runtime::open(&artifacts_dir(&args))?;
+    let rt = Arc::new(Runtime::open(&artifacts_dir(&args))?);
     let preset_name = args.str("preset");
     let mut cfg: TrainerConfig = if preset_name.ends_with(".json") {
         config::load(Path::new(&preset_name))?
@@ -182,6 +195,14 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     if args.usize("rollout-engines") > 0 {
         cfg.rollout_engines = args.usize("rollout-engines");
+    }
+    if !args.str("rollout-exec").is_empty() {
+        cfg.rollout_exec = RolloutExec::parse(&args.str("rollout-exec"))
+            .context("bad --rollout-exec (inline|threaded)")?;
+    }
+    if !args.str("stripe").is_empty() {
+        cfg.rollout_stripe = StripePolicy::parse(&args.str("stripe"))
+            .context("bad --stripe (rr|least-loaded)")?;
     }
     if args.usize("min-prefill-batch") > 0 {
         cfg.min_prefill_batch = args.usize("min-prefill-batch");
@@ -274,27 +295,47 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cli = Cli::new("qurl serve",
                        "rollout-service demo: continuous batching, \
-                        group-shared prefill, multi-engine striping")
+                        group-shared prefill, multi-engine execution")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("base", "results/base_model.bin", "checkpoint")
         .opt("mode", "int8", "engine precision")
         .opt("requests", "96", "number of requests")
         .opt("group", "1", "rollouts per request prompt (shared prefill)")
-        .opt("engines", "1", "engine replicas (groups stripe round-robin)")
+        .opt("engines", "1", "engine replicas")
+        .opt("exec", "inline",
+             "execution backend: inline or threaded (one worker thread \
+              per engine replica)")
+        .opt("stripe", "rr", "group placement: rr|least-loaded")
         .opt("max-new", "48", "max generated tokens per request")
         .opt("min-batch", "8", "dynamic-batching admission threshold")
         .opt("seed", "0", "seed");
     let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
-    let rt = Runtime::open(&artifacts_dir(&args))?;
+    let rt = Arc::new(Runtime::open(&artifacts_dir(&args))?);
     let ps = base_model(&rt, Path::new(&args.str("base")), 600, 0)?;
     let mode = QuantMode::parse(&args.str("mode")).context("bad --mode")?;
     let w = rt.engine_weights(mode, &ps.params)?;
     let man = rt.manifest().clone();
     let n_engines = args.usize("engines").max(1);
-    let engines: Vec<StepEngine> = (0..n_engines)
-        .map(|_| StepEngine::new(&rt, w.clone()))
-        .collect();
-    let mut svc = RolloutService::new(engines, man.max_seq, man.eos_id);
+    let exec = RolloutExec::parse(&args.str("exec"))
+        .context("bad --exec (inline|threaded)")?;
+    let stripe = StripePolicy::parse(&args.str("stripe"))
+        .context("bad --stripe (rr|least-loaded)")?;
+    let mut svc = match exec {
+        RolloutExec::Inline => {
+            let engines: Vec<StepEngine> = (0..n_engines)
+                .map(|_| StepEngine::new(&rt, w.clone()))
+                .collect();
+            RolloutService::new(engines, man.max_seq, man.eos_id)
+        }
+        RolloutExec::Threaded => {
+            let dir = artifacts_dir(&args);
+            let factories: Vec<EngineFactory<StepEngine>> = (0..n_engines)
+                .map(|_| StepEngine::factory(dir.clone(), w.clone()))
+                .collect();
+            RolloutService::threaded(factories, man.max_seq, man.eos_id)?
+        }
+    };
+    svc.stripe = stripe;
     svc.set_min_prefill_batch(args.usize("min-batch"));
     let tk = Tokenizer::new();
     let suite = Suite::by_name("deepscaler").unwrap();
@@ -317,10 +358,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let st = svc.take_stats();
     let served: usize = results.iter().map(|g| g.members.len()).sum();
     println!("served {served} requests ({n} groups x {group}, {n_engines} \
-              engine(s)): {:.1} tok/s, mean occupancy {:.2}, {} prefill \
-              calls ({:.1} rows/call, {} rows forked), {} decode calls",
-             st.tokens_per_s(), st.mean_occupancy(), st.prefill_calls,
+              engine(s), {} exec, {} striping): {:.1} tok/s, mean \
+              occupancy {:.2}, {} prefill calls ({:.1} rows/call, {} rows \
+              forked), {} decode calls",
+             exec.name(), stripe.name(), st.tokens_per_s(),
+             st.mean_occupancy(), st.prefill_calls,
              st.mean_prefill_batch(), st.forked, st.decode_calls);
+    if n_engines > 1 {
+        for (i, es) in svc.last_engine_stats().iter().enumerate() {
+            println!("  engine {i}: {} decode calls, {} tokens, occupancy \
+                      {:.2}", es.decode_calls, es.generated_tokens,
+                     es.mean_occupancy());
+        }
+    }
     Ok(())
 }
 

@@ -1,4 +1,34 @@
 //! JSONL/CSV metric recorder.
+//!
+//! # Rollout-serving field catalog (`sched_*`)
+//!
+//! When the trainer serves rollouts through the scheduler path, every RL
+//! step emits one `phase = "rollout"` row with the merged counters of all
+//! engine replicas:
+//!
+//! | field                     | meaning                                     |
+//! |---------------------------|---------------------------------------------|
+//! | `sched_occupancy`         | mean occupied-slot fraction per decode call |
+//! | `sched_queue_wait_s`      | mean seconds a request queued before prefill|
+//! | `sched_prefill_calls`     | batched prefill artifact calls              |
+//! | `sched_prefill_rows`      | rows actually prefilled (post prefix-share) |
+//! | `sched_mean_prefill_batch`| rows per prefill call (admission health)    |
+//! | `sched_forked`            | KV rows forked instead of prefilled         |
+//! | `sched_cancelled`         | requests cancelled in flight (pruning)      |
+//! | `sched_pruned_groups`     | groups whose remainder was pruned           |
+//! | `sched_decode_calls`      | lockstep decode artifact calls              |
+//! | `sched_generated_tokens`  | decode tokens emitted (incl. partials)      |
+//! | `sched_tokens_per_s`      | tokens / service wall time                  |
+//! | `sched_weight_epoch`      | weight generation serving this step (max    |
+//! |                           | over replicas; bumps on hot requantization) |
+//!
+//! With more than one engine replica the same row carries a per-replica
+//! breakdown so striping imbalance is visible at a glance:
+//! `sched_e{i}_occupancy`, `sched_e{i}_decode_calls`,
+//! `sched_e{i}_generated_tokens`, `sched_e{i}_pruned_groups` and
+//! `sched_e{i}_weight_epoch` for engine index `i` (0-based, submission
+//! placement order — `rl::trainer` writes them, `coordinator::service`
+//! produces the per-engine stats).
 
 use std::collections::BTreeMap;
 use std::io::Write;

@@ -11,5 +11,5 @@ pub mod objective;
 pub mod trainer;
 
 pub use objective::{Objective, ObjectiveKind};
-pub use trainer::{pretrain_sft, Algo, RolloutPath, Sample, Trainer,
-                  TrainerConfig};
+pub use trainer::{pretrain_sft, Algo, RolloutExec, RolloutPath, Sample,
+                  Trainer, TrainerConfig};

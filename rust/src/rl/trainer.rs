@@ -6,10 +6,13 @@
 //! Python never runs here: rollout, scoring, quantization and optimization
 //! are all AOT artifacts executed through the PJRT runtime.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
-use crate::coordinator::{GroupSpec, PrunePolicy, RolloutService,
-                         SchedulerStats, StepEngine};
+use crate::coordinator::{EngineFactory, GroupSpec, PrunePolicy,
+                         RolloutService, SchedulerStats, StepEngine,
+                         StripePolicy};
 use crate::coordinator::request::RolloutResult;
 use crate::coordinator::service::{GroupMember, GroupResult};
 use crate::metrics::{Recorder, Row};
@@ -92,6 +95,38 @@ impl RolloutPath {
     }
 }
 
+/// How the rollout service executes its engine replicas (scheduler path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RolloutExec {
+    /// One thread ticks all schedulers round-robin (reference semantics;
+    /// `--rollout-engines N` buys queueing capacity, not decode
+    /// parallelism).
+    Inline,
+    /// One worker thread per engine replica, each owning its own engine
+    /// stack (own `Runtime`/PJRT client for [`StepEngine`]); replicas
+    /// decode in parallel while the control loop scores rewards, prunes
+    /// groups and pushes weight swaps.  Outputs are bit-identical to
+    /// inline (parity-tested); only wall-clock changes.
+    Threaded,
+}
+
+impl RolloutExec {
+    pub fn parse(s: &str) -> Option<RolloutExec> {
+        match s {
+            "inline" | "sync" => Some(RolloutExec::Inline),
+            "threaded" | "threads" | "async" => Some(RolloutExec::Threaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RolloutExec::Inline => "inline",
+            RolloutExec::Threaded => "threaded",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TrainerConfig {
     pub algo: Algo,
@@ -134,8 +169,16 @@ pub struct TrainerConfig {
     /// don't mispredict on the first two zero-reward finishers)
     pub prune_min_finished: usize,
     /// engine replicas behind the rollout service (scheduler path); groups
-    /// stripe round-robin across them
+    /// are placed across them per `rollout_stripe`
     pub rollout_engines: usize,
+    /// execution backend for the rollout service: `inline` (one thread
+    /// ticks all schedulers) or `threaded` (one worker thread per replica,
+    /// parallel decode)
+    pub rollout_exec: RolloutExec,
+    /// group-placement policy across engine replicas: blind round-robin or
+    /// least-loaded (estimated outstanding decode tokens,
+    /// prompt-length + max_new aware)
+    pub rollout_stripe: StripePolicy,
     /// scheduler admission floor: wait until this many requests can
     /// prefill together (1 = admit eagerly)
     pub min_prefill_batch: usize,
@@ -171,6 +214,8 @@ impl Default for TrainerConfig {
             prune_rollouts: true,
             prune_min_finished: 0,
             rollout_engines: 1,
+            rollout_exec: RolloutExec::Inline,
+            rollout_stripe: StripePolicy::RoundRobin,
             min_prefill_batch: 1,
             requantize_every: 1,
             analyze_every: 0,
@@ -201,8 +246,8 @@ pub struct Sample {
     pub group: usize,
 }
 
-pub struct Trainer<'rt> {
-    pub rt: &'rt Runtime,
+pub struct Trainer {
+    pub rt: Arc<Runtime>,
     pub cfg: TrainerConfig,
     pub ps: ParamStore,
     /// frozen reference policy for the KL term (the SFT base model)
@@ -215,21 +260,29 @@ pub struct Trainer<'rt> {
     engine: Option<EngineWeights>,
     engine_age: usize,
     /// persistent scheduler-path rollout service (`rollout_engines`
-    /// StepEngine replicas, each with KV caches + a copy of `engine`'s
-    /// weights), reused across rollout calls and steps; invalidated by
-    /// `refresh_engine` whenever the weights requantize.  Stale KV rows are
-    /// safe: prefill (or fork_kv) overwrites a slot's rows before reuse
-    /// (tested).
-    service: Option<RolloutService<StepEngine<'rt>>>,
+    /// StepEngine replicas — inline clones of `rt`, or threaded workers
+    /// each owning a private Runtime), reused across rollout calls and
+    /// steps.  Requantization HOT-SWAPS weights into the live service
+    /// (`push_weights`, bumping the WeightEpoch) — the service is built
+    /// once and never torn down on the requantize path.  Stale KV rows
+    /// are safe: prefill (or fork_kv) overwrites a slot's rows before
+    /// reuse (tested).
+    service: Option<RolloutService<StepEngine>>,
+    /// how many times the service was (re)built — the requantize path
+    /// must keep this at 1 (hot swap, not teardown); asserted in tests
+    service_builds: usize,
     /// scheduler-path serving stats accumulated over the current step's
     /// rollout calls (DAPO may run several), drained into a Recorder row
     sched_stats: Option<SchedulerStats>,
+    /// per-replica accumulation of the same stats (the `sched_e{i}_*`
+    /// Recorder fields)
+    sched_engine_stats: Vec<SchedulerStats>,
     /// previous-step section-B snapshot for the Fig. 9 analysis
     prev_params: Option<Vec<f32>>,
 }
 
-impl<'rt> Trainer<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: TrainerConfig, base: ParamStore,
+impl Trainer {
+    pub fn new(rt: &Arc<Runtime>, cfg: TrainerConfig, base: ParamStore,
                rec: Recorder) -> Result<Self> {
         let suite = Suite::by_name(&cfg.suite)
             .ok_or_else(|| anyhow::anyhow!("unknown suite {:?}", cfg.suite))?;
@@ -242,7 +295,7 @@ impl<'rt> Trainer<'rt> {
         let ref_params = ps.params.clone();
         let rng = Pcg64::new(cfg.seed ^ 0x5152_4c00);
         Ok(Trainer {
-            rt,
+            rt: rt.clone(),
             rng,
             rollout_seed: (cfg.seed as i32) ^ 0x2f2f,
             tk: Tokenizer::new(),
@@ -254,9 +307,18 @@ impl<'rt> Trainer<'rt> {
             engine: None,
             engine_age: usize::MAX,
             service: None,
+            service_builds: 0,
             sched_stats: None,
+            sched_engine_stats: Vec::new(),
             prev_params: None,
         })
+    }
+
+    /// How many times the rollout service was built from scratch.  Stays
+    /// at 1 across arbitrarily many requantizations — the hot-swap
+    /// acceptance check (`service = None` teardown would bump it).
+    pub fn service_builds(&self) -> usize {
+        self.service_builds
     }
 
     /// Build (or refresh) the rollout engine without running a step — lets
@@ -267,35 +329,64 @@ impl<'rt> Trainer<'rt> {
 
     /// Quantized (or fp) rollout-engine weights, refreshed per the
     /// requantize schedule.  This is the Q(theta_old) step of Fig. 1.
+    ///
+    /// Requantization no longer tears the rollout service down: fresh
+    /// weights are HOT-SWAPPED into the live engines (`push_weights` →
+    /// WeightEpoch bump; the swap lands between decode ticks on threaded
+    /// workers), so engine rebuild cost is gone and `requantize_every`
+    /// works at sub-step granularity — the swap is safe mid-step, even
+    /// with requests in flight.
     fn refresh_engine(&mut self) -> Result<()> {
         if self.engine_age < self.cfg.requantize_every {
             self.engine_age += 1;
             return Ok(());
         }
-        self.engine =
-            Some(self.rt.engine_weights(self.cfg.rollout_mode, &self.ps.params)?);
+        let w = self.rt.engine_weights(self.cfg.rollout_mode,
+                                       &self.ps.params)?;
+        self.engine = Some(w.clone());
         self.engine_age = 1;
-        // the service's engines hold copies of the old weights
-        self.service = None;
+        if let Some(svc) = &mut self.service {
+            svc.push_weights(w);
+        }
         Ok(())
     }
 
-    /// Build the rollout service on demand: `rollout_engines` StepEngine
-    /// replicas of the current quantized weights behind one submission
-    /// interface.
+    /// Build the rollout service on demand (once per training run):
+    /// `rollout_engines` StepEngine replicas of the current quantized
+    /// weights behind one submission interface, executed inline or on
+    /// worker threads per `rollout_exec`.
     fn ensure_service(&mut self) -> Result<()> {
         if self.service.is_some() {
             return Ok(());
         }
         let weights = self.engine.clone().expect("engine not initialized");
         let n = self.cfg.rollout_engines.max(1);
-        let engines: Vec<StepEngine<'rt>> = (0..n)
-            .map(|_| StepEngine::new(self.rt, weights.clone()))
-            .collect();
         let m = self.rt.manifest();
-        let mut svc = RolloutService::new(engines, m.max_seq, m.eos_id);
+        let (max_seq, eos_id) = (m.max_seq, m.eos_id);
+        let mut svc = match self.cfg.rollout_exec {
+            RolloutExec::Inline => {
+                let engines: Vec<StepEngine> = (0..n)
+                    .map(|_| StepEngine::new(&self.rt, weights.clone()))
+                    .collect();
+                RolloutService::new(engines, max_seq, eos_id)
+            }
+            RolloutExec::Threaded => {
+                // each worker opens its own Runtime (PJRT state is not
+                // Send); the one-time per-worker artifact compile is
+                // amortized over the whole run, since requantization now
+                // swaps weights instead of rebuilding workers
+                let dir = self.rt.artifact_dir().to_path_buf();
+                let factories: Vec<EngineFactory<StepEngine>> = (0..n)
+                    .map(|_| StepEngine::factory(dir.clone(),
+                                                 weights.clone()))
+                    .collect();
+                RolloutService::threaded(factories, max_seq, eos_id)?
+            }
+        };
+        svc.stripe = self.cfg.rollout_stripe;
         svc.set_min_prefill_batch(self.cfg.min_prefill_batch);
         self.service = Some(svc);
+        self.service_builds += 1;
         Ok(())
     }
 
@@ -448,9 +539,17 @@ impl<'rt> Trainer<'rt> {
             crate::tasks::verify(groups[gid].prob, &text)
         })?;
         let stats = svc.take_stats();
+        let per_engine = svc.last_engine_stats().to_vec();
         self.sched_stats
             .get_or_insert_with(SchedulerStats::default)
             .merge(&stats);
+        if self.sched_engine_stats.len() < per_engine.len() {
+            self.sched_engine_stats
+                .resize(per_engine.len(), SchedulerStats::default());
+        }
+        for (acc, st) in self.sched_engine_stats.iter_mut().zip(&per_engine) {
+            acc.merge(st);
+        }
         anyhow::ensure!(results.len() == groups.len(),
                         "service resolved {} of {} groups",
                         results.len(), groups.len());
@@ -723,9 +822,12 @@ impl<'rt> Trainer<'rt> {
             chunk_off += chunk.len();
         }
 
-        // scheduler-path serving metrics for this step's rollouts
+        // scheduler-path serving metrics for this step's rollouts: the
+        // merged view plus (with >1 replica) a per-engine breakdown, so
+        // striping imbalance and per-replica decode volume are visible in
+        // every step row.  Field catalog: metrics/recorder.rs.
         if let Some(st) = self.sched_stats.take() {
-            self.rec.log(Row::new(step as u64)
+            let mut row = Row::new(step as u64)
                 .set("sched_occupancy", st.mean_occupancy())
                 .set("sched_queue_wait_s", st.mean_queue_wait_s())
                 .set("sched_prefill_calls", st.prefill_calls as f64)
@@ -737,7 +839,27 @@ impl<'rt> Trainer<'rt> {
                 .set("sched_decode_calls", st.decode_calls as f64)
                 .set("sched_generated_tokens", st.generated_tokens as f64)
                 .set("sched_tokens_per_s", st.tokens_per_s())
-                .tag("phase", "rollout"));
+                .set("sched_weight_epoch", st.weight_epoch as f64)
+                .tag("phase", "rollout");
+            let per = std::mem::take(&mut self.sched_engine_stats);
+            if per.len() > 1 {
+                for (i, es) in per.iter().enumerate() {
+                    row = row
+                        .set(&format!("sched_e{i}_occupancy"),
+                             es.mean_occupancy())
+                        .set(&format!("sched_e{i}_decode_calls"),
+                             es.decode_calls as f64)
+                        .set(&format!("sched_e{i}_generated_tokens"),
+                             es.generated_tokens as f64)
+                        .set(&format!("sched_e{i}_pruned_groups"),
+                             es.pruned_groups as f64)
+                        .set(&format!("sched_e{i}_weight_epoch"),
+                             es.weight_epoch as f64);
+                }
+            }
+            self.rec.log(row);
+        } else {
+            self.sched_engine_stats.clear();
         }
 
         let chunks = samples.chunks(bt).len().max(1);
@@ -758,7 +880,7 @@ impl<'rt> Trainer<'rt> {
         if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
             let engine = self.engine.clone().expect("engine");
             let acc = eval::greedy_accuracy(
-                self.rt, &engine, &self.tk, &self.suite,
+                &self.rt, &engine, &self.tk, &self.suite,
                 self.cfg.seed, self.cfg.eval_problems_per_family)?;
             self.rec.log(Row::new(step as u64)
                 .set("eval_acc", acc)

@@ -44,6 +44,14 @@ impl ArtifactStore {
         self.client.platform_name()
     }
 
+    /// Directory this store loads artifacts from.  Rollout worker threads
+    /// use it to open their own store: PJRT clients and compiled
+    /// executables are not `Send`, so each worker owns a full stack instead
+    /// of sharing this one across threads.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
     /// Compile (or fetch from cache) an artifact by name.
     pub fn ensure_compiled(&self, name: &str) -> Result<()> {
         if self.cache.borrow().contains_key(name) {

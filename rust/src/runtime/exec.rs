@@ -113,6 +113,15 @@ impl Runtime {
         &self.store.manifest
     }
 
+    /// Artifact directory this runtime executes from.  The threaded rollout
+    /// service hands it to engine-worker factories so each worker thread
+    /// opens its own `Runtime` (own PJRT client + compile cache) — the
+    /// "owned artifact handles per worker" layering that keeps all
+    /// non-`Send` XLA state confined to the thread that created it.
+    pub fn artifact_dir(&self) -> &std::path::Path {
+        self.store.dir()
+    }
+
     /// Deterministic initial parameters from a seed.
     pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
         let out = self.store.call("init_params", &[HostTensor::scalar_i32(seed)])?;

@@ -133,6 +133,24 @@ impl Pcg64 {
     }
 }
 
+/// Per-member sampling-seed derivation: member `i` of a rollout group with
+/// base seed `s` decodes with the stream seeded by `member_seed(s, i)`.
+///
+/// This is THE single definition every rollout path must use — the service
+/// ([`RolloutService::submit_group`](crate::coordinator::RolloutService::submit_group))
+/// and any bench/test that reconstructs a group's member streams by hand.
+/// Before extraction the SplitMix-style wrap lived inline in the service,
+/// where a second implementation could silently drift and break the
+/// fused-vs-service parity guarantee (greedy is seed-independent, but any
+/// sampled-parity comparison dies the moment two paths disagree here).
+/// Values are pinned by `member_seed_pinned` below; do not change the
+/// constant without a parity migration.
+#[inline]
+pub fn member_seed(base: u64, member: usize) -> u64 {
+    base.wrapping_add(member as u64)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
 /// SplitMix64 — used only to expand seeds.
 pub struct SplitMix64 {
     state: u64,
@@ -229,6 +247,30 @@ mod tests {
         let mut b = root.fork(1);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 2);
+    }
+
+    /// Pin the exact member-seed values: sampled-rollout reproducibility
+    /// across the service and any path reconstructing member streams rests
+    /// on these bits never changing.
+    #[test]
+    fn member_seed_pinned() {
+        assert_eq!(member_seed(0, 0), 0);
+        assert_eq!(member_seed(0, 1), 0x9e37_79b9_7f4a_7c15);
+        assert_eq!(member_seed(0xFEED, 2), 0xc090_b079_bda6_ad9b);
+        assert_eq!(member_seed(0x5eed, 7), 0x2b92_218a_ac8d_fa04);
+        assert_eq!(member_seed((1u64 << 63) + 12345, 3),
+                   0xfbd3_4f57_ccb9_04ec);
+    }
+
+    /// Sibling members must get distinct streams (the whole point).
+    #[test]
+    fn member_seed_distinct_within_group() {
+        let base = 0xABCD_EF01_2345_6789u64;
+        let seeds: Vec<u64> = (0..64).map(|m| member_seed(base, m)).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
     }
 
     #[test]

@@ -4,18 +4,21 @@
 //! compilation.  Run via `make test` (pytest covers the Python side).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use qurl::coordinator::{DecodeEngine, GroupSpec, PrunePolicy, RolloutRequest,
-                        RolloutService, Scheduler, StepEngine};
+                        RolloutService, Scheduler, StepEngine, StripePolicy};
 use qurl::metrics::Recorder;
 use qurl::quant::{analysis, fp8 as qfp8, int8 as qint8};
-use qurl::rl::{Objective, ObjectiveKind, RolloutPath, Trainer, TrainerConfig};
+use qurl::rl::{Objective, ObjectiveKind, RolloutExec, RolloutPath, Trainer,
+               TrainerConfig};
 use qurl::runtime::{ParamStore, QuantMode, Runtime, TrainBatch};
 use qurl::tasks::{encode_batch, Problem, Suite, Tokenizer};
 
-fn runtime() -> Runtime {
+fn runtime() -> Arc<Runtime> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Runtime::open(&dir).expect("run `make artifacts` before cargo test")
+    Arc::new(Runtime::open(&dir).expect("run `make artifacts` before cargo \
+                                         test"))
 }
 
 fn test_prompts(rt: &Runtime, n: usize) -> (Vec<i32>, Vec<i32>, Vec<usize>) {
@@ -127,11 +130,12 @@ fn scheduler_matches_bulk_generate_greedy() {
 }
 
 /// Tentpole parity: with temp=0 the trainer's scheduler rollout path —
-/// now the group-aware RolloutService, including fork_kv shared-prefix
-/// prefill (every group's siblings share one prompt prefill) and
-/// multi-engine striping — must reproduce the fused path's completions,
-/// masks and rewards bit-for-bit, so `--rollout-path scheduler` changes
-/// serving, not learning.
+/// the group-aware RolloutService, including fork_kv shared-prefix
+/// prefill, multi-engine placement (rr AND least-loaded) and the THREADED
+/// executor (one worker thread per StepEngine replica, each opening its
+/// own Runtime) — must reproduce the fused path's completions, masks and
+/// rewards bit-for-bit, so `--rollout-path scheduler --rollout-exec
+/// threaded` changes serving wall-clock, not learning.
 #[test]
 fn trainer_scheduler_path_matches_fused_greedy() {
     let rt = runtime();
@@ -146,7 +150,8 @@ fn trainer_scheduler_path_matches_fused_greedy() {
         .enumerate()
         .flat_map(|(i, p)| std::iter::repeat((i, p)).take(g))
         .collect();
-    let rollout_with = |path: RolloutPath, engines: usize|
+    let rollout_with = |path: RolloutPath, engines: usize,
+                        exec: RolloutExec, stripe: StripePolicy|
                        -> Vec<qurl::rl::Sample> {
         let cfg = TrainerConfig {
             temp: 0.0,
@@ -155,6 +160,8 @@ fn trainer_scheduler_path_matches_fused_greedy() {
             rollout_path: path,
             group_size: g,
             rollout_engines: engines,
+            rollout_exec: exec,
+            rollout_stripe: stripe,
             ..TrainerConfig::default()
         };
         let base = ParamStore::new(&man, params.clone());
@@ -163,12 +170,21 @@ fn trainer_scheduler_path_matches_fused_greedy() {
         t.prepare().unwrap();
         t.rollout(&expanded).unwrap()
     };
-    let fused = rollout_with(RolloutPath::Fused, 1);
-    let sched = rollout_with(RolloutPath::Scheduler, 1);
-    // striping across 2 engine replicas must not change any sample either
-    let striped = rollout_with(RolloutPath::Scheduler, 2);
+    let fused = rollout_with(RolloutPath::Fused, 1, RolloutExec::Inline,
+                             StripePolicy::RoundRobin);
+    let sched = rollout_with(RolloutPath::Scheduler, 1, RolloutExec::Inline,
+                             StripePolicy::RoundRobin);
+    // striping across 2 replicas, least-loaded placement, and threaded
+    // workers must not change any sample either
+    let variants = [
+        rollout_with(RolloutPath::Scheduler, 2, RolloutExec::Inline,
+                     StripePolicy::RoundRobin),
+        rollout_with(RolloutPath::Scheduler, 2, RolloutExec::Inline,
+                     StripePolicy::LeastLoaded),
+        rollout_with(RolloutPath::Scheduler, 2, RolloutExec::Threaded,
+                     StripePolicy::LeastLoaded),
+    ];
     assert_eq!(fused.len(), sched.len());
-    assert_eq!(fused.len(), striped.len());
     for (i, (a, b)) in fused.iter().zip(&sched).enumerate() {
         assert_eq!(a.tokens, b.tokens, "greedy token divergence on {i}");
         assert_eq!(a.mask, b.mask, "mask divergence on {i}");
@@ -176,11 +192,58 @@ fn trainer_scheduler_path_matches_fused_greedy() {
         assert_eq!(a.reward, b.reward, "reward divergence on {i}");
         assert_eq!(a.group, b.group);
     }
-    for (i, (a, b)) in sched.iter().zip(&striped).enumerate() {
-        assert_eq!(a.tokens, b.tokens, "striping divergence on {i}");
-        assert_eq!(a.reward, b.reward);
-        assert_eq!(a.group, b.group);
+    for (v, variant) in variants.iter().enumerate() {
+        assert_eq!(variant.len(), sched.len());
+        for (i, (a, b)) in sched.iter().zip(variant).enumerate() {
+            assert_eq!(a.tokens, b.tokens,
+                       "variant {v} token divergence on {i}");
+            assert_eq!(a.reward, b.reward,
+                       "variant {v} reward divergence on {i}");
+            assert_eq!(a.group, b.group);
+        }
     }
+}
+
+/// Hot requantization through the trainer: with `requantize_every = 1` on
+/// the scheduler path, every step re-quantizes — and the rollout service
+/// must survive all of them (built exactly once, weights hot-swapped via
+/// WeightEpoch; the old path set `service = None` per step and rebuilt N
+/// engines).  The per-step `sched_weight_epoch` metric must track the
+/// swap count.
+#[test]
+fn requantize_hot_swaps_instead_of_rebuilding_service() {
+    let rt = runtime();
+    let man = rt.manifest().clone();
+    let params = rt.init_params(43).unwrap();
+    let cfg = TrainerConfig {
+        rollout_mode: QuantMode::Int8,
+        rollout_path: RolloutPath::Scheduler,
+        rollout_engines: 2,
+        requantize_every: 1,
+        steps: 3,
+        prompts_per_step: 2,
+        group_size: 2,
+        eval_every: 0,
+        ..TrainerConfig::default()
+    };
+    let base = ParamStore::new(&man, params);
+    let mut t = Trainer::new(&rt, cfg, base,
+                             Recorder::ephemeral("hotswap")).unwrap();
+    for step in 0..3 {
+        t.step(step).unwrap();
+    }
+    assert_eq!(t.service_builds(), 1,
+               "requantize path rebuilt the rollout service");
+    // step 0 serves epoch 0 (build weights), each later step swaps once
+    let epochs: Vec<f64> = t
+        .rec
+        .series("sched_weight_epoch")
+        .iter()
+        .map(|&(_, v)| v)
+        .collect();
+    assert_eq!(epochs.len(), 3);
+    assert_eq!(epochs, vec![0.0, 1.0, 2.0],
+               "weight epoch did not advance with requantization");
 }
 
 fn greedy_tok(v: &[f32]) -> i32 {

@@ -1,8 +1,9 @@
 //! Property-based tests (propcheck) over coordinator + RL invariants.
 //! These run without artifacts — pure host logic.
 
-use qurl::coordinator::{FinishReason, GroupSpec, MockEngine, PrunePolicy,
-                        RolloutRequest, RolloutService, Scheduler, SlotMap};
+use qurl::coordinator::{EngineFactory, FinishReason, GroupSpec, MockEngine,
+                        PrunePolicy, RolloutRequest, RolloutService,
+                        Scheduler, SlotMap, StripePolicy};
 use qurl::rl::advantage;
 use qurl::rl::dapo;
 use qurl::rl::objective::{surrogate_token, Objective, ObjectiveKind};
@@ -289,6 +290,178 @@ fn prop_service_groups_resolve() {
         st.submitted == submitted
             && st.completed + st.cancelled == st.submitted
     });
+}
+
+/// Determinism under concurrency, the threaded-executor contract: over
+/// random group mixes, engine counts, slot widths and temperatures, the
+/// completed rollouts — tokens, logprob bits, finish reasons, rewards,
+/// group resolution AND engine placement — are identical across
+/// 1-worker-thread, N-worker-thread and inline execution, and across
+/// rr vs least-loaded placement (outputs are engine-independent by the
+/// isolation contract).  Thread interleaving may only change wall-clock.
+#[test]
+fn prop_threaded_and_striped_runs_bit_identical() {
+    let max_seq = 16usize;
+    type Key = (usize, Vec<i32>, Vec<u32>, FinishReason, Option<u32>);
+    // ((engines, slots), [(group_size, temp_bit); n])
+    let g = Pair(Pair(UsizeIn(1, 3), UsizeIn(1, 4)),
+                 Pair(UsizeIn(0, 1), VecOf(UsizeIn(1, 5), 1, 8)));
+    assert_prop("threaded-striped-parity", 0x7123D, 60, &g,
+                |((engines, slots), (temp_bit, sizes))| {
+        let n_eng = (*engines).max(1);
+        let slots = (*slots).max(1);
+        let temp = *temp_bit as f32; // greedy and sampled both covered
+        let submit = |svc: &mut RolloutService<MockEngine>| {
+            for (gid, &sz) in sizes.iter().enumerate() {
+                svc.submit_group(GroupSpec {
+                    group_id: gid,
+                    prompt: vec![3 + (gid as i32 % 5); 2 + gid % 3],
+                    group_size: sz.max(1),
+                    max_new: 1 + gid % 9,
+                    temperature: temp,
+                    top_p: 1.0,
+                    seed: 0xA5 ^ ((gid as u64) << 8),
+                });
+            }
+        };
+        let fingerprint = |svc: &mut RolloutService<MockEngine>|
+                          -> Vec<Key> {
+            submit(svc);
+            let results = svc
+                .run(|gid, res| (gid % 2) as f32
+                     + (res.generated.len() % 3) as f32)
+                .unwrap();
+            results
+                .iter()
+                .flat_map(|gr| {
+                    gr.members.iter().map(move |m| {
+                        (gr.engine,
+                         m.result.generated.clone(),
+                         m.result
+                             .logprobs
+                             .iter()
+                             .map(|l| l.to_bits())
+                             .collect::<Vec<u32>>(),
+                         m.result.finish,
+                         m.reward.map(|r| r.to_bits()))
+                    })
+                })
+                .collect()
+        };
+        let threaded = |n: usize| -> RolloutService<MockEngine> {
+            let fs: Vec<EngineFactory<MockEngine>> = (0..n)
+                .map(|_| {
+                    Box::new(move || Ok(MockEngine::new(slots, 8, max_seq,
+                                                        2)))
+                        as EngineFactory<MockEngine>
+                })
+                .collect();
+            RolloutService::threaded(fs, max_seq, 2).unwrap()
+        };
+        let inline = |n: usize| -> RolloutService<MockEngine> {
+            let engs: Vec<MockEngine> = (0..n)
+                .map(|_| MockEngine::new(slots, 8, max_seq, 2))
+                .collect();
+            RolloutService::new(engs, max_seq, 2)
+        };
+        for stripe in [StripePolicy::RoundRobin, StripePolicy::LeastLoaded] {
+            let mut a = inline(n_eng);
+            a.stripe = stripe;
+            let mut b = threaded(n_eng);
+            b.stripe = stripe;
+            // 1 worker thread (single engine) vs the same workload again
+            let mut c = threaded(1);
+            c.stripe = stripe;
+            let (fa, fb, fc) = (fingerprint(&mut a), fingerprint(&mut b),
+                                fingerprint(&mut c));
+            if fa != fb {
+                return false; // N threads changed outputs
+            }
+            // placement differs on 1 engine, outputs must not: compare
+            // everything except the engine index
+            let strip =
+                |f: &[Key]| -> Vec<(Vec<i32>, Vec<u32>, FinishReason,
+                                    Option<u32>)> {
+                    f.iter()
+                        .map(|(_, t, l, fr, r)| (t.clone(), l.clone(), *fr,
+                                                 *r))
+                        .collect()
+                };
+            if strip(&fa) != strip(&fc) {
+                return false; // engine count changed outputs
+            }
+        }
+        // rr vs least-loaded: outputs identical modulo placement
+        let mut rr = inline(n_eng);
+        rr.stripe = StripePolicy::RoundRobin;
+        let mut ll = inline(n_eng);
+        ll.stripe = StripePolicy::LeastLoaded;
+        let (fr, fl) = (fingerprint(&mut rr), fingerprint(&mut ll));
+        fr.iter().zip(&fl).all(|(a, b)| {
+            (&a.1, &a.2, a.3, a.4) == (&b.1, &b.2, b.3, b.4)
+        })
+    });
+}
+
+/// The PR-2 pruning-savings guarantee holds on the THREADED path: with
+/// uniform-reward groups much wider than the slot count and an unreachable
+/// EOS (every member would otherwise decode to max_new), online pruning
+/// across worker threads must cancel sibling members — most of them while
+/// still queued — and strictly reduce decoded tokens vs the identical
+/// threaded run without pruning.
+#[test]
+fn threaded_pruning_cancels_across_threads_and_saves_tokens() {
+    let max_seq = 128usize;
+    let (n_groups, g, slots) = (4usize, 8usize, 2usize);
+    let run = |prune: bool| {
+        let factories: Vec<EngineFactory<MockEngine>> = (0..2)
+            .map(|_| {
+                Box::new(move || Ok(MockEngine::new(slots, 8, max_seq,
+                                                    127 /* no eos */)))
+                    as EngineFactory<MockEngine>
+            })
+            .collect();
+        let mut svc =
+            RolloutService::<MockEngine>::threaded(factories, max_seq, 127)
+                .unwrap();
+        svc.prune = if prune { PrunePolicy::online(2) } else {
+            PrunePolicy::off()
+        };
+        for gid in 0..n_groups {
+            svc.submit_group(GroupSpec {
+                group_id: gid,
+                prompt: vec![1, 3 + (gid as i32 % 5), 4, 5],
+                group_size: g,
+                max_new: 100,
+                temperature: 1.0,
+                top_p: 1.0,
+                seed: 0xFEED ^ ((gid as u64) << 8),
+            });
+        }
+        // every group uniform-rewarded: all prunable once 2 members finish
+        let results = svc.run(|_, _| 1.0).unwrap();
+        assert_eq!(results.len(), n_groups);
+        for gr in &results {
+            assert_eq!(gr.members.len(), g, "member lost in flight");
+        }
+        let tokens: usize =
+            results.iter().map(|r| r.generated_tokens()).sum();
+        (svc.take_stats(), tokens)
+    };
+    let (pruned, pruned_tokens) = run(true);
+    let (plain, plain_tokens) = run(false);
+    assert_eq!(plain.cancelled, 0);
+    assert_eq!(plain.completed, plain.submitted);
+    assert_eq!(pruned.completed + pruned.cancelled, pruned.submitted,
+               "threaded pruning unbalanced the ledger");
+    // with B=2 slots and g=8, at least 6 members per group are queued or
+    // mid-decode when the second finisher's reward lands; the cancel
+    // directives cross the thread boundary and must recover real budget
+    assert!(pruned.cancelled > 0, "no cross-thread cancel landed");
+    assert!(pruned.pruned_groups > 0, "no group was pruned");
+    assert!(pruned_tokens < plain_tokens,
+            "threaded pruning saved no decode tokens: {pruned_tokens} vs \
+             {plain_tokens}");
 }
 
 /// Regression property for the trainer's old `padded_g = 1` fallback: on a
