@@ -85,9 +85,10 @@ fn main() -> Result<()> {
     println!("RL wall time : {rl_wall:.0}s ({:.1}s/step)",
              rl_wall / rl_steps.max(1) as f64);
     let mut xla = 0.0;
-    for (name, calls, secs) in rt.store.stats().into_iter().take(5) {
-        println!("  {name:16} {calls:5} calls {secs:8.1}s");
-        xla += secs;
+    for (name, st) in rt.store.stats().into_iter().take(5) {
+        println!("  {name:16} {:5} calls {:8.1}s  {:7.1} MB h2d",
+                 st.calls, st.secs, st.bytes_h2d as f64 / 1e6);
+        xla += st.secs;
     }
     println!("  (top-5 XLA time {xla:.0}s of {rl_wall:.0}s wall)");
     anyhow::ensure!(final_acc >= base_acc - 0.02,

@@ -63,8 +63,10 @@ fn main() -> Result<()> {
             for id in 0..64u64 {
                 let (_, prob) = sampler.next();
                 sched.submit(RolloutRequest {
-                    id, prompt: tk.encode_prompt(&prob.prompt), max_new: 32,
-                    temperature: 1.0, top_p: 1.0, seed: id,
+                    id,
+                    prompt: std::sync::Arc::new(
+                        tk.encode_prompt(&prob.prompt)),
+                    max_new: 32, temperature: 1.0, top_p: 1.0, seed: id,
                 });
             }
             let res = sched.run_to_completion()?;

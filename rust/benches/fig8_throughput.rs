@@ -8,12 +8,15 @@
 //!    fp8 generate waves on CPU) — honest numbers for the interpret-mode
 //!    Pallas path, not a GPU proxy.
 
+use std::sync::Arc;
+
 use qurl::benchkit as bk;
 use qurl::coordinator::{GroupSpec, RolloutRequest, RolloutService, Scheduler,
                         StepEngine};
 use qurl::perfmodel::{self, roofline, DecodeConfig, Precision};
 use qurl::runtime::QuantMode;
 use qurl::tasks::{encode_batch, Problem, Suite, Tokenizer};
+use qurl::util::json::Json;
 use qurl::util::timer::{bench, print_table};
 
 fn main() -> anyhow::Result<()> {
@@ -107,9 +110,13 @@ fn main() -> anyhow::Result<()> {
          |i, m| if i % 3 == 2 { m } else { (m / 8).max(1) }),
     ];
     let mut rows = Vec::new();
+    let mut mix_json: Vec<Json> = Vec::new();
     for (label, n, max_new_of) in mixes {
         let probs: Vec<Problem> = (0..n).map(|_| sampler.next().1).collect();
-        // fused path: waves of B prompts, full decode scan per wave
+        // fused path: waves of B prompts, full decode scan per wave.  The
+        // store's per-artifact byte counters measure its copy tax (weights
+        // + token grids staged per wave).
+        rt.store.reset_stats();
         let t0 = std::time::Instant::now();
         let mut fused_tokens = 0f64;
         let mut waves = 0usize;
@@ -123,13 +130,17 @@ fn main() -> anyhow::Result<()> {
         }
         let fused_wall = t0.elapsed().as_secs_f64();
         let fused_steps = waves * man.max_new;
+        let fused_h2d: u64 = rt.store.stats().iter()
+            .filter(|(name, _)| name.starts_with("generate_"))
+            .map(|(_, st)| st.bytes_h2d)
+            .sum();
         // scheduler path: everything submitted up front, per-request length
         let mut engine = StepEngine::new(&rt, w.clone());
         let mut sched = Scheduler::new(&mut engine, man.max_seq, man.eos_id);
         for (i, p) in probs.iter().enumerate() {
             sched.submit(RolloutRequest {
                 id: i as u64,
-                prompt: tk.encode_prompt(&p.prompt),
+                prompt: Arc::new(tk.encode_prompt(&p.prompt)),
                 max_new: max_new_of(i, man.max_new),
                 temperature: 1.0,
                 top_p: 1.0,
@@ -138,7 +149,8 @@ fn main() -> anyhow::Result<()> {
         }
         let results = sched.run_to_completion()?;
         assert_eq!(results.len(), n, "scheduler dropped requests");
-        let st = sched.stats.clone();
+        let st = sched.take_stats();
+        let per_tick = |bytes: u64| bytes as f64 / st.decode_calls.max(1) as f64;
         rows.push(vec![
             label.to_string(),
             n.to_string(),
@@ -148,13 +160,30 @@ fn main() -> anyhow::Result<()> {
                     (1.0 - st.decode_calls as f64 / fused_steps as f64)
                         * 100.0),
             format!("{:.2}", st.mean_occupancy()),
+            format!("{:.0}", fused_h2d as f64 / fused_steps as f64 / 1e3),
+            format!("{:.0}", per_tick(st.bytes_h2d) / 1e3),
             format!("{:.0}", fused_tokens / fused_wall.max(1e-9)),
             format!("{:.0}", st.tokens_per_s()),
         ]);
+        mix_json.push(Json::obj(vec![
+            ("workload", Json::str(label)),
+            ("requests", Json::num(n as f64)),
+            ("fused_decode_steps", Json::num(fused_steps as f64)),
+            ("sched_decode_calls", Json::num(st.decode_calls as f64)),
+            ("sched_decode_steps_per_s",
+             Json::num(st.decode_calls as f64 / st.wall_s.max(1e-9))),
+            ("sched_tokens_per_s", Json::num(st.tokens_per_s())),
+            ("sched_prefill_rows", Json::num(st.prefill_rows as f64)),
+            ("sched_bytes_h2d_per_tick", Json::num(per_tick(st.bytes_h2d))),
+            ("sched_bytes_d2h_per_tick", Json::num(per_tick(st.bytes_d2h))),
+            ("fused_bytes_h2d_per_step",
+             Json::num(fused_h2d as f64 / fused_steps as f64)),
+        ]));
     }
     print_table("fused waves vs continuous-batching scheduler (int8 engine)",
                 &["workload", "reqs", "fused decode steps",
                   "sched decode calls", "saved", "occupancy",
+                  "fused h2d KB/step", "sched h2d KB/tick",
                   "fused tok/s", "sched tok/s"], &rows);
     println!("continuous batching cuts decode steps on every mix — the \
               substrate QeRL-style quantized serving and rollout pruning \
@@ -213,5 +242,89 @@ fn main() -> anyhow::Result<()> {
     println!("group-shared prefill cuts prefill rows ~{group}x; striping \
               splits the decode queue across engine replicas.  In-flight \
               pruning savings are measured in the table2 bench (DAPO).");
+
+    // ---- part 5: the per-tick copy tax — resident vs per-call inputs -----
+    // Same workload twice through one StepEngine configuration: resident
+    // inputs (weights staged once per weight epoch, KV literals recycled
+    // decode→decode — the default) vs the per-call baseline (weights
+    // reconvert and KV round-trips through host vectors every tick).
+    // Outputs are bit-identical (integration-tested); only the copy
+    // columns move.  This is the PCIe-shaped cost a GPU backend inherits.
+    let tax_probs: Vec<Problem> =
+        (0..b).map(|_| sampler.next().1).collect();
+    let run_tax = |resident: bool|
+        -> anyhow::Result<(qurl::coordinator::SchedulerStats, u64)> {
+        let mut engine = StepEngine::new(&rt, w.clone());
+        engine.set_resident(resident);
+        let weight_bytes = engine.weight_bytes();
+        let mut sched = Scheduler::new(&mut engine, man.max_seq, man.eos_id);
+        for (i, p) in tax_probs.iter().enumerate() {
+            sched.submit(RolloutRequest {
+                id: i as u64,
+                prompt: Arc::new(tk.encode_prompt(&p.prompt)),
+                max_new: man.max_new,
+                temperature: 1.0,
+                top_p: 1.0,
+                seed: 0x7a5e ^ i as u64,
+            });
+        }
+        let results = sched.run_to_completion()?;
+        assert_eq!(results.len(), tax_probs.len());
+        Ok((sched.take_stats(), weight_bytes))
+    };
+    let (res_st, weight_bytes) = run_tax(true)?;
+    let (pc_st, _) = run_tax(false)?;
+    let mut rows = Vec::new();
+    for (label, st) in [("resident (default)", &res_st),
+                        ("per-call baseline", &pc_st)] {
+        rows.push(vec![
+            label.to_string(),
+            st.decode_calls.to_string(),
+            format!("{:.1}", st.bytes_h2d as f64 / 1e6),
+            format!("{:.1}",
+                    st.bytes_h2d as f64 / st.decode_calls.max(1) as f64 / 1e3),
+            format!("{:.1}", st.bytes_d2h as f64 / 1e6),
+            format!("{:.0}", st.tokens_per_s()),
+        ]);
+    }
+    print_table(&format!("per-tick copy tax, resident vs per-call inputs \
+                          (weights = {:.1} MB/conversion)",
+                         weight_bytes as f64 / 1e6),
+                &["input path", "decode calls", "MB h2d total",
+                  "KB h2d/tick", "MB d2h total", "tok/s"], &rows);
+    println!("resident inputs stage weights once per weight epoch and \
+              recycle KV literals decode→decode; the per-call baseline \
+              re-converts weights + both KV caches every tick.");
+
+    // machine-readable perf trajectory for later PRs to regress against
+    let json = Json::obj(vec![
+        ("bench", Json::str("fig8_rollout")),
+        ("engine", Json::str("int8")),
+        ("rollout_batch", Json::num(b as f64)),
+        ("max_seq", Json::num(man.max_seq as f64)),
+        ("weight_bytes", Json::num(weight_bytes as f64)),
+        ("mixes", Json::Arr(mix_json)),
+        ("copy_tax", Json::obj(vec![
+            ("resident", tax_json(&res_st)),
+            ("per_call", tax_json(&pc_st)),
+        ])),
+    ]);
+    let path = bk::results_dir().join("BENCH_rollout.json");
+    std::fs::write(&path, json.to_string())?;
+    println!("\nwrote {}", path.display());
     Ok(())
+}
+
+/// One copy-tax run as JSON (decode throughput + per-tick staging bytes).
+fn tax_json(st: &qurl::coordinator::SchedulerStats) -> Json {
+    let ticks = st.decode_calls.max(1) as f64;
+    Json::obj(vec![
+        ("decode_calls", Json::num(st.decode_calls as f64)),
+        ("decode_steps_per_s",
+         Json::num(st.decode_calls as f64 / st.wall_s.max(1e-9))),
+        ("tokens_per_s", Json::num(st.tokens_per_s())),
+        ("prefill_rows", Json::num(st.prefill_rows as f64)),
+        ("bytes_h2d_per_tick", Json::num(st.bytes_h2d as f64 / ticks)),
+        ("bytes_d2h_per_tick", Json::num(st.bytes_d2h as f64 / ticks)),
+    ])
 }

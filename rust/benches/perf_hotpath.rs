@@ -91,17 +91,21 @@ fn main() -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let mut rows = Vec::new();
     let mut xla_total = 0.0;
-    for (name, calls, secs) in rt.store.stats() {
-        xla_total += secs;
-        rows.push(vec![name, calls.to_string(), format!("{secs:.2}")]);
+    for (name, st) in rt.store.stats() {
+        xla_total += st.secs;
+        rows.push(vec![name, st.calls.to_string(), format!("{:.2}", st.secs),
+                       format!("{:.1}", st.bytes_h2d as f64 / 1e6),
+                       format!("{:.1}", st.bytes_d2h as f64 / 1e6)]);
     }
     rows.push(vec!["TOTAL XLA".into(), String::new(),
-                   format!("{xla_total:.2}")]);
+                   format!("{xla_total:.2}"), String::new(), String::new()]);
     rows.push(vec!["host (L3) overhead".into(), String::new(),
                    format!("{:.2} ({:.1}%)", wall - xla_total,
-                           (wall - xla_total) / wall * 100.0)]);
+                           (wall - xla_total) / wall * 100.0),
+                   String::new(), String::new()]);
     print_table(&format!("RL-step decomposition (3 steps, {wall:.2}s wall)"),
-                &["artifact", "calls", "seconds"], &rows);
+                &["artifact", "calls", "seconds", "MB h2d", "MB d2h"],
+                &rows);
 
     // ---- serving scheduler throughput -------------------------------------
     let w = rt.engine_weights(QuantMode::Int8, &base.params)?;
@@ -112,7 +116,7 @@ fn main() -> anyhow::Result<()> {
         let (_, prob) = sampler.next();
         sched.submit(RolloutRequest {
             id,
-            prompt: tk.encode_prompt(&prob.prompt),
+            prompt: std::sync::Arc::new(tk.encode_prompt(&prob.prompt)),
             max_new: 16,
             temperature: 1.0,
             top_p: 1.0,

@@ -146,6 +146,13 @@ fn main() -> anyhow::Result<()> {
             format!("{wall:.1}"),
             format!("{:.0}", sum_of(&tr, "sched_generated_tokens")),
             format!("{:.0}", sum_of(&tr, "sched_decode_calls")),
+            // per-tick copy tax: resident inputs keep this at control-
+            // tensor size between requantizations (fused path logs no
+            // sched rows)
+            match bk::h2d_per_decode(&tr) {
+                Some(b) => format!("{:.1}", b / 1e3),
+                None => "-".into(),
+            },
             format!("{:.0}",
                     tr.rec.last("sched_weight_epoch").unwrap_or(0.0)),
             format!("{reward:.3}"),
@@ -154,7 +161,8 @@ fn main() -> anyhow::Result<()> {
     print_table("DAPO serving paths: fused vs rollout service (exec \
                  backend x stripe policy)",
                 &["path", "threads", "stripe", "wall s", "sched tokens",
-                  "sched decode calls", "weight epoch", "train reward"],
+                  "sched decode calls", "h2d KB/tick", "weight epoch",
+                  "train reward"],
                 &rows);
     Ok(())
 }

@@ -118,12 +118,18 @@ fn main() -> anyhow::Result<()> {
             format!("{wall:.1}"),
             format!("{:.0}", sum_of(&tr, "sched_generated_tokens")),
             format!("{:.0}", sum_of(&tr, "sched_decode_calls")),
+            // per-tick copy tax (see table2 for the column's definition)
+            match bk::h2d_per_decode(&tr) {
+                Some(b) => format!("{:.1}", b / 1e3),
+                None => "-".into(),
+            },
             format!("{reward:.3}"),
         ]);
     }
     print_table("DeepScaleR serving paths: fused vs rollout service (exec \
                  backend x stripe policy)",
                 &["path", "threads", "stripe", "wall s", "sched tokens",
-                  "sched decode calls", "train reward"], &rows);
+                  "sched decode calls", "h2d KB/tick", "train reward"],
+                &rows);
     Ok(())
 }

@@ -89,6 +89,22 @@ pub fn run_variant(rt: &Arc<Runtime>, base: &ParamStore,
     Ok((tr, final_reward))
 }
 
+/// Mean bytes newly staged host→device-format per decode call over a
+/// run's scheduler-path rollouts — the fused-vs-service copy-tax column
+/// (`sched_bytes_h2d / sched_decode_calls` summed over the run).  `None`
+/// when the run logged no scheduler rows (fused path).
+pub fn h2d_per_decode(tr: &Trainer) -> Option<f64> {
+    let sum = |key: &str| -> f64 {
+        tr.rec.series(key).iter().map(|&(_, v)| v).sum()
+    };
+    let calls = sum("sched_decode_calls");
+    if calls <= 0.0 {
+        None
+    } else {
+        Some(sum("sched_bytes_h2d") / calls)
+    }
+}
+
 /// Render a (step, value) series as a compact sparkline + endpoints.
 pub fn sparkline(series: &[(u64, f64)], width: usize) -> String {
     if series.is_empty() {

@@ -2,12 +2,101 @@
 //! prefill/decode artifacts.  This is the serving-style execution path the
 //! scheduler drives (continuous batching); bulk training rollouts use the
 //! fused `generate_*` artifacts instead (runtime::exec::generate).
+//!
+//! # Residency boundary (what moves per tick)
+//!
+//! [`StepEngine`] keeps its state *resident* across artifact calls:
+//!
+//! * **weights** — converted to device-format literals **once per weight
+//!   generation** ([`DecodeEngine::swap_weights`] bumps it), via
+//!   [`InputHandle`]s cached in the engine; a decode tick stages zero
+//!   weight bytes.
+//! * **KV caches** — between decode ticks the `[L,B,H,S,Dh]` caches flow
+//!   output→input as raw literals ([`KvBuf`]); they materialize into host
+//!   vectors only when the engine must *mutate* rows (prefill-merge on
+//!   admission, [`DecodeEngine::fork_kv`]) and re-stage on the next
+//!   decode.  Steady-state decode moves no KV bytes host-side.
+//! * **logits** — one flat `[B, vocab]` block per call, exposed as
+//!   [`LogitsRow`] views instead of per-slot copied vectors; block storage
+//!   recycles through a [`F32Pool`] where the engine fills it itself.
+//!
+//! Only the per-tick control tensors (positions, tokens — a few bytes per
+//! slot) convert every call.  The remaining copies are measured: every
+//! engine drains `(bytes_h2d, bytes_d2h)` via
+//! [`DecodeEngine::take_transfer`] into `SchedulerStats`.
 
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::Result;
+use xla::Literal;
 
+use crate::runtime::artifact::InputHandle;
 use crate::runtime::{EngineWeights, HostTensor, Runtime};
+use crate::util::pool::F32Pool;
+
+/// One flat `[rows, vocab]` logits tensor produced by a single engine
+/// call.  Sequences hold [`LogitsRow`] views into it instead of per-slot
+/// copies; when the last view drops, pooled storage returns to its
+/// [`F32Pool`].
+pub struct LogitsBlock {
+    data: Vec<f32>,
+    vocab: usize,
+    pool: Option<Rc<F32Pool>>,
+}
+
+impl LogitsBlock {
+    /// Block over an owned buffer (e.g. an artifact output vector).
+    pub fn from_vec(data: Vec<f32>, vocab: usize) -> Rc<LogitsBlock> {
+        assert!(vocab > 0 && data.len() % vocab == 0,
+                "logits length {} not a multiple of vocab {vocab}",
+                data.len());
+        Rc::new(LogitsBlock { data, vocab, pool: None })
+    }
+
+    /// Block whose storage came from (and returns to) `pool` on drop.
+    pub fn pooled(data: Vec<f32>, vocab: usize, pool: Rc<F32Pool>)
+                  -> Rc<LogitsBlock> {
+        assert!(vocab > 0 && data.len() % vocab == 0);
+        Rc::new(LogitsBlock { data, vocab, pool: Some(pool) })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.data.len() / self.vocab
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.vocab..(r + 1) * self.vocab]
+    }
+}
+
+impl Drop for LogitsBlock {
+    fn drop(&mut self) {
+        if let Some(pool) = &self.pool {
+            pool.put(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+/// Shared view of one row of a [`LogitsBlock`].  `Clone` is an `Rc` bump —
+/// forked group siblings share their prefill row instead of cloning a
+/// vocab-sized vector each.
+#[derive(Clone)]
+pub struct LogitsRow {
+    block: Rc<LogitsBlock>,
+    row: usize,
+}
+
+impl LogitsRow {
+    pub fn new(block: Rc<LogitsBlock>, row: usize) -> LogitsRow {
+        assert!(row < block.rows(), "row {row} out of block");
+        LogitsRow { block, row }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        self.block.row(self.row)
+    }
+}
 
 /// What the [`Scheduler`](super::Scheduler) needs from an execution backend:
 /// a fixed number of KV slots, batched prefill into chosen slots, one
@@ -28,13 +117,14 @@ pub trait DecodeEngine {
     fn slot_count(&self) -> usize;
 
     /// Prefill `prompts[i]` into `slots[i]`; returns the last-position
-    /// logits per slot (the distribution of the first generated token).
-    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
-               -> Result<Vec<Vec<f32>>>;
+    /// logits row per slot (the distribution of the first generated
+    /// token), in argument order.
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[i32]])
+               -> Result<Vec<LogitsRow>>;
 
     /// One decode step: for each (slot, pos, token), write KV at `pos` and
     /// return next-token logits per row, in row order.
-    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>>;
+    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<LogitsRow>>;
 
     /// Copy `src_slot`'s KV rows into every slot in `dst_slots` (group-
     /// shared prefix prefill): after prefilling one member of a group, the
@@ -43,7 +133,14 @@ pub trait DecodeEngine {
     /// `src_slot` still holds exactly the prefilled prompt state (the
     /// scheduler forks within a single admission batch, before any decode
     /// tick advances the source).
-    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()>;
+    ///
+    /// `prompt_len` is the prefilled prompt's length: only cache positions
+    /// `< prompt_len` carry prompt state, so engines may copy just that
+    /// prefix (causal masking guarantees positions `>= pos` are never read
+    /// before the sequence's own decode writes them — artifact-parity
+    /// tested against a fresh prefill).
+    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize],
+               prompt_len: usize) -> Result<()>;
 
     /// Install freshly (re)quantized weights without touching the KV caches
     /// or slot state — the in-flight requantization step (QuRL
@@ -51,7 +148,23 @@ pub trait DecodeEngine {
     /// decoding continue under the new weights from their next step; their
     /// prompt KV stays as computed under the old weights, which is exactly
     /// the bounded off-policy drift the QuRL objectives (TIS/ACR) absorb.
-    fn swap_weights(&mut self, w: Self::Weights);
+    ///
+    /// `epoch` is the service's [`WeightEpoch`](super::service::WeightEpoch)
+    /// (surfaced in stats rows); independent of its value, engines with
+    /// conversion caches must guarantee the new weights are re-staged —
+    /// `StepEngine` replaces its resident handles wholesale, so serving
+    /// stale bytes is unrepresentable (bit-parity tested).
+    fn swap_weights(&mut self, w: Self::Weights, epoch: u64);
+
+    /// Drain the engine's accumulated `(bytes_h2d, bytes_d2h)` staging
+    /// counters: bytes newly converted host→device-format per call, and
+    /// bytes copied back out.  Resident inputs riding a cached conversion
+    /// (and recycled output literals) contribute zero — so between weight
+    /// swaps, decode-tick h2d collapses to the per-slot control tensors.
+    /// Engines without a conversion boundary report zeros.
+    fn take_transfer(&mut self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Forward through mutable references so callers can keep owning an engine
@@ -64,21 +177,160 @@ impl<E: DecodeEngine> DecodeEngine for &mut E {
         (**self).slot_count()
     }
 
-    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
-               -> Result<Vec<Vec<f32>>> {
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[i32]])
+               -> Result<Vec<LogitsRow>> {
         (**self).prefill(slots, prompts)
     }
 
-    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
+    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<LogitsRow>> {
         (**self).decode(rows)
     }
 
-    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()> {
-        (**self).fork_kv(src_slot, dst_slots)
+    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize],
+               prompt_len: usize) -> Result<()> {
+        (**self).fork_kv(src_slot, dst_slots, prompt_len)
     }
 
-    fn swap_weights(&mut self, w: Self::Weights) {
-        (**self).swap_weights(w)
+    fn swap_weights(&mut self, w: Self::Weights, epoch: u64) {
+        (**self).swap_weights(w, epoch)
+    }
+
+    fn take_transfer(&mut self) -> (u64, u64) {
+        (**self).take_transfer()
+    }
+}
+
+/// One KV cache tensor, resident in whichever representation the last
+/// operation left it: a raw device-format literal (decode output, recycled
+/// straight into the next decode's input — zero host bytes) or a host
+/// vector (after a mutation: prefill row-merge or fork).  `Empty` exists
+/// only transiently while a call owns the payload.
+enum KvBuf {
+    Host(Vec<f32>),
+    Device(Literal),
+    Empty,
+}
+
+impl KvBuf {
+    fn zeros(n: usize) -> KvBuf {
+        KvBuf::Host(vec![0.0; n])
+    }
+
+    /// Move the cache out as a call input handle.  Device-format state
+    /// stages for free; host state converts at call time (counted there).
+    /// `force_host` round-trips device state through a host vector first —
+    /// the per-call baseline path (d2h counted here).
+    ///
+    /// The fallible materialization happens BEFORE the payload is moved
+    /// out, so an error leaves the cache exactly as it was — this method
+    /// never converts a conversion failure into a lost cache.
+    fn take_handle(&mut self, shape: &[usize], force_host: bool,
+                   d2h: &mut u64) -> Result<InputHandle> {
+        if force_host {
+            self.host_mut(d2h)?;
+        }
+        match std::mem::replace(self, KvBuf::Empty) {
+            KvBuf::Host(v) => Ok(InputHandle::new(HostTensor::f32(shape, v))),
+            KvBuf::Device(l) => Ok(InputHandle::from_literal(l)),
+            KvBuf::Empty => unreachable!("KV cache taken twice"),
+        }
+    }
+
+    /// Reinstall the cache from a handle a failed call handed back
+    /// (whichever representation survived).
+    fn restore(&mut self, h: InputHandle) {
+        let (host, lit) = h.into_parts();
+        *self = match lit {
+            Some(l) => KvBuf::Device(l),
+            None => KvBuf::Host(
+                host.expect("KV handle lost both representations").into_f32()),
+        };
+    }
+
+    /// Host-mutable view, materializing from a literal when needed
+    /// (mutations — prefill merge, fork — happen on the host copy; the
+    /// next decode re-stages it).
+    fn host_mut(&mut self, d2h: &mut u64) -> Result<&mut Vec<f32>> {
+        if let KvBuf::Device(l) = self {
+            let v = l.to_vec::<f32>()?;
+            *d2h += (v.len() * 4) as u64;
+            *self = KvBuf::Host(v);
+        }
+        match self {
+            KvBuf::Host(v) => Ok(v),
+            _ => unreachable!("KV cache empty outside a call"),
+        }
+    }
+}
+
+/// Pull one prefill call's outputs (full ck/cv caches + logits) to host
+/// without touching engine state, so the caller can book transfer bytes
+/// before acting on any extraction failure.
+fn take_prefill_outputs(outs: &mut crate::runtime::CallOutputs<'_>)
+                        -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    Ok((outs.take_host(0)?.into_f32(),
+        outs.take_host(1)?.into_f32(),
+        outs.take_host(2)?.into_f32()))
+}
+
+/// Pull one decode call's outputs (ck, cv, logits) in the representation
+/// the residency mode asks for, without touching engine state — the caller
+/// installs them only when all three extractions succeed.
+fn take_decode_outputs(outs: &mut crate::runtime::CallOutputs<'_>,
+                       resident: bool) -> Result<(KvBuf, KvBuf, Vec<f32>)> {
+    let (k, v) = if resident {
+        (KvBuf::Device(outs.take_literal(0)?),
+         KvBuf::Device(outs.take_literal(1)?))
+    } else {
+        (KvBuf::Host(outs.take_host(0)?.into_f32()),
+         KvBuf::Host(outs.take_host(1)?.into_f32()))
+    };
+    let logits = outs.take_host(2)?.into_f32();
+    Ok((k, v, logits))
+}
+
+/// Merge the prefilled rows for `slots` from a prefill-output cache into
+/// the persistent cache (both flat `[L,B,H,S,Dh]`, `row_sz = H*S*Dh`).
+/// One definition for K and V, so their offset math can never diverge.
+fn merge_rows(dst: &mut [f32], src: &[f32], slots: &[usize], l: usize,
+              b: usize, row_sz: usize) {
+    for &slot in slots {
+        for layer in 0..l {
+            let off = (layer * b + slot) * row_sz;
+            dst[off..off + row_sz].copy_from_slice(&src[off..off + row_sz]);
+        }
+    }
+}
+
+/// Copy slot `src`'s cache rows into `dsts` within a flat `[L,B,H,S,Dh]`
+/// buffer.  `prefix` limits the copy to positions `< prefix` per head
+/// (`None` = full `max_seq` rows — the debug/parity path).
+fn fork_rows(buf: &mut [f32], dims: (usize, usize, usize, usize, usize),
+             src: usize, dsts: &[usize], prefix: Option<usize>) {
+    let (l, b, h, s, dh) = dims;
+    match prefix {
+        None => {
+            let row_sz = h * s * dh;
+            for layer in 0..l {
+                let src_off = (layer * b + src) * row_sz;
+                for &dst in dsts {
+                    let dst_off = (layer * b + dst) * row_sz;
+                    buf.copy_within(src_off..src_off + row_sz, dst_off);
+                }
+            }
+        }
+        Some(plen) => {
+            let seg = plen.min(s) * dh;
+            for layer in 0..l {
+                for head in 0..h {
+                    let src_off = ((layer * b + src) * h + head) * s * dh;
+                    for &dst in dsts {
+                        let dst_off = ((layer * b + dst) * h + head) * s * dh;
+                        buf.copy_within(src_off..src_off + seg, dst_off);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -91,18 +343,33 @@ impl<E: DecodeEngine> DecodeEngine for &mut E {
 pub struct StepEngine {
     rt: Arc<Runtime>,
     pub weights: EngineWeights,
-    /// [L, B, H, S, Dh] caches, host-resident between artifact calls
-    cache_k: Vec<f32>,
-    cache_v: Vec<f32>,
+    /// resident weight inputs: the literal conversion is cached for each
+    /// handle's lifetime, and `swap_weights` replaces the handles wholesale
+    /// — so decode ticks stage zero weight bytes and a stale conversion is
+    /// unrepresentable (no handle outlives its content)
+    weight_handles: Vec<InputHandle>,
+    /// `[L, B, H, S, Dh]` caches, resident between artifact calls
+    cache_k: KvBuf,
+    cache_v: KvBuf,
     kv_shape: Vec<usize>,
     pub batch: usize,
+    /// staged/fetched bytes since the last `take_transfer` drain
+    acc_h2d: u64,
+    acc_d2h: u64,
+    /// input residency on (the default).  Off = the per-call baseline:
+    /// weights reconvert and KV round-trips through host vectors every
+    /// call — kept for the bit-parity tests and the copy-tax bench column.
+    resident: bool,
+    /// debug: full-`max_seq`-row fork_kv (the pre-prefix-fork behavior)
+    /// for the prefix-fork parity test
+    pub full_row_fork: bool,
 }
 
 impl StepEngine {
     /// Worker factory for the threaded
-    /// [`RolloutService`](super::RolloutService): runs *inside* the worker
-    /// thread, opening a private `Runtime` from `dir` (PJRT clients and
-    /// compiled executables are not `Send`, so every worker must own its
+    /// [`RolloutService`](super::service::RolloutService): runs *inside* the
+    /// worker thread, opening a private `Runtime` from `dir` (PJRT clients
+    /// and compiled executables are not `Send`, so every worker must own its
     /// whole artifact stack) and wrapping `weights` in a fresh engine.
     /// This is the single definition of that invariant — the trainer and
     /// `qurl serve` both build their worker fleets from it.
@@ -119,35 +386,69 @@ impl StepEngine {
         let kv_shape = vec![m.n_layers, m.rollout_batch, m.n_heads, m.max_seq,
                             m.head_dim];
         let n: usize = kv_shape.iter().product();
+        let handles = weight_handles(&weights);
         StepEngine {
             rt: rt.clone(),
             weights,
-            cache_k: vec![0.0; n],
-            cache_v: vec![0.0; n],
+            weight_handles: handles,
+            cache_k: KvBuf::zeros(n),
+            cache_v: KvBuf::zeros(n),
             kv_shape,
             batch: m.rollout_batch,
+            acc_h2d: 0,
+            acc_d2h: 0,
+            resident: true,
+            full_row_fork: false,
         }
     }
 
-    fn weight_inputs(&self) -> Vec<HostTensor> {
-        let mut v = Vec::new();
-        match &self.weights {
-            EngineWeights::Bf16 { flat } => {
-                v.push(HostTensor::f32(&[flat.len()], flat.clone()));
-            }
-            EngineWeights::Int8 { a, qw, qs } => {
-                v.push(HostTensor::f32(&[a.len()], a.clone()));
-                v.push(HostTensor::i8(&[qw.len()], qw.clone()));
-                v.push(HostTensor::f32(&[qs.len()], qs.clone()));
-            }
-            EngineWeights::Fp8 { a, b_fq } => {
-                v.push(HostTensor::f32(&[a.len()], a.clone()));
-                v.push(HostTensor::f32(&[b_fq.len()], b_fq.clone()));
-            }
-        }
-        v
+    /// Toggle input residency (default on).  Off reproduces the per-call
+    /// conversion path bit-for-bit — same artifact inputs, rebuilt from
+    /// host vectors every call — for the parity tests and the
+    /// fused-vs-resident copy-tax comparison.
+    pub fn set_resident(&mut self, on: bool) {
+        self.resident = on;
     }
 
+    pub fn is_resident(&self) -> bool {
+        self.resident
+    }
+
+    /// Bytes one full conversion of the installed weights costs (what
+    /// every tick paid before residency; what only the first call after a
+    /// swap pays now).
+    pub fn weight_bytes(&self) -> u64 {
+        self.weights.byte_len()
+    }
+
+    fn kv_dims(&self) -> (usize, usize, usize, usize, usize) {
+        (self.kv_shape[0], self.kv_shape[1], self.kv_shape[2],
+         self.kv_shape[3], self.kv_shape[4])
+    }
+
+    /// Record KV literal→host materialization bytes in BOTH ledgers — the
+    /// engine's `take_transfer` counters (→ `sched_bytes_d2h`) and the
+    /// store's per-artifact table under a pseudo-artifact entry, so
+    /// `store.stats()` reconciles with the scheduler-level counters.
+    fn note_kv_d2h(&mut self, bytes: u64) {
+        if bytes > 0 {
+            self.acc_d2h += bytes;
+            self.rt.store.note_d2h(KV_MATERIALIZE, bytes);
+        }
+    }
+}
+
+/// Pseudo-artifact name under which engine-side KV cache materializations
+/// (literal→host for prefill merges, forks, and the per-call baseline)
+/// appear in [`ArtifactStore::stats`](crate::runtime::ArtifactStore::stats).
+const KV_MATERIALIZE: &str = "kv_materialize(host)";
+
+/// Resident weight handles for `w`, in artifact input order.  The single
+/// definition both `StepEngine::new` and `swap_weights` build from — the
+/// "stale cached conversion is unrepresentable" guarantee rests on every
+/// installation path constructing fresh (unstaged) handles identically.
+fn weight_handles(w: &EngineWeights) -> Vec<InputHandle> {
+    w.host_tensors().into_iter().map(InputHandle::new).collect()
 }
 
 impl DecodeEngine for StepEngine {
@@ -158,50 +459,69 @@ impl DecodeEngine for StepEngine {
     }
 
     /// Prefill prompts into the given slots, merging only those rows into
-    /// the persistent cache.  `prompts[i]` goes to `slots[i]`.
-    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
-               -> Result<Vec<Vec<f32>>> {
+    /// the persistent cache.  `prompts[i]` goes to `slots[i]`.  The weight
+    /// inputs ride their cached literals; the full-cache outputs must come
+    /// back to the host for the row merge (admission-boundary cost, not
+    /// per-tick).
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[i32]])
+               -> Result<Vec<LogitsRow>> {
         assert_eq!(slots.len(), prompts.len());
         let m = self.rt.manifest();
         let (b, p, v) = (m.rollout_batch, m.max_prompt, m.vocab_size);
+        let bos_id = m.bos_id;
         let mut tokens = vec![0i32; b * p];
         let mut lens = vec![1i32; b];
         // inert rows: lone BOS
         for r in 0..b {
-            tokens[r * p] = m.bos_id;
+            tokens[r * p] = bos_id;
         }
         for (i, &slot) in slots.iter().enumerate() {
-            let ids = &prompts[i];
+            let ids = prompts[i];
             assert!(ids.len() <= p, "prompt longer than max_prompt");
             tokens[slot * p..slot * p + ids.len()].copy_from_slice(ids);
             lens[slot] = ids.len() as i32;
         }
-        let mut inputs = self.weight_inputs();
-        inputs.push(HostTensor::i32(&[b, p], tokens));
-        inputs.push(HostTensor::i32(&[b], lens));
-        let name = format!("prefill_{}", self.weights.mode().tag());
-        let out = self.rt.store.call(&name, &inputs)?;
-        let mut it = out.into_iter();
-        let ck = it.next().unwrap().into_f32();
-        let cv = it.next().unwrap().into_f32();
-        let logits = it.next().unwrap().into_f32();
-        // merge the new rows into the persistent cache
-        let (l, _, h, s, dh) = (self.kv_shape[0], self.kv_shape[1],
-                                self.kv_shape[2], self.kv_shape[3],
-                                self.kv_shape[4]);
-        let row_sz = h * s * dh;
-        for &slot in slots {
-            for layer in 0..l {
-                let off = (layer * self.batch + slot) * row_sz;
-                self.cache_k[off..off + row_sz]
-                    .copy_from_slice(&ck[off..off + row_sz]);
-                self.cache_v[off..off + row_sz]
-                    .copy_from_slice(&cv[off..off + row_sz]);
+        if !self.resident {
+            for h in &mut self.weight_handles {
+                h.invalidate();
             }
         }
+        let fresh = [HostTensor::i32(&[b, p], tokens),
+                     HostTensor::i32(&[b], lens)];
+        let name = format!("prefill_{}", self.weights.mode().tag());
+        let mut resident: Vec<&mut InputHandle> =
+            self.weight_handles.iter_mut().collect();
+        let mut outs =
+            self.rt.store.call_with_resident(&name, &mut resident, &fresh)?;
+        // accumulate the transfer ledger even if extraction fails midway,
+        // so the engine counters always reconcile with the store's
+        let taken = take_prefill_outputs(&mut outs);
+        self.acc_h2d += outs.staged_h2d();
+        self.acc_d2h += outs.fetched_d2h();
+        drop(outs);
+        let (ck, cv, logits) = taken?;
+        // merge the new rows into the persistent cache (host side; the
+        // next decode re-stages the merged cache once).  BOTH caches
+        // materialize before either mutates — a conversion failure must
+        // not leave K merged while V is stale — and the moved bytes go on
+        // the books before any later fallible step can drop them.
+        let mut d2h = 0u64;
+        self.cache_k.host_mut(&mut d2h)?;
+        self.cache_v.host_mut(&mut d2h)?;
+        self.note_kv_d2h(d2h);
+        let (l, _, h, s, dh) = self.kv_dims();
+        let row_sz = h * s * dh;
+        let mut none = 0u64;
+        // already Host: these host_muts cannot fail or move bytes
+        merge_rows(self.cache_k.host_mut(&mut none)?, &ck, slots, l,
+                   self.batch, row_sz);
+        merge_rows(self.cache_v.host_mut(&mut none)?, &cv, slots, l,
+                   self.batch, row_sz);
+        debug_assert_eq!(none, 0);
+        let block = LogitsBlock::from_vec(logits, v);
         Ok(slots
             .iter()
-            .map(|&slot| logits[slot * v..(slot + 1) * v].to_vec())
+            .map(|&slot| LogitsRow::new(block.clone(), slot))
             .collect())
     }
 
@@ -210,51 +530,95 @@ impl DecodeEngine for StepEngine {
     /// (pos=0, PAD) probe whose cache row is never merged back... but the
     /// artifact updates all rows, so inactive slots' caches are only safe
     /// because a future prefill overwrites them before reuse (tested).
-    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
+    ///
+    /// Steady-state cost: the KV literals recycle output→input and the
+    /// weight literals ride their cache, so the only bytes staged are the
+    /// `[B]` pos/token vectors and the only bytes fetched are the logits.
+    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<LogitsRow>> {
         let m = self.rt.manifest();
-        let (b, v) = (m.rollout_batch, m.vocab_size);
+        let (b, v, max_seq, pad_id) =
+            (m.rollout_batch, m.vocab_size, m.max_seq, m.pad_id);
         let mut pos = vec![0i32; b];
-        let mut tok = vec![m.pad_id; b];
+        let mut tok = vec![pad_id; b];
         for &(slot, p, t) in rows {
             // KV capacity guard: the cache has exactly max_seq rows per
             // slot; a decode at p >= max_seq would write out of range in
             // the artifact's dynamic-update (silently clamped by XLA, which
             // would corrupt the last KV row instead of failing loudly).
-            assert!((p as usize) < m.max_seq && slot < b,
+            assert!((p as usize) < max_seq && slot < b,
                     "decode position {p} out of range (slot {slot}, \
-                     max_seq {})", m.max_seq);
+                     max_seq {max_seq})");
             pos[slot] = p;
             tok[slot] = t;
         }
-        let mut inputs = self.weight_inputs();
-        inputs.push(HostTensor::f32(&self.kv_shape, std::mem::take(&mut self.cache_k)));
-        inputs.push(HostTensor::f32(&self.kv_shape, std::mem::take(&mut self.cache_v)));
-        inputs.push(HostTensor::i32(&[b], pos));
-        inputs.push(HostTensor::i32(&[b], tok));
-        let name = format!("decode_{}", self.weights.mode().tag());
-        let out = match self.rt.store.call(&name, &inputs) {
-            Ok(out) => out,
+        if !self.resident {
+            for h in &mut self.weight_handles {
+                h.invalidate();
+            }
+        }
+        let mut d2h = 0u64;
+        let mut kh =
+            self.cache_k.take_handle(&self.kv_shape, !self.resident, &mut d2h)?;
+        let mut vh = match self.cache_v
+            .take_handle(&self.kv_shape, !self.resident, &mut d2h)
+        {
+            Ok(h) => h,
             Err(e) => {
-                // The caches were moved into `inputs` above (avoiding a copy
-                // of the full KV tensors per decode), so a failed artifact
-                // call would otherwise leave this engine with empty caches
-                // and silently poison every later decode.  Reinstall them
-                // before propagating: inputs end with [.., ck, cv, pos, tok].
-                let _tok = inputs.pop();
-                let _pos = inputs.pop();
-                self.cache_v = inputs.pop().expect("cv input").into_f32();
-                self.cache_k = inputs.pop().expect("ck input").into_f32();
+                // cache_k is already out in `kh`; put it back so a failed
+                // take of the sibling cache cannot orphan it — and keep the
+                // bytes cache_k's materialization already moved on the books
+                self.note_kv_d2h(d2h);
+                self.cache_k.restore(kh);
                 return Err(e);
             }
         };
-        let mut it = out.into_iter();
-        self.cache_k = it.next().unwrap().into_f32();
-        self.cache_v = it.next().unwrap().into_f32();
-        let logits = it.next().unwrap().into_f32();
-        Ok(rows
-            .iter()
-            .map(|&(slot, _, _)| logits[slot * v..(slot + 1) * v].to_vec())
-            .collect())
+        self.note_kv_d2h(d2h);
+        let fresh = [HostTensor::i32(&[b], pos), HostTensor::i32(&[b], tok)];
+        let name = format!("decode_{}", self.weights.mode().tag());
+        let call = {
+            let mut resident: Vec<&mut InputHandle> =
+                self.weight_handles.iter_mut().collect();
+            resident.push(&mut kh);
+            resident.push(&mut vh);
+            self.rt.store.call_with_resident(&name, &mut resident, &fresh)
+        };
+        let mut outs = match call {
+            Ok(o) => o,
+            Err(e) => {
+                // the KV contents still live in the handles (host payload
+                // and/or staged literal — call_with_resident reinstalls
+                // them on failure), so a failed artifact call cannot leave
+                // this engine with empty caches poisoning later decodes
+                self.cache_k.restore(kh);
+                self.cache_v.restore(vh);
+                return Err(e);
+            }
+        };
+        // KV flows output→input: keep the fresh caches as device-format
+        // literals (zero d2h) on the resident path; the baseline path
+        // copies them out like the pre-residency engine did
+        let taken = take_decode_outputs(&mut outs, self.resident);
+        self.acc_h2d += outs.staged_h2d();
+        self.acc_d2h += outs.fetched_d2h();
+        drop(outs);
+        match taken {
+            Ok((k, v_new, logits)) => {
+                self.cache_k = k;
+                self.cache_v = v_new;
+                let block = LogitsBlock::from_vec(logits, v);
+                Ok(rows
+                    .iter()
+                    .map(|&(slot, _, _)| LogitsRow::new(block.clone(), slot))
+                    .collect())
+            }
+            Err(e) => {
+                // output extraction failed post-execution: fall back to the
+                // pre-call caches still held by the input handles
+                self.cache_k.restore(kh);
+                self.cache_v.restore(vh);
+                Err(e)
+            }
+        }
     }
 
     /// Host-side cache-row copy: duplicate `src_slot`'s K/V rows (every
@@ -263,36 +627,134 @@ impl DecodeEngine for StepEngine {
     /// bit-for-bit equal to prefilling the prompt again (integration-tested
     /// against a fresh prefill).
     ///
-    /// The copy spans the full `max_seq` row, not just the prompt prefix:
-    /// that makes the destination byte-identical to a fresh prefill merge
-    /// by construction, with no reliance on the attention mask zeroing
-    /// stale tail positions exactly.  A prefix-limited copy (prompt_len
-    /// per head) would cut host-copy cost ~max_seq/prompt_len x if that
-    /// masking guarantee is ever established against the artifacts.
-    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()> {
-        let (l, b) = (self.kv_shape[0], self.kv_shape[1]);
-        let row_sz = self.kv_shape[2] * self.kv_shape[3] * self.kv_shape[4];
+    /// The copy spans only the `prompt_len` prefix per head: positions
+    /// `>= prompt_len` of a fresh slot hold stale garbage either way
+    /// (previous occupant vs prefill's masked tail), and the causal mask
+    /// guarantees a position is never read before the sequence's own
+    /// decode writes it — so the prefix copy is bit-identical to the full
+    /// row at ~`max_seq/prompt_len`× less host traffic.  The full-row path
+    /// survives behind [`StepEngine::full_row_fork`] for the parity test
+    /// that establishes exactly that guarantee against the artifacts.
+    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize],
+               prompt_len: usize) -> Result<()> {
+        let dims = self.kv_dims();
+        let (_, b, _, s, _) = dims;
         assert!(src_slot < b, "fork from bad slot {src_slot}");
-        for layer in 0..l {
-            let src = (layer * b + src_slot) * row_sz;
-            for &dst_slot in dst_slots {
-                assert!(dst_slot < b && dst_slot != src_slot,
-                        "fork into bad slot {dst_slot}");
-                let dst = (layer * b + dst_slot) * row_sz;
-                self.cache_k.copy_within(src..src + row_sz, dst);
-                self.cache_v.copy_within(src..src + row_sz, dst);
-            }
+        for &dst_slot in dst_slots {
+            assert!(dst_slot < b && dst_slot != src_slot,
+                    "fork into bad slot {dst_slot}");
         }
+        let prefix = if self.full_row_fork || prompt_len == 0
+            || prompt_len >= s
+        {
+            None
+        } else {
+            Some(prompt_len)
+        };
+        // materialize both caches (booking the bytes) before forking either
+        let mut d2h = 0u64;
+        self.cache_k.host_mut(&mut d2h)?;
+        self.cache_v.host_mut(&mut d2h)?;
+        self.note_kv_d2h(d2h);
+        let mut none = 0u64;
+        fork_rows(self.cache_k.host_mut(&mut none)?, dims, src_slot,
+                  dst_slots, prefix);
+        fork_rows(self.cache_v.host_mut(&mut none)?, dims, src_slot,
+                  dst_slots, prefix);
+        debug_assert_eq!(none, 0);
         Ok(())
     }
 
-    /// Hot weight swap: replace only the weight tensors fed to the next
+    /// Hot weight swap: replace the resident weight tensors fed to the next
     /// prefill/decode artifact call.  KV caches and slot assignments are
     /// untouched, so a requantization no longer costs an engine rebuild (the
     /// pre-refactor `service = None` teardown re-allocated and re-zeroed
     /// every replica's caches).  The precision mode may change too — the
     /// artifact name is derived from the installed weights per call.
-    fn swap_weights(&mut self, w: EngineWeights) {
+    ///
+    /// The resident weight handles are replaced wholesale (fresh handles
+    /// start unstaged), so stale cached bytes are unrepresentable no
+    /// matter what `epoch` value the caller passes; the next call stages
+    /// the new weights exactly once.
+    fn swap_weights(&mut self, w: EngineWeights, _epoch: u64) {
+        self.weight_handles = weight_handles(&w);
         self.weights = w;
+    }
+
+    fn take_transfer(&mut self) -> (u64, u64) {
+        (std::mem::take(&mut self.acc_h2d), std::mem::take(&mut self.acc_d2h))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logits_rows_share_one_block() {
+        let block = LogitsBlock::from_vec(vec![1.0, 2.0, 3.0, 4.0], 2);
+        assert_eq!(block.rows(), 2);
+        let a = LogitsRow::new(block.clone(), 0);
+        let b = a.clone();
+        let c = LogitsRow::new(block.clone(), 1);
+        assert_eq!(a.as_slice(), &[1.0, 2.0]);
+        assert_eq!(b.as_slice(), a.as_slice());
+        assert_eq!(c.as_slice(), &[3.0, 4.0]);
+        // views are the same memory, not copies
+        assert!(std::ptr::eq(a.as_slice().as_ptr(), b.as_slice().as_ptr()));
+    }
+
+    #[test]
+    fn pooled_block_returns_storage_on_drop() {
+        let pool = Rc::new(F32Pool::new());
+        let block = LogitsBlock::pooled(vec![0.0; 8], 4, pool.clone());
+        let row = LogitsRow::new(block.clone(), 1);
+        drop(block);
+        assert_eq!(pool.free_count(), 0, "live row must keep the block");
+        drop(row);
+        assert_eq!(pool.free_count(), 1, "last view returns the buffer");
+    }
+
+    #[test]
+    fn fork_rows_prefix_copies_only_prompt_positions() {
+        // tiny layout: L=2, B=3, H=2, S=4, Dh=1
+        let dims = (2usize, 3usize, 2usize, 4usize, 1usize);
+        let n = 2 * 3 * 2 * 4;
+        let src_buf: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let run = |prefix: Option<usize>| {
+            let mut buf = src_buf.clone();
+            fork_rows(&mut buf, dims, 0, &[2], prefix);
+            buf
+        };
+        let full = run(None);
+        let pref = run(Some(2));
+        let (l, b, h, s, dh) = dims;
+        for layer in 0..l {
+            for head in 0..h {
+                for p in 0..s {
+                    let src = (((layer * b) * h + head) * s + p) * dh;
+                    let dst = (((layer * b + 2) * h + head) * s + p) * dh;
+                    // full copy: whole row duplicated
+                    assert_eq!(full[dst], full[src]);
+                    if p < 2 {
+                        // prefix copy matches the full copy on prompt rows
+                        assert_eq!(pref[dst], full[dst], "prefix row differs");
+                    } else {
+                        // ...and leaves the tail untouched
+                        assert_eq!(pref[dst], src_buf[dst], "tail clobbered");
+                    }
+                }
+            }
+        }
+        // untouched slots identical in both
+        for layer in 0..l {
+            for head in 0..h {
+                for p in 0..s {
+                    let mid = (((layer * b + 1) * h + head) * s + p) * dh;
+                    assert_eq!(full[mid], src_buf[mid]);
+                    assert_eq!(pref[mid], src_buf[mid]);
+                }
+            }
+        }
     }
 }

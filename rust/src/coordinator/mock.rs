@@ -6,10 +6,20 @@
 //! engine provides.  The mock also enforces the engine-side invariants the
 //! artifacts would only fail on silently: slot indices in range, decode
 //! positions strictly below `max_seq`, and prefill only into distinct slots.
+//!
+//! Like [`StepEngine`](super::StepEngine), it emits one flat
+//! [`LogitsBlock`](super::engine::LogitsBlock) per call with
+//! [`LogitsRow`] views into it, recycling block storage through a
+//! [`F32Pool`] — so the propcheck suites exercise the same
+//! row-view/pooling machinery the production path runs on.
+
+use std::rc::Rc;
 
 use anyhow::Result;
 
-use super::engine::DecodeEngine;
+use crate::util::pool::F32Pool;
+
+use super::engine::{DecodeEngine, LogitsBlock, LogitsRow};
 
 /// Deterministic in-memory engine: B slots over a tiny vocabulary.
 pub struct MockEngine {
@@ -24,6 +34,8 @@ pub struct MockEngine {
     /// bit-for-bit.  [`DecodeEngine::swap_weights`] replaces it — tests
     /// observe a hot requantization as a change in greedy outputs.
     weights: u64,
+    /// logits-block storage recycler (one block per prefill/decode call)
+    pool: Rc<F32Pool>,
     /// bookkeeping the tests assert on
     pub prefill_calls: usize,
     pub prefill_rows: usize,
@@ -53,6 +65,7 @@ impl MockEngine {
             eos_id,
             state: vec![0; batch],
             weights: 0,
+            pool: Rc::new(F32Pool::new()),
             prefill_calls: 0,
             prefill_rows: 0,
             fork_calls: 0,
@@ -63,16 +76,15 @@ impl MockEngine {
         }
     }
 
-    /// Logits for the next token of a sequence whose rolling hash is `h`,
+    /// Append the logits row for a sequence whose rolling hash is `h`,
     /// under the currently installed weight signature.  Greedy-decoding
     /// this stream yields a pseudo-random but fully deterministic token
     /// sequence; EOS surfaces with probability ~1/vocab per step so request
     /// lifetimes vary.
-    fn logits_for(&self, h: u64) -> Vec<f32> {
-        (0..self.vocab)
-            .map(|v| (mix(h ^ self.weights, v as u64 + 1) % 1024) as f32
-                 / 1024.0)
-            .collect()
+    fn logits_into(&self, h: u64, out: &mut Vec<f32>) {
+        out.extend((0..self.vocab).map(|v| {
+            (mix(h ^ self.weights, v as u64 + 1) % 1024) as f32 / 1024.0
+        }));
     }
 }
 
@@ -83,12 +95,12 @@ impl DecodeEngine for MockEngine {
         self.batch
     }
 
-    fn prefill(&mut self, slots: &[usize], prompts: &[Vec<i32>])
-               -> Result<Vec<Vec<f32>>> {
+    fn prefill(&mut self, slots: &[usize], prompts: &[&[i32]])
+               -> Result<Vec<LogitsRow>> {
         assert_eq!(slots.len(), prompts.len());
         self.prefill_calls += 1;
         self.prefill_rows += slots.len();
-        let mut out = Vec::with_capacity(slots.len());
+        let mut data = self.pool.take(slots.len() * self.vocab);
         for (i, &slot) in slots.iter().enumerate() {
             assert!(slot < self.batch, "prefill into bad slot {slot}");
             assert!(slots[..i].iter().all(|&s| s != slot),
@@ -96,23 +108,26 @@ impl DecodeEngine for MockEngine {
             assert!(!prompts[i].is_empty() && prompts[i].len() < self.max_seq,
                     "prompt length {} out of range", prompts[i].len());
             let mut h = 0x51_6d0c;
-            for &t in &prompts[i] {
+            for &t in prompts[i] {
                 h = mix(h, t as u64);
             }
             self.state[slot] = h;
-            out.push(self.logits_for(h));
+            self.logits_into(h, &mut data);
         }
-        Ok(out)
+        let block = LogitsBlock::pooled(data, self.vocab, self.pool.clone());
+        Ok((0..slots.len())
+            .map(|i| LogitsRow::new(block.clone(), i))
+            .collect())
     }
 
-    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<Vec<f32>>> {
+    fn decode(&mut self, rows: &[(usize, i32, i32)]) -> Result<Vec<LogitsRow>> {
         if self.fail_decodes > 0 {
             self.fail_decodes -= 1;
             anyhow::bail!("injected decode failure (fail_decodes)");
         }
         self.decode_calls += 1;
         assert!(rows.len() <= self.batch, "decode wider than slot count");
-        let mut out = Vec::with_capacity(rows.len());
+        let mut data = self.pool.take(rows.len() * self.vocab);
         for &(slot, pos, tok) in rows {
             assert!(slot < self.batch, "decode into bad slot {slot}");
             assert!(pos >= 0 && (pos as usize) < self.max_seq,
@@ -120,15 +135,20 @@ impl DecodeEngine for MockEngine {
                     self.max_seq);
             self.max_pos_seen = self.max_pos_seen.max(pos);
             self.state[slot] = mix(self.state[slot], tok as u64);
-            out.push(self.logits_for(self.state[slot]));
+            self.logits_into(self.state[slot], &mut data);
         }
-        Ok(out)
+        let block = LogitsBlock::pooled(data, self.vocab, self.pool.clone());
+        Ok((0..rows.len())
+            .map(|i| LogitsRow::new(block.clone(), i))
+            .collect())
     }
 
     /// Forking the per-slot sequence hash reproduces exactly the state a
     /// fresh prefill of the same prompt would leave, mirroring the real
-    /// engine's cache-row copy.
-    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize]) -> Result<()> {
+    /// engine's cache-row copy.  The prompt length is irrelevant here — the
+    /// hash *is* the whole prompt state.
+    fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize],
+               _prompt_len: usize) -> Result<()> {
         assert!(src_slot < self.batch, "fork from bad slot {src_slot}");
         self.fork_calls += 1;
         self.forked_slots += dst_slots.len();
@@ -142,7 +162,7 @@ impl DecodeEngine for MockEngine {
 
     /// Swap the weight signature; per-slot sequence state survives, exactly
     /// like the real engine's KV caches survive a hot requantization.
-    fn swap_weights(&mut self, w: u64) {
+    fn swap_weights(&mut self, w: u64, _epoch: u64) {
         self.weights = w;
     }
 }

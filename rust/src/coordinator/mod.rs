@@ -52,11 +52,36 @@
 //! [`MockEngine`] workers are plain values and exercise the same machinery
 //! in the host-only test suites.
 //!
+//! # Residency boundary on the serving hot path
+//!
+//! What converts/copies when (measured end-to-end as the
+//! `sched_bytes_h2d`/`sched_bytes_d2h` metrics; the tiers are defined in
+//! [`runtime`](crate::runtime)):
+//!
+//! * **per weight epoch** — engine weights.  [`StepEngine`] holds them as
+//!   resident input handles; [`DecodeEngine::swap_weights`] (driven by
+//!   [`RolloutService::push_weights`] → `WeightEpoch`) installs new ones
+//!   and the next call stages them exactly once.  Decode ticks between
+//!   swaps stage **zero** weight bytes.
+//! * **never (steady-state decode)** — the `[L,B,H,S,Dh]` KV caches flow
+//!   decode-output → decode-input as raw device-format literals.
+//! * **per admission boundary** — prefill/`fork_kv` mutate cache rows, so
+//!   KV materializes to host vectors there and re-stages on the next
+//!   decode; `fork_kv` copies only the `prompt_len` prefix per head
+//!   (causal masking makes that bit-identical to a full-row copy —
+//!   artifact-parity tested).
+//! * **per tick** — only the `[B]` position/token control vectors (h2d)
+//!   and one flat logits block (d2h).  Sequences hold [`LogitsRow`] views
+//!   into the shared block instead of per-slot copies; prompts ride one
+//!   `Arc` per group from `submit_group` into the engine.
+//!
 //! Greedy decode through the whole stack is bit-identical to the bulk path
-//! (integration-tested, including fork_kv prefill), and all service
-//! outputs are bit-identical across inline/threaded execution and stripe
-//! policies (property-tested) — placement and thread interleaving change
-//! wall-clock, never learning.
+//! (integration-tested, including fork_kv prefill), outputs are
+//! bit-identical across inline/threaded execution and stripe policies
+//! (property-tested), and bit-identical between the resident and per-call
+//! input paths across a mid-run weight swap (integration-tested) —
+//! residency, placement and thread interleaving change wall-clock and
+//! copy-bytes, never learning.
 
 pub mod engine;
 pub mod kv;
@@ -66,7 +91,7 @@ pub mod sampler;
 pub mod scheduler;
 pub mod service;
 
-pub use engine::{DecodeEngine, StepEngine};
+pub use engine::{DecodeEngine, LogitsBlock, LogitsRow, StepEngine};
 pub use kv::SlotMap;
 pub use mock::MockEngine;
 pub use request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};

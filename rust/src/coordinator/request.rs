@@ -1,11 +1,17 @@
 //! Rollout request/response types for the serving-style scheduler.
 
+use std::sync::Arc;
+
 /// A generation request, vLLM-router style.
 #[derive(Clone, Debug)]
 pub struct RolloutRequest {
     pub id: u64,
-    /// prompt token ids (BOS included), length <= max_prompt
-    pub prompt: Vec<i32>,
+    /// prompt token ids (BOS included), length <= max_prompt.  `Arc`'d so
+    /// a group's members share one allocation all the way from
+    /// `RolloutService::submit_group` into the scheduler — admission's
+    /// shared-prefix clustering resolves siblings by pointer identity and
+    /// the engine reads tokens in place, with no per-member prompt clones.
+    pub prompt: Arc<Vec<i32>>,
     /// stop after this many generated tokens (EOS may stop earlier)
     pub max_new: usize,
     pub temperature: f32,
@@ -66,6 +72,18 @@ pub struct SchedulerStats {
     /// groups whose in-flight remainder was cancelled by the service's
     /// prune policy (bumped by [`RolloutService`], not the scheduler)
     pub pruned_groups: usize,
+    /// bytes newly converted host→device-format across this scheduler's
+    /// artifact calls (drained from
+    /// [`DecodeEngine::take_transfer`](super::engine::DecodeEngine::take_transfer)
+    /// on `Scheduler::take_stats`).  Resident inputs riding a cached
+    /// conversion — weights between swaps, recycled KV literals — count
+    /// zero, so on the resident path this collapses to per-tick control
+    /// tensors plus admission-boundary KV staging; the per-call baseline
+    /// pays weights + both KV caches every tick.  Mock engines report 0.
+    pub bytes_h2d: u64,
+    /// bytes copied device-format→host (logits each call; KV only when it
+    /// must materialize for a row merge or fork)
+    pub bytes_d2h: u64,
     /// sum over decode calls of occupied-slot fraction
     pub occupancy_sum: f64,
     /// sum over completed requests of time spent queued before prefill
@@ -127,9 +145,35 @@ impl SchedulerStats {
         self.decode_calls += other.decode_calls;
         self.generated_tokens += other.generated_tokens;
         self.pruned_groups += other.pruned_groups;
+        self.bytes_h2d += other.bytes_h2d;
+        self.bytes_d2h += other.bytes_d2h;
         self.occupancy_sum += other.occupancy_sum;
         self.queue_wait_sum_s += other.queue_wait_sum_s;
         self.wall_s += other.wall_s;
         self.weight_epoch = self.weight_epoch.max(other.weight_epoch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_bytes_and_maxes_epoch() {
+        let mut a = SchedulerStats {
+            bytes_h2d: 100,
+            bytes_d2h: 10,
+            weight_epoch: 3,
+            ..Default::default()
+        };
+        let b = SchedulerStats {
+            bytes_h2d: 7,
+            bytes_d2h: 2,
+            weight_epoch: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!((a.bytes_h2d, a.bytes_d2h), (107, 12));
+        assert_eq!(a.weight_epoch, 3, "epoch is a level, merge takes max");
     }
 }

@@ -20,13 +20,14 @@
 //! * decode positions stay strictly below `max_seq` (KV capacity).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::util::rng::Pcg64;
 
-use super::engine::DecodeEngine;
+use super::engine::{DecodeEngine, LogitsRow};
 use super::kv::SlotMap;
 use super::request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 use super::sampler;
@@ -36,8 +37,9 @@ struct ActiveSeq {
     slot: usize,
     /// index of the last accepted token (prompt or generated)
     pos: usize,
-    /// distribution for the NEXT token (logits row)
-    pending_logits: Vec<f32>,
+    /// distribution for the NEXT token — a shared view into the engine's
+    /// per-call logits block, not a per-sequence copy
+    pending_logits: LogitsRow,
     generated: Vec<i32>,
     logprobs: Vec<f32>,
     rng: Pcg64,
@@ -121,10 +123,13 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// requantization).  `epoch` is the service's
     /// [`WeightEpoch`](super::service::WeightEpoch) counter, surfaced in
     /// [`SchedulerStats::weight_epoch`] so metric rows show which weight
-    /// generation served each step.  Queued and active requests are
-    /// untouched; their next decode simply runs under the new weights.
+    /// generation served each step, and passed down to the engine (which
+    /// replaces its resident weight handles, so the new weights convert to
+    /// device format once, on their first call).
+    /// Queued and active requests are untouched; their next decode simply
+    /// runs under the new weights.
     pub fn swap_weights(&mut self, w: E::Weights, epoch: u64) {
-        self.engine.swap_weights(w);
+        self.engine.swap_weights(w, epoch);
         self.stats.weight_epoch = epoch;
     }
 
@@ -151,8 +156,13 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// Drain the counters for this scheduler, preserving the weight-epoch
     /// *level* (it is a generation marker, not a per-run delta — resetting
     /// it to 0 would make a later stats row claim the engine regressed to
-    /// its initial weights).
+    /// its initial weights).  The engine's staged-byte counters drain here
+    /// too, so `bytes_h2d`/`bytes_d2h` land in the same stats row as the
+    /// decode/prefill call counts they pair with.
     pub fn take_stats(&mut self) -> SchedulerStats {
+        let (h2d, d2h) = self.engine.take_transfer();
+        self.stats.bytes_h2d += h2d;
+        self.stats.bytes_d2h += d2h;
         let st = std::mem::take(&mut self.stats);
         self.stats.weight_epoch = st.weight_epoch;
         st
@@ -213,13 +223,18 @@ impl<E: DecodeEngine> Scheduler<E> {
             newly.push((req, t_enq, slot));
         }
         // cluster identical prompts: reps[k] is the newly-index of cluster
-        // k's representative; rep_for[i] is request i's cluster
+        // k's representative; rep_for[i] is request i's cluster.  Prompts
+        // are Arc-shared end-to-end (one group's members hold the same
+        // allocation), so the common case resolves by pointer identity
+        // before falling back to a content compare.
         let mut reps: Vec<usize> = Vec::new();
         let mut rep_for: Vec<usize> = Vec::with_capacity(newly.len());
         for i in 0..newly.len() {
             let found = if self.share_prefix {
-                reps.iter()
-                    .position(|&r| newly[r].0.prompt == newly[i].0.prompt)
+                reps.iter().position(|&r| {
+                    let (a, b) = (&newly[r].0.prompt, &newly[i].0.prompt);
+                    Arc::ptr_eq(a, b) || a == b
+                })
             } else {
                 None
             };
@@ -232,18 +247,22 @@ impl<E: DecodeEngine> Scheduler<E> {
             }
         }
         let slots: Vec<usize> = reps.iter().map(|&i| newly[i].2).collect();
-        let prompts: Vec<Vec<i32>> =
-            reps.iter().map(|&i| newly[i].0.prompt.clone()).collect();
+        // borrowed, not cloned: the engine reads prompt tokens in place
+        let prompts: Vec<&[i32]> =
+            reps.iter().map(|&i| newly[i].0.prompt.as_slice()).collect();
         self.stats.prefill_calls += 1;
         self.stats.prefill_rows += reps.len();
         let logits = self.engine.prefill(&slots, &prompts)?;
+        drop(prompts);
         for (k, &ri) in reps.iter().enumerate() {
             let dsts: Vec<usize> = (0..newly.len())
                 .filter(|&i| i != ri && rep_for[i] == k)
                 .map(|i| newly[i].2)
                 .collect();
             if !dsts.is_empty() {
-                self.engine.fork_kv(newly[ri].2, &dsts)?;
+                // prefix-limited fork: only the prompt_len rows carry state
+                self.engine.fork_kv(newly[ri].2, &dsts,
+                                    newly[ri].0.prompt.len())?;
                 self.stats.forked += dsts.len();
             }
         }
@@ -251,6 +270,8 @@ impl<E: DecodeEngine> Scheduler<E> {
             let rng = Pcg64::new(req.seed);
             self.active.push(ActiveSeq {
                 pos: req.prompt.len() - 1,
+                // Rc bump into the shared block — forked siblings reference
+                // the representative's prefill row, no vocab-sized copy
                 pending_logits: logits[rep_for[i]].clone(),
                 generated: Vec::new(),
                 logprobs: Vec::new(),
@@ -278,7 +299,7 @@ impl<E: DecodeEngine> Scheduler<E> {
         let mut i = 0;
         while i < self.active.len() {
             let a = &mut self.active[i];
-            let (tok, lp) = sampler::sample(&a.pending_logits,
+            let (tok, lp) = sampler::sample(a.pending_logits.as_slice(),
                                             a.req.temperature, a.req.top_p,
                                             &mut a.rng);
             a.generated.push(tok);
@@ -345,7 +366,8 @@ mod tests {
     fn req(id: u64, prompt_len: usize, max_new: usize) -> RolloutRequest {
         RolloutRequest {
             id,
-            prompt: (0..prompt_len).map(|i| 3 + (i as i32 % 5)).collect(),
+            prompt: Arc::new((0..prompt_len).map(|i| 3 + (i as i32 % 5))
+                .collect()),
             max_new,
             // greedy: the mock's argmax stream is deterministic and can hit
             // EOS, exercising all three finish reasons

@@ -65,6 +65,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -550,6 +551,10 @@ impl<E: DecodeEngine> RolloutService<E> {
         assert!(spec.group_size > 0, "empty group");
         let engine = self.place(&spec);
         let gi = self.groups.len();
+        // one allocation for the whole group: members carry Arc clones, and
+        // the scheduler's shared-prefix clustering recognizes them by
+        // pointer identity
+        let prompt = Arc::new(spec.prompt);
         let mut uids = Vec::with_capacity(spec.group_size);
         let mut reqs = Vec::with_capacity(spec.group_size);
         for member in 0..spec.group_size {
@@ -558,7 +563,7 @@ impl<E: DecodeEngine> RolloutService<E> {
             self.by_uid.insert(uid, (gi, member));
             reqs.push(RolloutRequest {
                 id: uid,
-                prompt: spec.prompt.clone(),
+                prompt: prompt.clone(),
                 max_new: spec.max_new,
                 temperature: spec.temperature,
                 top_p: spec.top_p,

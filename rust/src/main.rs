@@ -244,8 +244,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         trainer.ps.save(Path::new(&args.str("save")))?;
     }
     // artifact execution profile (L3 perf accounting)
-    for (name, calls, secs) in rt.store.stats().into_iter().take(6) {
-        qurl::info!("perf", "{name}: {calls} calls, {secs:.1}s");
+    for (name, st) in rt.store.stats().into_iter().take(6) {
+        qurl::info!("perf", "{name}: {} calls, {:.1}s, {:.1} MB h2d / \
+                     {:.1} MB d2h",
+                    st.calls, st.secs, st.bytes_h2d as f64 / 1e6,
+                    st.bytes_d2h as f64 / 1e6);
     }
     Ok(())
 }
@@ -360,10 +363,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("served {served} requests ({n} groups x {group}, {n_engines} \
               engine(s), {} exec, {} striping): {:.1} tok/s, mean \
               occupancy {:.2}, {} prefill calls ({:.1} rows/call, {} rows \
-              forked), {} decode calls",
+              forked), {} decode calls, {:.1} MB h2d / {:.1} MB d2h staged",
              exec.name(), stripe.name(), st.tokens_per_s(),
              st.mean_occupancy(), st.prefill_calls,
-             st.mean_prefill_batch(), st.forked, st.decode_calls);
+             st.mean_prefill_batch(), st.forked, st.decode_calls,
+             st.bytes_h2d as f64 / 1e6, st.bytes_d2h as f64 / 1e6);
     if n_engines > 1 {
         for (i, es) in svc.last_engine_stats().iter().enumerate() {
             println!("  engine {i}: {} decode calls, {} tokens, occupancy \

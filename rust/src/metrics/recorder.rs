@@ -21,6 +21,19 @@
 //! | `sched_tokens_per_s`      | tokens / service wall time                  |
 //! | `sched_weight_epoch`      | weight generation serving this step (max    |
 //! |                           | over replicas; bumps on hot requantization) |
+//! | `sched_bytes_h2d`         | bytes newly converted host→device-format    |
+//! |                           | (resident weights/KV riding a cached        |
+//! |                           | conversion count 0 — the copy-tax ledger)   |
+//! | `sched_bytes_d2h`         | bytes copied device-format→host (logits;    |
+//! |                           | KV only at merge/fork boundaries)           |
+//! | `sched_h2d_per_decode`    | `sched_bytes_h2d / sched_decode_calls`.  On |
+//! |                           | the resident path WEIGHT bytes are ~0       |
+//! |                           | between swaps; what remains is per-tick     |
+//! |                           | control tensors plus one full-KV re-stage   |
+//! |                           | after each admission merge/fork — so this   |
+//! |                           | scales with admission rate, and only the    |
+//! |                           | admission-free steady state collapses to    |
+//! |                           | control-tensor size (integration-tested)    |
 //!
 //! With more than one engine replica the same row carries a per-replica
 //! breakdown so striping imbalance is visible at a glance:

@@ -840,6 +840,19 @@ impl Trainer {
                 .set("sched_generated_tokens", st.generated_tokens as f64)
                 .set("sched_tokens_per_s", st.tokens_per_s())
                 .set("sched_weight_epoch", st.weight_epoch as f64)
+                // the copy-tax ledger: bytes newly staged host→device-format
+                // and fetched back per step.  On the resident path h2d stays
+                // near zero between weight swaps (weights convert once per
+                // epoch, KV literals recycle decode→decode); regressions
+                // show up here before they show up in wall-clock.
+                .set("sched_bytes_h2d", st.bytes_h2d as f64)
+                .set("sched_bytes_d2h", st.bytes_d2h as f64)
+                .set("sched_h2d_per_decode",
+                     if st.decode_calls > 0 {
+                         st.bytes_h2d as f64 / st.decode_calls as f64
+                     } else {
+                         0.0
+                     })
                 .tag("phase", "rollout");
             let per = std::mem::take(&mut self.sched_engine_stats);
             if per.len() > 1 {

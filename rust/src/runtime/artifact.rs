@@ -2,26 +2,187 @@
 //! the executables, and provide a shape-checked call interface.
 //!
 //! This is the only module that touches the `xla` crate's execution API;
-//! everything above it works with [`HostTensor`]s.
+//! everything above it works with [`HostTensor`]s or the resident-input
+//! types below.
+//!
+//! # Residency boundary
+//!
+//! Every artifact call historically paid the same host-side copy tax:
+//! convert each input `HostTensor` into a PJRT `Literal` (a full memcpy
+//! into device format), execute, then copy every output literal back into
+//! host vectors.  For the rollout hot path — where the multi-megabyte
+//! engine weights and the full `[L,B,H,S,Dh]` KV caches are inputs to
+//! *every* decode tick — that tax dominates, and it is exactly the
+//! boundary a GPU backend would call PCIe.
+//!
+//! Two mechanisms make inputs *resident* instead:
+//!
+//! * [`InputHandle`] — caches the converted literal of an immutable host
+//!   tensor for the handle's lifetime, reusing it call after call; callers
+//!   replace the handle when the content changes (`StepEngine` rebuilds
+//!   its weight handles on `swap_weights`, so weights convert **once per
+//!   weight epoch**, not once per tick).
+//! * literal recycling — [`CallOutputs`] hands outputs back as raw
+//!   literals on request, so state that flows output→input across calls
+//!   (the KV caches) never round-trips through host vectors at all.
+//!
+//! The vendored `xla` crate executes from literals (`execute::<Literal>`);
+//! if a future vendored build exposes device-buffer execution
+//! (`PjRtBuffer` arguments), [`InputHandle`] is the single place to swap
+//! the cached representation — callers are already coded against the
+//! residency API.  Per-artifact `bytes_h2d`/`bytes_d2h` counters measure
+//! exactly the copies that remain.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
 
 use super::manifest::Manifest;
 use super::tensor::HostTensor;
+
+/// Cumulative per-artifact execution profile (the L3 perf source).
+///
+/// `bytes_h2d` counts bytes newly materialized into device-format literals
+/// at call time — resident inputs whose cached conversion was reused (and
+/// recycled output literals fed back as inputs) contribute **zero**.
+/// `bytes_d2h` counts bytes copied out of output literals into host
+/// vectors; outputs kept as literals ([`CallOutputs::take_literal`])
+/// contribute zero.
+///
+/// `secs` spans input staging, execution, result fetch and untupling.
+/// Output literal→host conversion happens at [`CallOutputs::take_host`]
+/// time — after the timed window — so versus the pre-residency profile a
+/// sliver of time per call moved from these rows into callers' host-side
+/// accounting (e.g. perf_hotpath's "host (L3) overhead" row); the BYTES
+/// are still attributed here.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArtifactStat {
+    pub calls: u64,
+    pub secs: f64,
+    pub bytes_h2d: u64,
+    pub bytes_d2h: u64,
+}
+
+/// A resident artifact input: a host tensor plus its cached device-format
+/// conversion.
+///
+/// A handle's content is immutable — there is deliberately no in-place
+/// setter, so "stale cached conversion" is unrepresentable: replacing
+/// content means building a new handle (which starts unstaged), and that
+/// rebuild is exactly what `StepEngine::swap_weights` does once per
+/// weight epoch.  A handle can also be built directly
+/// [`from_literal`](InputHandle::from_literal) to feed an output literal
+/// back as the next call's input with no host round-trip (the KV-cache
+/// flow).
+pub struct InputHandle {
+    host: Option<HostTensor>,
+    lit: Option<Literal>,
+}
+
+impl InputHandle {
+    /// Resident handle over host data; the first call converts (and
+    /// caches) the literal, and every later call reuses it for free.
+    pub fn new(tensor: HostTensor) -> InputHandle {
+        InputHandle { host: Some(tensor), lit: None }
+    }
+
+    /// Handle around an already device-format literal (e.g. a previous
+    /// call's output): staging it costs zero bytes.  There is no host
+    /// view; callers needing one must convert the literal themselves.
+    pub fn from_literal(lit: Literal) -> InputHandle {
+        InputHandle { host: None, lit: Some(lit) }
+    }
+
+    /// Drop the cached conversion (forces a re-stage on the next call —
+    /// the per-call baseline the parity tests and benches compare against).
+    pub fn invalidate(&mut self) {
+        self.lit = None;
+    }
+
+    pub fn host(&self) -> Option<&HostTensor> {
+        self.host.as_ref()
+    }
+
+    /// True when the next call will reuse the cached literal.
+    pub fn is_staged(&self) -> bool {
+        self.lit.is_some()
+    }
+
+    /// Deconstruct into whatever content survives (error recovery: a
+    /// failed call leaves either the host payload, the staged literal, or
+    /// both in place).
+    pub fn into_parts(self) -> (Option<HostTensor>, Option<Literal>) {
+        (self.host, self.lit)
+    }
+}
+
+/// Output tuple of one artifact call, held as raw literals so callers
+/// choose per output: copy to host ([`take_host`](CallOutputs::take_host),
+/// counted as `bytes_d2h`) or keep device-format
+/// ([`take_literal`](CallOutputs::take_literal), zero copy — feed it back
+/// through [`InputHandle::from_literal`]).
+pub struct CallOutputs<'a> {
+    store: &'a ArtifactStore,
+    /// borrowed, not owned — no per-call String allocation on the decode
+    /// hot path; callers' name strings outlive their `CallOutputs`
+    name: &'a str,
+    parts: Vec<Option<Literal>>,
+    staged_h2d: u64,
+    fetched_d2h: u64,
+}
+
+impl CallOutputs<'_> {
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+
+    /// Bytes converted host→literal for this call (fresh inputs plus any
+    /// resident handle whose cache missed its epoch).
+    pub fn staged_h2d(&self) -> u64 {
+        self.staged_h2d
+    }
+
+    /// Bytes copied literal→host via [`take_host`](Self::take_host) so far.
+    pub fn fetched_d2h(&self) -> u64 {
+        self.fetched_d2h
+    }
+
+    /// Take output `i` as a raw literal (no host copy).
+    pub fn take_literal(&mut self, i: usize) -> Result<Literal> {
+        self.parts
+            .get_mut(i)
+            .and_then(|p| p.take())
+            .ok_or_else(|| anyhow!("{}: output {i} missing or already taken",
+                                   self.name))
+    }
+
+    /// Take output `i` as a host tensor (copies; counted as d2h traffic).
+    pub fn take_host(&mut self, i: usize) -> Result<HostTensor> {
+        let lit = self.take_literal(i)?;
+        let t = HostTensor::from_literal(&lit)?;
+        let b = t.byte_len();
+        self.fetched_d2h += b;
+        self.store.note_d2h(self.name, b);
+        Ok(t)
+    }
+}
 
 pub struct ArtifactStore {
     client: PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, PjRtLoadedExecutable>>,
-    /// cumulative (calls, seconds) per artifact — the L3 profile source
-    exec_stats: RefCell<HashMap<String, (u64, f64)>>,
+    /// cumulative profile per artifact — the L3 perf source
+    exec_stats: RefCell<HashMap<String, ArtifactStat>>,
 }
 
 impl ArtifactStore {
@@ -76,31 +237,125 @@ impl ArtifactStore {
 
     /// Execute `name` with the given inputs; returns the output tuple as
     /// host tensors.  Inputs are shape/dtype-checked against the manifest.
+    /// Every input converts and every output copies back — the fully
+    /// per-call path (training/scoring artifacts, where inputs change
+    /// every call anyway).
     pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let mut outs = self.call_with_resident(name, &mut [], inputs)?;
+        (0..outs.len()).map(|i| outs.take_host(i)).collect()
+    }
+
+    /// Execute `name` with `resident` inputs first, then `fresh` inputs —
+    /// the order must match the artifact's input signature.  Resident
+    /// handles reuse their cached literal when one is staged (staging cost
+    /// 0); fresh tensors convert per call.  Outputs come
+    /// back as [`CallOutputs`], so callers keep device-format literals for
+    /// state that flows into the next call.
+    ///
+    /// On any failure (staging or execution) the staged literals are put
+    /// back into their handles before the error propagates, so resident
+    /// state — including recycled KV literals — survives a failed call.
+    pub fn call_with_resident<'s>(&'s self, name: &'s str,
+                                  resident: &mut [&mut InputHandle],
+                                  fresh: &[HostTensor])
+                                  -> Result<CallOutputs<'s>> {
+        let n_res = resident.len();
         if let Some(sig) = self.manifest.artifacts.get(name) {
-            anyhow::ensure!(sig.inputs.len() == inputs.len(),
+            anyhow::ensure!(sig.inputs.len() == n_res + fresh.len(),
                             "{name}: expected {} inputs, got {}",
-                            sig.inputs.len(), inputs.len());
-            for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
-                anyhow::ensure!(t.shape() == s.shape.as_slice(),
+                            sig.inputs.len(), n_res + fresh.len());
+            for (i, h) in resident.iter().enumerate() {
+                // literal-only handles (recycled outputs) carry no host
+                // view to check; their shape is the artifact's own output
+                // shape by construction
+                if let Some(t) = h.host() {
+                    anyhow::ensure!(t.shape() == sig.inputs[i].shape.as_slice(),
+                                    "{name} input {i}: shape {:?} != manifest \
+                                     {:?}", t.shape(), sig.inputs[i].shape);
+                    anyhow::ensure!(t.dtype_str() == sig.inputs[i].dtype,
+                                    "{name} input {i}: dtype {} != manifest {}",
+                                    t.dtype_str(), sig.inputs[i].dtype);
+                }
+            }
+            for (j, t) in fresh.iter().enumerate() {
+                let i = n_res + j;
+                anyhow::ensure!(t.shape() == sig.inputs[i].shape.as_slice(),
                                 "{name} input {i}: shape {:?} != manifest {:?}",
-                                t.shape(), s.shape);
-                anyhow::ensure!(t.dtype_str() == s.dtype,
+                                t.shape(), sig.inputs[i].shape);
+                anyhow::ensure!(t.dtype_str() == sig.inputs[i].dtype,
                                 "{name} input {i}: dtype {} != manifest {}",
-                                t.dtype_str(), s.dtype);
+                                t.dtype_str(), sig.inputs[i].dtype);
             }
         }
         self.ensure_compiled(name)?;
         let t0 = Instant::now();
-        let lits = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        // stage: take cached literals, convert the rest (counting bytes)
+        let mut lits: Vec<Literal> = Vec::with_capacity(n_res + fresh.len());
+        let mut staged: u64 = 0;
+        // resident indices converted by THIS call (not yet booked anywhere)
+        let mut converted_now: Vec<usize> = Vec::new();
+        let mut stage_err: Option<anyhow::Error> = None;
+        for (i, h) in resident.iter_mut().enumerate() {
+            if h.is_staged() {
+                lits.push(h.lit.take().unwrap());
+                continue;
+            }
+            let converted = match h.host.as_ref() {
+                Some(t) => t.to_literal().map(|l| (l, t.byte_len())),
+                None => Err(anyhow!("{name}: resident input has neither a \
+                                     valid cached literal nor host data")),
+            };
+            match converted {
+                Ok((l, b)) => {
+                    staged += b;
+                    converted_now.push(i);
+                    lits.push(l);
+                }
+                Err(e) => {
+                    stage_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if stage_err.is_none() {
+            for t in fresh {
+                match t.to_literal() {
+                    Ok(l) => {
+                        staged += t.byte_len();
+                        lits.push(l);
+                    }
+                    Err(e) => {
+                        stage_err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        let exec_result = match stage_err {
+            Some(e) => Err(e),
+            None => {
+                let cache = self.cache.borrow();
+                let exe = cache.get(name).unwrap();
+                exe.execute::<xla::Literal>(&lits)
+                    .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))
+            }
+        };
+        // hand the staged literals back to their handles in all cases — a
+        // cached conversion (or a recycled KV literal) must survive both a
+        // failed stage and a failed execution
+        for (h, lit) in resident.iter_mut().zip(lits.drain(..)) {
+            h.lit = Some(lit);
+        }
+        if exec_result.is_err() {
+            // this call's conversions were never booked (stats are recorded
+            // only on success) — drop them so a retry re-stages and
+            // re-counts instead of riding unaccounted cached bytes, keeping
+            // "bytes_h2d counts every new conversion" exact across failures
+            for &i in &converted_now {
+                resident[i].invalidate();
+            }
+        }
+        let result = exec_result?;
         let lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetching {name} result: {e:?}"))?;
@@ -108,28 +363,48 @@ impl ArtifactStore {
         let parts = lit
             .to_tuple()
             .map_err(|e| anyhow::anyhow!("untupling {name} result: {e:?}"))?;
-        let out = parts
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect::<Result<Vec<_>>>()?;
         let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.exec_stats.borrow_mut();
-        let e = stats.entry(name.to_string()).or_insert((0, 0.0));
-        e.0 += 1;
-        e.1 += dt;
-        Ok(out)
+        {
+            let mut stats = self.exec_stats.borrow_mut();
+            let e = stats.entry(name.to_string()).or_default();
+            e.calls += 1;
+            e.secs += dt;
+            e.bytes_h2d += staged;
+        }
+        Ok(CallOutputs {
+            store: self,
+            name,
+            parts: parts.into_iter().map(Some).collect(),
+            staged_h2d: staged,
+            fetched_d2h: 0,
+        })
     }
 
-    /// (calls, total seconds) per artifact since start — used by the perf
-    /// report and the L3 "coordinator is not the bottleneck" check.
-    pub fn stats(&self) -> Vec<(String, u64, f64)> {
-        let mut v: Vec<(String, u64, f64)> = self
+    /// Record device-format→host bytes copied outside a [`CallOutputs`]
+    /// extraction (e.g. `StepEngine` materializing a resident KV literal
+    /// for a row merge or fork).  Public so engine-side copies land in the
+    /// same per-artifact ledger as call-time traffic — `stats()` then
+    /// reconciles with the scheduler-level `bytes_d2h` counters instead of
+    /// disagreeing by the size of every KV materialization.
+    pub fn note_d2h(&self, name: &str, bytes: u64) {
+        self.exec_stats
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default()
+            .bytes_d2h += bytes;
+    }
+
+    /// Per-artifact profile since start (sorted by total seconds) — used
+    /// by the perf report and the L3 "coordinator is not the bottleneck"
+    /// check; the byte columns are the copy-tax ledger.
+    pub fn stats(&self) -> Vec<(String, ArtifactStat)> {
+        let mut v: Vec<(String, ArtifactStat)> = self
             .exec_stats
             .borrow()
             .iter()
-            .map(|(k, (n, s))| (k.clone(), *n, *s))
+            .map(|(k, s)| (k.clone(), *s))
             .collect();
-        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v.sort_by(|a, b| b.1.secs.partial_cmp(&a.1.secs).unwrap());
         v
     }
 

@@ -1,6 +1,8 @@
 //! Typed call wrappers over the artifact store — the API the coordinator,
 //! trainer and benches program against.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::artifact::ArtifactStore;
@@ -34,11 +36,15 @@ impl QuantMode {
 }
 
 /// Rollout-engine weights in the precision the engine runs at.
+///
+/// Payloads are `Arc`'d: cloning weights (one requantization fans out to
+/// every engine replica) and pushing them as artifact inputs
+/// ([`Self::host_tensors`]) are refcount bumps, never megabyte copies.
 #[derive(Clone, Debug)]
 pub enum EngineWeights {
-    Bf16 { flat: Vec<f32> },
-    Int8 { a: Vec<f32>, qw: Vec<i8>, qs: Vec<f32> },
-    Fp8 { a: Vec<f32>, b_fq: Vec<f32> },
+    Bf16 { flat: Arc<Vec<f32>> },
+    Int8 { a: Arc<Vec<f32>>, qw: Arc<Vec<i8>>, qs: Arc<Vec<f32>> },
+    Fp8 { a: Arc<Vec<f32>>, b_fq: Arc<Vec<f32>> },
 }
 
 impl EngineWeights {
@@ -50,21 +56,36 @@ impl EngineWeights {
         }
     }
 
-    fn push_inputs(&self, inputs: &mut Vec<HostTensor>) {
+    /// The weight tensors in artifact input order, sharing this value's
+    /// storage (zero copy).  The single definition of the weight input
+    /// layout — the fused `generate_*`/`logprob_*` calls and
+    /// `StepEngine`'s resident weight handles both build from it.
+    pub fn host_tensors(&self) -> Vec<HostTensor> {
         match self {
             EngineWeights::Bf16 { flat } => {
-                inputs.push(HostTensor::f32(&[flat.len()], flat.clone()));
+                vec![HostTensor::f32_shared(&[flat.len()], flat.clone())]
             }
             EngineWeights::Int8 { a, qw, qs } => {
-                inputs.push(HostTensor::f32(&[a.len()], a.clone()));
-                inputs.push(HostTensor::i8(&[qw.len()], qw.clone()));
-                inputs.push(HostTensor::f32(&[qs.len()], qs.clone()));
+                vec![HostTensor::f32_shared(&[a.len()], a.clone()),
+                     HostTensor::i8_shared(&[qw.len()], qw.clone()),
+                     HostTensor::f32_shared(&[qs.len()], qs.clone())]
             }
             EngineWeights::Fp8 { a, b_fq } => {
-                inputs.push(HostTensor::f32(&[a.len()], a.clone()));
-                inputs.push(HostTensor::f32(&[b_fq.len()], b_fq.clone()));
+                vec![HostTensor::f32_shared(&[a.len()], a.clone()),
+                     HostTensor::f32_shared(&[b_fq.len()], b_fq.clone())]
             }
         }
+    }
+
+    /// Total payload size in bytes (what one full host→device-format
+    /// conversion of these weights costs — the per-tick tax the resident
+    /// path eliminates).
+    pub fn byte_len(&self) -> u64 {
+        self.host_tensors().iter().map(|t| t.byte_len()).sum()
+    }
+
+    fn push_inputs(&self, inputs: &mut Vec<HostTensor>) {
+        inputs.extend(self.host_tensors());
     }
 }
 
@@ -151,14 +172,23 @@ impl Runtime {
     pub fn engine_weights(&self, mode: QuantMode, params: &[f32]) -> Result<EngineWeights> {
         let a_size = self.manifest().a_size;
         match mode {
-            QuantMode::Bf16 => Ok(EngineWeights::Bf16 { flat: params.to_vec() }),
+            QuantMode::Bf16 => {
+                Ok(EngineWeights::Bf16 { flat: Arc::new(params.to_vec()) })
+            }
             QuantMode::Int8 => {
                 let (qw, qs) = self.quantize_int8(&params[a_size..])?;
-                Ok(EngineWeights::Int8 { a: params[..a_size].to_vec(), qw, qs })
+                Ok(EngineWeights::Int8 {
+                    a: Arc::new(params[..a_size].to_vec()),
+                    qw: Arc::new(qw),
+                    qs: Arc::new(qs),
+                })
             }
             QuantMode::Fp8 => {
                 let b_fq = self.quantize_fp8(&params[a_size..])?;
-                Ok(EngineWeights::Fp8 { a: params[..a_size].to_vec(), b_fq })
+                Ok(EngineWeights::Fp8 {
+                    a: Arc::new(params[..a_size].to_vec()),
+                    b_fq: Arc::new(b_fq),
+                })
             }
         }
     }

@@ -1,6 +1,37 @@
 //! L3 runtime: load AOT artifacts (HLO text) and execute them via the PJRT
 //! CPU client.  Python never runs on this path — `make artifacts` is the
 //! only place jax executes.
+//!
+//! # Residency boundary (who pays for data movement, and when)
+//!
+//! Every artifact call crosses a host↔device-format boundary; this module
+//! defines three tiers of traffic across it:
+//!
+//! * **per-call** — fresh [`HostTensor`] inputs convert to PJRT literals
+//!   at call time and outputs copy back out
+//!   ([`ArtifactStore::call`](artifact::ArtifactStore::call)).  Right for
+//!   training/scoring inputs that change every call anyway (token grids,
+//!   parameters mid-optimization).
+//! * **per-epoch** — [`InputHandle`](artifact::InputHandle)s cache the
+//!   converted literal of an immutable payload for the handle's lifetime
+//!   ([`ArtifactStore::call_with_resident`](artifact::ArtifactStore::call_with_resident));
+//!   callers replace handles when content changes.  This is how
+//!   rollout-engine weights convert once per `WeightEpoch`/requantization
+//!   (the engine rebuilds its handles on a swap) instead of once per
+//!   decode tick.
+//! * **never** — output literals taken raw from
+//!   [`CallOutputs`](artifact::CallOutputs) and fed back through
+//!   `InputHandle::from_literal` stay in device format across calls.  The
+//!   step engine's KV caches ride this tier between decode ticks.
+//!
+//! [`HostTensor`] payloads are `Arc`-backed, so the *host* side of the
+//! boundary is copy-free too: weights move from the quantizer through
+//! [`EngineWeights`] into call inputs without cloning vectors.  What
+//! traffic remains is measured per artifact
+//! ([`ArtifactStat`](artifact::ArtifactStat)'s `bytes_h2d`/`bytes_d2h`),
+//! because on a GPU backend this same boundary is PCIe — keeping it near
+//! zero on the decode hot loop is what makes quantized rollout pay off
+//! (QuRL's premise; see ROADMAP).
 
 pub mod artifact;
 pub mod exec;
@@ -8,7 +39,7 @@ pub mod manifest;
 pub mod params;
 pub mod tensor;
 
-pub use artifact::ArtifactStore;
+pub use artifact::{ArtifactStat, ArtifactStore, CallOutputs, InputHandle};
 pub use exec::{EngineWeights, GenerateOut, QuantMode, Runtime, ScoreOut, TrainBatch};
 pub use manifest::Manifest;
 pub use params::ParamStore;

@@ -3,16 +3,27 @@
 //! The coordinator keeps model state (parameters, Adam moments, token
 //! batches, metrics) as plain Rust vectors and converts at artifact-call
 //! boundaries.  All conversions are shape-checked against the manifest.
+//!
+//! Payloads are backed by `Arc`'d storage (copy-on-write): cloning a
+//! `HostTensor` — or building one from an already-shared buffer via the
+//! `*_shared` constructors — never copies the data.  That is what lets
+//! [`EngineWeights`](super::EngineWeights) push multi-megabyte weight
+//! tensors as artifact inputs on every rollout tick without cloning the
+//! underlying vectors (the PR-4 residency work; see `runtime/artifact.rs`
+//! for where conversions themselves are cached).
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use xla::{ElementType, Literal};
 
-/// Dense host tensor; dtype is encoded in the variant.
+/// Dense host tensor; dtype is encoded in the variant.  `Clone` is an
+/// `Arc` bump, not a data copy.
 #[derive(Clone, Debug)]
 pub enum HostTensor {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
-    I8 { shape: Vec<usize>, data: Vec<i8> },
+    F32 { shape: Vec<usize>, data: Arc<Vec<f32>> },
+    I32 { shape: Vec<usize>, data: Arc<Vec<i32>> },
+    I8 { shape: Vec<usize>, data: Arc<Vec<i8>> },
 }
 
 pub fn numel(shape: &[usize]) -> usize {
@@ -21,30 +32,42 @@ pub fn numel(shape: &[usize]) -> usize {
 
 impl HostTensor {
     pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
-        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
-        HostTensor::F32 { shape: shape.to_vec(), data }
+        Self::f32_shared(shape, Arc::new(data))
     }
 
     pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
         assert_eq!(numel(shape), data.len(), "shape/data mismatch");
-        HostTensor::I32 { shape: shape.to_vec(), data }
+        HostTensor::I32 { shape: shape.to_vec(), data: Arc::new(data) }
     }
 
     pub fn i8(shape: &[usize], data: Vec<i8>) -> Self {
+        Self::i8_shared(shape, Arc::new(data))
+    }
+
+    /// Zero-copy constructor over an already-shared buffer (weight tensors
+    /// live in [`EngineWeights`](super::EngineWeights) as `Arc`s and are
+    /// pushed as inputs once per engine call).
+    pub fn f32_shared(shape: &[usize], data: Arc<Vec<f32>>) -> Self {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    /// Zero-copy constructor over an already-shared i8 buffer.
+    pub fn i8_shared(shape: &[usize], data: Arc<Vec<i8>>) -> Self {
         assert_eq!(numel(shape), data.len(), "shape/data mismatch");
         HostTensor::I8 { shape: shape.to_vec(), data }
     }
 
     pub fn scalar_f32(x: f32) -> Self {
-        HostTensor::F32 { shape: vec![], data: vec![x] }
+        HostTensor::f32(&[], vec![x])
     }
 
     pub fn scalar_i32(x: i32) -> Self {
-        HostTensor::I32 { shape: vec![], data: vec![x] }
+        HostTensor::i32(&[], vec![x])
     }
 
     pub fn zeros_f32(shape: &[usize]) -> Self {
-        HostTensor::F32 { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+        HostTensor::f32(shape, vec![0.0; numel(shape)])
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -63,49 +86,70 @@ impl HostTensor {
         }
     }
 
+    /// Payload size in bytes (the unit of the `bytes_h2d`/`bytes_d2h`
+    /// transfer accounting in `ArtifactStore`).
+    pub fn byte_len(&self) -> u64 {
+        let elem = match self {
+            HostTensor::F32 { .. } | HostTensor::I32 { .. } => 4,
+            HostTensor::I8 { .. } => 1,
+        };
+        (numel(self.shape()) * elem) as u64
+    }
+
     pub fn as_f32(&self) -> &[f32] {
         match self {
-            HostTensor::F32 { data, .. } => data,
+            HostTensor::F32 { data, .. } => data.as_slice(),
             other => panic!("expected f32 tensor, got {}", other.dtype_str()),
         }
     }
 
     pub fn as_i32(&self) -> &[i32] {
         match self {
-            HostTensor::I32 { data, .. } => data,
+            HostTensor::I32 { data, .. } => data.as_slice(),
             other => panic!("expected i32 tensor, got {}", other.dtype_str()),
         }
     }
 
     pub fn as_i8(&self) -> &[i8] {
         match self {
-            HostTensor::I8 { data, .. } => data,
+            HostTensor::I8 { data, .. } => data.as_slice(),
             other => panic!("expected i8 tensor, got {}", other.dtype_str()),
         }
     }
 
+    /// Take the payload out.  Zero-copy when this tensor is the sole owner
+    /// (the common case: artifact outputs and freshly built inputs); falls
+    /// back to a clone when the buffer is shared.
     pub fn into_f32(self) -> Vec<f32> {
         match self {
-            HostTensor::F32 { data, .. } => data,
+            HostTensor::F32 { data, .. } => {
+                Arc::try_unwrap(data).unwrap_or_else(|a| (*a).clone())
+            }
             other => panic!("expected f32 tensor, got {}", other.dtype_str()),
         }
     }
 
     pub fn into_i32(self) -> Vec<i32> {
         match self {
-            HostTensor::I32 { data, .. } => data,
+            HostTensor::I32 { data, .. } => {
+                Arc::try_unwrap(data).unwrap_or_else(|a| (*a).clone())
+            }
             other => panic!("expected i32 tensor, got {}", other.dtype_str()),
         }
     }
 
     pub fn into_i8(self) -> Vec<i8> {
         match self {
-            HostTensor::I8 { data, .. } => data,
+            HostTensor::I8 { data, .. } => {
+                Arc::try_unwrap(data).unwrap_or_else(|a| (*a).clone())
+            }
             other => panic!("expected i8 tensor, got {}", other.dtype_str()),
         }
     }
 
-    /// Convert to a PJRT literal (copies).
+    /// Convert to a PJRT literal (copies the payload into device format —
+    /// this is the host-side "upload" cost that `ArtifactStore`'s resident
+    /// input handles cache across calls).
     pub fn to_literal(&self) -> Result<Literal> {
         let lit = match self {
             HostTensor::F32 { shape, data } => {
@@ -136,19 +180,19 @@ impl HostTensor {
         Ok(lit)
     }
 
-    /// Convert back from a PJRT literal.
+    /// Convert back from a PJRT literal (copies out of device format).
     pub fn from_literal(lit: &Literal) -> Result<Self> {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         match shape.ty() {
             ElementType::F32 => {
-                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+                Ok(HostTensor::f32(&dims, lit.to_vec::<f32>()?))
             }
             ElementType::S32 => {
-                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+                Ok(HostTensor::i32(&dims, lit.to_vec::<i32>()?))
             }
             ElementType::S8 => {
-                Ok(HostTensor::I8 { shape: dims, data: lit.to_vec::<i8>()? })
+                Ok(HostTensor::i8(&dims, lit.to_vec::<i8>()?))
             }
             ty => bail!("unsupported literal element type {ty:?}"),
         }
@@ -191,5 +235,28 @@ mod tests {
         let back = HostTensor::from_literal(&lit).unwrap();
         assert!(back.shape().is_empty());
         assert_eq!(back.as_f32(), &[3.5]);
+    }
+
+    #[test]
+    fn shared_storage_is_zero_copy() {
+        let buf = Arc::new(vec![1.0f32, 2.0, 3.0]);
+        let t = HostTensor::f32_shared(&[3], buf.clone());
+        // clone bumps the refcount instead of copying the payload
+        let t2 = t.clone();
+        assert!(std::ptr::eq(t.as_f32().as_ptr(), t2.as_f32().as_ptr()));
+        assert_eq!(t.byte_len(), 12);
+        drop((t, t2));
+        // sole owner again: into_f32 moves the buffer out without copying
+        let t3 = HostTensor::f32_shared(&[3], buf);
+        let ptr = t3.as_f32().as_ptr();
+        let v = t3.into_f32();
+        assert!(std::ptr::eq(ptr, v.as_ptr()));
+    }
+
+    #[test]
+    fn byte_len_by_dtype() {
+        assert_eq!(HostTensor::i32(&[2, 2], vec![0; 4]).byte_len(), 16);
+        assert_eq!(HostTensor::i8(&[5], vec![0; 5]).byte_len(), 5);
+        assert_eq!(HostTensor::scalar_f32(1.0).byte_len(), 4);
     }
 }

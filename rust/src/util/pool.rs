@@ -1,7 +1,9 @@
 //! Fixed-size worker thread pool with scoped parallel-for (tokio is
 //! unavailable offline; the coordinator's concurrency needs are CPU-bound
-//! fan-out + channels, which std threads cover).
+//! fan-out + channels, which std threads cover), plus a single-threaded
+//! buffer free-list ([`F32Pool`]) for the rollout hot path.
 
+use std::cell::RefCell;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -63,6 +65,58 @@ impl Drop for ThreadPool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Single-threaded free-list of `f32` buffers.
+///
+/// Engines that fill their own logits blocks every tick (the scheduler
+/// path emits one block per prefill/decode call) recycle spent
+/// allocations through this instead of hitting the allocator once per
+/// tick: a dropped [`LogitsBlock`](crate::coordinator::engine::LogitsBlock)
+/// returns its storage here and the next call's block reuses it.
+/// Deliberately not `Sync` — each engine owns its pool behind an `Rc`, and
+/// engines never cross threads (see `coordinator::service`'s worker
+/// model).
+pub struct F32Pool {
+    free: RefCell<Vec<Vec<f32>>>,
+}
+
+/// Retained free buffers are capped so a one-off wide call cannot pin
+/// memory forever.
+const POOL_MAX_FREE: usize = 64;
+
+impl F32Pool {
+    pub fn new() -> F32Pool {
+        F32Pool { free: RefCell::new(Vec::new()) }
+    }
+
+    /// An empty buffer with at least `capacity` reserved, reusing a
+    /// recycled allocation when one is available.
+    pub fn take(&self, capacity: usize) -> Vec<f32> {
+        match self.free.borrow_mut().pop() {
+            Some(mut v) => {
+                v.clear();
+                if v.capacity() < capacity {
+                    v.reserve(capacity);
+                }
+                v
+            }
+            None => Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Return a spent buffer to the free list.
+    pub fn put(&self, v: Vec<f32>) {
+        let mut free = self.free.borrow_mut();
+        if free.len() < POOL_MAX_FREE && v.capacity() > 0 {
+            free.push(v);
+        }
+    }
+
+    /// Buffers currently parked on the free list (test observability).
+    pub fn free_count(&self) -> usize {
+        self.free.borrow().len()
     }
 }
 
@@ -134,5 +188,19 @@ mod tests {
         let pool = ThreadPool::new(2);
         assert_eq!(pool.len(), 2);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn f32_pool_recycles_allocations() {
+        let pool = F32Pool::new();
+        let mut a = pool.take(16);
+        a.extend([1.0; 16]);
+        let ptr = a.as_ptr();
+        pool.put(a);
+        assert_eq!(pool.free_count(), 1);
+        let b = pool.take(8);
+        assert!(b.is_empty(), "recycled buffer not cleared");
+        assert!(std::ptr::eq(ptr, b.as_ptr()), "allocation not reused");
+        assert_eq!(pool.free_count(), 0);
     }
 }

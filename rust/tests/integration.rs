@@ -102,7 +102,7 @@ fn scheduler_matches_bulk_generate_greedy() {
     for (r, &plen) in plens.iter().enumerate() {
         sched.submit(RolloutRequest {
             id: r as u64,
-            prompt: tokens[r * s..r * s + plen].to_vec(),
+            prompt: Arc::new(tokens[r * s..r * s + plen].to_vec()),
             max_new: man.max_new,
             temperature: 0.0,
             top_p: 1.0,
@@ -259,7 +259,12 @@ fn greedy_tok(v: &[f32]) -> i32 {
 /// fork_kv contract on the real artifacts: a slot whose KV rows were
 /// forked from a prefilled sibling must decode bit-for-bit identically to
 /// both the source slot and an independently prefilled slot, for the whole
-/// greedy trajectory.
+/// greedy trajectory.  Runs the default prefix-limited fork (only
+/// `prompt_len` positions copied per head) AND the full-`max_seq`-row
+/// debug path — establishing the masking guarantee that positions beyond
+/// the prompt are never read before the sequence's own decode writes
+/// them, which is what makes the ~`max_seq/prompt_len`× cheaper prefix
+/// copy exact.
 #[test]
 fn fork_kv_matches_fresh_prefill_artifacts() {
     let rt = runtime();
@@ -269,27 +274,151 @@ fn fork_kv_matches_fresh_prefill_artifacts() {
     let w = rt.engine_weights(QuantMode::Int8, &params).unwrap();
     let (tokens, _, plens) = test_prompts(&rt, 1);
     let prompt = tokens[..plens[0]].to_vec();
-    let mut eng = StepEngine::new(&rt, w);
-    // slots 0 and 2 prefill independently; slot 1 is forked from slot 0
-    let logits = eng
-        .prefill(&[0, 2], &[prompt.clone(), prompt.clone()])
-        .unwrap();
-    assert_eq!(logits[0], logits[1], "same prompt, same prefill logits");
-    eng.fork_kv(0, &[1]).unwrap();
-    let mut pos = prompt.len() - 1;
-    let mut tok = greedy_tok(&logits[0]);
-    for _ in 0..16 {
-        pos += 1;
-        if pos + 1 >= man.max_seq || tok == man.eos_id {
-            break;
+    assert!(prompt.len() < man.max_seq,
+            "prefix fork degenerates to full-row on this manifest");
+    let run = |full_row: bool| -> Vec<Vec<f32>> {
+        let mut eng = StepEngine::new(&rt, w.clone());
+        eng.full_row_fork = full_row;
+        // slots 0 and 2 prefill independently; slot 1 forks from slot 0
+        let logits = eng
+            .prefill(&[0, 2], &[prompt.as_slice(), prompt.as_slice()])
+            .unwrap();
+        assert_eq!(logits[0].as_slice(), logits[1].as_slice(),
+                   "same prompt, same prefill logits");
+        eng.fork_kv(0, &[1], prompt.len()).unwrap();
+        let mut trajectory: Vec<Vec<f32>> = Vec::new();
+        let mut pos = prompt.len() - 1;
+        let mut tok = greedy_tok(logits[0].as_slice());
+        for _ in 0..16 {
+            pos += 1;
+            if pos + 1 >= man.max_seq || tok == man.eos_id {
+                break;
+            }
+            let p = pos as i32;
+            let lg = eng
+                .decode(&[(0, p, tok), (1, p, tok), (2, p, tok)])
+                .unwrap();
+            assert_eq!(lg[0].as_slice(), lg[1].as_slice(),
+                       "forked slot diverged from source @ {pos} \
+                        (full_row={full_row})");
+            assert_eq!(lg[0].as_slice(), lg[2].as_slice(),
+                       "forked slot diverged from fresh prefill @ {pos} \
+                        (full_row={full_row})");
+            trajectory.push(lg[1].as_slice().to_vec());
+            tok = greedy_tok(lg[0].as_slice());
         }
-        let p = pos as i32;
-        let lg = eng.decode(&[(0, p, tok), (1, p, tok), (2, p, tok)]).unwrap();
-        assert_eq!(lg[0], lg[1], "forked slot diverged from source @ {pos}");
-        assert_eq!(lg[0], lg[2],
-                   "forked slot diverged from fresh prefill @ {pos}");
-        tok = greedy_tok(&lg[0]);
+        assert!(!trajectory.is_empty());
+        trajectory
+    };
+    // the prefix-limited copy must be bit-identical to the full-row copy
+    // along the forked slot's whole trajectory — the masking guarantee
+    assert_eq!(run(false), run(true),
+               "prefix-limited fork diverged from full-row fork");
+}
+
+/// The resident-input contract on the real artifacts: cached weight
+/// literals + recycled KV literals must produce bit-for-bit the same
+/// scheduler outputs as the per-call conversion path — across a mid-run
+/// `swap_weights` (a stale weight cache would keep decoding under the old
+/// epoch and fail this), for greedy AND sampled requests.
+#[test]
+fn resident_inputs_match_per_call_across_weight_swap() {
+    let rt = runtime();
+    let man = rt.manifest().clone();
+    let w0 = rt
+        .engine_weights(QuantMode::Int8, &rt.init_params(51).unwrap())
+        .unwrap();
+    let w1 = rt
+        .engine_weights(QuantMode::Int8, &rt.init_params(52).unwrap())
+        .unwrap();
+    let (tokens, _, plens) = test_prompts(&rt, 4);
+    let s = man.max_seq;
+    let run = |resident: bool| {
+        let mut eng = StepEngine::new(&rt, w0.clone());
+        eng.set_resident(resident);
+        assert_eq!(eng.is_resident(), resident);
+        let mut sched = Scheduler::new(&mut eng, man.max_seq, man.eos_id);
+        for (r, &plen) in plens.iter().enumerate() {
+            sched.submit(RolloutRequest {
+                id: r as u64,
+                prompt: Arc::new(tokens[r * s..r * s + plen].to_vec()),
+                max_new: man.max_new.min(12),
+                // mix greedy and sampled
+                temperature: if r % 2 == 0 { 0.0 } else { 1.0 },
+                top_p: 0.9,
+                seed: 77 ^ r as u64,
+            });
+        }
+        // a few ticks under w0, then hot-swap to w1 mid-flight
+        for _ in 0..3 {
+            sched.tick().unwrap();
+        }
+        sched.swap_weights(w1.clone(), 1);
+        let mut results = sched.run_to_completion().unwrap();
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), plens.len());
+        results
+            .into_iter()
+            .map(|r| (r.id, r.generated,
+                      r.logprobs.iter().map(|l| l.to_bits()).collect::<Vec<_>>()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(true), run(false),
+               "resident-input path diverged from per-call literals");
+}
+
+/// The acceptance criterion on weight traffic: with resident inputs,
+/// decode ticks between weight swaps stage ~zero weight bytes (only the
+/// per-slot control vectors), while every tick on the per-call path pays
+/// the full conversion; a swap re-stages the weights exactly once.
+#[test]
+fn resident_weights_convert_once_per_epoch() {
+    let rt = runtime();
+    let man = rt.manifest().clone();
+    let w0 = rt
+        .engine_weights(QuantMode::Int8, &rt.init_params(61).unwrap())
+        .unwrap();
+    let w1 = rt
+        .engine_weights(QuantMode::Int8, &rt.init_params(62).unwrap())
+        .unwrap();
+    let (tokens, _, plens) = test_prompts(&rt, 1);
+    let prompt = tokens[..plens[0]].to_vec();
+    let mut eng = StepEngine::new(&rt, w0);
+    let wb = eng.weight_bytes();
+    assert!(wb > 0);
+    let logits = eng.prefill(&[0], &[prompt.as_slice()]).unwrap();
+    let mut tok = greedy_tok(logits[0].as_slice());
+    let mut pos = (prompt.len() - 1) as i32;
+    let step = |eng: &mut StepEngine, tok: &mut i32, pos: &mut i32| {
+        *pos += 1;
+        assert!((*pos as usize) + 1 < man.max_seq, "test prompt too long");
+        let lg = eng.decode(&[(0, *pos, *tok)]).unwrap();
+        *tok = greedy_tok(lg[0].as_slice());
+    };
+    // first decode after prefill re-stages the merged KV once; drain it
+    step(&mut eng, &mut tok, &mut pos);
+    eng.take_transfer();
+    // steady state: N decode ticks must stage neither weights nor KV —
+    // h2d collapses to the two [B] control vectors per tick
+    let n = 4;
+    for _ in 0..n {
+        step(&mut eng, &mut tok, &mut pos);
     }
+    let (h2d, _) = eng.take_transfer();
+    let control = (2 * 4 * man.rollout_batch * n) as u64;
+    assert_eq!(h2d, control,
+               "steady-state decode staged more than control tensors \
+                ({h2d} bytes vs {control}; weights are {wb})");
+    // hot swap: the next decode stages the new weights exactly once...
+    eng.swap_weights(w1, 1);
+    step(&mut eng, &mut tok, &mut pos);
+    let (h2d, _) = eng.take_transfer();
+    assert!(h2d >= wb, "swap did not restage weights: {h2d} < {wb}");
+    // ...and the tick after that is back to control-vector bytes
+    step(&mut eng, &mut tok, &mut pos);
+    let (h2d, _) = eng.take_transfer();
+    assert_eq!(h2d, (2 * 4 * man.rollout_batch) as u64,
+               "post-swap decode still staging weights ({h2d} bytes)");
 }
 
 /// Prune-as-you-generate on the real artifacts: on a DAPO-shaped workload
@@ -384,7 +513,7 @@ fn scheduler_context_boundary_with_artifacts() {
     for (r, &plen) in plens.iter().enumerate() {
         sched.submit(RolloutRequest {
             id: r as u64,
-            prompt: tokens[r * s..r * s + plen].to_vec(),
+            prompt: Arc::new(tokens[r * s..r * s + plen].to_vec()),
             // exactly to the context edge (larger than the fused max_new)
             max_new: man.max_seq - plen,
             temperature: 0.0,

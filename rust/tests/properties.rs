@@ -1,6 +1,8 @@
 //! Property-based tests (propcheck) over coordinator + RL invariants.
 //! These run without artifacts — pure host logic.
 
+use std::sync::Arc;
+
 use qurl::coordinator::{EngineFactory, FinishReason, GroupSpec, MockEngine,
                         PrunePolicy, RolloutRequest, RolloutService,
                         Scheduler, SlotMap, StripePolicy};
@@ -65,9 +67,9 @@ fn prop_scheduler_serves_all_requests() {
         for (i, &(plen, max_new)) in reqs.iter().enumerate() {
             sched.submit(RolloutRequest {
                 id: i as u64,
-                prompt: (0..plen.clamp(1, max_seq - 1))
+                prompt: Arc::new((0..plen.clamp(1, max_seq - 1))
                     .map(|k| 3 + (k as i32 % 5))
-                    .collect(),
+                    .collect()),
                 max_new: max_new.max(1),
                 temperature: 0.0,
                 top_p: 1.0,
@@ -118,7 +120,8 @@ fn prop_scheduler_cancellation_invariants() {
         for i in 0..n_req {
             sched.submit(RolloutRequest {
                 id: i as u64,
-                prompt: (0..1 + i % 5).map(|k| 3 + (k as i32 % 5)).collect(),
+                prompt: Arc::new((0..1 + i % 5).map(|k| 3 + (k as i32 % 5))
+                    .collect()),
                 max_new: 1 + i % 8,
                 temperature: 0.0,
                 top_p: 1.0,
@@ -400,6 +403,75 @@ fn prop_threaded_and_striped_runs_bit_identical() {
         fr.iter().zip(&fl).all(|(a, b)| {
             (&a.1, &a.2, a.3, a.4) == (&b.1, &b.2, b.3, b.4)
         })
+    });
+}
+
+/// Weight-epoch plumbing is exact, end-to-end through the service: after
+/// `push_weights(w)`, a workload's outputs must be bit-identical to a
+/// FRESH service whose engines had `w` pushed before any submission — and
+/// different from the pre-swap outputs.  A stale conversion cache (or a
+/// scheduler that forgets to hand the new weights/epoch to its engine)
+/// keeps serving the old generation and fails the first comparison; an
+/// over-eager cache key fails the second.  Runs across engine counts and
+/// both execution backends.
+#[test]
+fn prop_weight_swap_outputs_track_epoch() {
+    let max_seq = 16usize;
+    // ((engines, threaded), [group_size; n])
+    let g = Pair(Pair(UsizeIn(1, 3), UsizeIn(0, 1)),
+                 VecOf(UsizeIn(1, 4), 1, 6));
+    assert_prop("weight-swap-epoch", 0x5a9e, 40, &g,
+                |((engines, threaded), sizes)| {
+        let n_eng = (*engines).max(1);
+        let build = |threaded: bool| -> RolloutService<MockEngine> {
+            if threaded {
+                let fs: Vec<EngineFactory<MockEngine>> = (0..n_eng)
+                    .map(|_| {
+                        Box::new(move || Ok(MockEngine::new(3, 8, max_seq, 2)))
+                            as EngineFactory<MockEngine>
+                    })
+                    .collect();
+                RolloutService::threaded(fs, max_seq, 2).unwrap()
+            } else {
+                let engs: Vec<MockEngine> = (0..n_eng)
+                    .map(|_| MockEngine::new(3, 8, max_seq, 2))
+                    .collect();
+                RolloutService::new(engs, max_seq, 2)
+            }
+        };
+        let workload = |svc: &mut RolloutService<MockEngine>| {
+            for (gid, &sz) in sizes.iter().enumerate() {
+                svc.submit_group(GroupSpec {
+                    group_id: gid,
+                    prompt: vec![3 + (gid as i32 % 5); 2 + gid % 3],
+                    group_size: sz.max(1),
+                    max_new: 1 + gid % 6,
+                    temperature: 0.0, // greedy: outputs are weight-determined
+                    top_p: 1.0,
+                    seed: gid as u64,
+                });
+            }
+            let results = svc.run(|_, _| 0.0).unwrap();
+            results
+                .iter()
+                .flat_map(|gr| gr.members.iter().map(|m| {
+                    (m.result.generated.clone(),
+                     m.result.logprobs.iter().map(|l| l.to_bits())
+                         .collect::<Vec<u32>>())
+                }))
+                .collect::<Vec<_>>()
+        };
+        let t = *threaded == 1;
+        // one service: run at epoch 0, swap, run again
+        let mut svc = build(t);
+        let out0 = workload(&mut svc);
+        svc.push_weights(0xC0FF_EE00);
+        let swapped = workload(&mut svc);
+        // reference: a fresh service that only ever saw the new weights
+        let mut fresh = build(t);
+        fresh.push_weights(0xC0FF_EE00);
+        let reference = workload(&mut fresh);
+        swapped == reference && swapped != out0
     });
 }
 
