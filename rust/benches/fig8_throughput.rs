@@ -11,7 +11,8 @@
 use std::sync::Arc;
 
 use qurl::benchkit as bk;
-use qurl::coordinator::{GroupSpec, RolloutRequest, RolloutService, Scheduler,
+use qurl::coordinator::{pages_for, GroupSpec, KvConfig, KvLayout,
+                        RolloutRequest, RolloutService, Scheduler,
                         StepEngine};
 use qurl::perfmodel::{self, roofline, DecodeConfig, Precision};
 use qurl::runtime::QuantMode;
@@ -296,6 +297,74 @@ fn main() -> anyhow::Result<()> {
               recycle KV literals decode→decode; the per-call baseline \
               re-converts weights + both KV caches every tick.");
 
+    // ---- part 6: KV memory — dense reservation vs paged allocation -------
+    // Same grouped workload through both KV layouts at one FIXED page
+    // budget (enough full-length dense reservations for half the slots).
+    // Dense reserves pages_for(max_seq) pages per admission, so at most
+    // B/2 sequences run concurrently; paged admits on the prompt footprint
+    // and grows page-by-page, so the same budget carries more concurrent
+    // sequences — and forked siblings alias their prompt pages outright.
+    // Peak resident KV bytes = high-water pages x page_size positions x
+    // 2 (K+V) x L x H x Dh x 4 bytes.
+    let kv_page = 8usize;
+    let budget = (b / 2).max(1) * pages_for(man.max_seq, kv_page);
+    let pos_bytes =
+        (2 * man.n_layers * man.n_heads * man.head_dim * 4) as f64;
+    let kv_probs: Vec<Problem> =
+        (0..n_groups).map(|_| sampler.next().1).collect();
+    let run_kv = |layout: KvLayout|
+        -> anyhow::Result<qurl::coordinator::SchedulerStats> {
+        let mut svc = RolloutService::new(
+            vec![StepEngine::new(&rt, w.clone())], man.max_seq, man.eos_id);
+        svc.set_kv(KvConfig {
+            layout,
+            page_size: kv_page,
+            budget_pages: Some(budget),
+        });
+        for (gid, p) in kv_probs.iter().enumerate() {
+            svc.submit_group(GroupSpec {
+                group_id: gid,
+                prompt: tk.encode_prompt(&p.prompt),
+                group_size: group,
+                max_new: man.max_new,
+                temperature: 1.0,
+                top_p: 1.0,
+                seed: 0x6b ^ ((gid as u64) << 8),
+            });
+        }
+        let results = svc.run(|_, _| 0.0)?;
+        assert_eq!(results.len(), n_groups, "kv bench dropped groups");
+        Ok(svc.take_stats())
+    };
+    let kv_dense = run_kv(KvLayout::Dense)?;
+    let kv_paged = run_kv(KvLayout::Paged)?;
+    assert_eq!(kv_dense.kv_pages_freed, kv_dense.kv_pages_allocated);
+    assert_eq!(kv_paged.kv_pages_freed, kv_paged.kv_pages_allocated);
+    let mut rows = Vec::new();
+    for (label, st) in [("dense (reserve max_seq)", &kv_dense),
+                        ("paged (grow + alias)", &kv_paged)] {
+        rows.push(vec![
+            label.to_string(),
+            st.kv_pages_high_water.to_string(),
+            format!("{:.1}",
+                    st.kv_pages_high_water as f64 * kv_page as f64
+                        * pos_bytes / 1e6),
+            st.kv_pages_shared.to_string(),
+            st.kv_pages_cow.to_string(),
+            format!("{:.1}", st.mean_occupancy() * b as f64),
+            format!("{:.0}", st.tokens_per_s()),
+        ]);
+    }
+    print_table(&format!("KV memory at a fixed budget of {budget} pages x \
+                          {kv_page} positions (int8 engine, {n_groups} \
+                          groups x {group})"),
+                &["kv layout", "peak pages", "peak KV MB", "shared",
+                  "cow", "eff. concurrency", "tok/s"], &rows);
+    println!("paged KV admits on the prompt footprint instead of a full \
+              max_seq reservation: more sequences in flight at the same \
+              memory, with forked siblings aliasing prompt pages (shared) \
+              and detaching lazily on first write (cow).");
+
     // machine-readable perf trajectory for later PRs to regress against
     let json = Json::obj(vec![
         ("bench", Json::str("fig8_rollout")),
@@ -308,11 +377,34 @@ fn main() -> anyhow::Result<()> {
             ("resident", tax_json(&res_st)),
             ("per_call", tax_json(&pc_st)),
         ])),
+        ("kv_memory", Json::obj(vec![
+            ("page_size", Json::num(kv_page as f64)),
+            ("budget_pages", Json::num(budget as f64)),
+            ("bytes_per_position", Json::num(pos_bytes)),
+            ("dense", kv_json(&kv_dense, kv_page, pos_bytes, b)),
+            ("paged", kv_json(&kv_paged, kv_page, pos_bytes, b)),
+        ])),
     ]);
     let path = bk::results_dir().join("BENCH_rollout.json");
     std::fs::write(&path, json.to_string())?;
     println!("\nwrote {}", path.display());
     Ok(())
+}
+
+/// One KV-layout run as JSON (page ledger + memory + concurrency).
+fn kv_json(st: &qurl::coordinator::SchedulerStats, page: usize,
+           pos_bytes: f64, slots: usize) -> Json {
+    Json::obj(vec![
+        ("kv_pages_high_water", Json::num(st.kv_pages_high_water as f64)),
+        ("peak_kv_bytes",
+         Json::num(st.kv_pages_high_water as f64 * page as f64 * pos_bytes)),
+        ("kv_pages_allocated", Json::num(st.kv_pages_allocated as f64)),
+        ("kv_pages_shared", Json::num(st.kv_pages_shared as f64)),
+        ("kv_pages_cow", Json::num(st.kv_pages_cow as f64)),
+        ("effective_concurrency",
+         Json::num(st.mean_occupancy() * slots as f64)),
+        ("tokens_per_s", Json::num(st.tokens_per_s())),
+    ])
 }
 
 /// One copy-tax run as JSON (decode throughput + per-tick staging bytes).

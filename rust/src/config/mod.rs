@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::StripePolicy;
+use crate::coordinator::{KvLayout, StripePolicy};
 use crate::rl::{Algo, Objective, ObjectiveKind, RolloutExec, RolloutPath,
                 TrainerConfig};
 use crate::runtime::QuantMode;
@@ -163,6 +163,9 @@ pub fn to_json(cfg: &TrainerConfig) -> Json {
         ("rollout_exec", Json::str(cfg.rollout_exec.name())),
         ("rollout_stripe", Json::str(cfg.rollout_stripe.name())),
         ("min_prefill_batch", Json::num(cfg.min_prefill_batch as f64)),
+        ("kv_layout", Json::str(cfg.kv_layout.name())),
+        ("kv_page_size", Json::num(cfg.kv_page_size as f64)),
+        ("prefill_chunk", Json::num(cfg.prefill_chunk as f64)),
         ("requantize_every", Json::num(cfg.requantize_every as f64)),
         ("analyze_every", Json::num(cfg.analyze_every as f64)),
     ])
@@ -223,6 +226,11 @@ pub fn from_json(j: &Json) -> Result<TrainerConfig> {
     cfg.prune_min_finished = get_f("prune_min_finished", 0.0).max(0.0) as usize;
     cfg.rollout_engines = get_f("rollout_engines", 1.0).max(1.0) as usize;
     cfg.min_prefill_batch = get_f("min_prefill_batch", 1.0).max(1.0) as usize;
+    if let Some(l) = j.get("kv_layout").and_then(|v| v.as_str()) {
+        cfg.kv_layout = KvLayout::parse(l).context("bad kv_layout")?;
+    }
+    cfg.kv_page_size = get_f("kv_page_size", 16.0).max(1.0) as usize;
+    cfg.prefill_chunk = get_f("prefill_chunk", 0.0).max(0.0) as usize;
     cfg.requantize_every = get_f("requantize_every", 1.0) as usize;
     cfg.analyze_every = get_f("analyze_every", 0.0) as usize;
     Ok(cfg)
@@ -259,6 +267,9 @@ mod tests {
         cfg.rollout_exec = RolloutExec::Threaded;
         cfg.rollout_stripe = StripePolicy::LeastLoaded;
         cfg.min_prefill_batch = 4;
+        cfg.kv_layout = KvLayout::Paged;
+        cfg.kv_page_size = 32;
+        cfg.prefill_chunk = 64;
         cfg.prune_rollouts = false;
         cfg.prune_min_finished = 5;
         let j = to_json(&cfg);
@@ -267,10 +278,15 @@ mod tests {
         assert_eq!(back.rollout_exec, RolloutExec::Threaded);
         assert_eq!(back.rollout_stripe, StripePolicy::LeastLoaded);
         assert_eq!(back.min_prefill_batch, 4);
-        // defaults stay inline/round-robin (absent keys)
+        assert_eq!(back.kv_layout, KvLayout::Paged);
+        assert_eq!(back.kv_page_size, 32);
+        assert_eq!(back.prefill_chunk, 64);
+        // defaults stay inline/round-robin/dense (absent keys)
         let d = from_json(&Json::obj(vec![])).unwrap();
         assert_eq!(d.rollout_exec, RolloutExec::Inline);
         assert_eq!(d.rollout_stripe, StripePolicy::RoundRobin);
+        assert_eq!(d.kv_layout, KvLayout::Dense);
+        assert_eq!((d.kv_page_size, d.prefill_chunk), (16, 0));
         assert!(!back.prune_rollouts);
         assert_eq!(back.prune_min_finished, 5);
         assert_eq!(back.algo, cfg.algo);

@@ -15,7 +15,11 @@
 //!   output→input as raw literals ([`KvBuf`]); they materialize into host
 //!   vectors only when the engine must *mutate* rows (prefill-merge on
 //!   admission, [`DecodeEngine::fork_kv`]) and re-stage on the next
-//!   decode.  Steady-state decode moves no KV bytes host-side.
+//!   decode.  Steady-state decode moves no KV bytes host-side.  A
+//!   [`KvPager`] books every prefill/decode/fork at page granularity over
+//!   this tensor (see [`kv`](super::kv) module docs), gating admission
+//!   and measuring prefix sharing/CoW — the physical rows stay dense
+//!   because the compiled artifacts pin the cache shape.
 //! * **logits** — one flat `[B, vocab]` block per call, exposed as
 //!   [`LogitsRow`] views instead of per-slot copied vectors; block storage
 //!   recycles through a [`F32Pool`] where the engine fills it itself.
@@ -34,6 +38,26 @@ use xla::Literal;
 use crate::runtime::artifact::InputHandle;
 use crate::runtime::{EngineWeights, HostTensor, Runtime};
 use crate::util::pool::F32Pool;
+
+use super::kv::{KvConfig, KvPageStats, KvPager};
+
+/// Typed error for a KV cache taken twice without an intervening restore —
+/// the engine was driven again after an earlier failed call left a cache
+/// out.  Previously an `unreachable!` panic; as a plain error it propagates
+/// through [`Scheduler::tick`](super::Scheduler::tick) like any engine
+/// failure, so a threaded worker aborts cleanly (`abort_all` + slot
+/// recycle + `TickError` event) instead of poisoning its thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvTakenError;
+
+impl std::fmt::Display for KvTakenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV cache taken twice (engine left empty by an earlier \
+                   failed call)")
+    }
+}
+
+impl std::error::Error for KvTakenError {}
 
 /// One flat `[rows, vocab]` logits tensor produced by a single engine
 /// call.  Sequences hold [`LogitsRow`] views into it instead of per-slot
@@ -165,6 +189,36 @@ pub trait DecodeEngine {
     fn take_transfer(&mut self) -> (u64, u64) {
         (0, 0)
     }
+
+    /// Install a KV layout ([`KvConfig`]) — rebuilds the engine's page
+    /// ledger.  Call before serving begins; the scheduler's `set_kv`
+    /// forwards here.  Engines without a pager ignore it.
+    fn configure_kv(&mut self, _cfg: KvConfig) {}
+
+    /// Return every page `slot` holds to the pager's free list.  The
+    /// scheduler calls this on each slot release — completion, cancel
+    /// (online pruning), and `abort_all` — so pruning reclaims KV memory,
+    /// not just compute.  Idempotent; no-op without a pager.
+    fn release_kv(&mut self, _slot: usize) {}
+
+    /// Pages admission must find free before starting a sequence whose
+    /// first prefill covers `prefill_len` positions (`forked` = admitted
+    /// as a fork destination).  0 without a pager.
+    fn kv_admit_cost(&self, _prefill_len: usize, _forked: bool) -> usize {
+        0
+    }
+
+    /// `Some(free pages)` when a live admission gate (explicit page
+    /// budget) is configured; `None` disables page-gated admission.
+    fn kv_free_pages(&self) -> Option<usize> {
+        None
+    }
+
+    /// Drain the page-ledger deltas and read the current levels
+    /// ([`KvPageStats`]); zeros without a pager.
+    fn take_kv_stats(&mut self) -> KvPageStats {
+        KvPageStats::default()
+    }
 }
 
 /// Forward through mutable references so callers can keep owning an engine
@@ -197,6 +251,26 @@ impl<E: DecodeEngine> DecodeEngine for &mut E {
 
     fn take_transfer(&mut self) -> (u64, u64) {
         (**self).take_transfer()
+    }
+
+    fn configure_kv(&mut self, cfg: KvConfig) {
+        (**self).configure_kv(cfg)
+    }
+
+    fn release_kv(&mut self, slot: usize) {
+        (**self).release_kv(slot)
+    }
+
+    fn kv_admit_cost(&self, prefill_len: usize, forked: bool) -> usize {
+        (**self).kv_admit_cost(prefill_len, forked)
+    }
+
+    fn kv_free_pages(&self) -> Option<usize> {
+        (**self).kv_free_pages()
+    }
+
+    fn take_kv_stats(&mut self) -> KvPageStats {
+        (**self).take_kv_stats()
     }
 }
 
@@ -232,7 +306,10 @@ impl KvBuf {
         match std::mem::replace(self, KvBuf::Empty) {
             KvBuf::Host(v) => Ok(InputHandle::new(HostTensor::f32(shape, v))),
             KvBuf::Device(l) => Ok(InputHandle::from_literal(l)),
-            KvBuf::Empty => unreachable!("KV cache taken twice"),
+            // every error path restores the payload, so this arm is
+            // believed dead — but a typed error aborts the worker cleanly
+            // where a panic would poison the thread (see KvTakenError)
+            KvBuf::Empty => Err(KvTakenError.into()),
         }
     }
 
@@ -363,6 +440,12 @@ pub struct StepEngine {
     /// debug: full-`max_seq`-row fork_kv (the pre-prefix-fork behavior)
     /// for the prefix-fork parity test
     pub full_row_fork: bool,
+    /// logical page ledger over the dense `[L,B,H,S,Dh]` tensor (see
+    /// `coordinator::kv` module docs): books every prefill/decode/fork
+    /// this engine executes, gates admission, and measures sharing — the
+    /// physical rows stay dense because the compiled artifacts pin the
+    /// cache shape.
+    pager: KvPager,
 }
 
 impl StepEngine {
@@ -399,7 +482,14 @@ impl StepEngine {
             acc_d2h: 0,
             resident: true,
             full_row_fork: false,
+            pager: KvPager::new(m.rollout_batch, m.max_seq,
+                                KvConfig::default()),
         }
+    }
+
+    /// Read-only view of the page ledger (tests, bench KV-memory columns).
+    pub fn pager(&self) -> &KvPager {
+        &self.pager
     }
 
     /// Toggle input residency (default on).  Off reproduces the per-call
@@ -518,6 +608,11 @@ impl DecodeEngine for StepEngine {
         merge_rows(self.cache_v.host_mut(&mut none)?, &cv, slots, l,
                    self.batch, row_sz);
         debug_assert_eq!(none, 0);
+        // ledger after the last fallible step, so it books only work that
+        // actually landed in the cache
+        for (i, &slot) in slots.iter().enumerate() {
+            self.pager.on_prefill(slot, prompts[i].len());
+        }
         let block = LogitsBlock::from_vec(logits, v);
         Ok(slots
             .iter()
@@ -605,6 +700,9 @@ impl DecodeEngine for StepEngine {
             Ok((k, v_new, logits)) => {
                 self.cache_k = k;
                 self.cache_v = v_new;
+                for &(slot, p, _) in rows {
+                    self.pager.on_decode(slot, p as usize);
+                }
                 let block = LogitsBlock::from_vec(logits, v);
                 Ok(rows
                     .iter()
@@ -662,6 +760,10 @@ impl DecodeEngine for StepEngine {
         fork_rows(self.cache_v.host_mut(&mut none)?, dims, src_slot,
                   dst_slots, prefix);
         debug_assert_eq!(none, 0);
+        // logical ledger: paged destinations alias (the physical copy above
+        // is what a later CoW would have produced — bit-identical bytes,
+        // and the ledger is what admission and the bench read)
+        self.pager.on_fork(src_slot, dst_slots, prompt_len);
         Ok(())
     }
 
@@ -684,11 +786,45 @@ impl DecodeEngine for StepEngine {
     fn take_transfer(&mut self) -> (u64, u64) {
         (std::mem::take(&mut self.acc_h2d), std::mem::take(&mut self.acc_d2h))
     }
+
+    fn configure_kv(&mut self, cfg: KvConfig) {
+        self.pager = KvPager::new(self.batch, self.kv_shape[3], cfg);
+    }
+
+    fn release_kv(&mut self, slot: usize) {
+        self.pager.on_release(slot);
+    }
+
+    fn kv_admit_cost(&self, prefill_len: usize, forked: bool) -> usize {
+        self.pager.admit_cost(prefill_len, forked)
+    }
+
+    fn kv_free_pages(&self) -> Option<usize> {
+        self.pager.free_pages_gated()
+    }
+
+    fn take_kv_stats(&mut self) -> KvPageStats {
+        self.pager.take_stats()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Satellite: a double-take must surface as the typed [`KvTakenError`]
+    /// (clean worker abort), not a panic (poisoned thread).
+    #[test]
+    fn kv_double_take_is_typed_error_not_panic() {
+        let mut buf = KvBuf::Host(vec![0.0; 4]);
+        let mut d2h = 0u64;
+        let first = buf.take_handle(&[4], false, &mut d2h);
+        assert!(first.is_ok());
+        let second = buf.take_handle(&[4], false, &mut d2h);
+        let err = second.expect_err("empty cache must error");
+        assert!(err.downcast_ref::<KvTakenError>().is_some(),
+                "expected KvTakenError, got: {err}");
+    }
 
     #[test]
     fn logits_rows_share_one_block() {

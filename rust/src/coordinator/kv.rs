@@ -1,8 +1,494 @@
-//! KV-cache slot allocator: maps active sequences to rows of the batched
-//! cache tensors.  Invariants (property-tested): a slot is owned by at most
-//! one request; free+active always partitions [0, B); slots are recycled
-//! only after release.
+//! KV-cache bookkeeping: the slot map (one sequence per batch row) and the
+//! page layer (fixed-size position blocks with refcounted sharing) that
+//! admission control and memory accounting run on.
+//!
+//! # Two allocators, two granularities
+//!
+//! * [`SlotMap`] — which batch row a sequence occupies.  Invariants
+//!   (property-tested): a slot is owned by at most one request; free+active
+//!   always partitions `[0, B)`; slots are recycled only after release.
+//! * [`PageAllocator`]/[`PageTable`]/[`KvPager`] — which *pages* (runs of
+//!   `page_size` cache positions) a sequence holds.  Under
+//!   [`KvLayout::Dense`] every admitted sequence reserves one full
+//!   `ceil(max_seq / page_size)` worth of pages up front (the flat layout's
+//!   true memory cost, made explicit so dense and paged compete under one
+//!   budget).  Under [`KvLayout::Paged`] a sequence holds only the pages
+//!   its positions actually cover: prefill books the prompt-covering
+//!   pages, each decode tick grows the table by at most one page, and
+//!   `fork_kv` aliases the source's prompt pages by refcount instead of
+//!   allocating — a page is copied ([`PageAllocator::cow`]) only on the
+//!   first write into a shared page (copy-on-write).
+//!
+//! # Page-size / fragmentation trade-off
+//!
+//! The page is the unit of both waste and sharing.  A sequence's last page
+//! is on average half empty, so internal fragmentation wastes
+//! `~page_size/2` positions per sequence — small pages waste less and let
+//! admission pack more sequences into a fixed budget.  But sharing and
+//! CoW work at page granularity too: a forked group aliases
+//! `floor(prompt_len / page_size)`-ish whole pages and must CoW the page
+//! straddling the prompt boundary, so *smaller* pages also mean more
+//! page-table entries, more refcount traffic, and (on a physical paged
+//! backend) more gather indirection per attention read.  `page_size = 16`
+//! is the conventional sweet spot (vLLM's default block size); the knob is
+//! `--kv-page-size` end-to-end so the bench can sweep it.
+//!
+//! # Logical pages over a dense physical tensor
+//!
+//! The compiled artifacts pin the physical KV to one dense
+//! `[L, B, H, S, Dh]` tensor, so on [`StepEngine`](super::StepEngine) the
+//! page layer is the engine's *logical memory model*: it gates admission,
+//! measures sharing/CoW, and gives preemption (ROADMAP item 2) a ledger to
+//! act on, while the physical fork still copies prefix rows (bit-identical
+//! either way — an alias later CoW'd carries exactly the bytes an eager
+//! copy would).  [`MockEngine`](super::MockEngine) mirrors the same pager
+//! so propcheck proves the allocator invariants artifact-free: no leaks
+//! (freed == allocated at drain), no in-place writes to shared pages, and
+//! alias/release balance under random cancel/prune interleavings.
 
+/// How engines book KV memory (`--kv dense|paged`).
+///
+/// `Dense` is the seed layout and the bit-parity oracle: full-sequence
+/// reservation per slot.  `Paged` books only covered positions and shares
+/// prompt pages across forked siblings.  Token streams are bit-identical
+/// across the two — the layout moves memory accounting and admission
+/// order, never sampling (property- and integration-tested).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvLayout {
+    Dense,
+    Paged,
+}
+
+impl KvLayout {
+    pub fn parse(s: &str) -> Option<KvLayout> {
+        match s {
+            "dense" => Some(KvLayout::Dense),
+            "paged" => Some(KvLayout::Paged),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvLayout::Dense => "dense",
+            KvLayout::Paged => "paged",
+        }
+    }
+}
+
+/// KV layout configuration, threaded from `TrainerConfig` / CLI flags
+/// through [`RolloutService`](super::RolloutService) into every engine
+/// ([`DecodeEngine::configure_kv`](super::engine::DecodeEngine::configure_kv)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvConfig {
+    pub layout: KvLayout,
+    /// cache positions per page (the waste/sharing granularity above)
+    pub page_size: usize,
+    /// total page budget admission is gated on.  `None` (the default) sizes
+    /// the budget to one full dense reservation per slot — exactly the
+    /// memory the flat layout always held, so the gate can never bind
+    /// tighter than the slot map and seed behavior is unchanged.  Tests and
+    /// the bench set it lower to compare dense vs paged at equal memory.
+    pub budget_pages: Option<usize>,
+}
+
+impl Default for KvConfig {
+    fn default() -> KvConfig {
+        KvConfig { layout: KvLayout::Dense, page_size: 16, budget_pages: None }
+    }
+}
+
+/// Pages covering `len` positions.
+pub fn pages_for(len: usize, page_size: usize) -> usize {
+    len.div_ceil(page_size.max(1))
+}
+
+/// Drained page-ledger counters + current levels, per engine
+/// ([`DecodeEngine::take_kv_stats`](super::engine::DecodeEngine::take_kv_stats)
+/// → `SchedulerStats::kv_pages_*` → `sched_kv_pages_*` metric fields).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPageStats {
+    /// pages newly acquired since the last drain (delta)
+    pub allocated: u64,
+    /// pages returned to the free list since the last drain (delta)
+    pub freed: u64,
+    /// alias grants since the last drain — each is one prompt page a forked
+    /// sibling shares instead of allocating (delta)
+    pub shared: u64,
+    /// copy-on-write copies since the last drain — first writes into a
+    /// shared page (delta)
+    pub cow: u64,
+    /// distinct live pages right now (level, not drained)
+    pub active: usize,
+    /// maximum of `active` over the engine's lifetime (level, not drained)
+    pub high_water: usize,
+}
+
+/// Free-list page allocator with per-page refcounts.
+///
+/// A page is *live* while its refcount is nonzero; `active` counts distinct
+/// live pages (aliases share one).  The budget caps *admission*
+/// ([`PageAllocator::free_pages`]), not growth: an already-admitted
+/// sequence's decode tick and CoW copies allocate unconditionally
+/// ([`PageAllocator::acquire_grow`]) so in-flight work can never deadlock
+/// on the gate — optimistic admission, with overdraw visible as
+/// `high_water > budget`.  Leak accounting: on a drained system
+/// `active == 0` and `allocated == freed` (property-tested).
+#[derive(Clone, Debug, Default)]
+pub struct PageAllocator {
+    free: Vec<u32>,
+    refs: Vec<u32>,
+    budget: usize,
+    active: usize,
+    high_water: usize,
+    allocated: u64,
+    freed: u64,
+    shared: u64,
+    cow: u64,
+}
+
+impl PageAllocator {
+    pub fn new(budget_pages: usize) -> PageAllocator {
+        PageAllocator { budget: budget_pages, ..Default::default() }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Pages admission may still claim (0 once `active` reaches budget).
+    pub fn free_pages(&self) -> usize {
+        self.budget.saturating_sub(self.active)
+    }
+
+    pub fn active_pages(&self) -> usize {
+        self.active
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn ref_count(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
+    pub fn is_shared(&self, page: u32) -> bool {
+        self.refs[page as usize] > 1
+    }
+
+    /// Allocate one fresh page (refcount 1), growing past the budget if the
+    /// free list is dry — see the struct docs for why growth never fails.
+    pub fn acquire_grow(&mut self) -> u32 {
+        let page = match self.free.pop() {
+            Some(p) => p,
+            None => {
+                self.refs.push(0);
+                (self.refs.len() - 1) as u32
+            }
+        };
+        debug_assert_eq!(self.refs[page as usize], 0);
+        self.refs[page as usize] = 1;
+        self.active += 1;
+        self.high_water = self.high_water.max(self.active);
+        self.allocated += 1;
+        page
+    }
+
+    /// Share an existing live page (fork aliasing): refcount bump, no
+    /// allocation.
+    pub fn alias(&mut self, page: u32) {
+        assert!(self.refs[page as usize] > 0, "alias of dead page {page}");
+        self.refs[page as usize] += 1;
+        self.shared += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list when the last
+    /// holder releases it.  Panics on a dead page — that is a pager bug.
+    pub fn release(&mut self, page: u32) {
+        let r = &mut self.refs[page as usize];
+        assert!(*r > 0, "release of dead page {page} (double free)");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(page);
+            self.freed += 1;
+            self.active -= 1;
+        }
+    }
+
+    /// Copy-on-write: called on the first write into a page held by more
+    /// than one sequence.  The writer trades its alias for a fresh private
+    /// page; the original keeps serving the other holders.  Shared pages
+    /// are therefore never written in place (property-tested — this is the
+    /// only path from a shared page to a writable one).
+    pub fn cow(&mut self, page: u32) -> u32 {
+        assert!(self.refs[page as usize] > 1,
+                "cow of unshared page {page} (plain write suffices)");
+        self.refs[page as usize] -= 1;
+        self.cow += 1;
+        self.acquire_grow()
+    }
+
+    /// Non-draining snapshot of counters and levels (tests, bench
+    /// columns); [`PageAllocator::take_stats`] is the draining form.
+    pub fn peek_stats(&self) -> KvPageStats {
+        KvPageStats {
+            allocated: self.allocated,
+            freed: self.freed,
+            shared: self.shared,
+            cow: self.cow,
+            active: self.active,
+            high_water: self.high_water,
+        }
+    }
+
+    /// Drain the delta counters (allocated/freed/shared/cow), keeping the
+    /// levels (`active`, `high_water`) — mirrors how
+    /// `SchedulerStats::weight_epoch` survives a stats drain.
+    pub fn take_stats(&mut self) -> KvPageStats {
+        KvPageStats {
+            allocated: std::mem::take(&mut self.allocated),
+            freed: std::mem::take(&mut self.freed),
+            shared: std::mem::take(&mut self.shared),
+            cow: std::mem::take(&mut self.cow),
+            active: self.active,
+            high_water: self.high_water,
+        }
+    }
+
+    /// True once every page has been returned: no live refs, and the
+    /// lifetime ledger balances (`allocated == freed` — counters drained
+    /// mid-run still balance because both drain together).
+    pub fn drained(&self) -> bool {
+        self.active == 0
+            && self.refs.iter().all(|&r| r == 0)
+            && self.allocated == self.freed
+    }
+
+    /// Internal consistency (used by property tests): the free list holds
+    /// exactly the zero-ref pages, without duplicates, and `active` counts
+    /// the live ones.
+    pub fn check_invariants(&self) -> bool {
+        let mut on_free = vec![false; self.refs.len()];
+        for &f in &self.free {
+            let f = f as usize;
+            if f >= self.refs.len() || on_free[f] || self.refs[f] != 0 {
+                return false;
+            }
+            on_free[f] = true;
+        }
+        let live = self.refs.iter().filter(|&&r| r > 0).count();
+        live == self.active
+            && self.free.len() + live == self.refs.len()
+            && self.allocated == self.freed + self.active as u64
+    }
+}
+
+/// One sequence's ordered page list: entry `i` backs positions
+/// `[i * page_size, (i + 1) * page_size)`.  Pure data — all allocation and
+/// refcount traffic goes through the owning [`KvPager`].
+#[derive(Clone, Debug, Default)]
+pub struct PageTable {
+    pages: Vec<u32>,
+}
+
+impl PageTable {
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    pub fn pages(&self) -> &[u32] {
+        &self.pages
+    }
+}
+
+/// Per-engine pager: a [`PageAllocator`] plus one [`PageTable`] per slot,
+/// driven from the engine's own call stream (prefill books coverage,
+/// decode grows/CoWs, fork aliases, release returns) so the ledger can
+/// never drift from what the engine actually executed.  Both
+/// [`StepEngine`](super::StepEngine) and
+/// [`MockEngine`](super::MockEngine) embed one — the "MockEngine mirrors
+/// the same allocator" guarantee is this type being the single
+/// implementation.
+#[derive(Clone, Debug)]
+pub struct KvPager {
+    cfg: KvConfig,
+    alloc: PageAllocator,
+    tables: Vec<Option<PageTable>>,
+    max_seq: usize,
+}
+
+impl KvPager {
+    pub fn new(slots: usize, max_seq: usize, cfg: KvConfig) -> KvPager {
+        let full = pages_for(max_seq, cfg.page_size);
+        let budget = cfg.budget_pages.unwrap_or(slots * full);
+        KvPager {
+            cfg,
+            alloc: PageAllocator::new(budget),
+            tables: vec![None; slots],
+            max_seq,
+        }
+    }
+
+    pub fn config(&self) -> KvConfig {
+        self.cfg
+    }
+
+    pub fn allocator(&self) -> &PageAllocator {
+        &self.alloc
+    }
+
+    pub fn table(&self, slot: usize) -> Option<&PageTable> {
+        self.tables[slot].as_ref()
+    }
+
+    /// One full dense reservation, in pages.
+    fn full_pages(&self) -> usize {
+        pages_for(self.max_seq, self.cfg.page_size)
+    }
+
+    /// Pages admission must find free before starting a sequence whose
+    /// first prefill covers `prefill_len` positions.  Dense always costs a
+    /// full reservation (fork destinations included — the flat layout
+    /// duplicates rows); paged fork destinations cost zero up front (they
+    /// alias, then grow/CoW per tick).
+    pub fn admit_cost(&self, prefill_len: usize, forked: bool) -> usize {
+        match self.cfg.layout {
+            KvLayout::Dense => self.full_pages(),
+            KvLayout::Paged if forked => 0,
+            KvLayout::Paged => pages_for(prefill_len, self.cfg.page_size),
+        }
+    }
+
+    /// `Some(free pages)` when the admission gate is live — i.e. an
+    /// explicit budget was set.  With the default budget the gate can
+    /// never bind tighter than the slot map, so `None` lets the scheduler
+    /// skip the bookkeeping on the seed-identical path.
+    pub fn free_pages_gated(&self) -> Option<usize> {
+        self.cfg.budget_pages.map(|_| self.alloc.free_pages())
+    }
+
+    /// Book a prefill covering positions `[0, len)` of `slot`.  Any stale
+    /// table (a previous occupant that was never released) is returned
+    /// first, so the pager self-heals instead of leaking when an engine is
+    /// reused across scheduler lifetimes.
+    pub fn on_prefill(&mut self, slot: usize, len: usize) {
+        self.on_release(slot);
+        let n = match self.cfg.layout {
+            KvLayout::Dense => self.full_pages(),
+            KvLayout::Paged => pages_for(len, self.cfg.page_size),
+        };
+        let pages = (0..n).map(|_| self.alloc.acquire_grow()).collect();
+        self.tables[slot] = Some(PageTable { pages });
+    }
+
+    /// Book one decode write at `pos` in `slot`.  Paged: grow the table to
+    /// cover `pos` and CoW the target page if it is shared — the returned
+    /// page is always exclusively held (the CoW proof hook the property
+    /// tests assert on).  Dense: positions were fully reserved at
+    /// admission; returns `None`.
+    pub fn on_decode(&mut self, slot: usize, pos: usize) -> Option<u32> {
+        if self.cfg.layout == KvLayout::Dense {
+            if self.tables[slot].is_none() {
+                // self-heal: engines driven without a prefill (direct
+                // harness use) still keep the ledger balanced
+                self.on_prefill(slot, self.max_seq);
+            }
+            return None;
+        }
+        let idx = pos / self.cfg.page_size;
+        let table = self.tables[slot].get_or_insert_with(PageTable::default);
+        while table.pages.len() <= idx {
+            table.pages.push(self.alloc.acquire_grow());
+        }
+        let page = table.pages[idx];
+        let page = if self.alloc.is_shared(page) {
+            let fresh = self.alloc.cow(page);
+            table.pages[idx] = fresh;
+            fresh
+        } else {
+            page
+        };
+        debug_assert!(!self.alloc.is_shared(page),
+                      "shared page {page} about to be written in place");
+        Some(page)
+    }
+
+    /// Book a KV fork: `dsts` start as copies of `src`'s first
+    /// `prompt_len` positions.  Paged destinations alias the covering
+    /// pages by refcount; dense destinations pay a full reservation, like
+    /// any other dense admission.
+    pub fn on_fork(&mut self, src: usize, dsts: &[usize], prompt_len: usize) {
+        match self.cfg.layout {
+            KvLayout::Dense => {
+                for &dst in dsts {
+                    self.on_prefill(dst, self.max_seq);
+                }
+            }
+            KvLayout::Paged => {
+                let n = pages_for(prompt_len, self.cfg.page_size);
+                for &dst in dsts {
+                    self.on_release(dst);
+                    let shared: Vec<u32> = match &self.tables[src] {
+                        Some(t) => {
+                            t.pages[..n.min(t.pages.len())].to_vec()
+                        }
+                        None => Vec::new(),
+                    };
+                    for &p in &shared {
+                        self.alloc.alias(p);
+                    }
+                    self.tables[dst] = Some(PageTable { pages: shared });
+                }
+            }
+        }
+    }
+
+    /// Return every page `slot` holds (sequence finished, cancelled, or
+    /// aborted).  Idempotent: releasing an empty slot is a no-op, so the
+    /// cancel/prune paths can call it unconditionally.
+    pub fn on_release(&mut self, slot: usize) {
+        if let Some(t) = self.tables[slot].take() {
+            for p in t.pages {
+                self.alloc.release(p);
+            }
+        }
+    }
+
+    pub fn take_stats(&mut self) -> KvPageStats {
+        self.alloc.take_stats()
+    }
+
+    /// Non-draining counter/level snapshot (see
+    /// [`PageAllocator::peek_stats`]).
+    pub fn peek_stats(&self) -> KvPageStats {
+        self.alloc.peek_stats()
+    }
+
+    /// All slots empty and the allocator drained — the no-leak invariant.
+    pub fn drained(&self) -> bool {
+        self.tables.iter().all(|t| t.is_none()) && self.alloc.drained()
+    }
+
+    pub fn check_invariants(&self) -> bool {
+        let held: u64 = self
+            .tables
+            .iter()
+            .flatten()
+            .map(|t| t.pages.len() as u64)
+            .sum();
+        // every table entry is a live ref; ref totals match table totals
+        let refs: u64 =
+            self.alloc.refs.iter().map(|&r| u64::from(r)).sum();
+        held == refs && self.alloc.check_invariants()
+    }
+}
+
+/// Maps active sequences to rows of the batched cache tensors.
 #[derive(Clone, Debug)]
 pub struct SlotMap {
     free: Vec<usize>,
@@ -104,5 +590,117 @@ mod tests {
         let mut sm = SlotMap::new(2);
         let s = sm.acquire(1).unwrap();
         sm.release(s, 99);
+    }
+
+    #[test]
+    fn layout_parse_roundtrip() {
+        for l in [KvLayout::Dense, KvLayout::Paged] {
+            assert_eq!(KvLayout::parse(l.name()), Some(l));
+        }
+        assert_eq!(KvLayout::parse("block"), None);
+    }
+
+    #[test]
+    fn allocator_alias_cow_lifecycle() {
+        let mut a = PageAllocator::new(8);
+        let p = a.acquire_grow();
+        a.alias(p);
+        assert!(a.is_shared(p));
+        assert_eq!(a.active_pages(), 1, "alias shares, never allocates");
+        let q = a.cow(p);
+        assert_ne!(p, q);
+        assert!(!a.is_shared(p) && !a.is_shared(q));
+        assert_eq!(a.active_pages(), 2);
+        a.release(p);
+        a.release(q);
+        assert!(a.drained());
+        let st = a.take_stats();
+        assert_eq!((st.allocated, st.freed, st.shared, st.cow), (2, 2, 1, 1));
+        assert_eq!(st.high_water, 2);
+        assert!(a.check_invariants());
+    }
+
+    #[test]
+    fn allocator_grows_past_budget_but_gates_admission() {
+        let mut a = PageAllocator::new(1);
+        let p = a.acquire_grow();
+        assert_eq!(a.free_pages(), 0, "budget consumed");
+        let q = a.acquire_grow(); // in-flight growth must not deadlock
+        assert_eq!(a.active_pages(), 2);
+        assert!(a.high_water() > a.budget(), "overdraw is visible");
+        a.release(p);
+        a.release(q);
+        assert!(a.drained());
+    }
+
+    #[test]
+    #[should_panic]
+    fn page_double_free_panics() {
+        let mut a = PageAllocator::new(4);
+        let p = a.acquire_grow();
+        a.release(p);
+        a.release(p);
+    }
+
+    #[test]
+    fn pager_dense_reserves_full_sequences() {
+        // max_seq 32, page 8 -> 4 pages per dense sequence
+        let mut pg = KvPager::new(2, 32, KvConfig {
+            layout: KvLayout::Dense,
+            page_size: 8,
+            budget_pages: Some(8),
+        });
+        pg.on_prefill(0, 3); // prompt length is irrelevant under dense
+        assert_eq!(pg.allocator().active_pages(), 4);
+        assert_eq!(pg.on_decode(0, 3), None, "dense never CoWs");
+        pg.on_fork(0, &[1], 3);
+        assert_eq!(pg.allocator().active_pages(), 8, "fork dst pays in full");
+        assert_eq!(pg.free_pages_gated(), Some(0));
+        pg.on_release(0);
+        pg.on_release(1);
+        assert!(pg.drained());
+        assert!(pg.check_invariants());
+    }
+
+    #[test]
+    fn pager_paged_aliases_and_cows_on_first_write() {
+        let mut pg = KvPager::new(2, 32, KvConfig {
+            layout: KvLayout::Paged,
+            page_size: 4,
+            budget_pages: Some(8),
+        });
+        pg.on_prefill(0, 6); // covers pages 0..2
+        assert_eq!(pg.allocator().active_pages(), 2);
+        pg.on_fork(0, &[1], 6); // sibling aliases both pages
+        assert_eq!(pg.allocator().active_pages(), 2, "alias allocates nothing");
+        // first decode write past the prompt lands in shared page 1 -> CoW
+        let w = pg.on_decode(1, 6).unwrap();
+        assert_eq!(pg.allocator().ref_count(w), 1);
+        assert_eq!(pg.allocator().active_pages(), 3);
+        // source's own write is now unshared -> in place, no copy
+        pg.on_decode(0, 6).unwrap();
+        assert_eq!(pg.allocator().active_pages(), 3);
+        // growth into a new page
+        pg.on_decode(0, 8).unwrap();
+        assert_eq!(pg.table(0).unwrap().len(), 3);
+        let st_mid = pg.allocator().clone().take_stats();
+        assert_eq!((st_mid.shared, st_mid.cow), (2, 1));
+        pg.on_release(0);
+        pg.on_release(1);
+        assert!(pg.drained());
+        assert!(pg.check_invariants());
+    }
+
+    #[test]
+    fn pager_release_is_idempotent() {
+        let mut pg = KvPager::new(1, 16, KvConfig {
+            layout: KvLayout::Paged,
+            page_size: 4,
+            budget_pages: Some(4),
+        });
+        pg.on_prefill(0, 5);
+        pg.on_release(0);
+        pg.on_release(0); // cancel + abort may both hit the same slot
+        assert!(pg.drained());
     }
 }

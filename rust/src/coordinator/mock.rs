@@ -20,6 +20,7 @@ use anyhow::Result;
 use crate::util::pool::F32Pool;
 
 use super::engine::{DecodeEngine, LogitsBlock, LogitsRow};
+use super::kv::{KvConfig, KvPageStats, KvPager};
 
 /// Deterministic in-memory engine: B slots over a tiny vocabulary.
 pub struct MockEngine {
@@ -46,6 +47,11 @@ pub struct MockEngine {
     /// fail the next N decode calls with an error (worker/tick error-path
     /// tests); each failure consumes one count, so the engine recovers
     pub fail_decodes: usize,
+    /// the same page ledger [`StepEngine`](super::StepEngine) embeds,
+    /// driven from the same call stream — so propcheck proves the
+    /// allocator invariants (no leaks, CoW before shared writes,
+    /// alias/release balance) without artifacts
+    pager: KvPager,
 }
 
 fn mix(h: u64, x: u64) -> u64 {
@@ -73,7 +79,13 @@ impl MockEngine {
             decode_calls: 0,
             max_pos_seen: 0,
             fail_decodes: 0,
+            pager: KvPager::new(batch, max_seq, KvConfig::default()),
         }
+    }
+
+    /// Read-only view of the page ledger (propcheck drain/leak asserts).
+    pub fn pager(&self) -> &KvPager {
+        &self.pager
     }
 
     /// Append the logits row for a sequence whose rolling hash is `h`,
@@ -112,6 +124,7 @@ impl DecodeEngine for MockEngine {
                 h = mix(h, t as u64);
             }
             self.state[slot] = h;
+            self.pager.on_prefill(slot, prompts[i].len());
             self.logits_into(h, &mut data);
         }
         let block = LogitsBlock::pooled(data, self.vocab, self.pool.clone());
@@ -135,6 +148,7 @@ impl DecodeEngine for MockEngine {
                     self.max_seq);
             self.max_pos_seen = self.max_pos_seen.max(pos);
             self.state[slot] = mix(self.state[slot], tok as u64);
+            self.pager.on_decode(slot, pos as usize);
             self.logits_into(self.state[slot], &mut data);
         }
         let block = LogitsBlock::pooled(data, self.vocab, self.pool.clone());
@@ -148,7 +162,7 @@ impl DecodeEngine for MockEngine {
     /// engine's cache-row copy.  The prompt length is irrelevant here — the
     /// hash *is* the whole prompt state.
     fn fork_kv(&mut self, src_slot: usize, dst_slots: &[usize],
-               _prompt_len: usize) -> Result<()> {
+               prompt_len: usize) -> Result<()> {
         assert!(src_slot < self.batch, "fork from bad slot {src_slot}");
         self.fork_calls += 1;
         self.forked_slots += dst_slots.len();
@@ -157,6 +171,7 @@ impl DecodeEngine for MockEngine {
                     "fork into bad slot {dst}");
             self.state[dst] = self.state[src_slot];
         }
+        self.pager.on_fork(src_slot, dst_slots, prompt_len);
         Ok(())
     }
 
@@ -164,5 +179,25 @@ impl DecodeEngine for MockEngine {
     /// like the real engine's KV caches survive a hot requantization.
     fn swap_weights(&mut self, w: u64, _epoch: u64) {
         self.weights = w;
+    }
+
+    fn configure_kv(&mut self, cfg: KvConfig) {
+        self.pager = KvPager::new(self.batch, self.max_seq, cfg);
+    }
+
+    fn release_kv(&mut self, slot: usize) {
+        self.pager.on_release(slot);
+    }
+
+    fn kv_admit_cost(&self, prefill_len: usize, forked: bool) -> usize {
+        self.pager.admit_cost(prefill_len, forked)
+    }
+
+    fn kv_free_pages(&self) -> Option<usize> {
+        self.pager.free_pages_gated()
+    }
+
+    fn take_kv_stats(&mut self) -> KvPageStats {
+        self.pager.take_stats()
     }
 }

@@ -12,25 +12,37 @@
 //! rl::Trainer ── GroupSpec ──▶ RolloutService            (service.rs)
 //!   │                            │ groups, rewards, in-flight pruning,
 //!   │ requantize:                │ placement: --stripe rr|least-loaded
-//!   │ push_weights(W)            │ (deterministic, submission-order)
-//!   │ ──▶ WeightEpoch++          │
+//!   │ push_weights(W)            │ kv/chunk config fan-out: set_kv(),
+//!   │ ──▶ WeightEpoch++          │ set_prefill_chunk()
 //!   │                            ├─ cmd chan ──▶ worker thread 0
 //!   │   commands: Submit(group)  │               owns: Runtime (own PJRT
 //!   │     Cancel(uid)            │               client), DecodeEngine,
 //!   │     SwapWeights(W, epoch)  │               Scheduler  (scheduler.rs)
-//!   │     TakeStats / AbortAll   │                 │ FIFO queue → KV slots,
-//!   │                            │                 │ shared-prefix prefill
-//!   │   events: Finished(result) │                 │ (fork_kv), lockstep
-//!   │     CancelOutcome, Stats,  │                 │ decode, cancel(),
-//!   │     TickError, Aborted     │                 │ swap_weights()
-//!   │                            │                 └──▶ DecodeEngine
-//!   │                            │                       (engine.rs)
+//!   │     Configure{min_prefill, │                 │ FIFO queue → KV slots,
+//!   │       share_prefix, kv,    │                 │ page-gated admission,
+//!   │       prefill_chunk}       │                 │ shared-prefix prefill
+//!   │     TakeStats / AbortAll   │                 │ (fork_kv), chunked
+//!   │                            │                 │ prefill, lockstep
+//!   │   events: Finished(result) │                 │ decode, cancel(),
+//!   │     CancelOutcome, Stats,  │                 │ swap_weights()
+//!   │     TickError, Aborted     │                 ├──▶ DecodeEngine
+//!   │                            │                 │     (engine.rs)
+//!   │                            │                 │      │ books every
+//!   │                            │                 │      │ prefill/decode/
+//!   │                            │                 │      │ fork/release in
+//!   │                            │                 │      ▼
+//!   │                            │                 └──  KvPager   (kv.rs)
+//!   │                            │                      PageAllocator:
+//!   │                            │                      free list+refcounts,
+//!   │                            │                      alias/CoW, budget
+//!   │                            │                      gate, leak ledger
 //!   │                            ├─ cmd chan ──▶ worker thread 1 ─▶ ...
 //!   │                            │
 //!   │                            └─ inline backend: same schedulers,
 //!   │                               ticked round-robin on this thread
 //!   ▼                              (reference semantics, parity-tested)
-//! GroupResults (submission order, bit-identical across backends)
+//! GroupResults (submission order, bit-identical across backends
+//!               AND across --kv dense|paged — the dense oracle)
 //! ```
 //!
 //! The [`Scheduler`] stays a request-level primitive: continuous batching
@@ -91,8 +103,9 @@ pub mod sampler;
 pub mod scheduler;
 pub mod service;
 
-pub use engine::{DecodeEngine, LogitsBlock, LogitsRow, StepEngine};
-pub use kv::SlotMap;
+pub use engine::{DecodeEngine, KvTakenError, LogitsBlock, LogitsRow, StepEngine};
+pub use kv::{pages_for, KvConfig, KvLayout, KvPageStats, KvPager,
+             PageAllocator, PageTable, SlotMap};
 pub use mock::MockEngine;
 pub use request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 pub use scheduler::Scheduler;

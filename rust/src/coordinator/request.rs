@@ -84,6 +84,28 @@ pub struct SchedulerStats {
     /// bytes copied device-format→host (logits each call; KV only when it
     /// must materialize for a row merge or fork)
     pub bytes_d2h: u64,
+    /// chunked-prefill work units: truncated prefill calls plus
+    /// chunk-continuation decode rounds (0 when `prefill_chunk` is off)
+    pub prefill_chunks: usize,
+    /// KV pages newly acquired (drained from the engine's
+    /// [`KvPager`](super::kv::KvPager) on `take_stats`)
+    pub kv_pages_allocated: u64,
+    /// KV pages returned to the free list — on a drained scheduler
+    /// `kv_pages_freed == kv_pages_allocated` (no leaks; property-tested)
+    pub kv_pages_freed: u64,
+    /// prompt pages forked siblings alias instead of allocating
+    pub kv_pages_shared: u64,
+    /// copy-on-write page copies (first write into a shared page)
+    pub kv_pages_cow: u64,
+    /// distinct live KV pages at the last stats drain.  A *level* like
+    /// `weight_epoch`: merging takes the max (per-replica truth lives in
+    /// the `sched_e{i}_kv_pages_active` row fields) and `take_stats`
+    /// preserves it across drains.
+    pub kv_pages_active: usize,
+    /// lifetime maximum of `kv_pages_active` (page-pressure high-water
+    /// mark; same level semantics as above).  Above the configured budget
+    /// = admission overdraw from in-flight growth.
+    pub kv_pages_high_water: usize,
     /// sum over decode calls of occupied-slot fraction
     pub occupancy_sum: f64,
     /// sum over completed requests of time spent queued before prefill
@@ -107,12 +129,28 @@ impl SchedulerStats {
     }
 
     /// Mean rows per prefill call (the dynamic-batching health metric the
-    /// `--min-prefill-batch` knob steers).
+    /// `--min-prefill-batch` knob steers).  0.0 on a step with no prefill
+    /// calls — a pure-decode or fully-pruned wave must not divide by zero
+    /// (pinned by `derived_stats_guard_zero_denominators`).
     pub fn mean_prefill_batch(&self) -> f64 {
         if self.prefill_calls == 0 {
             0.0
         } else {
             self.prefill_rows as f64 / self.prefill_calls as f64
+        }
+    }
+
+    /// `bytes_h2d / decode_calls` — the per-tick staging tax the resident
+    /// path collapses.  0.0 on a step with no decode calls (pure-prefill
+    /// or fully-pruned wave), guarded like [`Self::mean_prefill_batch`]
+    /// and pinned by the same unit test; the trainer's
+    /// `sched_h2d_per_decode` row field reads this method so the guard
+    /// has a single definition.
+    pub fn h2d_per_decode(&self) -> f64 {
+        if self.decode_calls == 0 {
+            0.0
+        } else {
+            self.bytes_h2d as f64 / self.decode_calls as f64
         }
     }
 
@@ -147,6 +185,15 @@ impl SchedulerStats {
         self.pruned_groups += other.pruned_groups;
         self.bytes_h2d += other.bytes_h2d;
         self.bytes_d2h += other.bytes_d2h;
+        self.prefill_chunks += other.prefill_chunks;
+        self.kv_pages_allocated += other.kv_pages_allocated;
+        self.kv_pages_freed += other.kv_pages_freed;
+        self.kv_pages_shared += other.kv_pages_shared;
+        self.kv_pages_cow += other.kv_pages_cow;
+        // levels, not deltas — see the field docs
+        self.kv_pages_active = self.kv_pages_active.max(other.kv_pages_active);
+        self.kv_pages_high_water =
+            self.kv_pages_high_water.max(other.kv_pages_high_water);
         self.occupancy_sum += other.occupancy_sum;
         self.queue_wait_sum_s += other.queue_wait_sum_s;
         self.wall_s += other.wall_s;
@@ -175,5 +222,66 @@ mod tests {
         a.merge(&b);
         assert_eq!((a.bytes_h2d, a.bytes_d2h), (107, 12));
         assert_eq!(a.weight_epoch, 3, "epoch is a level, merge takes max");
+    }
+
+    #[test]
+    fn merge_sums_page_deltas_and_maxes_levels() {
+        let mut a = SchedulerStats {
+            kv_pages_allocated: 10,
+            kv_pages_freed: 8,
+            kv_pages_shared: 3,
+            kv_pages_cow: 1,
+            kv_pages_active: 2,
+            kv_pages_high_water: 9,
+            prefill_chunks: 2,
+            ..Default::default()
+        };
+        let b = SchedulerStats {
+            kv_pages_allocated: 5,
+            kv_pages_freed: 5,
+            kv_pages_shared: 1,
+            kv_pages_cow: 2,
+            kv_pages_active: 4,
+            kv_pages_high_water: 6,
+            prefill_chunks: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!((a.kv_pages_allocated, a.kv_pages_freed), (15, 13));
+        assert_eq!((a.kv_pages_shared, a.kv_pages_cow), (4, 3));
+        assert_eq!(a.prefill_chunks, 3);
+        assert_eq!((a.kv_pages_active, a.kv_pages_high_water), (4, 9),
+                   "page levels merge by max, like weight_epoch");
+    }
+
+    /// Satellite: zero-denominator steps (pure-decode waves have no
+    /// prefill calls; pure-prefill or fully-pruned waves have no decode
+    /// calls) must yield 0.0, not NaN/inf — these feed Recorder rows and
+    /// a NaN would poison every downstream tail_mean.
+    #[test]
+    fn derived_stats_guard_zero_denominators() {
+        let empty = SchedulerStats::default();
+        assert_eq!(empty.mean_prefill_batch(), 0.0);
+        assert_eq!(empty.h2d_per_decode(), 0.0);
+        assert_eq!(empty.mean_occupancy(), 0.0);
+        assert_eq!(empty.mean_queue_wait_s(), 0.0);
+        assert_eq!(empty.tokens_per_s(), 0.0);
+        let pure_decode = SchedulerStats {
+            decode_calls: 4,
+            bytes_h2d: 64,
+            ..Default::default()
+        };
+        assert_eq!(pure_decode.mean_prefill_batch(), 0.0);
+        assert_eq!(pure_decode.h2d_per_decode(), 16.0);
+        let pure_prefill = SchedulerStats {
+            prefill_calls: 2,
+            prefill_rows: 6,
+            bytes_h2d: 64,
+            ..Default::default()
+        };
+        assert_eq!(pure_prefill.h2d_per_decode(), 0.0);
+        assert_eq!(pure_prefill.mean_prefill_batch(), 3.0);
+        assert!(pure_decode.h2d_per_decode().is_finite()
+                && pure_prefill.mean_prefill_batch().is_finite());
     }
 }

@@ -28,7 +28,7 @@ use anyhow::Result;
 use crate::util::rng::Pcg64;
 
 use super::engine::{DecodeEngine, LogitsRow};
-use super::kv::SlotMap;
+use super::kv::{KvConfig, SlotMap};
 use super::request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 use super::sampler;
 
@@ -37,8 +37,15 @@ struct ActiveSeq {
     slot: usize,
     /// index of the last accepted token (prompt or generated)
     pos: usize,
+    /// prompt tokens in the KV cache so far.  `== prompt.len()` once the
+    /// sequence generates; less only mid chunked prefill, where the tail
+    /// rides decode ticks one chunk per tick instead of stalling admission
+    /// behind one monolithic prefill.
+    prompt_fed: usize,
     /// distribution for the NEXT token — a shared view into the engine's
-    /// per-call logits block, not a per-sequence copy
+    /// per-call logits block, not a per-sequence copy.  Only meaningful
+    /// once `prompt_fed == prompt.len()`; chunk-feed decodes overwrite it
+    /// until then.
     pending_logits: LogitsRow,
     generated: Vec<i32>,
     logprobs: Vec<f32>,
@@ -90,6 +97,16 @@ pub struct Scheduler<E: DecodeEngine> {
     /// state stays per-request).  Off reproduces the PR-1 per-request
     /// prefill for baseline comparisons.
     pub share_prefix: bool,
+    /// chunked prefill: prompts longer than this prefill only their first
+    /// `prefill_chunk` tokens at admission; the tail rides the regular
+    /// decode ticks, up to one chunk per tick, interleaved with the
+    /// co-scheduled sequences' generation instead of stalling the batch
+    /// behind one monolithic prefill.  0 (the default) disables chunking.
+    /// Bit-parity: a token's distribution depends only on its own
+    /// sequence's prior tokens, so chunk-fed and whole-prompt prefill
+    /// yield identical streams (property-tested on the mock,
+    /// integration-tested against the artifacts).
+    pub prefill_chunk: usize,
 }
 
 impl<E: DecodeEngine> Scheduler<E> {
@@ -107,6 +124,25 @@ impl<E: DecodeEngine> Scheduler<E> {
             eos_id,
             min_prefill_batch: 1,
             share_prefix: true,
+            prefill_chunk: 0,
+        }
+    }
+
+    /// Install a KV layout on the engine ([`DecodeEngine::configure_kv`]).
+    /// Call before serving begins — rebuilding the page ledger mid-flight
+    /// does not crash (the pager self-heals slot by slot) but resets the
+    /// page counters.
+    pub fn set_kv(&mut self, cfg: KvConfig) {
+        self.engine.configure_kv(cfg);
+    }
+
+    /// Prompt positions the first prefill call covers for a prompt of
+    /// `prompt_len` tokens (the whole prompt unless chunking truncates it).
+    fn effective_prefill_len(&self, prompt_len: usize) -> usize {
+        if self.prefill_chunk > 0 {
+            prompt_len.min(self.prefill_chunk)
+        } else {
+            prompt_len
         }
     }
 
@@ -117,6 +153,12 @@ impl<E: DecodeEngine> Scheduler<E> {
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.active.len()
+    }
+
+    /// Sequences currently decoding (occupied KV slots) — the concurrency
+    /// the admission gate actually achieved.
+    pub fn active_count(&self) -> usize {
+        self.active.len()
     }
 
     /// Install freshly quantized engine weights between ticks (hot
@@ -147,6 +189,7 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
         for a in self.active.drain(..) {
             self.slots.release(a.slot, a.req.id);
+            self.engine.release_kv(a.slot);
             self.stats.cancelled += 1;
             n += 1;
         }
@@ -163,8 +206,18 @@ impl<E: DecodeEngine> Scheduler<E> {
         let (h2d, d2h) = self.engine.take_transfer();
         self.stats.bytes_h2d += h2d;
         self.stats.bytes_d2h += d2h;
+        let kv = self.engine.take_kv_stats();
+        self.stats.kv_pages_allocated += kv.allocated;
+        self.stats.kv_pages_freed += kv.freed;
+        self.stats.kv_pages_shared += kv.shared;
+        self.stats.kv_pages_cow += kv.cow;
+        self.stats.kv_pages_active = kv.active;
+        self.stats.kv_pages_high_water = kv.high_water;
         let st = std::mem::take(&mut self.stats);
         self.stats.weight_epoch = st.weight_epoch;
+        // page levels survive the drain like the epoch does
+        self.stats.kv_pages_active = st.kv_pages_active;
+        self.stats.kv_pages_high_water = st.kv_pages_high_water;
         st
     }
 
@@ -191,6 +244,10 @@ impl<E: DecodeEngine> Scheduler<E> {
         if let Some(ai) = self.active.iter().position(|a| a.req.id == id) {
             let a = self.active.swap_remove(ai);
             self.slots.release(a.slot, a.req.id);
+            // online pruning reclaims KV memory, not just compute: the
+            // cancelled sequence's non-shared pages return to the free
+            // list immediately
+            self.engine.release_kv(a.slot);
             self.stats.cancelled += 1;
             return Some(RolloutResult {
                 id: a.req.id,
@@ -209,12 +266,49 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// fork KV into the sibling slots — `prefill_rows` counts only the
     /// representative rows, `forked` the rows saved.
     fn admit(&mut self) -> Result<()> {
-        let admissible = self.queue.len().min(self.slots.free_count());
+        let mut admissible = self.queue.len().min(self.slots.free_count());
         if admissible == 0
             || (admissible < self.min_prefill_batch
                 && !self.active.is_empty())
         {
             return Ok(());
+        }
+        // page-budget gate (live only under an explicit budget —
+        // `kv_free_pages` is None otherwise and the wave is slot-bound as
+        // before): walk the FIFO head charging each candidate its
+        // admission cost — cluster leaders pay their first-chunk coverage
+        // (dense: one full reservation), prefix-shared siblings pay their
+        // fork cost — and stop at the first that does not fit, preserving
+        // arrival order.  This is where paged beats dense at equal
+        // memory: a long-prompt dense wave reserves max_seq positions per
+        // request while paged reserves only the prompt-covering pages.
+        if let Some(mut free) = self.engine.kv_free_pages() {
+            let mut take = 0usize;
+            while take < admissible {
+                let prompt = &self.queue[take].0.prompt;
+                let plen = self.effective_prefill_len(prompt.len());
+                let forked = self.share_prefix
+                    && self.queue.iter().take(take).any(|(r, _)| {
+                        Arc::ptr_eq(&r.prompt, prompt) || r.prompt == *prompt
+                    });
+                let cost = self.engine.kv_admit_cost(plen, forked);
+                if cost > free {
+                    break;
+                }
+                free -= cost;
+                take += 1;
+            }
+            if take == 0 {
+                if !self.active.is_empty() {
+                    // pages free as in-flight sequences finish; wait
+                    return Ok(());
+                }
+                // an idle scheduler must never deadlock on a request
+                // larger than the whole budget: force-admit the head and
+                // let the pager overdraw (visible as high_water > budget)
+                take = 1;
+            }
+            admissible = take;
         }
         let mut newly = Vec::new();
         for _ in 0..admissible {
@@ -247,11 +341,23 @@ impl<E: DecodeEngine> Scheduler<E> {
             }
         }
         let slots: Vec<usize> = reps.iter().map(|&i| newly[i].2).collect();
-        // borrowed, not cloned: the engine reads prompt tokens in place
-        let prompts: Vec<&[i32]> =
-            reps.iter().map(|&i| newly[i].0.prompt.as_slice()).collect();
+        // borrowed, not cloned: the engine reads prompt tokens in place —
+        // chunked prefill covers only the first `prefill_chunk` positions;
+        // the tail rides later decode ticks
+        let prompts: Vec<&[i32]> = reps
+            .iter()
+            .map(|&i| {
+                let p = newly[i].0.prompt.as_slice();
+                &p[..self.effective_prefill_len(p.len())]
+            })
+            .collect();
         self.stats.prefill_calls += 1;
         self.stats.prefill_rows += reps.len();
+        self.stats.prefill_chunks += prompts
+            .iter()
+            .zip(reps.iter())
+            .filter(|&(p, &i)| p.len() < newly[i].0.prompt.len())
+            .count();
         let logits = self.engine.prefill(&slots, &prompts)?;
         drop(prompts);
         for (k, &ri) in reps.iter().enumerate() {
@@ -260,16 +366,21 @@ impl<E: DecodeEngine> Scheduler<E> {
                 .map(|i| newly[i].2)
                 .collect();
             if !dsts.is_empty() {
-                // prefix-limited fork: only the prompt_len rows carry state
-                self.engine.fork_kv(newly[ri].2, &dsts,
-                                    newly[ri].0.prompt.len())?;
+                // prefix-limited fork: only the rows prefilled so far
+                // carry state (the whole prompt unless chunking truncated
+                // it — siblings chunk-feed the rest independently)
+                let fed =
+                    self.effective_prefill_len(newly[ri].0.prompt.len());
+                self.engine.fork_kv(newly[ri].2, &dsts, fed)?;
                 self.stats.forked += dsts.len();
             }
         }
         for (i, (req, t_enq, slot)) in newly.into_iter().enumerate() {
             let rng = Pcg64::new(req.seed);
+            let fed = self.effective_prefill_len(req.prompt.len());
             self.active.push(ActiveSeq {
-                pos: req.prompt.len() - 1,
+                pos: fed - 1,
+                prompt_fed: fed,
                 // Rc bump into the shared block — forked siblings reference
                 // the representative's prefill row, no vocab-sized copy
                 pending_logits: logits[rep_for[i]].clone(),
@@ -292,13 +403,25 @@ impl<E: DecodeEngine> Scheduler<E> {
         if self.active.is_empty() {
             return Ok(Vec::new());
         }
-        // sample next token for every active sequence
+        // sample next token for every active sequence; sequences still
+        // chunk-feeding their prompt skip sampling and ride the same
+        // lockstep decode with their next prompt token instead
         let mut finished: Vec<RolloutResult> = Vec::new();
         let mut decode_rows: Vec<(usize, i32, i32)> = Vec::new();
         let mut decode_idx: Vec<usize> = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
             let a = &mut self.active[i];
+            if a.prompt_fed < a.req.prompt.len() {
+                a.pos += 1;
+                debug_assert_eq!(a.pos, a.prompt_fed);
+                decode_rows.push((a.slot, a.pos as i32,
+                                  a.req.prompt[a.prompt_fed]));
+                a.prompt_fed += 1;
+                decode_idx.push(i);
+                i += 1;
+                continue;
+            }
             let (tok, lp) = sampler::sample(a.pending_logits.as_slice(),
                                             a.req.temperature, a.req.top_p,
                                             &mut a.rng);
@@ -311,6 +434,7 @@ impl<E: DecodeEngine> Scheduler<E> {
             if let Some(reason) = finish {
                 let a = self.active.swap_remove(i);
                 self.slots.release(a.slot, a.req.id);
+                self.engine.release_kv(a.slot);
                 self.stats.completed += 1;
                 let queue_wait_s = (a.started_at - a.enqueued_at).as_secs_f64();
                 self.stats.queue_wait_sum_s += queue_wait_s;
@@ -338,6 +462,35 @@ impl<E: DecodeEngine> Scheduler<E> {
                 self.active[idx].pending_logits = lg;
             }
         }
+        // chunk continuation: sequences still feeding their prompt advance
+        // up to `prefill_chunk - 1` more tokens through decode rounds over
+        // just those slots (the main decode above fed the first), so a
+        // long prompt costs ~ceil(tail / chunk) ticks while co-scheduled
+        // generation keeps its one-token-per-tick cadence.
+        for _ in 1..self.prefill_chunk.max(1) {
+            let mut rows: Vec<(usize, i32, i32)> = Vec::new();
+            let mut idxs: Vec<usize> = Vec::new();
+            for (i, a) in self.active.iter_mut().enumerate() {
+                if a.prompt_fed < a.req.prompt.len() {
+                    a.pos += 1;
+                    rows.push((a.slot, a.pos as i32,
+                               a.req.prompt[a.prompt_fed]));
+                    a.prompt_fed += 1;
+                    idxs.push(i);
+                }
+            }
+            if rows.is_empty() {
+                break;
+            }
+            self.stats.decode_calls += 1;
+            self.stats.prefill_chunks += 1;
+            self.stats.occupancy_sum +=
+                rows.len() as f64 / self.engine.slot_count() as f64;
+            let logits = self.engine.decode(&rows)?;
+            for (&idx, lg) in idxs.iter().zip(logits) {
+                self.active[idx].pending_logits = lg;
+            }
+        }
         self.stats.decode_steps += 1;
         Ok(finished)
     }
@@ -357,6 +510,7 @@ impl<E: DecodeEngine> Scheduler<E> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::kv::{KvConfig, KvLayout};
     use super::super::mock::MockEngine;
     use super::*;
 
@@ -484,6 +638,161 @@ mod tests {
         assert_eq!(sched.stats.cancelled, 2);
         assert_eq!(sched.stats.completed + sched.stats.cancelled,
                    sched.stats.submitted);
+    }
+
+    /// Chunked prefill is invisible in the outputs: every chunk setting
+    /// (off, tiny, one-token) yields bit-identical token streams and
+    /// logprobs, greedy and sampled, with and without prefix sharing —
+    /// only the call pattern (prefill coverage + chunk-feed decodes)
+    /// changes.
+    #[test]
+    fn chunked_prefill_matches_whole_prompt() {
+        let run = |chunk: usize, share: bool, temp: f32| {
+            let mut eng = MockEngine::new(3, 8, MAX_SEQ, EOS);
+            let mut sched = Scheduler::new(&mut eng, MAX_SEQ, EOS);
+            sched.share_prefix = share;
+            sched.prefill_chunk = chunk;
+            for id in 0..5u64 {
+                let mut r = req(id, 4 + (id as usize % 7), 6);
+                r.temperature = temp;
+                if id >= 3 {
+                    r.prompt = Arc::new(vec![9, 8, 7, 6, 5, 4, 3, 2, 1]);
+                }
+                sched.submit(r);
+            }
+            let mut results = sched.run_to_completion().unwrap();
+            let chunks = sched.stats.prefill_chunks;
+            results.sort_by_key(|r| r.id);
+            let key: Vec<(u64, Vec<i32>, Vec<u32>)> = results
+                .iter()
+                .map(|r| (r.id, r.generated.clone(),
+                          r.logprobs.iter().map(|l| l.to_bits()).collect()))
+                .collect();
+            (key, chunks)
+        };
+        for share in [false, true] {
+            for temp in [0.0f32, 0.9] {
+                let (whole, chunks0) = run(0, share, temp);
+                assert_eq!(chunks0, 0, "chunk counter must stay 0 when off");
+                for chunk in [1usize, 3, 64] {
+                    let (chunked, chunks) = run(chunk, share, temp);
+                    assert_eq!(chunked, whole,
+                               "chunk={chunk} share={share} temp={temp} \
+                                diverged from whole-prompt prefill");
+                    if chunk < 9 {
+                        assert!(chunks > 0,
+                                "chunking engaged but counted no chunks");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Acceptance: at equal page budget, an admission-blocked long-prompt
+    /// workload runs strictly more concurrent requests under paged KV
+    /// than under dense — dense reserves `max_seq` positions per
+    /// sequence, paged only the covered pages.
+    #[test]
+    fn paged_admits_more_than_dense_at_equal_memory() {
+        // max_seq 16, page 4 -> dense reservation = 4 pages/seq;
+        // budget 8 pages -> dense caps at 2 concurrent.  Prompts cover 1
+        // page and generate few tokens, so paged packs ~8.
+        let run = |layout: KvLayout| {
+            let mut eng = MockEngine::new(8, 8, MAX_SEQ, 127 /* no eos */);
+            let mut sched = Scheduler::new(&mut eng, MAX_SEQ, 127);
+            sched.set_kv(KvConfig {
+                layout,
+                page_size: 4,
+                budget_pages: Some(8),
+            });
+            for id in 0..8u64 {
+                sched.submit(req(id, 4, 2));
+            }
+            let mut peak = 0usize;
+            let mut results = Vec::new();
+            while sched.pending() > 0 {
+                results.extend(sched.tick().unwrap());
+                peak = peak.max(sched.active_count());
+            }
+            assert_eq!(results.len(), 8, "every request still completes");
+            (peak, sched.take_stats())
+        };
+        let (dense_peak, dense_st) = run(KvLayout::Dense);
+        let (paged_peak, paged_st) = run(KvLayout::Paged);
+        assert_eq!(dense_peak, 2, "dense: 8-page budget / 4-page seqs");
+        assert!(paged_peak > dense_peak,
+                "paged ({paged_peak}) must beat dense ({dense_peak}) at \
+                 equal memory");
+        // both drain leak-free
+        for st in [&dense_st, &paged_st] {
+            assert_eq!(st.kv_pages_freed, st.kv_pages_allocated,
+                       "pages leaked at drain");
+            assert_eq!(st.kv_pages_active, 0);
+        }
+        // the memory-per-concurrency claim: dense would need
+        // peak * full-reservation pages to run what paged ran
+        let dense_equiv = paged_peak * (MAX_SEQ / 4);
+        assert!(paged_st.kv_pages_high_water < dense_equiv,
+                "paged peak footprint {} not below the {} pages dense \
+                 needs for the same concurrency",
+                paged_st.kv_pages_high_water, dense_equiv);
+    }
+
+    /// Acceptance: cancelling part of a prefix-shared group mid-flight
+    /// (online pruning) returns every non-shared page to the free list
+    /// immediately, and the whole ledger drains leak-free.
+    #[test]
+    fn pruned_group_returns_pages_to_free_list() {
+        let mut eng = MockEngine::new(4, 8, MAX_SEQ, 127 /* no eos */);
+        {
+            let mut sched = Scheduler::new(&mut eng, MAX_SEQ, 127);
+            sched.set_kv(KvConfig {
+                layout: KvLayout::Paged,
+                page_size: 4,
+                budget_pages: Some(16),
+            });
+            for id in 0..4u64 {
+                let mut r = req(0, 6, 8);
+                r.id = id; // one group: identical prompts fork-share
+                sched.submit(r);
+            }
+            // a few ticks so every member CoWs private pages
+            for _ in 0..3 {
+                sched.tick().unwrap();
+            }
+            let before = sched.engine.pager().peek_stats();
+            sched.cancel(1).unwrap();
+            sched.cancel(2).unwrap();
+            let after = sched.engine.pager().peek_stats();
+            assert!(after.freed > before.freed,
+                    "pruning must reclaim pages, not just compute");
+            assert!(after.active < before.active);
+            let _ = sched.run_to_completion().unwrap();
+            let st = sched.take_stats();
+            assert!(st.kv_pages_shared > 0, "group never shared pages");
+            assert!(st.kv_pages_cow > 0, "members never CoW'd");
+        }
+        assert!(eng.pager().drained(),
+                "pages leaked after prune + drain");
+        assert!(eng.pager().check_invariants());
+    }
+
+    /// With the default (dense, unbudgeted) config the page ledger still
+    /// books and drains — the seed-identical path keeps leak accounting.
+    #[test]
+    fn default_layout_ledger_balances() {
+        let mut eng = MockEngine::new(3, 8, MAX_SEQ, EOS);
+        {
+            let mut sched = Scheduler::new(&mut eng, MAX_SEQ, EOS);
+            for id in 0..6u64 {
+                sched.submit(req(id, 3, 5));
+            }
+            let _ = sched.run_to_completion().unwrap();
+            let st = sched.take_stats();
+            assert!(st.kv_pages_allocated > 0);
+            assert_eq!(st.kv_pages_freed, st.kv_pages_allocated);
+        }
+        assert!(eng.pager().drained());
     }
 
     /// More requests than slots: all complete exactly once, slots recycle.

@@ -74,6 +74,7 @@ use anyhow::{anyhow, Result};
 use crate::util::rng::member_seed;
 
 use super::engine::DecodeEngine;
+use super::kv::KvConfig;
 use super::request::{FinishReason, RolloutRequest, RolloutResult,
                      SchedulerStats};
 use super::scheduler::Scheduler;
@@ -237,7 +238,16 @@ enum Command<W> {
     Submit(Vec<RolloutRequest>),
     Cancel(u64),
     SwapWeights(W, WeightEpoch),
-    Configure { min_prefill_batch: usize, share_prefix: bool },
+    Configure {
+        min_prefill_batch: usize,
+        share_prefix: bool,
+        prefill_chunk: usize,
+    },
+    /// Separate from `Configure` on purpose: applying a [`KvConfig`]
+    /// rebuilds the engine's page ledger (tables dropped, counters reset),
+    /// so it must fire only when the caller actually changes KV settings —
+    /// never as a side effect of resending the other knobs.
+    ConfigureKv(KvConfig),
     TakeStats,
     AbortAll,
     Shutdown,
@@ -320,9 +330,17 @@ fn worker_loop<E: DecodeEngine>(idx: usize, factory: EngineFactory<E>,
                 Command::SwapWeights(w, epoch) => {
                     sched.swap_weights(w, epoch.0);
                 }
-                Command::Configure { min_prefill_batch, share_prefix } => {
+                Command::Configure {
+                    min_prefill_batch,
+                    share_prefix,
+                    prefill_chunk,
+                } => {
                     sched.min_prefill_batch = min_prefill_batch.max(1);
                     sched.share_prefix = share_prefix;
+                    sched.prefill_chunk = prefill_chunk;
+                }
+                Command::ConfigureKv(cfg) => {
+                    sched.set_kv(cfg);
                 }
                 Command::TakeStats => {
                     let st = sched.take_stats();
@@ -385,6 +403,7 @@ pub struct RolloutService<E: DecodeEngine> {
     /// absolute values, so each setter must know the other's current state
     cfg_min_prefill: usize,
     cfg_share_prefix: bool,
+    cfg_prefill_chunk: usize,
     pub prune: PrunePolicy,
     /// service-loop wall time, merged into the drained stats
     wall_s: f64,
@@ -418,6 +437,7 @@ impl<E: DecodeEngine> RolloutService<E> {
             max_seq,
             cfg_min_prefill: 1,
             cfg_share_prefix: true,
+            cfg_prefill_chunk: 0,
             prune: PrunePolicy::off(),
             wall_s: 0.0,
         }
@@ -446,16 +466,45 @@ impl<E: DecodeEngine> RolloutService<E> {
 
     /// Apply the dynamic-batching admission floor to every engine queue.
     pub fn set_min_prefill_batch(&mut self, n: usize) {
-        self.configure(n.max(1), None);
+        self.configure(n.max(1), None, None);
     }
 
     /// Toggle group-shared prefix prefill (on by default; off reproduces
     /// the per-request PR-1 prefill for baselines).
     pub fn set_share_prefix(&mut self, on: bool) {
-        self.configure(0, Some(on));
+        self.configure(0, Some(on), None);
     }
 
-    fn configure(&mut self, min_prefill_batch: usize, share: Option<bool>) {
+    /// Set the chunked-prefill unit on every engine queue: prompts longer
+    /// than `n` positions prefill in `n`-sized chunks interleaved with
+    /// decode ticks (0 = whole-prompt prefill, the default).  Outputs are
+    /// bit-identical either way; chunking only bounds per-call prefill
+    /// latency so decode ticks keep flowing under long prompts.
+    pub fn set_prefill_chunk(&mut self, n: usize) {
+        self.configure(0, None, Some(n));
+    }
+
+    /// Apply a KV layout/page-size/budget to every engine replica.
+    /// Rebuilds each engine's page ledger from scratch (tables dropped,
+    /// counters reset), so call it before submitting work — mid-flight the
+    /// pager self-heals on the next admission but the page stats restart.
+    pub fn set_kv(&mut self, cfg: KvConfig) {
+        match &mut self.backend {
+            Backend::Inline(scheds) => {
+                for s in scheds.iter_mut() {
+                    s.set_kv(cfg);
+                }
+            }
+            Backend::Threaded { workers, .. } => {
+                for w in workers.iter() {
+                    let _ = w.cmd.send(Command::ConfigureKv(cfg));
+                }
+            }
+        }
+    }
+
+    fn configure(&mut self, min_prefill_batch: usize, share: Option<bool>,
+                 chunk: Option<usize>) {
         match &mut self.backend {
             Backend::Inline(scheds) => {
                 for s in scheds.iter_mut() {
@@ -465,10 +514,13 @@ impl<E: DecodeEngine> RolloutService<E> {
                     if let Some(on) = share {
                         s.share_prefix = on;
                     }
+                    if let Some(c) = chunk {
+                        s.prefill_chunk = c;
+                    }
                 }
             }
             Backend::Threaded { workers, .. } => {
-                // workers need absolute values: resend both knobs
+                // workers need absolute values: resend every knob
                 for w in workers.iter() {
                     let _ = w.cmd.send(Command::Configure {
                         min_prefill_batch: if min_prefill_batch > 0 {
@@ -477,6 +529,7 @@ impl<E: DecodeEngine> RolloutService<E> {
                             self.cfg_min_prefill
                         },
                         share_prefix: share.unwrap_or(self.cfg_share_prefix),
+                        prefill_chunk: chunk.unwrap_or(self.cfg_prefill_chunk),
                     });
                 }
             }
@@ -486,6 +539,9 @@ impl<E: DecodeEngine> RolloutService<E> {
         }
         if let Some(on) = share {
             self.cfg_share_prefix = on;
+        }
+        if let Some(c) = chunk {
+            self.cfg_prefill_chunk = c;
         }
     }
 
@@ -1023,6 +1079,7 @@ impl<E: DecodeEngine> Drop for RolloutService<E> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::kv::{KvConfig, KvLayout};
     use super::super::mock::MockEngine;
     use super::*;
 
@@ -1398,6 +1455,49 @@ mod tests {
         assert!(results.iter().all(|r| r.complete()));
         let st = svc.take_stats();
         assert_eq!(st.completed, st.submitted);
+    }
+
+    /// KV paging and chunked prefill are serving-time memory/latency
+    /// knobs, never semantics: the same workload produces bit-identical
+    /// members under the default dense layout and under paged KV with a
+    /// small page size, a tight page budget and chunked prefill — on both
+    /// backends.  The dense run is the parity oracle.
+    #[test]
+    fn paged_chunked_matches_dense_bitwise() {
+        let run = |paged: bool, threaded: bool| {
+            let mut svc = if threaded {
+                threaded_service(2, 4)
+            } else {
+                service(2, 4)
+            };
+            if paged {
+                svc.set_kv(KvConfig {
+                    layout: KvLayout::Paged,
+                    page_size: 4,
+                    budget_pages: Some(8), // tight: forces admission gating
+                });
+                svc.set_prefill_chunk(2); // prompts are 4 long: 2 chunks
+            }
+            for gid in 0..6 {
+                let temp = if gid % 2 == 0 { 0.0 } else { 0.8 };
+                svc.submit_group(spec(gid, gid as i32, 3, temp));
+            }
+            let results = svc.run(|_, res| res.generated.len() as f32);
+            let fp = fingerprint(&results.unwrap());
+            (fp, svc.take_stats())
+        };
+        let (dense, dense_st) = run(false, false);
+        let (paged, paged_st) = run(true, false);
+        let (paged_thr, _) = run(true, true);
+        assert_eq!(dense, paged,
+                   "paged KV + chunked prefill changed rollout outputs");
+        assert_eq!(dense, paged_thr,
+                   "threaded paged run diverged from the dense oracle");
+        assert_eq!(dense_st.prefill_chunks, 0, "dense path must not chunk");
+        assert!(paged_st.prefill_chunks > 0, "chunking never engaged");
+        assert!(paged_st.kv_pages_shared > 0, "siblings never aliased");
+        assert_eq!(paged_st.kv_pages_freed, paged_st.kv_pages_allocated,
+                   "drained paged run leaked pages");
     }
 
     /// A factory error at spawn time fails construction fast (no orphaned

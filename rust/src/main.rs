@@ -16,8 +16,8 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use qurl::config;
-use qurl::coordinator::{EngineFactory, GroupSpec, RolloutService, StepEngine,
-                        StripePolicy};
+use qurl::coordinator::{EngineFactory, GroupSpec, KvConfig, KvLayout,
+                        RolloutService, StepEngine, StripePolicy};
 use qurl::metrics::Recorder;
 use qurl::perfmodel::{self, DecodeConfig, Precision};
 use qurl::quant::analysis;
@@ -154,6 +154,17 @@ fn train_cli() -> Cli {
         .opt("min-prefill-batch", "0",
              "scheduler admission floor: wait until this many requests can \
               prefill together (0 = preset)")
+        .opt("kv", "",
+             "KV bookkeeping layout on the scheduler path: dense (full \
+              sequence reserved per slot) or paged (fixed-size pages, \
+              prefix aliasing + copy-on-write, demand-based admission; \
+              outputs bit-identical) (dense|paged; default preset)")
+        .opt("kv-page-size", "0",
+             "cache positions per KV page under --kv paged (0 = preset)")
+        .opt("prefill-chunk", "0",
+             "chunked prefill: prompts longer than this prefill in chunks \
+              interleaved with decode ticks (0 = preset, preset 0 = whole-\
+              prompt prefill)")
         .opt("prune", "",
              "in-flight rollout pruning under DAPO dynamic sampling on the \
               scheduler path (on|off; default preset)")
@@ -206,6 +217,16 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     if args.usize("min-prefill-batch") > 0 {
         cfg.min_prefill_batch = args.usize("min-prefill-batch");
+    }
+    if !args.str("kv").is_empty() {
+        cfg.kv_layout = KvLayout::parse(&args.str("kv"))
+            .context("bad --kv (dense|paged)")?;
+    }
+    if args.usize("kv-page-size") > 0 {
+        cfg.kv_page_size = args.usize("kv-page-size");
+    }
+    if args.usize("prefill-chunk") > 0 {
+        cfg.prefill_chunk = args.usize("prefill-chunk");
     }
     match args.str("prune").as_str() {
         "" => {}
@@ -311,6 +332,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("stripe", "rr", "group placement: rr|least-loaded")
         .opt("max-new", "48", "max generated tokens per request")
         .opt("min-batch", "8", "dynamic-batching admission threshold")
+        .opt("kv", "dense", "KV bookkeeping layout: dense|paged")
+        .opt("kv-page-size", "16", "cache positions per KV page")
+        .opt("kv-budget", "0",
+             "page budget gating admission, per engine (0 = derived from \
+              slots x max_seq; only binds under --kv paged vs the dense \
+              full-sequence reservation)")
+        .opt("prefill-chunk", "0",
+             "prefill prompts in chunks of this many positions interleaved \
+              with decode ticks (0 = whole-prompt prefill)")
         .opt("seed", "0", "seed");
     let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
     let rt = Arc::new(Runtime::open(&artifacts_dir(&args))?);
@@ -340,6 +370,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     svc.stripe = stripe;
     svc.set_min_prefill_batch(args.usize("min-batch"));
+    let kv_layout = KvLayout::parse(&args.str("kv"))
+        .context("bad --kv (dense|paged)")?;
+    svc.set_kv(KvConfig {
+        layout: kv_layout,
+        page_size: args.usize("kv-page-size").max(1),
+        budget_pages: match args.usize("kv-budget") {
+            0 => None,
+            b => Some(b),
+        },
+    });
+    svc.set_prefill_chunk(args.usize("prefill-chunk"));
     let tk = Tokenizer::new();
     let suite = Suite::by_name("deepscaler").unwrap();
     let mut sampler = suite.train_sampler(args.u64("seed"));
@@ -368,6 +409,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              st.mean_occupancy(), st.prefill_calls,
              st.mean_prefill_batch(), st.forked, st.decode_calls,
              st.bytes_h2d as f64 / 1e6, st.bytes_d2h as f64 / 1e6);
+    println!("  kv ({}, page {}): {} pages allocated / {} freed, {} \
+              aliased, {} CoW-copied, high water {} pages, {} chunked \
+              prefill rounds",
+             kv_layout.name(), args.usize("kv-page-size").max(1),
+             st.kv_pages_allocated, st.kv_pages_freed, st.kv_pages_shared,
+             st.kv_pages_cow, st.kv_pages_high_water, st.prefill_chunks);
     if n_engines > 1 {
         for (i, es) in svc.last_engine_stats().iter().enumerate() {
             println!("  engine {i}: {} decode calls, {} tokens, occupancy \

@@ -34,14 +34,34 @@
 //! |                           | scales with admission rate, and only the    |
 //! |                           | admission-free steady state collapses to    |
 //! |                           | control-tensor size (integration-tested)    |
+//! | `sched_prefill_chunks`    | chunked-prefill work units: truncated       |
+//! |                           | prefill calls + chunk-continuation decode   |
+//! |                           | rounds (0 with `prefill_chunk` off)         |
+//! | `sched_kv_pages_allocated`| KV pages newly acquired this step           |
+//! | `sched_kv_pages_freed`    | KV pages returned to the free list; equals  |
+//! |                           | `allocated` on every drained step (no leaks)|
+//! | `sched_kv_pages_shared`   | prompt pages forked siblings aliased        |
+//! |                           | instead of allocating (prefix sharing win)  |
+//! | `sched_kv_pages_cow`      | copy-on-write page copies (first write into |
+//! |                           | a shared page)                              |
+//! | `sched_kv_pages_active`   | live KV pages at the drain — a *level* like |
+//! |                           | `sched_weight_epoch`: max over replicas,    |
+//! |                           | preserved across drains                     |
+//! | `sched_kv_pages_high_water`| lifetime peak of active pages (page-memory |
+//! |                           | pressure; above the configured budget =     |
+//! |                           | admission overdraw from in-flight growth)   |
 //!
 //! With more than one engine replica the same row carries a per-replica
 //! breakdown so striping imbalance is visible at a glance:
 //! `sched_e{i}_occupancy`, `sched_e{i}_decode_calls`,
-//! `sched_e{i}_generated_tokens`, `sched_e{i}_pruned_groups` and
-//! `sched_e{i}_weight_epoch` for engine index `i` (0-based, submission
-//! placement order — `rl::trainer` writes them, `coordinator::service`
-//! produces the per-engine stats).
+//! `sched_e{i}_generated_tokens`, `sched_e{i}_pruned_groups`,
+//! `sched_e{i}_weight_epoch`, `sched_e{i}_kv_pages_active` and
+//! `sched_e{i}_kv_pages_high_water` for engine index `i` (0-based,
+//! submission placement order — `rl::trainer` writes them,
+//! `coordinator::service` produces the per-engine stats).  The per-replica
+//! page levels are the ground truth the merged `sched_kv_pages_active`
+//! max-reduces; per-replica high-water exposes which replica is memory-
+//! bound under uneven striping.
 
 use std::collections::BTreeMap;
 use std::io::Write;

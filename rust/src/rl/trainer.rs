@@ -10,9 +10,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::{EngineFactory, GroupSpec, PrunePolicy,
-                         RolloutService, SchedulerStats, StepEngine,
-                         StripePolicy};
+use crate::coordinator::{EngineFactory, GroupSpec, KvConfig, KvLayout,
+                         PrunePolicy, RolloutService, SchedulerStats,
+                         StepEngine, StripePolicy};
 use crate::coordinator::request::RolloutResult;
 use crate::coordinator::service::{GroupMember, GroupResult};
 use crate::metrics::{Recorder, Row};
@@ -182,6 +182,18 @@ pub struct TrainerConfig {
     /// scheduler admission floor: wait until this many requests can
     /// prefill together (1 = admit eagerly)
     pub min_prefill_batch: usize,
+    /// KV bookkeeping layout on the scheduler path: `Dense` reserves a
+    /// full `max_seq` sequence per admitted slot (the oracle), `Paged`
+    /// tracks fixed-size pages with prefix aliasing + copy-on-write and
+    /// admits against actual page demand — outputs are bit-identical
+    /// either way
+    pub kv_layout: KvLayout,
+    /// cache positions per KV page (paged layout granularity; see
+    /// coordinator/kv.rs for the waste/sharing trade-off)
+    pub kv_page_size: usize,
+    /// chunked prefill: prompts longer than this prefill in chunks
+    /// interleaved with decode ticks (0 = whole-prompt prefill)
+    pub prefill_chunk: usize,
     /// re-quantize engine weights every k steps (1 = every step, paper setup)
     pub requantize_every: usize,
     /// compute Fig. 4/9 weight-change analysis every k steps (0 = never)
@@ -217,6 +229,9 @@ impl Default for TrainerConfig {
             rollout_exec: RolloutExec::Inline,
             rollout_stripe: StripePolicy::RoundRobin,
             min_prefill_batch: 1,
+            kv_layout: KvLayout::Dense,
+            kv_page_size: 16,
+            prefill_chunk: 0,
             requantize_every: 1,
             analyze_every: 0,
         }
@@ -385,6 +400,12 @@ impl Trainer {
         };
         svc.stripe = self.cfg.rollout_stripe;
         svc.set_min_prefill_batch(self.cfg.min_prefill_batch);
+        svc.set_kv(KvConfig {
+            layout: self.cfg.kv_layout,
+            page_size: self.cfg.kv_page_size.max(1),
+            budget_pages: None, // derived per engine from slots × max_seq
+        });
+        svc.set_prefill_chunk(self.cfg.prefill_chunk);
         self.service = Some(svc);
         self.service_builds += 1;
         Ok(())
@@ -847,12 +868,19 @@ impl Trainer {
                 // show up here before they show up in wall-clock.
                 .set("sched_bytes_h2d", st.bytes_h2d as f64)
                 .set("sched_bytes_d2h", st.bytes_d2h as f64)
-                .set("sched_h2d_per_decode",
-                     if st.decode_calls > 0 {
-                         st.bytes_h2d as f64 / st.decode_calls as f64
-                     } else {
-                         0.0
-                     })
+                .set("sched_h2d_per_decode", st.h2d_per_decode())
+                .set("sched_prefill_chunks", st.prefill_chunks as f64)
+                // the page ledger: allocation/free deltas plus the live
+                // and high-water levels — paged-vs-dense memory pressure
+                // at a glance, sharing/CoW volume for the prefix-aliasing
+                // win.  freed == allocated on every drained step.
+                .set("sched_kv_pages_allocated", st.kv_pages_allocated as f64)
+                .set("sched_kv_pages_freed", st.kv_pages_freed as f64)
+                .set("sched_kv_pages_shared", st.kv_pages_shared as f64)
+                .set("sched_kv_pages_cow", st.kv_pages_cow as f64)
+                .set("sched_kv_pages_active", st.kv_pages_active as f64)
+                .set("sched_kv_pages_high_water",
+                     st.kv_pages_high_water as f64)
                 .tag("phase", "rollout");
             let per = std::mem::take(&mut self.sched_engine_stats);
             if per.len() > 1 {
@@ -867,7 +895,11 @@ impl Trainer {
                         .set(&format!("sched_e{i}_pruned_groups"),
                              es.pruned_groups as f64)
                         .set(&format!("sched_e{i}_weight_epoch"),
-                             es.weight_epoch as f64);
+                             es.weight_epoch as f64)
+                        .set(&format!("sched_e{i}_kv_pages_active"),
+                             es.kv_pages_active as f64)
+                        .set(&format!("sched_e{i}_kv_pages_high_water"),
+                             es.kv_pages_high_water as f64);
                 }
             }
             self.rec.log(row);

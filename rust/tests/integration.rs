@@ -6,8 +6,9 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use qurl::coordinator::{DecodeEngine, GroupSpec, PrunePolicy, RolloutRequest,
-                        RolloutService, Scheduler, StepEngine, StripePolicy};
+use qurl::coordinator::{DecodeEngine, GroupSpec, KvConfig, KvLayout,
+                        PrunePolicy, RolloutRequest, RolloutService,
+                        Scheduler, StepEngine, StripePolicy};
 use qurl::metrics::Recorder;
 use qurl::quant::{analysis, fp8 as qfp8, int8 as qint8};
 use qurl::rl::{Objective, ObjectiveKind, RolloutExec, RolloutPath, Trainer,
@@ -365,6 +366,78 @@ fn resident_inputs_match_per_call_across_weight_swap() {
     };
     assert_eq!(run(true), run(false),
                "resident-input path diverged from per-call literals");
+}
+
+/// Paged KV on the real artifacts: the page table is pure logical
+/// bookkeeping over the dense physical cache, so `--kv paged` with
+/// chunked prefill must reproduce the dense scheduler outputs
+/// bit-for-bit — across a mid-run `swap_weights`, for greedy AND sampled
+/// requests — while the page ledger drains leak-free.  Budget is
+/// unbounded and the chunk setting identical in both runs so admission
+/// timing (hence where the swap lands) cannot differ.
+#[test]
+fn paged_kv_matches_dense_across_weight_swap_artifacts() {
+    let rt = runtime();
+    let man = rt.manifest().clone();
+    let w0 = rt
+        .engine_weights(QuantMode::Int8, &rt.init_params(53).unwrap())
+        .unwrap();
+    let w1 = rt
+        .engine_weights(QuantMode::Int8, &rt.init_params(54).unwrap())
+        .unwrap();
+    let (tokens, _, plens) = test_prompts(&rt, 4);
+    let s = man.max_seq;
+    let run = |layout: KvLayout| {
+        let mut eng = StepEngine::new(&rt, w0.clone());
+        let out;
+        {
+            let mut sched = Scheduler::new(&mut eng, man.max_seq,
+                                           man.eos_id);
+            sched.set_kv(KvConfig {
+                layout,
+                page_size: 8,
+                budget_pages: None,
+            });
+            sched.prefill_chunk = 4; // same in both runs: same timing
+            for (r, &plen) in plens.iter().enumerate() {
+                sched.submit(RolloutRequest {
+                    id: r as u64,
+                    prompt: Arc::new(tokens[r * s..r * s + plen].to_vec()),
+                    max_new: man.max_new.min(12),
+                    temperature: if r % 2 == 0 { 0.0 } else { 1.0 },
+                    top_p: 0.9,
+                    seed: 91 ^ r as u64,
+                });
+            }
+            for _ in 0..3 {
+                sched.tick().unwrap();
+            }
+            sched.swap_weights(w1.clone(), 1);
+            let mut results = sched.run_to_completion().unwrap();
+            results.sort_by_key(|r| r.id);
+            assert_eq!(results.len(), plens.len());
+            let st = sched.take_stats();
+            assert_eq!(st.kv_pages_freed, st.kv_pages_allocated,
+                       "{layout:?}: page ledger leaked");
+            assert_eq!(st.kv_pages_active, 0);
+            if layout == KvLayout::Paged {
+                assert!(st.prefill_chunks > 0,
+                        "prefill_chunk=4 never chunked");
+                assert!(st.kv_pages_allocated > 0);
+            }
+            out = results
+                .into_iter()
+                .map(|r| (r.id, r.generated,
+                          r.logprobs.iter().map(|l| l.to_bits())
+                              .collect::<Vec<_>>()))
+                .collect::<Vec<_>>();
+        }
+        assert!(eng.pager().drained(), "{layout:?}: pager not drained");
+        assert!(eng.pager().check_invariants());
+        out
+    };
+    assert_eq!(run(KvLayout::Dense), run(KvLayout::Paged),
+               "paged KV diverged from the dense oracle");
 }
 
 /// The acceptance criterion on weight traffic: with resident inputs,

@@ -3,7 +3,8 @@
 
 use std::sync::Arc;
 
-use qurl::coordinator::{EngineFactory, FinishReason, GroupSpec, MockEngine,
+use qurl::coordinator::{EngineFactory, FinishReason, GroupSpec, KvConfig,
+                        KvLayout, KvPager, MockEngine, PageAllocator,
                         PrunePolicy, RolloutRequest, RolloutService,
                         Scheduler, SlotMap, StripePolicy};
 use qurl::rl::advantage;
@@ -166,6 +167,348 @@ fn prop_scheduler_cancellation_invariants() {
         all.sort_unstable();
         all.dedup();
         all.len() == n_req // no duplicates either way
+    });
+}
+
+/// Page-allocator ledger over random acquire/alias/release/write traces:
+/// the free list always partitions against the live refcounts, a write
+/// into a shared page must go through CoW (and the CoW result is always
+/// private), and after dropping every held reference the allocator drains
+/// with `freed == allocated` and zero active pages.
+#[test]
+fn prop_page_allocator_ledger_balances() {
+    // (budget, ops) — op % 4: 0 acquire, 1 alias a held ref, 2 drop a
+    // held ref, 3 write into a held ref (CoW first iff shared)
+    let g = Pair(UsizeIn(0, 12), VecOf(UsizeIn(0, 255), 0, 160));
+    assert_prop("page-allocator-ledger", 0x9A6E, 250, &g, |(budget, ops)| {
+        let mut pa = PageAllocator::new(*budget);
+        let mut held: Vec<u32> = Vec::new();
+        for &op in ops {
+            match op % 4 {
+                0 => held.push(pa.acquire_grow()),
+                1 if !held.is_empty() => {
+                    let p = held[(op / 4) % held.len()];
+                    pa.alias(p);
+                    held.push(p);
+                }
+                2 if !held.is_empty() => {
+                    let p = held.swap_remove((op / 4) % held.len());
+                    pa.release(p);
+                }
+                3 if !held.is_empty() => {
+                    let i = (op / 4) % held.len();
+                    let p = held[i];
+                    if pa.is_shared(p) {
+                        // refcounted pages are never written in place:
+                        // the write path detaches a private copy first
+                        held[i] = pa.cow(p);
+                        if pa.is_shared(held[i]) {
+                            return false; // CoW result must be private
+                        }
+                    }
+                }
+                _ => {}
+            }
+            if !pa.check_invariants() {
+                return false;
+            }
+            if pa.active_pages() > pa.high_water() {
+                return false;
+            }
+        }
+        for p in held {
+            pa.release(p);
+        }
+        let st = pa.peek_stats();
+        pa.drained()
+            && pa.check_invariants()
+            && st.freed == st.allocated
+            && st.active == 0
+            && st.high_water as u64 <= st.allocated
+    });
+}
+
+/// Pager-level CoW proof: after forking a prefilled prompt into sibling
+/// slots, every page the pager hands decode to write (`on_decode`'s
+/// return) has refcount exactly 1 — shared prompt pages are detached, not
+/// mutated — and releasing all slots (twice: release is idempotent)
+/// drains the ledger with the alias savings on record.
+#[test]
+fn prop_pager_cow_never_writes_shared_pages() {
+    let max_seq = 32usize;
+    // ((page_size, prompt_len), [(fork_bit, decode_steps); n])
+    let g = Pair(Pair(UsizeIn(1, 9), UsizeIn(1, 12)),
+                 VecOf(Pair(UsizeIn(0, 1), UsizeIn(0, 10)), 1, 6));
+    assert_prop("pager-cow-private", 0xC0B7, 250, &g,
+                |((page, plen), members)| {
+        let page = (*page).max(1);
+        let plen = (*plen).clamp(1, max_seq / 2);
+        let slots = members.len() + 1;
+        let mut pg = KvPager::new(slots, max_seq, KvConfig {
+            layout: KvLayout::Paged,
+            page_size: page,
+            budget_pages: None,
+        });
+        pg.on_prefill(0, plen);
+        for (i, &(forked, _)) in members.iter().enumerate() {
+            if forked == 1 {
+                pg.on_fork(0, &[i + 1], plen);
+            } else {
+                pg.on_prefill(i + 1, plen);
+            }
+        }
+        if !pg.check_invariants() {
+            return false;
+        }
+        // lockstep decode growth across members, like the scheduler drives
+        for step in 0..10usize {
+            let pos = plen + step;
+            if pos >= max_seq {
+                break;
+            }
+            for (i, &(_, steps)) in members.iter().enumerate() {
+                if step < steps {
+                    match pg.on_decode(i + 1, pos) {
+                        Some(p) => {
+                            if pg.allocator().ref_count(p) != 1 {
+                                return false; // about to write a shared page
+                            }
+                        }
+                        None => return false, // paged must name the page
+                    }
+                }
+            }
+            if !pg.check_invariants() {
+                return false;
+            }
+        }
+        for s in 0..slots {
+            pg.on_release(s);
+        }
+        for s in 0..slots {
+            pg.on_release(s); // idempotent: double-release is a no-op
+        }
+        let st = pg.peek_stats();
+        if members.iter().any(|&(f, _)| f == 1) && st.shared == 0 {
+            return false; // forks must register alias savings
+        }
+        pg.drained() && pg.check_invariants()
+    });
+}
+
+/// Paged KV under random cancel/tick interleavings, page sizes, budgets
+/// and chunked prefill: identical prompts fork (alias) pages, cancels and
+/// the final drain return every non-shared page, and the engine-side
+/// pager ends leak-free — `freed == allocated`, zero active pages.
+#[test]
+fn prop_paged_scheduler_cancel_interleavings_leak_free() {
+    let max_seq = 16usize;
+    // (((slots, n_requests), (page_size, budget_sel)), [op; m])
+    let g = Pair(Pair(Pair(UsizeIn(1, 6), UsizeIn(1, 16)),
+                      Pair(UsizeIn(1, 6), UsizeIn(0, 2))),
+                 VecOf(UsizeIn(0, 63), 4, 70));
+    assert_prop("paged-cancel-leak-free", 0xFACE5, 120, &g,
+                |(((slots, n_req), (page, budget)), ops)| {
+        let slots = (*slots).max(1);
+        let n_req = (*n_req).max(1);
+        let page = (*page).max(1);
+        let mut eng = MockEngine::new(slots, 8, max_seq, 2);
+        {
+            let mut sched = Scheduler::new(&mut eng, max_seq, 2);
+            sched.set_kv(KvConfig {
+                layout: KvLayout::Paged,
+                page_size: page,
+                budget_pages: match *budget {
+                    0 => None,
+                    b => Some(b * slots * 2), // tight: admission gates bind
+                },
+            });
+            sched.prefill_chunk = page % 3; // mix whole and chunked prefill
+            let prompt = Arc::new(vec![3, 4, 5, 6]);
+            for i in 0..n_req {
+                sched.submit(RolloutRequest {
+                    id: i as u64,
+                    prompt: prompt.clone(), // identical: co-admissions fork
+                    max_new: 1 + i % 8,
+                    temperature: 0.0,
+                    top_p: 1.0,
+                    seed: i as u64,
+                });
+            }
+            for &op in ops {
+                if op % 2 == 0 {
+                    sched.tick().unwrap();
+                } else {
+                    let id = (op / 2) as u64 % n_req as u64;
+                    // double-cancel must be a no-op (no double-free)
+                    if sched.cancel(id).is_some()
+                        && sched.cancel(id).is_some()
+                    {
+                        return false;
+                    }
+                }
+            }
+            sched.run_to_completion().unwrap();
+            let st = sched.take_stats();
+            if st.completed + st.cancelled != st.submitted {
+                return false;
+            }
+            if st.kv_pages_freed != st.kv_pages_allocated {
+                return false; // leaked or double-freed pages
+            }
+            if st.kv_pages_active != 0 {
+                return false;
+            }
+        }
+        eng.pager().drained() && eng.pager().check_invariants()
+    });
+}
+
+/// Dense is the parity oracle for paged, across a mid-run weight swap:
+/// submit, tick a random number of times, hot-swap weights, drain — the
+/// paged run (same chunk setting, unbounded budget, so admission timing
+/// is identical) must be bit-identical to the dense run in tokens,
+/// logprob bits and finish reasons.
+#[test]
+fn prop_paged_matches_dense_across_mid_run_swap() {
+    let max_seq = 16usize;
+    // ((page_size, prefill_chunk), (ticks_before_swap, n_requests))
+    let g = Pair(Pair(UsizeIn(1, 6), UsizeIn(0, 3)),
+                 Pair(UsizeIn(0, 6), UsizeIn(1, 10)));
+    assert_prop("paged-swap-parity", 0x5AB9, 150, &g,
+                |((page, chunk), (ticks, n_req))| {
+        let n_req = (*n_req).max(1);
+        let run = |layout: KvLayout| {
+            let mut eng = MockEngine::new(3, 8, max_seq, 2);
+            let mut sched = Scheduler::new(&mut eng, max_seq, 2);
+            sched.set_kv(KvConfig {
+                layout,
+                page_size: (*page).max(1),
+                // unbounded: the page gate must not change admission
+                // timing, else the swap lands at different positions
+                budget_pages: None,
+            });
+            sched.prefill_chunk = *chunk; // same chunk in both runs
+            let prompt = Arc::new(vec![3, 4, 5, 6, 3]);
+            let mut out = Vec::new();
+            for i in 0..n_req {
+                sched.submit(RolloutRequest {
+                    id: i as u64,
+                    prompt: prompt.clone(),
+                    max_new: 2 + i % 7,
+                    temperature: if i % 2 == 0 { 0.0 } else { 0.9 },
+                    top_p: 1.0,
+                    seed: i as u64,
+                });
+            }
+            for _ in 0..*ticks {
+                out.extend(sched.tick().unwrap());
+            }
+            sched.swap_weights(0xFEED_C0DE, 1); // hot requant mid-flight
+            out.extend(sched.run_to_completion().unwrap());
+            out.sort_by_key(|r| r.id);
+            out.iter()
+                .map(|r| (r.id,
+                          r.generated.clone(),
+                          r.logprobs.iter().map(|l| l.to_bits())
+                              .collect::<Vec<u32>>(),
+                          r.finish))
+                .collect::<Vec<_>>()
+        };
+        run(KvLayout::Dense) == run(KvLayout::Paged)
+    });
+}
+
+/// Full-run paged/dense parity across execution backends and stripe
+/// policies: with a TIGHT page budget (admission timing differs from
+/// dense — that's allowed; completed outputs must not) plus chunked
+/// prefill, the paged inline and paged threaded services produce
+/// bit-identical rollouts to the dense inline oracle, and the paged
+/// ledger drains leak-free.
+#[test]
+fn prop_paged_matches_dense_across_backends_and_stripes() {
+    let max_seq = 16usize;
+    type Key = (Vec<i32>, Vec<u32>, FinishReason, Option<u32>);
+    // ((engines, slots), ((page_size, prefill_chunk), [(size, temp); n]))
+    let g = Pair(Pair(UsizeIn(1, 3), UsizeIn(1, 4)),
+                 Pair(Pair(UsizeIn(1, 6), UsizeIn(0, 3)),
+                      VecOf(Pair(UsizeIn(1, 4), UsizeIn(0, 1)), 1, 6)));
+    assert_prop("paged-dense-backend-parity", 0xBA6ED, 40, &g,
+                |((engines, slots), ((page, chunk), groups))| {
+        let n_eng = (*engines).max(1);
+        let slots = (*slots).max(1);
+        let paged_cfg = KvConfig {
+            layout: KvLayout::Paged,
+            page_size: (*page).max(1),
+            budget_pages: Some(4), // tight enough that the gate binds
+        };
+        let fingerprint = |svc: &mut RolloutService<MockEngine>|
+                          -> Vec<Key> {
+            for (gid, &(sz, temp)) in groups.iter().enumerate() {
+                svc.submit_group(GroupSpec {
+                    group_id: gid,
+                    prompt: vec![3 + (gid as i32 % 5); 2 + gid % 3],
+                    group_size: sz.max(1),
+                    max_new: 1 + gid % 9,
+                    temperature: temp as f32,
+                    top_p: 1.0,
+                    seed: 0xE1 ^ ((gid as u64) << 8),
+                });
+            }
+            let results = svc
+                .run(|gid, res| (gid % 2) as f32
+                     + (res.generated.len() % 3) as f32)
+                .unwrap();
+            results
+                .iter()
+                .flat_map(|gr| gr.members.iter().map(|m| {
+                    (m.result.generated.clone(),
+                     m.result.logprobs.iter().map(|l| l.to_bits())
+                         .collect::<Vec<u32>>(),
+                     m.result.finish,
+                     m.reward.map(|r| r.to_bits()))
+                }))
+                .collect()
+        };
+        let inline = |n: usize| -> RolloutService<MockEngine> {
+            let engs: Vec<MockEngine> = (0..n)
+                .map(|_| MockEngine::new(slots, 8, max_seq, 2))
+                .collect();
+            RolloutService::new(engs, max_seq, 2)
+        };
+        let threaded = |n: usize| -> RolloutService<MockEngine> {
+            let fs: Vec<EngineFactory<MockEngine>> = (0..n)
+                .map(|_| {
+                    Box::new(move || Ok(MockEngine::new(slots, 8, max_seq,
+                                                        2)))
+                        as EngineFactory<MockEngine>
+                })
+                .collect();
+            RolloutService::threaded(fs, max_seq, 2).unwrap()
+        };
+        for stripe in [StripePolicy::RoundRobin, StripePolicy::LeastLoaded] {
+            let mut dense = inline(n_eng);
+            dense.stripe = stripe; // dense oracle: default KvConfig
+            let fd = fingerprint(&mut dense);
+            let mut paged = inline(n_eng);
+            paged.stripe = stripe;
+            paged.set_kv(paged_cfg);
+            paged.set_prefill_chunk(*chunk);
+            let fp = fingerprint(&mut paged);
+            let mut pthr = threaded(n_eng);
+            pthr.stripe = stripe;
+            pthr.set_kv(paged_cfg);
+            pthr.set_prefill_chunk(*chunk);
+            let ft = fingerprint(&mut pthr);
+            if fd != fp || fd != ft {
+                return false; // page layout changed completed outputs
+            }
+            let st = paged.take_stats();
+            if st.kv_pages_freed != st.kv_pages_allocated {
+                return false; // gated admission leaked pages
+            }
+        }
+        true
     });
 }
 
