@@ -11,9 +11,11 @@
 use std::sync::Arc;
 
 use qurl::benchkit as bk;
-use qurl::coordinator::{pages_for, GroupSpec, KvConfig, KvLayout,
+use qurl::coordinator::{pages_for, FinishReason, GroupResult, GroupSpec,
+                        KvConfig, KvLayout, PlacementLog, PrunePolicy,
                         RolloutRequest, RolloutService, Scheduler,
-                        StepEngine};
+                        SchedulerStats, StealPolicy, StepEngine,
+                        StripePolicy};
 use qurl::perfmodel::{self, roofline, DecodeConfig, Precision};
 use qurl::runtime::QuantMode;
 use qurl::tasks::{encode_batch, Problem, Suite, Tokenizer};
@@ -225,7 +227,7 @@ fn main() -> anyhow::Result<()> {
         }
         let results = svc.run(|_, _| 0.0)?;
         assert_eq!(results.len(), n_groups, "service dropped groups");
-        let st = svc.take_stats();
+        let st = svc.take_stats()?;
         rows.push(vec![
             label.to_string(),
             n_engines.to_string(),
@@ -334,7 +336,7 @@ fn main() -> anyhow::Result<()> {
         }
         let results = svc.run(|_, _| 0.0)?;
         assert_eq!(results.len(), n_groups, "kv bench dropped groups");
-        Ok(svc.take_stats())
+        svc.take_stats()
     };
     let kv_dense = run_kv(KvLayout::Dense)?;
     let kv_paged = run_kv(KvLayout::Paged)?;
@@ -365,7 +367,128 @@ fn main() -> anyhow::Result<()> {
               memory, with forked siblings aliasing prompt pages (shared) \
               and detaching lazily on first write (cow).");
 
+    // ---- part 7: work-stealing placement on a straggler workload ----------
+    // Even groups decode the full budget and are uniform-rewarded, so
+    // online pruning cancels their remainders mid-wave; odd groups finish
+    // almost immediately.  Submission-time load estimates can't see any of
+    // that, so static placement (rr / least-loaded) strands one replica
+    // with the stragglers while the other idles — exactly the gap
+    // `--steal idle` closes by moving still-queued groups onto the idle
+    // replica.  Ticks-to-drain = max per-engine decode steps (the
+    // hardware-independent wall-clock analog); the steal run's placement
+    // log is dumped and replayed to confirm placement-as-data reproduces
+    // the run (completed members compared bit-for-bit; the enforced
+    // steal-beats-least-loaded assertion lives in the mock unit test).
+    let n_eng7 = 2usize;
+    let strag_probs: Vec<Problem> =
+        (0..n_groups).map(|_| sampler.next().1).collect();
+    let run_place = |stripe: StripePolicy, steal: StealPolicy,
+                     replay: Option<PlacementLog>|
+        -> anyhow::Result<(SchedulerStats, Vec<SchedulerStats>,
+                           PlacementLog, Vec<GroupResult>)> {
+        let engines: Vec<StepEngine> = (0..n_eng7)
+            .map(|_| StepEngine::new(&rt, w.clone()))
+            .collect();
+        let mut svc = RolloutService::new(engines, man.max_seq, man.eos_id);
+        svc.stripe = stripe;
+        svc.steal = steal;
+        if let Some(log) = replay {
+            svc.set_replay(log);
+        }
+        svc.prune = PrunePolicy::online(2);
+        for (gid, p) in strag_probs.iter().enumerate() {
+            svc.submit_group(GroupSpec {
+                group_id: gid,
+                prompt: tk.encode_prompt(&p.prompt),
+                group_size: group,
+                max_new: if gid % 2 == 0 { man.max_new }
+                         else { (man.max_new / 8).max(1) },
+                temperature: 1.0,
+                top_p: 1.0,
+                seed: 0x57ee1 ^ ((gid as u64) << 8),
+            });
+        }
+        let results = svc.run(|gid, res| if gid % 2 == 0 { 1.0 } else {
+            (res.generated.len() % 2) as f32
+        })?;
+        assert_eq!(results.len(), n_groups,
+                   "placement bench dropped groups");
+        let st = svc.take_stats()?;
+        let per = svc.last_engine_stats().to_vec();
+        Ok((st, per, svc.placement_log().clone(), results))
+    };
+    let (rr_st, rr_per, _, _) =
+        run_place(StripePolicy::RoundRobin, StealPolicy::Off, None)?;
+    let (ll_st, ll_per, _, _) =
+        run_place(StripePolicy::LeastLoaded, StealPolicy::Off, None)?;
+    let (sl_st, sl_per, sl_log, sl_res) =
+        run_place(StripePolicy::LeastLoaded, StealPolicy::Idle, None)?;
+    let log_path = bk::results_dir().join("placement_log.json");
+    sl_log.save(&log_path)?;
+    let (_, _, _, rp_res) = run_place(StripePolicy::Replay, StealPolicy::Off,
+                                      Some(PlacementLog::load(&log_path)?))?;
+    // completed members only: cancelled-partial lengths under pruning are
+    // timing artifacts everywhere, replayed or not
+    let fp = |rs: &[GroupResult]| -> Vec<(usize, Vec<i32>, Vec<u32>)> {
+        rs.iter()
+            .flat_map(|gr| {
+                gr.members
+                    .iter()
+                    .filter(|m| m.result.finish != FinishReason::Cancelled)
+                    .map(move |m| {
+                        (gr.engine,
+                         m.result.generated.clone(),
+                         m.result.logprobs.iter().map(|l| l.to_bits())
+                             .collect::<Vec<u32>>())
+                    })
+            })
+            .collect()
+    };
+    let replay_ok = fp(&sl_res) == fp(&rp_res);
+    let drain = |per: &[SchedulerStats]| {
+        per.iter().map(|s| s.decode_steps).max().unwrap_or(0)
+    };
+    let mut rows = Vec::new();
+    for (label, st, per) in [("round-robin", &rr_st, &rr_per),
+                             ("least-loaded", &ll_st, &ll_per),
+                             ("least-loaded + steal", &sl_st, &sl_per)] {
+        rows.push(vec![
+            label.to_string(),
+            drain(per).to_string(),
+            per.iter().map(|s| s.decode_steps.to_string())
+                .collect::<Vec<_>>().join("/"),
+            st.idle_ticks.to_string(),
+            st.steals.to_string(),
+            format!("{:.2}", SchedulerStats::load_imbalance(per)),
+            format!("{:.0}", st.tokens_per_s()),
+        ]);
+    }
+    print_table(&format!("straggler placement: {n_groups} groups x {group} \
+                          on {n_eng7} engines, skewed budgets + online \
+                          pruning (int8 engine)"),
+                &["placement", "ticks to drain", "per-engine steps",
+                  "idle ticks", "steals", "imbalance", "tok/s"], &rows);
+    println!("replay of the stolen run's placement log: {} ({} records, \
+              {} steals) -> {}",
+             if replay_ok { "bit-identical" } else { "MISMATCH" },
+             sl_log.records.len(), sl_log.steals(), log_path.display());
+
     // machine-readable perf trajectory for later PRs to regress against
+    let place_json = |st: &SchedulerStats, per: &[SchedulerStats]| {
+        Json::obj(vec![
+            ("ticks_to_drain", Json::num(drain(per) as f64)),
+            ("decode_steps_per_engine",
+             Json::Arr(per.iter().map(|s| Json::num(s.decode_steps as f64))
+                 .collect())),
+            ("idle_ticks", Json::num(st.idle_ticks as f64)),
+            ("steals", Json::num(st.steals as f64)),
+            ("load_imbalance",
+             Json::num(SchedulerStats::load_imbalance(per))),
+            ("cancelled", Json::num(st.cancelled as f64)),
+            ("pruned_groups", Json::num(st.pruned_groups as f64)),
+            ("tokens_per_s", Json::num(st.tokens_per_s())),
+        ])
+    };
     let json = Json::obj(vec![
         ("bench", Json::str("fig8_rollout")),
         ("engine", Json::str("int8")),
@@ -383,6 +506,17 @@ fn main() -> anyhow::Result<()> {
             ("bytes_per_position", Json::num(pos_bytes)),
             ("dense", kv_json(&kv_dense, kv_page, pos_bytes, b)),
             ("paged", kv_json(&kv_paged, kv_page, pos_bytes, b)),
+        ])),
+        ("placement", Json::obj(vec![
+            ("engines", Json::num(n_eng7 as f64)),
+            ("groups", Json::num(n_groups as f64)),
+            ("group_size", Json::num(group as f64)),
+            ("rr", place_json(&rr_st, &rr_per)),
+            ("least_loaded", place_json(&ll_st, &ll_per)),
+            ("steal", place_json(&sl_st, &sl_per)),
+            ("steal_records", Json::num(sl_log.steals() as f64)),
+            ("replay_bit_identical", Json::Bool(replay_ok)),
+            ("placement_log", Json::str("placement_log.json")),
         ])),
     ]);
     let path = bk::results_dir().join("BENCH_rollout.json");

@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{KvLayout, StripePolicy};
+use crate::coordinator::{KvLayout, StealPolicy, StripePolicy};
 use crate::rl::{Algo, Objective, ObjectiveKind, RolloutExec, RolloutPath,
                 TrainerConfig};
 use crate::runtime::QuantMode;
@@ -162,6 +162,8 @@ pub fn to_json(cfg: &TrainerConfig) -> Json {
         ("rollout_engines", Json::num(cfg.rollout_engines as f64)),
         ("rollout_exec", Json::str(cfg.rollout_exec.name())),
         ("rollout_stripe", Json::str(cfg.rollout_stripe.name())),
+        ("rollout_steal", Json::str(cfg.rollout_steal.name())),
+        ("placement_log", Json::str(&cfg.placement_log)),
         ("min_prefill_batch", Json::num(cfg.min_prefill_batch as f64)),
         ("kv_layout", Json::str(cfg.kv_layout.name())),
         ("kv_page_size", Json::num(cfg.kv_page_size as f64)),
@@ -193,6 +195,12 @@ pub fn from_json(j: &Json) -> Result<TrainerConfig> {
     if let Some(s) = j.get("rollout_stripe").and_then(|v| v.as_str()) {
         cfg.rollout_stripe =
             StripePolicy::parse(s).context("bad rollout_stripe")?;
+    }
+    if let Some(s) = j.get("rollout_steal").and_then(|v| v.as_str()) {
+        cfg.rollout_steal = StealPolicy::parse(s).context("bad rollout_steal")?;
+    }
+    if let Some(p) = j.get("placement_log").and_then(|v| v.as_str()) {
+        cfg.placement_log = p.to_string();
     }
     if let Some(s) = j.get("suite").and_then(|v| v.as_str()) {
         cfg.suite = s.to_string();
@@ -266,6 +274,8 @@ mod tests {
         cfg.rollout_engines = 3;
         cfg.rollout_exec = RolloutExec::Threaded;
         cfg.rollout_stripe = StripePolicy::LeastLoaded;
+        cfg.rollout_steal = StealPolicy::Idle;
+        cfg.placement_log = "runs/placement.json".to_string();
         cfg.min_prefill_batch = 4;
         cfg.kv_layout = KvLayout::Paged;
         cfg.kv_page_size = 32;
@@ -277,6 +287,8 @@ mod tests {
         assert_eq!(back.rollout_engines, 3);
         assert_eq!(back.rollout_exec, RolloutExec::Threaded);
         assert_eq!(back.rollout_stripe, StripePolicy::LeastLoaded);
+        assert_eq!(back.rollout_steal, StealPolicy::Idle);
+        assert_eq!(back.placement_log, "runs/placement.json");
         assert_eq!(back.min_prefill_batch, 4);
         assert_eq!(back.kv_layout, KvLayout::Paged);
         assert_eq!(back.kv_page_size, 32);
@@ -285,6 +297,8 @@ mod tests {
         let d = from_json(&Json::obj(vec![])).unwrap();
         assert_eq!(d.rollout_exec, RolloutExec::Inline);
         assert_eq!(d.rollout_stripe, StripePolicy::RoundRobin);
+        assert_eq!(d.rollout_steal, StealPolicy::Off);
+        assert!(d.placement_log.is_empty());
         assert_eq!(d.kv_layout, KvLayout::Dense);
         assert_eq!((d.kv_page_size, d.prefill_chunk), (16, 0));
         assert!(!back.prune_rollouts);

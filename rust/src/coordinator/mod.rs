@@ -11,9 +11,15 @@
 //! ```text
 //! rl::Trainer ── GroupSpec ──▶ RolloutService            (service.rs)
 //!   │                            │ groups, rewards, in-flight pruning,
-//!   │ requantize:                │ placement: --stripe rr|least-loaded
-//!   │ push_weights(W)            │ kv/chunk config fan-out: set_kv(),
-//!   │ ──▶ WeightEpoch++          │ set_prefill_chunk()
+//!   │ requantize:                │ placement: --stripe
+//!   │ push_weights(W)            │   rr|least-loaded|replay
+//!   │ ──▶ WeightEpoch++          │ work stealing: --steal off|idle
+//!   │                            │   (idle replica pulls whole queued
+//!   │                            │   groups off the most-loaded one;
+//!   │                            │   every move → PlacementLog, and
+//!   │                            │   replay re-executes any log)
+//!   │                            │ kv/chunk config fan-out: set_kv(),
+//!   │                            │ set_prefill_chunk()
 //!   │                            ├─ cmd chan ──▶ worker thread 0
 //!   │   commands: Submit(group)  │               owns: Runtime (own PJRT
 //!   │     Cancel(uid)            │               client), DecodeEngine,
@@ -22,10 +28,13 @@
 //!   │       share_prefix, kv,    │                 │ page-gated admission,
 //!   │       prefill_chunk}       │                 │ shared-prefix prefill
 //!   │     TakeStats / AbortAll   │                 │ (fork_kv), chunked
-//!   │                            │                 │ prefill, lockstep
-//!   │   events: Finished(result) │                 │ decode, cancel(),
-//!   │     CancelOutcome, Stats,  │                 │ swap_weights()
-//!   │     TickError, Aborted     │                 ├──▶ DecodeEngine
+//!   │     Steal{thief, groups}   │                 │ prefill, lockstep
+//!   │                            │                 │ decode, cancel(),
+//!   │   events: Finished(result) │                 │ swap_weights(),
+//!   │     CancelOutcome, Stats,  │                 │ extract_queued()
+//!   │     TickError, Aborted,    │                 │ (whole-group un-admit
+//!   │     Idle, Stolen{reqs}     │                 │  for the steal path)
+//!   │                            │                 ├──▶ DecodeEngine
 //!   │                            │                 │     (engine.rs)
 //!   │                            │                 │      │ books every
 //!   │                            │                 │      │ prefill/decode/
@@ -55,6 +64,20 @@
 //! [`StripePolicy`], and hot-swaps freshly requantized weights into live
 //! engines ([`RolloutService::push_weights`] → [`WeightEpoch`]) instead of
 //! tearing replicas down.
+//!
+//! Steal/replay flow ([`StealPolicy::Idle`]): a replica with free slots
+//! and an empty queue announces itself (`Idle` event; the inline backend
+//! checks the same predicate each round), the service picks the victim
+//! with the most live outstanding tokens (shared atomics the schedulers
+//! publish) and probes it (`Steal` command); the victim extracts the
+//! first candidate group whose members are *all* still queued
+//! ([`Scheduler::extract_queued`], all-or-nothing so `fork_kv` prefix
+//! sharing stays intra-engine) and replies (`Stolen` event) with the
+//! requests, which the service re-submits to the thief.  Every placement
+//! and steal is appended to the [`PlacementLog`];
+//! [`StripePolicy::Replay`] re-executes a recorded log, making a stolen
+//! run reproducible bit-for-bit even though stealing itself reads live
+//! timing.
 //!
 //! Threading model: PJRT clients, compiled executables and the artifact
 //! cache are **not `Send`**, so the threaded backend never moves an engine
@@ -110,4 +133,6 @@ pub use mock::MockEngine;
 pub use request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 pub use scheduler::Scheduler;
 pub use service::{EngineFactory, GroupMember, GroupResult, GroupSpec,
-                  PrunePolicy, RolloutService, StripePolicy, WeightEpoch};
+                  OutstandingGroupsError, PlacementLog, PlacementReason,
+                  PlacementRecord, PrunePolicy, RolloutService, StealPolicy,
+                  StripePolicy, WeightEpoch};

@@ -106,6 +106,15 @@ pub struct SchedulerStats {
     /// mark; same level semantics as above).  Above the configured budget
     /// = admission overdraw from in-flight growth.
     pub kv_pages_high_water: usize,
+    /// whole queued groups this engine received through work stealing
+    /// (bumped on the thief's side by
+    /// [`RolloutService`](super::RolloutService), not the scheduler)
+    pub steals: usize,
+    /// decode ticks this replica sat out while the busiest replica of its
+    /// drain still worked (`max_j decode_steps - decode_steps_i`, folded
+    /// in by `RolloutService::take_stats`) — the starvation/straggler gap
+    /// work stealing exists to close
+    pub idle_ticks: usize,
     /// sum over decode calls of occupied-slot fraction
     pub occupancy_sum: f64,
     /// sum over completed requests of time spent queued before prefill
@@ -170,6 +179,20 @@ impl SchedulerStats {
         }
     }
 
+    /// Max/min load-imbalance ratio across engine replicas, measured on
+    /// decode ticks actually executed (the per-replica stats of one
+    /// drain).  1.0 = perfectly balanced; the denominator floors at one
+    /// tick so a fully idle replica yields a large finite ratio, never
+    /// inf/NaN (these feed Recorder rows).
+    pub fn load_imbalance(per: &[SchedulerStats]) -> f64 {
+        let max = per.iter().map(|s| s.decode_steps).max().unwrap_or(0);
+        if max == 0 {
+            return 1.0;
+        }
+        let min = per.iter().map(|s| s.decode_steps).min().unwrap_or(0);
+        max as f64 / min.max(1) as f64
+    }
+
     /// Accumulate another scheduler run's counters (the trainer may drive
     /// several scheduler runs per RL step under DAPO resampling).
     pub fn merge(&mut self, other: &SchedulerStats) {
@@ -190,6 +213,8 @@ impl SchedulerStats {
         self.kv_pages_freed += other.kv_pages_freed;
         self.kv_pages_shared += other.kv_pages_shared;
         self.kv_pages_cow += other.kv_pages_cow;
+        self.steals += other.steals;
+        self.idle_ticks += other.idle_ticks;
         // levels, not deltas — see the field docs
         self.kv_pages_active = self.kv_pages_active.max(other.kv_pages_active);
         self.kv_pages_high_water =
@@ -252,6 +277,45 @@ mod tests {
         assert_eq!(a.prefill_chunks, 3);
         assert_eq!((a.kv_pages_active, a.kv_pages_high_water), (4, 9),
                    "page levels merge by max, like weight_epoch");
+    }
+
+    #[test]
+    fn merge_sums_steals_and_idle_ticks() {
+        let mut a = SchedulerStats {
+            steals: 2,
+            idle_ticks: 5,
+            ..Default::default()
+        };
+        let b = SchedulerStats {
+            steals: 1,
+            idle_ticks: 7,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!((a.steals, a.idle_ticks), (3, 12),
+                   "steals/idle_ticks are counters, merge sums them");
+    }
+
+    /// Imbalance ratio: balanced replicas score 1.0, a starved replica
+    /// inflates the ratio, and the degenerate cases (no replicas, no
+    /// decode work, a fully idle replica) stay finite.
+    #[test]
+    fn load_imbalance_ratio_guards_degenerate_cases() {
+        let ticks = |n: usize| SchedulerStats {
+            decode_steps: n,
+            ..Default::default()
+        };
+        assert_eq!(SchedulerStats::load_imbalance(&[]), 1.0);
+        assert_eq!(SchedulerStats::load_imbalance(&[ticks(0), ticks(0)]),
+                   1.0);
+        assert_eq!(SchedulerStats::load_imbalance(&[ticks(6), ticks(6)]),
+                   1.0);
+        assert_eq!(SchedulerStats::load_imbalance(&[ticks(9), ticks(3)]),
+                   3.0);
+        let starved =
+            SchedulerStats::load_imbalance(&[ticks(40), ticks(0)]);
+        assert!(starved.is_finite() && starved >= 40.0,
+                "idle replica must inflate, not poison, the ratio");
     }
 
     /// Satellite: zero-denominator steps (pure-decode waves have no

@@ -161,6 +161,68 @@ impl<E: DecodeEngine> Scheduler<E> {
         self.active.len()
     }
 
+    /// Requests still queued (submitted but not yet admitted to a slot).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// KV slots currently unoccupied — spare decode capacity a
+    /// work-stealing placement layer can fill.
+    pub fn free_slots(&self) -> usize {
+        self.slots.free_count()
+    }
+
+    /// Live outstanding-token estimate: queued requests at their full
+    /// budget `min(prompt + max_new, max_seq)`, active sequences at what
+    /// remains of it.  This is the scheduler-side load signal the
+    /// service's work-stealing layer reads through shared per-engine
+    /// atomics — unlike the submission-time `est_load` ledger it shrinks
+    /// as sequences finish, so an early-EOS or pruned-out replica shows
+    /// up under-loaded while a straggler still queues.
+    pub fn outstanding_tokens(&self) -> u64 {
+        let budget = |req: &RolloutRequest| {
+            req.prompt.len().saturating_add(req.max_new).min(self.max_seq)
+        };
+        let queued: u64 =
+            self.queue.iter().map(|(r, _)| budget(r) as u64).sum();
+        let active: u64 = self
+            .active
+            .iter()
+            .map(|a| budget(&a.req).saturating_sub(a.pos) as u64)
+            .sum();
+        queued.saturating_add(active)
+    }
+
+    /// Extract a set of *queued* requests — the work-stealing handoff.
+    /// All-or-nothing: succeeds only when every id is still queued (none
+    /// admitted, active, completed or cancelled), so whole groups move
+    /// between engines and `fork_kv` prefix sharing stays intra-engine.
+    /// Extracted requests leave this scheduler's ledger entirely
+    /// (`submitted` is debited; the thief's `submit` re-counts them, so
+    /// the merged `completed + cancelled == submitted` invariant holds
+    /// across a steal) and return in the order given.
+    pub fn extract_queued(&mut self, ids: &[u64])
+                          -> Option<Vec<RolloutRequest>> {
+        if ids.is_empty()
+            || !ids.iter().all(
+                |id| self.queue.iter().any(|(r, _)| r.id == *id))
+        {
+            return None;
+        }
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let qi = self
+                .queue
+                .iter()
+                .position(|(r, _)| r.id == *id)
+                .expect("presence checked above");
+            let (req, _) = self.queue.remove(qi).unwrap();
+            out.push(req);
+        }
+        self.stats.submitted -= out.len();
+        Some(out)
+    }
+
     /// Install freshly quantized engine weights between ticks (hot
     /// requantization).  `epoch` is the service's
     /// [`WeightEpoch`](super::service::WeightEpoch) counter, surfaced in
@@ -638,6 +700,50 @@ mod tests {
         assert_eq!(sched.stats.cancelled, 2);
         assert_eq!(sched.stats.completed + sched.stats.cancelled,
                    sched.stats.submitted);
+    }
+
+    /// extract_queued is all-or-nothing on the queue: a set containing an
+    /// admitted (active) request is refused outright, a fully queued set
+    /// moves out with its `submitted` count, and re-submitting the
+    /// extracted requests elsewhere keeps the global ledger balanced —
+    /// the work-stealing handoff contract.
+    #[test]
+    fn extract_queued_is_all_or_nothing() {
+        let mut eng = MockEngine::new(2, 8, MAX_SEQ, 127 /* no eos */);
+        let mut sched = Scheduler::new(&mut eng, MAX_SEQ, 127);
+        for id in 0..6u64 {
+            sched.submit(req(id, 3, 6));
+        }
+        // first tick admits ids 0 and 1 (B = 2); 2..6 stay queued
+        let t = sched.tick().unwrap();
+        assert!(t.is_empty());
+        assert_eq!(sched.queue_len(), 4);
+        assert!(sched.extract_queued(&[1, 2]).is_none(),
+                "a partially admitted set must be refused");
+        assert!(sched.extract_queued(&[]).is_none());
+        assert!(sched.extract_queued(&[99]).is_none(), "unknown id");
+        let stolen = sched.extract_queued(&[4, 5]).unwrap();
+        assert_eq!(stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![4, 5], "extraction preserves the given order");
+        assert_eq!(sched.queue_len(), 2);
+        assert_eq!(sched.stats.submitted, 4, "extraction debits submitted");
+        assert!(sched.extract_queued(&[4]).is_none(),
+                "double extraction must be refused");
+        // thief side: a second scheduler serves the stolen requests and
+        // the summed ledger balances
+        let mut thief_eng = MockEngine::new(2, 8, MAX_SEQ, 127);
+        let mut thief = Scheduler::new(&mut thief_eng, MAX_SEQ, 127);
+        for r in stolen {
+            thief.submit(r);
+        }
+        let a = sched.run_to_completion().unwrap();
+        let b = thief.run_to_completion().unwrap();
+        assert_eq!(a.len() + b.len(), 6);
+        assert_eq!(sched.stats.completed + thief.stats.completed,
+                   sched.stats.submitted + thief.stats.submitted);
+        // outstanding load drains to zero on both sides
+        assert_eq!(sched.outstanding_tokens() + thief.outstanding_tokens(),
+                   0);
     }
 
     /// Chunked prefill is invisible in the outputs: every chunk setting

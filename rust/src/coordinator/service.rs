@@ -49,6 +49,29 @@
 //! cancelled partials* (a cancel directive lands asynchronously), never a
 //! completed member.
 //!
+//! # Work stealing and the placement log
+//!
+//! Submission-time placement leaves the run's wall-clock set by its
+//! slowest replica: early-EOS finishers, skewed lengths and online
+//! pruning drain one engine while stragglers still queue on another.
+//! [`StealPolicy::Idle`] closes that gap — an idle replica (free slots,
+//! empty queue) pulls whole *queued, never-admitted* groups from the
+//! most-loaded replica, read off live outstanding-token counters the
+//! schedulers publish through shared atomics.  Whole groups only, so
+//! `fork_kv` prefix sharing stays intra-engine
+//! ([`Scheduler::extract_queued`] is all-or-nothing).
+//!
+//! Stealing reads live state, so *placement* becomes timing-dependent —
+//! but outputs are engine-independent, so only attribution and
+//! wall-clock can vary.  Reproducibility is restored by turning
+//! placement into data: every placement and steal is appended to an
+//! ordered [`PlacementLog`] (`seq, group_uid, from, to, reason`),
+//! dumpable to JSON, and [`StripePolicy::Replay`] re-executes a recorded
+//! log — each group goes straight to its recorded final engine, so a
+//! stolen run's completed members reproduce bit-for-bit with no live
+//! timing in the loop.  (Cancelled *partials* remain timing artifacts
+//! under pruning, exactly as for inline vs threaded above.)
+//!
 //! # In-flight requantization
 //!
 //! [`RolloutService::push_weights`] ships freshly quantized weights to
@@ -63,14 +86,16 @@
 //! ([`member_seed`]), reward-driven cancellation and placement all live
 //! here.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
+use crate::util::json::Json;
 use crate::util::rng::member_seed;
 
 use super::engine::DecodeEngine;
@@ -170,10 +195,13 @@ impl PrunePolicy {
 
 /// How `submit_group` places groups onto engine replicas.
 ///
-/// Both policies are *deterministic in the submission sequence*: placement
-/// never reads live queue depth or completion timing, so a workload's
-/// placement (and therefore its outputs) is identical across inline and
-/// threaded execution and across repeated runs.
+/// `RoundRobin` and `LeastLoaded` are *deterministic in the submission
+/// sequence*: placement never reads live queue depth or completion
+/// timing, so a workload's placement (and therefore its outputs) is
+/// identical across inline and threaded execution and across repeated
+/// runs.  `Replay` is deterministic in a recorded [`PlacementLog`]
+/// instead — it reproduces any run, including one whose placement was
+/// perturbed by live work stealing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StripePolicy {
     /// Blind rotation: group `k` lands on engine `k % n`.
@@ -185,6 +213,11 @@ pub enum StripePolicy {
     /// neighbors until the other replicas catch up — round-robin instead
     /// piles every `n`-th heavy group onto the same engine.
     LeastLoaded,
+    /// Place each group on the final engine a recorded [`PlacementLog`]
+    /// put it on (install the log with [`RolloutService::set_replay`]).
+    /// Groups the log has never seen fall back to round-robin.  Stealing
+    /// is a no-op under replay: the log already bakes in every steal.
+    Replay,
 }
 
 impl StripePolicy {
@@ -192,6 +225,7 @@ impl StripePolicy {
         match s {
             "rr" | "round-robin" | "roundrobin" => Some(StripePolicy::RoundRobin),
             "least-loaded" | "ll" | "leastloaded" => Some(StripePolicy::LeastLoaded),
+            "replay" => Some(StripePolicy::Replay),
             _ => None,
         }
     }
@@ -200,9 +234,205 @@ impl StripePolicy {
         match self {
             StripePolicy::RoundRobin => "rr",
             StripePolicy::LeastLoaded => "least-loaded",
+            StripePolicy::Replay => "replay",
         }
     }
 }
+
+/// Whether idle replicas may pull queued groups from loaded ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Never steal: placement is final at submission time (the legacy
+    /// semantics every parity test pins down).
+    Off,
+    /// An idle replica — free slots and an empty local queue — steals
+    /// whole queued groups from the most-loaded replica (by live
+    /// outstanding tokens).  Every steal is recorded in the
+    /// [`PlacementLog`] so the run stays reproducible via
+    /// [`StripePolicy::Replay`].
+    Idle,
+}
+
+impl StealPolicy {
+    pub fn parse(s: &str) -> Option<StealPolicy> {
+        match s {
+            "off" | "none" => Some(StealPolicy::Off),
+            "idle" | "on" => Some(StealPolicy::Idle),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StealPolicy::Off => "off",
+            StealPolicy::Idle => "idle",
+        }
+    }
+}
+
+/// Why a [`PlacementRecord`] exists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementReason {
+    /// initial placement at `submit_group` (`from == to`)
+    Place,
+    /// a live steal moved the still-queued group `from` → `to`
+    Steal,
+}
+
+impl PlacementReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementReason::Place => "place",
+            PlacementReason::Steal => "steal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlacementReason> {
+        match s {
+            "place" => Some(PlacementReason::Place),
+            "steal" => Some(PlacementReason::Steal),
+            _ => None,
+        }
+    }
+}
+
+/// One placement decision.  `group_uid` is the service-lifetime group
+/// counter (never reset across runs), so a log taken after several runs
+/// still lines up with the same submission sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementRecord {
+    /// position in the log (0-based, dense)
+    pub seq: u64,
+    pub group_uid: u64,
+    pub from_engine: usize,
+    pub to_engine: usize,
+    pub reason: PlacementReason,
+}
+
+/// Ordered record of every placement and steal a service made — the
+/// determinism artifact for work stealing.  Placement under stealing
+/// depends on thread timing; the log captures what actually happened as
+/// data, and [`StripePolicy::Replay`] re-executes it so the run
+/// reproduces bit-for-bit (completed members; cancelled-partial lengths
+/// under pruning remain timing artifacts, as everywhere else).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PlacementLog {
+    pub records: Vec<PlacementRecord>,
+}
+
+impl PlacementLog {
+    fn push(&mut self, group_uid: u64, from: usize, to: usize,
+            reason: PlacementReason) {
+        let seq = self.records.len() as u64;
+        self.records.push(PlacementRecord {
+            seq,
+            group_uid,
+            from_engine: from,
+            to_engine: to,
+            reason,
+        });
+    }
+
+    /// Engine the group ended up on: its last record wins (a stolen
+    /// group has a `Place` followed by one or more `Steal`s).
+    pub fn final_engine(&self, group_uid: u64) -> Option<usize> {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| r.group_uid == group_uid)
+            .map(|r| r.to_engine)
+    }
+
+    pub fn steals(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| r.reason == PlacementReason::Steal)
+            .count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let recs: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("seq", Json::num(r.seq as f64)),
+                    ("group_uid", Json::num(r.group_uid as f64)),
+                    ("from_engine", Json::num(r.from_engine as f64)),
+                    ("to_engine", Json::num(r.to_engine as f64)),
+                    ("reason", Json::str(r.reason.name())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("placement_log", Json::Arr(recs))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlacementLog> {
+        let recs = j
+            .get("placement_log")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing \"placement_log\" array"))?;
+        let mut log = PlacementLog::default();
+        for (i, r) in recs.iter().enumerate() {
+            let field = |k: &str| {
+                r.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| {
+                        anyhow!("placement record {i}: bad field {k:?}")
+                    })
+            };
+            let reason = r
+                .get("reason")
+                .and_then(|v| v.as_str())
+                .and_then(PlacementReason::parse)
+                .ok_or_else(|| {
+                    anyhow!("placement record {i}: bad field \"reason\"")
+                })?;
+            log.records.push(PlacementRecord {
+                seq: field("seq")? as u64,
+                group_uid: field("group_uid")? as u64,
+                from_engine: field("from_engine")?,
+                to_engine: field("to_engine")?,
+                reason,
+            });
+        }
+        Ok(log)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing placement log {path:?}"))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<PlacementLog> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading placement log {path:?}"))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing placement log {path:?}"))?;
+        PlacementLog::from_json(&j)
+    }
+}
+
+/// Typed error for a stats drain attempted mid-run: with groups
+/// outstanding, threaded workers may be emitting `Finished` events the
+/// drain would swallow, so [`RolloutService::take_stats`] is only legal
+/// between runs.  Mirrors [`KvTakenError`](super::engine::KvTakenError):
+/// callers can `downcast_ref` it from the `anyhow` chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OutstandingGroupsError {
+    /// groups still unresolved at the time of the call
+    pub outstanding: usize,
+}
+
+impl std::fmt::Display for OutstandingGroupsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f,
+               "take_stats with {} groups outstanding — drain the run first",
+               self.outstanding)
+    }
+}
+
+impl std::error::Error for OutstandingGroupsError {}
 
 /// Monotone counter identifying the weight generation engines decode with.
 /// Bumped by [`RolloutService::push_weights`]; observable per engine in
@@ -219,8 +449,14 @@ pub type EngineFactory<E> = Box<dyn FnOnce() -> Result<E> + Send>;
 
 struct GroupState {
     group_id: usize,
+    /// service-lifetime placement-log identity ([`PlacementRecord`])
+    uid: u64,
+    /// engine currently holding the group (updated when it is stolen)
     engine: usize,
     size: usize,
+    /// estimated decode-token cost charged to `est_load` at placement;
+    /// moved on steal, debited on resolution in the recorded-log world
+    cost: u64,
     /// scheduler request id per member
     uids: Vec<u64>,
     outcomes: Vec<Option<GroupMember>>,
@@ -249,6 +485,15 @@ enum Command<W> {
     /// never as a side effect of resending the other knobs.
     ConfigureKv(KvConfig),
     TakeStats,
+    /// work-stealing probe on behalf of idle engine `thief`: the victim
+    /// extracts the first candidate group whose members are *all* still
+    /// queued (all-or-nothing, so prefix sharing stays intra-engine) and
+    /// replies `Event::Stolen` — empty when nothing was stealable
+    Steal {
+        thief: usize,
+        /// candidate groups, each a whole group's request ids
+        candidates: Vec<Vec<u64>>,
+    },
     AbortAll,
     Shutdown,
 }
@@ -266,6 +511,16 @@ enum Event {
     /// ledger balanced) before reporting, and stays servable
     TickError(usize, anyhow::Error),
     Stats(usize, SchedulerStats),
+    /// the worker has free slots and an empty queue — a steal
+    /// opportunity; re-armed by its next `Submit`
+    Idle(usize),
+    /// reply to `Steal`: the extracted whole-group requests (empty =
+    /// nothing on the victim was still fully queued)
+    Stolen {
+        victim: usize,
+        thief: usize,
+        reqs: Vec<RolloutRequest>,
+    },
     Aborted(usize),
 }
 
@@ -285,10 +540,17 @@ enum Backend<E: DecodeEngine> {
 /// Engine-worker main loop: build the engine, own a scheduler, drain
 /// commands (they outrank decode work — a cancel or weight swap must land
 /// before the next tick), tick when requests are pending, block when idle.
+///
+/// Steal participation: the worker publishes its live outstanding-token
+/// count into `live[idx]` every iteration, and announces [`Event::Idle`]
+/// once per `Submit` generation when its queue is empty with slots free
+/// (never before its first `Submit`, so the startup handshake sees only
+/// `Ready`).  Whether anything is done with that is the control thread's
+/// policy call — the worker is steal-policy-oblivious.
 fn worker_loop<E: DecodeEngine>(idx: usize, factory: EngineFactory<E>,
                                 cmds: Receiver<Command<E::Weights>>,
                                 events: Sender<Event>, max_seq: usize,
-                                eos_id: i32) {
+                                eos_id: i32, live: Arc<Vec<AtomicU64>>) {
     let engine = match factory() {
         Ok(e) => {
             let _ = events.send(Event::Ready(idx, Ok(())));
@@ -300,7 +562,18 @@ fn worker_loop<E: DecodeEngine>(idx: usize, factory: EngineFactory<E>,
         }
     };
     let mut sched = Scheduler::new(engine, max_seq, eos_id);
+    let mut saw_work = false;
+    let mut announced_idle = false;
     loop {
+        live[idx].store(sched.outstanding_tokens(), Ordering::Relaxed);
+        if saw_work && !announced_idle && sched.queue_len() == 0
+            && sched.free_slots() > 0
+        {
+            announced_idle = true;
+            if events.send(Event::Idle(idx)).is_err() {
+                return;
+            }
+        }
         let cmd = if sched.pending() == 0 {
             // idle: park until the next command (or service drop)
             match cmds.recv() {
@@ -317,6 +590,8 @@ fn worker_loop<E: DecodeEngine>(idx: usize, factory: EngineFactory<E>,
         if let Some(cmd) = cmd {
             match cmd {
                 Command::Submit(reqs) => {
+                    saw_work = true;
+                    announced_idle = false; // re-arm the idle announcement
                     for r in reqs {
                         sched.submit(r);
                     }
@@ -345,6 +620,24 @@ fn worker_loop<E: DecodeEngine>(idx: usize, factory: EngineFactory<E>,
                 Command::TakeStats => {
                     let st = sched.take_stats();
                     if events.send(Event::Stats(idx, st)).is_err() {
+                        return;
+                    }
+                }
+                Command::Steal { thief, candidates } => {
+                    // victim side: hand over the first candidate that is
+                    // still fully queued here (the service's view can be
+                    // stale — members may have admitted since the probe)
+                    let mut reqs = Vec::new();
+                    for cand in candidates {
+                        if let Some(r) = sched.extract_queued(&cand) {
+                            reqs = r;
+                            break;
+                        }
+                    }
+                    live[idx].store(sched.outstanding_tokens(),
+                                    Ordering::Relaxed);
+                    let ev = Event::Stolen { victim: idx, thief, reqs };
+                    if events.send(ev).is_err() {
                         return;
                     }
                 }
@@ -379,6 +672,10 @@ fn worker_loop<E: DecodeEngine>(idx: usize, factory: EngineFactory<E>,
     }
 }
 
+fn new_live_load(n: usize) -> Arc<Vec<AtomicU64>> {
+    Arc::new((0..n).map(|_| AtomicU64::new(0)).collect())
+}
+
 pub struct RolloutService<E: DecodeEngine> {
     backend: Backend<E>,
     groups: Vec<GroupState>,
@@ -388,10 +685,33 @@ pub struct RolloutService<E: DecodeEngine> {
     /// round-robin placement cursor
     next_engine: usize,
     /// estimated outstanding decode tokens per engine, accumulated from
-    /// submissions and reset when a run drains — NEVER decremented on
-    /// completion (that would make placement depend on thread timing)
+    /// submissions and reset when a run drains.  Under plain least-loaded
+    /// it is NEVER decremented on completion (that would make placement
+    /// depend on thread timing); with stealing or replay active the
+    /// [`PlacementLog`] carries the determinism story instead, so the
+    /// estimate tracks live drain ([`Self::debit_if_resolved`])
     est_load: Vec<u64>,
+    /// live outstanding-token counters, one per engine, shared with the
+    /// worker threads (inline: refreshed by the service loop itself) —
+    /// the signal steal victim selection reads
+    live_load: Arc<Vec<AtomicU64>>,
     pub stripe: StripePolicy,
+    pub steal: StealPolicy,
+    /// ordered record of every placement and steal (service-lifetime;
+    /// survives runs and stats drains)
+    log: PlacementLog,
+    /// recorded log driving placement when `stripe == Replay`
+    replay: Option<PlacementLog>,
+    /// service-lifetime group counter backing [`PlacementRecord::group_uid`]
+    /// — never reset, so a multi-run log lines up with the same
+    /// submission sequence
+    next_group_uid: u64,
+    /// whole groups stolen *into* each engine since the last stats drain
+    steal_count: Vec<usize>,
+    /// engines that announced `Idle` and still wait for work (threaded)
+    idle_workers: HashSet<usize>,
+    /// thieves with a `Steal` probe in flight (threaded; one per thief)
+    steal_inflight: HashSet<usize>,
     epoch: WeightEpoch,
     /// groups whose in-flight remainder was pruned, per engine; folded
     /// into the drained stats (service-side so both backends agree)
@@ -419,10 +739,12 @@ impl<E: DecodeEngine> RolloutService<E> {
             .map(|e| Scheduler::new(e, max_seq, eos_id))
             .collect();
         let n = scheds.len();
-        Self::with_backend(Backend::Inline(scheds), n, max_seq)
+        let live = new_live_load(n);
+        Self::with_backend(Backend::Inline(scheds), n, max_seq, live)
     }
 
-    fn with_backend(backend: Backend<E>, n: usize, max_seq: usize) -> Self {
+    fn with_backend(backend: Backend<E>, n: usize, max_seq: usize,
+                    live_load: Arc<Vec<AtomicU64>>) -> Self {
         RolloutService {
             backend,
             groups: Vec::new(),
@@ -430,7 +752,15 @@ impl<E: DecodeEngine> RolloutService<E> {
             next_uid: 0,
             next_engine: 0,
             est_load: vec![0; n],
+            live_load,
             stripe: StripePolicy::RoundRobin,
+            steal: StealPolicy::Off,
+            log: PlacementLog::default(),
+            replay: None,
+            next_group_uid: 0,
+            steal_count: vec![0; n],
+            idle_workers: HashSet::new(),
+            steal_inflight: HashSet::new(),
             epoch: WeightEpoch::default(),
             pruned_groups: vec![0; n],
             last_engine_stats: Vec::new(),
@@ -462,6 +792,22 @@ impl<E: DecodeEngine> RolloutService<E> {
     /// decode volume, weight epoch).
     pub fn last_engine_stats(&self) -> &[SchedulerStats] {
         &self.last_engine_stats
+    }
+
+    /// Ordered record of every placement and steal this service has made
+    /// (service-lifetime; dump with [`PlacementLog::save`] and replay it
+    /// via [`Self::set_replay`] on a fresh service).
+    pub fn placement_log(&self) -> &PlacementLog {
+        &self.log
+    }
+
+    /// Install a recorded log and switch to [`StripePolicy::Replay`]:
+    /// every group goes straight to the engine the log finally put it
+    /// on, so a stolen run's completed members reproduce bit-for-bit
+    /// without any live timing in the loop.
+    pub fn set_replay(&mut self, log: PlacementLog) {
+        self.replay = Some(log);
+        self.stripe = StripePolicy::Replay;
     }
 
     /// Apply the dynamic-batching admission floor to every engine queue.
@@ -569,8 +915,9 @@ impl<E: DecodeEngine> RolloutService<E> {
         epoch
     }
 
-    /// Deterministic placement for one group; updates the load estimate.
-    fn place(&mut self, spec: &GroupSpec) -> usize {
+    /// Placement for one group; updates the load estimate and appends
+    /// the decision to the placement log.  Returns `(engine, cost)`.
+    fn place(&mut self, spec: &GroupSpec, group_uid: u64) -> (usize, u64) {
         let n = self.est_load.len();
         let engine = match self.stripe {
             StripePolicy::RoundRobin => {
@@ -587,6 +934,22 @@ impl<E: DecodeEngine> RolloutService<E> {
                 }
                 best
             }
+            StripePolicy::Replay => {
+                match self
+                    .replay
+                    .as_ref()
+                    .and_then(|l| l.final_engine(group_uid))
+                {
+                    Some(e) if e < n => e,
+                    // unlogged group (or a log from a wider service):
+                    // fall back to round-robin rather than refusing work
+                    _ => {
+                        let e = self.next_engine;
+                        self.next_engine = (e + 1) % n;
+                        e
+                    }
+                }
+            }
         };
         let per_member = spec
             .prompt
@@ -595,7 +958,8 @@ impl<E: DecodeEngine> RolloutService<E> {
             .min(self.max_seq) as u64;
         let cost = per_member.saturating_mul(spec.group_size as u64);
         self.est_load[engine] = self.est_load[engine].saturating_add(cost);
-        engine
+        self.log.push(group_uid, engine, engine, PlacementReason::Place);
+        (engine, cost)
     }
 
     /// Submit a group.  All members land on one engine (fork_kv is an
@@ -605,7 +969,9 @@ impl<E: DecodeEngine> RolloutService<E> {
     /// immediately — submission streams.
     pub fn submit_group(&mut self, spec: GroupSpec) {
         assert!(spec.group_size > 0, "empty group");
-        let engine = self.place(&spec);
+        let group_uid = self.next_group_uid;
+        self.next_group_uid += 1;
+        let (engine, cost) = self.place(&spec, group_uid);
         let gi = self.groups.len();
         // one allocation for the whole group: members carry Arc clones, and
         // the scheduler's shared-prefix clustering recognizes them by
@@ -639,8 +1005,10 @@ impl<E: DecodeEngine> RolloutService<E> {
         }
         self.groups.push(GroupState {
             group_id: spec.group_id,
+            uid: group_uid,
             engine,
             size: spec.group_size,
+            cost,
             uids,
             outcomes: vec![None; spec.group_size],
             finished: 0,
@@ -648,6 +1016,86 @@ impl<E: DecodeEngine> RolloutService<E> {
             pruned: false,
             cancel_requested: false,
         });
+    }
+
+    /// Debit a fully resolved group's cost from its engine's estimate —
+    /// but only when the [`PlacementLog`] carries the determinism story
+    /// (stealing or replay active).  Plain least-loaded keeps the legacy
+    /// never-decrement semantics: its placements are *derived from* the
+    /// monotone estimate, and the parity tests pin them down.
+    fn debit_if_resolved(&mut self, gi: usize) {
+        if self.steal == StealPolicy::Off
+            && self.stripe != StripePolicy::Replay
+        {
+            return;
+        }
+        let g = &self.groups[gi];
+        if g.finished + g.cancelled == g.size {
+            let e = g.engine;
+            self.est_load[e] = self.est_load[e].saturating_sub(g.cost);
+        }
+    }
+
+    /// A steal succeeded: re-attribute the group to the thief, move its
+    /// cost, count it and log it.
+    fn note_steal(&mut self, gi: usize, thief: usize) {
+        let victim = self.groups[gi].engine;
+        let cost = self.groups[gi].cost;
+        let uid = self.groups[gi].uid;
+        self.groups[gi].engine = thief;
+        self.est_load[victim] = self.est_load[victim].saturating_sub(cost);
+        self.est_load[thief] = self.est_load[thief].saturating_add(cost);
+        self.steal_count[thief] += 1;
+        self.log.push(uid, victim, thief, PlacementReason::Steal);
+    }
+
+    /// Whole groups on `victim` that are stealable *from the service's
+    /// view*: nothing finished, nothing cancelled, no cancel in flight —
+    /// so prune cancels (which only fire after finishes) can never race a
+    /// steal.  Newest first: the oldest queued groups are next to admit
+    /// on the victim anyway, the newest would otherwise wait longest.
+    /// Whether a candidate is *actually* still fully queued is decided by
+    /// the victim scheduler ([`Scheduler::extract_queued`] is
+    /// all-or-nothing), so a stale view only wastes a probe.
+    fn steal_candidates(&self, victim: usize) -> Vec<(usize, Vec<u64>)> {
+        self.groups
+            .iter()
+            .enumerate()
+            .rev()
+            .filter(|(_, g)| {
+                g.engine == victim
+                    && g.finished == 0
+                    && g.cancelled == 0
+                    && !g.cancel_requested
+            })
+            .map(|(gi, g)| (gi, g.uids.clone()))
+            .take(8)
+            .collect()
+    }
+
+    /// Most-loaded replica (live outstanding tokens) that has stealable
+    /// candidates for `thief`.
+    fn pick_victim(&self, thief: usize)
+                   -> Option<(usize, Vec<(usize, Vec<u64>)>)> {
+        let mut best: Option<(usize, u64, Vec<(usize, Vec<u64>)>)> = None;
+        for e in 0..self.engines() {
+            if e == thief {
+                continue;
+            }
+            let cands = self.steal_candidates(e);
+            if cands.is_empty() {
+                continue;
+            }
+            let load = self.live_load[e].load(Ordering::Relaxed);
+            let better = match &best {
+                Some((_, l, _)) => load > *l,
+                None => true,
+            };
+            if better {
+                best = Some((e, load, cands));
+            }
+        }
+        best.map(|(e, _, c)| (e, c))
     }
 
     /// Drive every engine to completion, scoring members with `reward_fn`
@@ -673,11 +1121,72 @@ impl<E: DecodeEngine> RolloutService<E> {
         out
     }
 
+    /// Refresh the shared live-load counters from the inline schedulers
+    /// (the threaded workers publish their own).
+    fn refresh_live_inline(&mut self) {
+        let Backend::Inline(scheds) = &self.backend else {
+            return;
+        };
+        for (e, s) in scheds.iter().enumerate() {
+            self.live_load[e].store(s.outstanding_tokens(),
+                                    Ordering::Relaxed);
+        }
+    }
+
+    /// One steal round for the inline backend: every idle engine (empty
+    /// queue, free slots) takes one whole queued group from the
+    /// most-loaded replica.  Thieves act in engine order, so inline
+    /// stealing is fully deterministic in the workload — the property
+    /// tests replay it against its own log.
+    fn inline_steal_pass(&mut self) {
+        if self.steal != StealPolicy::Idle || self.engines() < 2 {
+            return;
+        }
+        self.refresh_live_inline();
+        for thief in 0..self.engines() {
+            let idle = {
+                let Backend::Inline(scheds) = &self.backend else {
+                    return;
+                };
+                scheds[thief].queue_len() == 0
+                    && scheds[thief].free_slots() > 0
+            };
+            if !idle {
+                continue;
+            }
+            let Some((victim, cands)) = self.pick_victim(thief) else {
+                continue;
+            };
+            for (gi, uids) in cands {
+                let stolen = {
+                    let Backend::Inline(scheds) = &mut self.backend else {
+                        unreachable!()
+                    };
+                    scheds[victim].extract_queued(&uids)
+                };
+                let Some(reqs) = stolen else {
+                    continue;
+                };
+                {
+                    let Backend::Inline(scheds) = &mut self.backend else {
+                        unreachable!()
+                    };
+                    for r in reqs {
+                        scheds[thief].submit(r);
+                    }
+                }
+                self.note_steal(gi, thief);
+                break; // one group per thief per round
+            }
+        }
+    }
+
     fn run_inline<F>(&mut self, reward_fn: &mut F) -> Result<Vec<GroupResult>>
     where
         F: FnMut(usize, &RolloutResult) -> f32,
     {
         loop {
+            self.inline_steal_pass();
             let mut progressed = false;
             for e in 0..self.engines() {
                 let finished = {
@@ -716,11 +1225,74 @@ impl<E: DecodeEngine> RolloutService<E> {
         self.drain_groups()
     }
 
+    /// Send a `Steal` probe on behalf of an idle thief (threaded
+    /// backend).  At most one probe in flight per thief; the victim's
+    /// `Stolen` reply resolves it.  A dead victim channel is left to the
+    /// main loop's dead-worker detection.
+    fn try_steal_threaded(&mut self, thief: usize) {
+        if self.steal != StealPolicy::Idle
+            || self.steal_inflight.contains(&thief)
+            || !self.idle_workers.contains(&thief)
+        {
+            return;
+        }
+        let Some((victim, cands)) = self.pick_victim(thief) else {
+            return;
+        };
+        let candidates: Vec<Vec<u64>> =
+            cands.into_iter().map(|(_, uids)| uids).collect();
+        let sent = {
+            let Backend::Threaded { workers, .. } = &self.backend else {
+                return;
+            };
+            workers[victim]
+                .cmd
+                .send(Command::Steal { thief, candidates })
+                .is_ok()
+        };
+        if sent {
+            self.steal_inflight.insert(thief);
+        }
+    }
+
+    /// Re-probe on behalf of every registered-idle thief.  Called when
+    /// state has actually changed (a finish, a cancel, a successful
+    /// steal) — never on an empty `Stolen` reply, so probes are bounded
+    /// by real progress events and can't livelock.
+    fn retry_steals_threaded(&mut self) {
+        if self.steal != StealPolicy::Idle || self.idle_workers.is_empty() {
+            return;
+        }
+        let idle: Vec<usize> = self.idle_workers.iter().copied().collect();
+        for t in idle {
+            self.try_steal_threaded(t);
+        }
+    }
+
     fn run_threaded<F>(&mut self, reward_fn: &mut F)
                        -> Result<Vec<GroupResult>>
     where
         F: FnMut(usize, &RolloutResult) -> f32,
     {
+        // steal bookkeeping never carries across runs (stale Idle events
+        // from a previous run's tail are harmless: a probe just comes
+        // back empty)
+        self.idle_workers.clear();
+        self.steal_inflight.clear();
+        if self.steal == StealPolicy::Idle {
+            // a worker only announces Idle once per Submit generation, and
+            // a previous drain may have discarded that event — so seed the
+            // set from the service's own view: an engine holding none of
+            // this run's groups is idle by construction
+            let busy: HashSet<usize> =
+                self.groups.iter().map(|g| g.engine).collect();
+            for e in 0..self.engines() {
+                if !busy.contains(&e) {
+                    self.idle_workers.insert(e);
+                    self.try_steal_threaded(e);
+                }
+            }
+        }
         let mut unresolved: usize = self
             .groups
             .iter()
@@ -781,16 +1353,58 @@ impl<E: DecodeEngine> RolloutService<E> {
                                 "engine worker {engine} disappeared"));
                         }
                     }
+                    // a finish may have idled another replica's victim
+                    // view; give registered-idle thieves another look
+                    self.retry_steals_threaded();
                 }
                 Ok(Event::CancelOutcome(uid, Some(partial))) => {
                     if self.by_uid.contains_key(&uid) {
                         self.record_cancel(uid, partial);
                         unresolved -= 1;
+                        self.retry_steals_threaded();
                     }
                 }
                 // the member completed before the cancel landed; its
                 // Finished event resolves it
                 Ok(Event::CancelOutcome(_, None)) => {}
+                Ok(Event::Idle(i)) => {
+                    if self.steal == StealPolicy::Idle {
+                        self.idle_workers.insert(i);
+                        self.try_steal_threaded(i);
+                    }
+                }
+                Ok(Event::Stolen { thief, reqs, .. }) => {
+                    self.steal_inflight.remove(&thief);
+                    if reqs.is_empty() {
+                        // victim had nothing fully queued; the thief
+                        // stays registered and is re-probed on the next
+                        // progress event (never immediately — that would
+                        // spin probe→empty→probe)
+                    } else if self.by_uid.contains_key(&reqs[0].id) {
+                        let gi = self.by_uid[&reqs[0].id].0;
+                        let sent = {
+                            let Backend::Threaded { workers, .. } =
+                                &self.backend
+                            else {
+                                unreachable!()
+                            };
+                            workers[thief]
+                                .cmd
+                                .send(Command::Submit(reqs))
+                                .is_ok()
+                        };
+                        if !sent {
+                            return self.fail(anyhow!(
+                                "engine worker {thief} disappeared with \
+                                 stolen requests in hand"));
+                        }
+                        self.note_steal(gi, thief);
+                        self.idle_workers.remove(&thief);
+                        self.retry_steals_threaded();
+                    }
+                    // uids cleared from by_uid can only come from an
+                    // aborted ledger — the run already failed; drop them
+                }
                 Ok(Event::TickError(i, e)) => {
                     return self.fail(
                         e.context(format!("engine worker {i} tick failed")));
@@ -823,6 +1437,7 @@ impl<E: DecodeEngine> RolloutService<E> {
             g.outcomes[mi] =
                 Some(GroupMember { result: res, reward: Some(reward) });
         }
+        self.debit_if_resolved(gi);
         if !self.prune.enabled {
             return Vec::new();
         }
@@ -868,6 +1483,7 @@ impl<E: DecodeEngine> RolloutService<E> {
             g.pruned = true;
             self.pruned_groups[g.engine] += 1;
         }
+        self.debit_if_resolved(gi);
     }
 
     /// Error recovery: cancel everything outstanding on every engine and
@@ -902,6 +1518,8 @@ impl<E: DecodeEngine> RolloutService<E> {
         }
         self.groups.clear();
         self.by_uid.clear();
+        self.idle_workers.clear();
+        self.steal_inflight.clear();
         for l in &mut self.est_load {
             *l = 0;
         }
@@ -939,20 +1557,26 @@ impl<E: DecodeEngine> RolloutService<E> {
     /// `sched_*` Recorder row per RL step from this.  The undrained
     /// per-replica breakdown stays available via
     /// [`Self::last_engine_stats`].
-    pub fn take_stats(&mut self) -> SchedulerStats {
+    ///
+    /// Errors with a typed [`OutstandingGroupsError`] when called with
+    /// groups outstanding: the threaded drain would swallow in-flight
+    /// `Finished` events and the members could never resolve, so a stats
+    /// drain is only legal between runs (every event still in the
+    /// channel is then a stale straggler and safe to drop).  The inline
+    /// backend enforces the same contract so callers behave identically
+    /// across backends.
+    pub fn take_stats(&mut self) -> Result<SchedulerStats> {
+        if !self.groups.is_empty() {
+            return Err(OutstandingGroupsError {
+                outstanding: self.groups.len(),
+            }
+            .into());
+        }
         let mut per: Vec<SchedulerStats> = match &mut self.backend {
             Backend::Inline(scheds) => {
                 scheds.iter_mut().map(|s| s.take_stats()).collect()
             }
             Backend::Threaded { workers, events } => {
-                // with groups outstanding, workers may be emitting Finished
-                // events right now; the drain below would swallow them and
-                // the members could never resolve — a stats drain is only
-                // legal between runs (every event still in the channel is
-                // then a stale straggler and safe to drop)
-                assert!(self.groups.is_empty(),
-                        "take_stats with {} groups outstanding — drain the \
-                         run first", self.groups.len());
                 let mut expect = 0usize;
                 for w in workers.iter() {
                     if w.cmd.send(Command::TakeStats).is_ok() {
@@ -979,6 +1603,19 @@ impl<E: DecodeEngine> RolloutService<E> {
             p.pruned_groups += *n;
             *n = 0;
         }
+        for (p, n) in per.iter_mut().zip(self.steal_count.iter_mut()) {
+            p.steals += *n;
+            *n = 0;
+        }
+        // per-drain starvation gap: ticks each replica sat out while the
+        // busiest replica still decoded.  Computed from drained counters,
+        // so it is deterministic and backend-uniform — exactly the
+        // straggler gap work stealing exists to close.
+        let max_steps =
+            per.iter().map(|p| p.decode_steps).max().unwrap_or(0);
+        for p in per.iter_mut() {
+            p.idle_ticks += max_steps - p.decode_steps;
+        }
         let mut out = SchedulerStats::default();
         for p in &per {
             out.merge(p);
@@ -986,7 +1623,7 @@ impl<E: DecodeEngine> RolloutService<E> {
         out.wall_s += self.wall_s;
         self.wall_s = 0.0;
         self.last_engine_stats = per;
-        out
+        Ok(out)
     }
 }
 
@@ -1000,15 +1637,17 @@ impl<E: DecodeEngine + 'static> RolloutService<E> {
         assert!(!factories.is_empty(), "service needs at least one engine");
         let n = factories.len();
         let (evt_tx, evt_rx) = mpsc::channel();
+        let live = new_live_load(n);
         let mut workers: Vec<WorkerHandle<E::Weights>> =
             Vec::with_capacity(n);
         for (i, f) in factories.into_iter().enumerate() {
             let (cmd_tx, cmd_rx) = mpsc::channel();
             let tx = evt_tx.clone();
+            let lv = live.clone();
             let join = std::thread::Builder::new()
                 .name(format!("rollout-w{i}"))
                 .spawn(move || {
-                    worker_loop::<E>(i, f, cmd_rx, tx, max_seq, eos_id)
+                    worker_loop::<E>(i, f, cmd_rx, tx, max_seq, eos_id, lv)
                 })?;
             workers.push(WorkerHandle { cmd: cmd_tx, join: Some(join) });
         }
@@ -1057,7 +1696,8 @@ impl<E: DecodeEngine + 'static> RolloutService<E> {
             return Err(e);
         }
         Ok(Self::with_backend(
-            Backend::Threaded { workers, events: evt_rx }, n, max_seq))
+            Backend::Threaded { workers, events: evt_rx }, n, max_seq,
+            live))
     }
 }
 
@@ -1159,7 +1799,7 @@ mod tests {
             assert!(!gr.pruned);
             assert!(gr.members.iter().all(|m| m.reward.is_some()));
         }
-        let st = svc.take_stats();
+        let st = svc.take_stats().unwrap();
         assert_eq!(st.submitted, n_groups * g);
         assert_eq!(st.completed, st.submitted);
         assert_eq!(st.cancelled, 0);
@@ -1172,7 +1812,7 @@ mod tests {
             svc.last_engine_stats().iter().map(|s| s.submitted).sum();
         assert_eq!(sub, st.submitted);
         // second take_stats is empty (drained)
-        assert_eq!(svc.take_stats().submitted, 0);
+        assert_eq!(svc.take_stats().unwrap().submitted, 0);
     }
 
     /// A reward that is constant for some groups and member-dependent for
@@ -1202,7 +1842,7 @@ mod tests {
                 .unwrap();
             let tokens: usize =
                 results.iter().map(|r| r.generated_tokens()).sum();
-            (results, svc.take_stats(), tokens)
+            (results, svc.take_stats().unwrap(), tokens)
         };
         let (pruned_res, pruned_st, pruned_tokens) = run(true);
         let (plain_res, plain_st, plain_tokens) = run(false);
@@ -1279,7 +1919,8 @@ mod tests {
         let b = workload(&mut threaded);
         assert_eq!(fingerprint(&a), fingerprint(&b),
                    "threaded execution changed rollout outputs");
-        let (sa, sb) = (inline.take_stats(), threaded.take_stats());
+        let (sa, sb) = (inline.take_stats().unwrap(),
+                        threaded.take_stats().unwrap());
         assert_eq!(sa.submitted, sb.submitted);
         assert_eq!(sa.completed, sb.completed);
         assert_eq!(sa.generated_tokens, sb.generated_tokens);
@@ -1348,7 +1989,7 @@ mod tests {
         let mut baseline = service(2, 4);
         submit_all(&mut baseline);
         let out0 = fingerprint(&baseline.run(|_, _| 0.0).unwrap());
-        assert_eq!(baseline.take_stats().weight_epoch, 0);
+        assert_eq!(baseline.take_stats().unwrap().weight_epoch, 0);
 
         let mut swapped = service(2, 4);
         assert_eq!(swapped.weight_epoch(), WeightEpoch(0));
@@ -1357,7 +1998,7 @@ mod tests {
         submit_all(&mut swapped);
         let out1 = fingerprint(&swapped.run(|_, _| 0.0).unwrap());
         assert_ne!(out0, out1, "weight swap did not change outputs");
-        let st = swapped.take_stats();
+        let st = swapped.take_stats().unwrap();
         assert_eq!(st.weight_epoch, 1);
         assert!(swapped
             .last_engine_stats()
@@ -1366,7 +2007,7 @@ mod tests {
         // the epoch level survives the drain (it is not a per-run delta)
         swapped.submit_group(spec(9, 9, 2, 0.0));
         swapped.run(|_, _| 0.0).unwrap();
-        assert_eq!(swapped.take_stats().weight_epoch, 1);
+        assert_eq!(swapped.take_stats().unwrap().weight_epoch, 1);
     }
 
     /// Hot requantization, threaded backend: a swap pushed while groups
@@ -1383,7 +2024,7 @@ mod tests {
         let results = svc.run(|_, res| res.generated.len() as f32).unwrap();
         assert_eq!(results.len(), 6);
         assert!(results.iter().all(|r| r.complete()));
-        let st = svc.take_stats();
+        let st = svc.take_stats().unwrap();
         assert_eq!(st.completed, st.submitted);
         assert_eq!(st.weight_epoch, 1);
     }
@@ -1403,7 +2044,7 @@ mod tests {
             svc.submit_group(spec(gid, gid as i32, 2, 0.0));
         }
         assert!(svc.run(|_, _| 0.0).is_err(), "injected failure vanished");
-        let st = svc.take_stats();
+        let st = svc.take_stats().unwrap();
         assert_eq!(st.submitted, 4);
         assert_eq!(st.completed + st.cancelled, st.submitted,
                    "aborted run unbalanced the ledger");
@@ -1414,7 +2055,7 @@ mod tests {
         let results = svc.run(|_, _| 0.0).unwrap();
         assert_eq!(results.len(), 3);
         assert!(results.iter().all(|r| r.complete()));
-        let st = svc.take_stats();
+        let st = svc.take_stats().unwrap();
         assert_eq!(st.completed, st.submitted);
     }
 
@@ -1443,7 +2084,7 @@ mod tests {
             svc.submit_group(spec(gid, gid as i32, 2, 0.0));
         }
         assert!(svc.run(|_, _| 0.0).is_err(), "worker failure vanished");
-        let st = svc.take_stats();
+        let st = svc.take_stats().unwrap();
         assert_eq!(st.completed + st.cancelled, st.submitted,
                    "aborted threaded run unbalanced the ledger");
         // same workers, fresh workload
@@ -1453,7 +2094,7 @@ mod tests {
         let results = svc.run(|_, _| 0.0).unwrap();
         assert_eq!(results.len(), 4);
         assert!(results.iter().all(|r| r.complete()));
-        let st = svc.take_stats();
+        let st = svc.take_stats().unwrap();
         assert_eq!(st.completed, st.submitted);
     }
 
@@ -1484,7 +2125,7 @@ mod tests {
             }
             let results = svc.run(|_, res| res.generated.len() as f32);
             let fp = fingerprint(&results.unwrap());
-            (fp, svc.take_stats())
+            (fp, svc.take_stats().unwrap())
         };
         let (dense, dense_st) = run(false, false);
         let (paged, paged_st) = run(true, false);
@@ -1517,5 +2158,275 @@ mod tests {
         let err =
             RolloutService::<MockEngine>::threaded(factories, MAX_SEQ, EOS);
         assert!(err.is_err(), "startup failure was swallowed");
+    }
+
+    // ---- work stealing + placement log -------------------------------
+
+    /// Straggler workload: `long` groups decode ~22 ticks per member,
+    /// `short` groups ~2, but both carry the same submission-time cost
+    /// estimate (`min(prompt+max_new, max_seq) × group_size = 48`), so
+    /// least-loaded deterministically alternates them — every long group
+    /// piles onto engine 0 while engine 1 drains early and sits idle.
+    /// eos 127 is outside the vocab: lengths are exact, no lucky EOS.
+    fn long_spec(gid: usize) -> GroupSpec {
+        GroupSpec {
+            group_id: gid,
+            prompt: vec![1, 5],
+            group_size: 2,
+            max_new: 24, // budget min(2+24, 24) = 24 → 22 decode ticks
+            temperature: 1.0,
+            top_p: 1.0,
+            seed: 0xA11CE ^ ((gid as u64) << 8),
+        }
+    }
+
+    fn short_spec(gid: usize) -> GroupSpec {
+        GroupSpec {
+            group_id: gid,
+            prompt: (0..22i32).map(|t| 1 + (t % 5)).collect(),
+            group_size: 2,
+            max_new: 24, // budget min(22+24, 24) = 24 → 2 decode ticks
+            temperature: 0.0,
+            top_p: 1.0,
+            seed: 0xBEE ^ ((gid as u64) << 8),
+        }
+    }
+
+    fn skew_service() -> RolloutService<MockEngine> {
+        let engines: Vec<MockEngine> = (0..2)
+            .map(|_| MockEngine::new(4, VOCAB, MAX_SEQ, 127))
+            .collect();
+        RolloutService::new(engines, MAX_SEQ, 127)
+    }
+
+    fn submit_skew(svc: &mut RolloutService<MockEngine>) {
+        for k in 0..4 {
+            svc.submit_group(long_spec(2 * k));
+            svc.submit_group(short_spec(2 * k + 1));
+        }
+    }
+
+    #[test]
+    fn policy_parsing_roundtrips() {
+        assert_eq!(StripePolicy::parse("replay"),
+                   Some(StripePolicy::Replay));
+        assert_eq!(StripePolicy::parse("bogus"), None);
+        for p in [StripePolicy::RoundRobin, StripePolicy::LeastLoaded,
+                  StripePolicy::Replay] {
+            assert_eq!(StripePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(StealPolicy::parse("bogus"), None);
+        for p in [StealPolicy::Off, StealPolicy::Idle] {
+            assert_eq!(StealPolicy::parse(p.name()), Some(p));
+        }
+        for r in [PlacementReason::Place, PlacementReason::Steal] {
+            assert_eq!(PlacementReason::parse(r.name()), Some(r));
+        }
+    }
+
+    /// Satellite: `take_stats` mid-run is a typed error — the caller can
+    /// downcast it, the count is reported, and draining the run makes
+    /// the stats drain legal again.  Both backends enforce the contract.
+    #[test]
+    fn take_stats_mid_run_is_a_typed_error() {
+        let mut svc = service(1, 2);
+        svc.submit_group(spec(0, 0, 2, 0.0));
+        let err = svc.take_stats().unwrap_err();
+        let typed = err
+            .downcast_ref::<OutstandingGroupsError>()
+            .expect("error is not the typed OutstandingGroupsError");
+        assert_eq!(typed.outstanding, 1);
+        svc.run(|_, _| 0.0).unwrap();
+        assert_eq!(svc.take_stats().unwrap().submitted, 2);
+
+        let mut thr = threaded_service(2, 2);
+        thr.submit_group(spec(1, 1, 2, 0.0));
+        let err = thr.take_stats().unwrap_err();
+        assert!(err.downcast_ref::<OutstandingGroupsError>().is_some());
+        thr.run(|_, _| 0.0).unwrap();
+        assert!(thr.take_stats().is_ok());
+    }
+
+    #[test]
+    fn placement_log_json_roundtrip_and_final_engine() {
+        let mut log = PlacementLog::default();
+        log.push(0, 0, 0, PlacementReason::Place);
+        log.push(1, 1, 1, PlacementReason::Place);
+        log.push(1, 1, 0, PlacementReason::Steal);
+        let text = log.to_json().to_string();
+        let back =
+            PlacementLog::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(log, back, "JSON round trip changed the log");
+        assert_eq!(back.steals(), 1);
+        assert_eq!(back.final_engine(0), Some(0));
+        assert_eq!(back.final_engine(1), Some(0), "last record wins");
+        assert_eq!(back.final_engine(7), None);
+        assert!(PlacementLog::from_json(&Json::parse("{}").unwrap())
+                    .is_err());
+    }
+
+    /// The tentpole perf claim, enforced: on the skewed straggler
+    /// workload, `steal idle` strictly beats plain least-loaded on decode
+    /// ticks-to-drain (max per-engine decode steps), while producing
+    /// bit-identical member outputs — stealing moves *where* queued work
+    /// runs, never *what* it produces.
+    #[test]
+    fn steal_rebalances_stragglers_and_beats_least_loaded() {
+        let run = |steal: StealPolicy| {
+            let mut svc = skew_service();
+            svc.stripe = StripePolicy::LeastLoaded;
+            svc.steal = steal;
+            submit_skew(&mut svc);
+            let results = svc.run(|_, res| res.generated.len() as f32)
+                             .unwrap();
+            let st = svc.take_stats().unwrap();
+            let per: Vec<usize> = svc
+                .last_engine_stats()
+                .iter()
+                .map(|s| s.decode_steps)
+                .collect();
+            let out: Vec<_> = fingerprint(&results)
+                .into_iter()
+                .map(|(t, l, f, r, _)| (t, l, f, r)) // placement may move
+                .collect();
+            (out, st, per)
+        };
+        let (ll_out, ll_st, ll_per) = run(StealPolicy::Off);
+        let (steal_out, steal_st, steal_per) = run(StealPolicy::Idle);
+        assert_eq!(ll_out, steal_out,
+                   "stealing changed member outputs");
+        assert_eq!(steal_st.completed, steal_st.submitted);
+        assert_eq!(ll_st.steals, 0);
+        assert!(steal_st.steals >= 1, "no group was ever stolen");
+        // least-loaded piles all long groups on engine 0; engine 1 idles
+        assert!(ll_st.idle_ticks > 0, "straggler gap not observed");
+        let ll_ticks = *ll_per.iter().max().unwrap();
+        let steal_ticks = *steal_per.iter().max().unwrap();
+        assert!(steal_ticks < ll_ticks,
+                "stealing did not cut ticks-to-drain: {steal_ticks} vs \
+                 {ll_ticks}");
+        let ll_imb = SchedulerStats::load_imbalance(
+            &ll_per.iter().map(|&d| SchedulerStats {
+                decode_steps: d,
+                ..SchedulerStats::default()
+            }).collect::<Vec<_>>());
+        let steal_imb = SchedulerStats::load_imbalance(
+            &steal_per.iter().map(|&d| SchedulerStats {
+                decode_steps: d,
+                ..SchedulerStats::default()
+            }).collect::<Vec<_>>());
+        assert!(steal_imb < ll_imb,
+                "stealing did not reduce load imbalance: {steal_imb} vs \
+                 {ll_imb}");
+    }
+
+    /// The tentpole determinism claim, inline: replaying a stolen run's
+    /// placement log (through a JSON round trip) reproduces the run
+    /// bit-for-bit — tokens, logprobs, rewards AND engine attribution —
+    /// with stealing off.  Placement became data.
+    #[test]
+    fn replay_reproduces_stolen_run_bitwise() {
+        let mut stolen = skew_service();
+        stolen.stripe = StripePolicy::LeastLoaded;
+        stolen.steal = StealPolicy::Idle;
+        submit_skew(&mut stolen);
+        let a = stolen.run(|_, res| res.generated.len() as f32).unwrap();
+        assert!(stolen.placement_log().steals() > 0,
+                "workload produced no steals to replay");
+        let text = stolen.placement_log().to_json().to_string();
+        let log =
+            PlacementLog::from_json(&Json::parse(&text).unwrap()).unwrap();
+
+        let mut replayed = skew_service();
+        replayed.set_replay(log.clone());
+        assert_eq!(replayed.stripe, StripePolicy::Replay);
+        // steal stays Off: the log alone must reproduce the placement
+        submit_skew(&mut replayed);
+        let b = replayed.run(|_, res| res.generated.len() as f32).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b),
+                   "replay diverged from the recorded stolen run");
+        // groups land directly on their recorded final engines
+        for (uid, gr) in b.iter().enumerate() {
+            assert_eq!(log.final_engine(uid as u64), Some(gr.engine));
+        }
+        // replaying needs no steals of its own
+        assert_eq!(replayed.placement_log().steals(), 0);
+    }
+
+    /// Threaded stealing: whatever the thread timing did, the ledger
+    /// balances, the steal count matches the log, and replaying the log
+    /// on an inline service reproduces every member bit-for-bit —
+    /// including engine attribution of stolen groups.
+    #[test]
+    fn threaded_steal_keeps_ledger_and_replays_bitwise() {
+        let reward = |gid: usize, res: &RolloutResult| {
+            (gid % 3) as f32 + (res.generated.len() % 2) as f32
+        };
+        let mut svc = threaded_service(3, 3);
+        svc.stripe = StripePolicy::LeastLoaded;
+        svc.steal = StealPolicy::Idle;
+        for gid in 0..9 {
+            let temp = if gid % 2 == 0 { 0.0 } else { 1.0 };
+            svc.submit_group(spec(gid, gid as i32, 4, temp));
+        }
+        let a = svc.run(&mut |gid, res: &RolloutResult| reward(gid, res))
+                   .unwrap();
+        assert_eq!(a.len(), 9);
+        assert!(a.iter().all(|g| g.complete()));
+        let st = svc.take_stats().unwrap();
+        assert_eq!(st.completed, st.submitted,
+                   "stealing unbalanced the ledger");
+        assert_eq!(st.steals, svc.placement_log().steals(),
+                   "stats and log disagree on steal count");
+
+        let mut replayed = service(3, 3);
+        replayed.set_replay(svc.placement_log().clone());
+        for gid in 0..9 {
+            let temp = if gid % 2 == 0 { 0.0 } else { 1.0 };
+            replayed.submit_group(spec(gid, gid as i32, 4, temp));
+        }
+        let b = replayed
+            .run(&mut |gid, res: &RolloutResult| reward(gid, res))
+            .unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b),
+                   "inline replay diverged from the threaded stolen run");
+    }
+
+    /// Stealing composed with online pruning and paged KV: whole-group
+    /// moves never race a prune cancel (candidates have zero finishes),
+    /// the merged ledger balances, and the page ledger stays leak-free.
+    #[test]
+    fn steal_with_pruning_and_paged_kv_stays_leak_free() {
+        let engines: Vec<MockEngine> = (0..2)
+            .map(|_| MockEngine::new(3, VOCAB, MAX_SEQ, EOS))
+            .collect();
+        let mut svc = RolloutService::new(engines, MAX_SEQ, EOS);
+        svc.stripe = StripePolicy::LeastLoaded;
+        svc.steal = StealPolicy::Idle;
+        svc.prune = PrunePolicy::online(2);
+        svc.set_kv(KvConfig {
+            layout: KvLayout::Paged,
+            page_size: 4,
+            budget_pages: Some(8),
+        });
+        for gid in 0..6 {
+            svc.submit_group(spec(gid, gid as i32, 6, 1.0));
+        }
+        let results = svc
+            .run(|gid, res| {
+                if gid % 2 == 0 {
+                    1.0 // uniform → pruned once decided
+                } else {
+                    (res.generated.len() % 3) as f32
+                }
+            })
+            .unwrap();
+        assert_eq!(results.len(), 6);
+        let st = svc.take_stats().unwrap();
+        assert_eq!(st.completed + st.cancelled, st.submitted,
+                   "steal + prune unbalanced the ledger");
+        assert!(st.cancelled > 0, "pruning never engaged");
+        assert_eq!(st.kv_pages_freed, st.kv_pages_allocated,
+                   "steal + prune leaked KV pages");
     }
 }

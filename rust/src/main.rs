@@ -17,7 +17,8 @@ use anyhow::{Context, Result};
 
 use qurl::config;
 use qurl::coordinator::{EngineFactory, GroupSpec, KvConfig, KvLayout,
-                        RolloutService, StepEngine, StripePolicy};
+                        PlacementLog, RolloutService, StealPolicy,
+                        StepEngine, StripePolicy};
 use qurl::metrics::Recorder;
 use qurl::perfmodel::{self, DecodeConfig, Precision};
 use qurl::quant::analysis;
@@ -147,10 +148,19 @@ fn train_cli() -> Cli {
               replica, parallel decode; outputs bit-identical) \
               (inline|threaded; default preset)")
         .opt("stripe", "",
-             "group placement across engine replicas: rr (round-robin) or \
+             "group placement across engine replicas: rr (round-robin), \
               least-loaded (fewest estimated outstanding decode tokens, \
-              prompt-length + max_new aware) (rr|least-loaded; default \
-              preset)")
+              prompt-length + max_new aware) or replay (re-execute a \
+              recorded --placement-log bit-identically) \
+              (rr|least-loaded|replay; default preset)")
+        .opt("steal", "",
+             "work stealing across engine replicas: idle replicas pull \
+              whole queued groups off the most-loaded one, using live \
+              outstanding-token counters (off|idle; default preset)")
+        .opt("placement-log", "",
+             "placement log JSON path: with --stripe replay it is loaded \
+              and re-executed; otherwise every placement/steal is recorded \
+              there after each rollout wave (empty = off)")
         .opt("min-prefill-batch", "0",
              "scheduler admission floor: wait until this many requests can \
               prefill together (0 = preset)")
@@ -213,7 +223,14 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     if !args.str("stripe").is_empty() {
         cfg.rollout_stripe = StripePolicy::parse(&args.str("stripe"))
-            .context("bad --stripe (rr|least-loaded)")?;
+            .context("bad --stripe (rr|least-loaded|replay)")?;
+    }
+    if !args.str("steal").is_empty() {
+        cfg.rollout_steal = StealPolicy::parse(&args.str("steal"))
+            .context("bad --steal (off|idle)")?;
+    }
+    if !args.str("placement-log").is_empty() {
+        cfg.placement_log = args.str("placement-log");
     }
     if args.usize("min-prefill-batch") > 0 {
         cfg.min_prefill_batch = args.usize("min-prefill-batch");
@@ -329,7 +346,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("exec", "inline",
              "execution backend: inline or threaded (one worker thread \
               per engine replica)")
-        .opt("stripe", "rr", "group placement: rr|least-loaded")
+        .opt("stripe", "rr", "group placement: rr|least-loaded|replay")
+        .opt("steal", "off",
+             "work stealing: idle replicas pull queued groups off the \
+              most-loaded one (off|idle)")
+        .opt("placement-log", "",
+             "placement log JSON: loaded under --stripe replay, dumped \
+              after the run otherwise (empty = off)")
         .opt("max-new", "48", "max generated tokens per request")
         .opt("min-batch", "8", "dynamic-batching admission threshold")
         .opt("kv", "dense", "KV bookkeeping layout: dense|paged")
@@ -352,7 +375,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let exec = RolloutExec::parse(&args.str("exec"))
         .context("bad --exec (inline|threaded)")?;
     let stripe = StripePolicy::parse(&args.str("stripe"))
-        .context("bad --stripe (rr|least-loaded)")?;
+        .context("bad --stripe (rr|least-loaded|replay)")?;
+    let steal = StealPolicy::parse(&args.str("steal"))
+        .context("bad --steal (off|idle)")?;
+    let log_path = args.str("placement-log");
     let mut svc = match exec {
         RolloutExec::Inline => {
             let engines: Vec<StepEngine> = (0..n_engines)
@@ -369,6 +395,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         }
     };
     svc.stripe = stripe;
+    svc.steal = steal;
+    if stripe == StripePolicy::Replay {
+        anyhow::ensure!(!log_path.is_empty(),
+                        "--stripe replay needs --placement-log <path>");
+        svc.set_replay(PlacementLog::load(Path::new(&log_path))?);
+    }
     svc.set_min_prefill_batch(args.usize("min-batch"));
     let kv_layout = KvLayout::parse(&args.str("kv"))
         .context("bad --kv (dense|paged)")?;
@@ -399,7 +431,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         });
     }
     let results = svc.run(|_, _| 0.0)?;
-    let st = svc.take_stats();
+    if !log_path.is_empty() && stripe != StripePolicy::Replay {
+        svc.placement_log().save(Path::new(&log_path))?;
+        println!("placement log ({} records, {} steals) -> {log_path}",
+                 svc.placement_log().records.len(),
+                 svc.placement_log().steals());
+    }
+    let st = svc.take_stats()?;
     let served: usize = results.iter().map(|g| g.members.len()).sum();
     println!("served {served} requests ({n} groups x {group}, {n_engines} \
               engine(s), {} exec, {} striping): {:.1} tok/s, mean \
@@ -415,6 +453,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              kv_layout.name(), args.usize("kv-page-size").max(1),
              st.kv_pages_allocated, st.kv_pages_freed, st.kv_pages_shared,
              st.kv_pages_cow, st.kv_pages_high_water, st.prefill_chunks);
+    println!("  placement (steal {}): {} steals, {} summed idle ticks",
+             steal.name(), st.steals, st.idle_ticks);
     if n_engines > 1 {
         for (i, es) in svc.last_engine_stats().iter().enumerate() {
             println!("  engine {i}: {} decode calls, {} tokens, occupancy \

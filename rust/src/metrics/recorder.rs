@@ -16,6 +16,13 @@
 //! | `sched_forked`            | KV rows forked instead of prefilled         |
 //! | `sched_cancelled`         | requests cancelled in flight (pruning)      |
 //! | `sched_pruned_groups`     | groups whose remainder was pruned           |
+//! | `sched_steals`            | whole queued groups an idle replica pulled  |
+//! |                           | off the most-loaded one (`--steal idle`;    |
+//! |                           | every steal is in the placement log)        |
+//! | `sched_idle_ticks`        | summed decode-tick deficit vs. the busiest  |
+//! |                           | replica per drain (0 = replicas drained in  |
+//! |                           | lockstep — the straggler gap stealing       |
+//! |                           | exists to close)                            |
 //! | `sched_decode_calls`      | lockstep decode artifact calls              |
 //! | `sched_generated_tokens`  | decode tokens emitted (incl. partials)      |
 //! | `sched_tokens_per_s`      | tokens / service wall time                  |
@@ -51,9 +58,14 @@
 //! |                           | pressure; above the configured budget =     |
 //! |                           | admission overdraw from in-flight growth)   |
 //!
-//! With more than one engine replica the same row carries a per-replica
-//! breakdown so striping imbalance is visible at a glance:
-//! `sched_e{i}_occupancy`, `sched_e{i}_decode_calls`,
+//! With more than one engine replica the same row carries
+//! `sched_load_imbalance` — the max/min ratio of per-replica decode
+//! ticks ([`SchedulerStats::load_imbalance`]
+//! (crate::coordinator::SchedulerStats::load_imbalance); 1.0 = perfectly
+//! balanced) — plus a per-replica breakdown so striping imbalance is
+//! visible at a glance:
+//! `sched_e{i}_occupancy`, `sched_e{i}_idle_ticks`,
+//! `sched_e{i}_decode_calls`,
 //! `sched_e{i}_generated_tokens`, `sched_e{i}_pruned_groups`,
 //! `sched_e{i}_weight_epoch`, `sched_e{i}_kv_pages_active` and
 //! `sched_e{i}_kv_pages_high_water` for engine index `i` (0-based,

@@ -11,8 +11,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::{EngineFactory, GroupSpec, KvConfig, KvLayout,
-                         PrunePolicy, RolloutService, SchedulerStats,
-                         StepEngine, StripePolicy};
+                         PlacementLog, PrunePolicy, RolloutService,
+                         SchedulerStats, StealPolicy, StepEngine,
+                         StripePolicy};
 use crate::coordinator::request::RolloutResult;
 use crate::coordinator::service::{GroupMember, GroupResult};
 use crate::metrics::{Recorder, Row};
@@ -175,10 +176,21 @@ pub struct TrainerConfig {
     /// ticks all schedulers) or `threaded` (one worker thread per replica,
     /// parallel decode)
     pub rollout_exec: RolloutExec,
-    /// group-placement policy across engine replicas: blind round-robin or
+    /// group-placement policy across engine replicas: blind round-robin,
     /// least-loaded (estimated outstanding decode tokens,
-    /// prompt-length + max_new aware)
+    /// prompt-length + max_new aware) or `replay` (re-execute the
+    /// recorded placement log at `placement_log`)
     pub rollout_stripe: StripePolicy,
+    /// work stealing across engine replicas: `off` (placement final at
+    /// submission) or `idle` (an idle replica pulls whole queued groups
+    /// off the most-loaded one; every move is recorded in the placement
+    /// log, so the run stays reproducible via `--stripe replay`)
+    pub rollout_steal: StealPolicy,
+    /// placement-log JSON path: with `rollout_stripe == Replay` it is
+    /// *loaded* and drives placement; otherwise, when non-empty, the
+    /// recorded log is *dumped* there after every rollout call
+    /// (cumulative — the last write holds the whole run).  Empty = off.
+    pub placement_log: String,
     /// scheduler admission floor: wait until this many requests can
     /// prefill together (1 = admit eagerly)
     pub min_prefill_batch: usize,
@@ -228,6 +240,8 @@ impl Default for TrainerConfig {
             rollout_engines: 1,
             rollout_exec: RolloutExec::Inline,
             rollout_stripe: StripePolicy::RoundRobin,
+            rollout_steal: StealPolicy::Off,
+            placement_log: String::new(),
             min_prefill_batch: 1,
             kv_layout: KvLayout::Dense,
             kv_page_size: 16,
@@ -399,6 +413,15 @@ impl Trainer {
             }
         };
         svc.stripe = self.cfg.rollout_stripe;
+        svc.steal = self.cfg.rollout_steal;
+        if self.cfg.rollout_stripe == StripePolicy::Replay {
+            anyhow::ensure!(!self.cfg.placement_log.is_empty(),
+                            "--stripe replay needs --placement-log <path> \
+                             to load the recorded log from");
+            let log = PlacementLog::load(
+                std::path::Path::new(&self.cfg.placement_log))?;
+            svc.set_replay(log);
+        }
         svc.set_min_prefill_batch(self.cfg.min_prefill_batch);
         svc.set_kv(KvConfig {
             layout: self.cfg.kv_layout,
@@ -559,8 +582,14 @@ impl Trainer {
             let text = tk.decode(&res.generated);
             crate::tasks::verify(groups[gid].prob, &text)
         })?;
-        let stats = svc.take_stats();
+        let stats = svc.take_stats()?;
         let per_engine = svc.last_engine_stats().to_vec();
+        if !self.cfg.placement_log.is_empty()
+            && self.cfg.rollout_stripe != StripePolicy::Replay
+        {
+            svc.placement_log()
+                .save(std::path::Path::new(&self.cfg.placement_log))?;
+        }
         self.sched_stats
             .get_or_insert_with(SchedulerStats::default)
             .merge(&stats);
@@ -857,6 +886,12 @@ impl Trainer {
                 .set("sched_forked", st.forked as f64)
                 .set("sched_cancelled", st.cancelled as f64)
                 .set("sched_pruned_groups", st.pruned_groups as f64)
+                // work-stealing observability: groups migrated off the
+                // most-loaded replica this step, and the summed per-engine
+                // decode-tick deficit vs. the slowest replica (0 when every
+                // replica drains in lockstep).
+                .set("sched_steals", st.steals as f64)
+                .set("sched_idle_ticks", st.idle_ticks as f64)
                 .set("sched_decode_calls", st.decode_calls as f64)
                 .set("sched_generated_tokens", st.generated_tokens as f64)
                 .set("sched_tokens_per_s", st.tokens_per_s())
@@ -884,10 +919,14 @@ impl Trainer {
                 .tag("phase", "rollout");
             let per = std::mem::take(&mut self.sched_engine_stats);
             if per.len() > 1 {
+                row = row.set("sched_load_imbalance",
+                              SchedulerStats::load_imbalance(&per));
                 for (i, es) in per.iter().enumerate() {
                     row = row
                         .set(&format!("sched_e{i}_occupancy"),
                              es.mean_occupancy())
+                        .set(&format!("sched_e{i}_idle_ticks"),
+                             es.idle_ticks as f64)
                         .set(&format!("sched_e{i}_decode_calls"),
                              es.decode_calls as f64)
                         .set(&format!("sched_e{i}_generated_tokens"),

@@ -537,7 +537,7 @@ fn service_pruning_saves_decode_with_artifacts() {
             })
             .unwrap();
         assert_eq!(results.len(), n_groups);
-        (svc.take_stats(), results)
+        (svc.take_stats().unwrap(), results)
     };
     let (service, service_res) = run(true);
     let (plain, plain_res) = run(false);

@@ -5,8 +5,9 @@ use std::sync::Arc;
 
 use qurl::coordinator::{EngineFactory, FinishReason, GroupSpec, KvConfig,
                         KvLayout, KvPager, MockEngine, PageAllocator,
-                        PrunePolicy, RolloutRequest, RolloutService,
-                        Scheduler, SlotMap, StripePolicy};
+                        PlacementLog, PrunePolicy, RolloutRequest,
+                        RolloutService, Scheduler, SlotMap, StealPolicy,
+                        StripePolicy};
 use qurl::rl::advantage;
 use qurl::rl::dapo;
 use qurl::rl::objective::{surrogate_token, Objective, ObjectiveKind};
@@ -503,7 +504,7 @@ fn prop_paged_matches_dense_across_backends_and_stripes() {
             if fd != fp || fd != ft {
                 return false; // page layout changed completed outputs
             }
-            let st = paged.take_stats();
+            let st = paged.take_stats().unwrap();
             if st.kv_pages_freed != st.kv_pages_allocated {
                 return false; // gated admission leaked pages
             }
@@ -551,7 +552,7 @@ fn service_prunes_and_forks_beat_plain_scheduler() {
             if gid % 3 == 0 { 1.0 } else { (res.generated.len() % 2) as f32 }
         }).unwrap();
         assert_eq!(results.len(), n_groups);
-        (svc.take_stats(), results)
+        (svc.take_stats().unwrap(), results)
     };
     let (service, service_res) = run(true);
     let (plain, plain_res) = run(false);
@@ -632,7 +633,7 @@ fn prop_service_groups_resolve() {
                 return false; // scored <=> completed
             }
         }
-        let st = svc.take_stats();
+        let st = svc.take_stats().unwrap();
         st.submitted == submitted
             && st.completed + st.cancelled == st.submitted
     });
@@ -861,7 +862,7 @@ fn threaded_pruning_cancels_across_threads_and_saves_tokens() {
         }
         let tokens: usize =
             results.iter().map(|r| r.generated_tokens()).sum();
-        (svc.take_stats(), tokens)
+        (svc.take_stats().unwrap(), tokens)
     };
     let (pruned, pruned_tokens) = run(true);
     let (plain, plain_tokens) = run(false);
@@ -877,6 +878,168 @@ fn threaded_pruning_cancels_across_threads_and_saves_tokens() {
     assert!(pruned_tokens < plain_tokens,
             "threaded pruning saved no decode tokens: {pruned_tokens} vs \
              {plain_tokens}");
+}
+
+/// Work stealing never changes WHAT is generated, and its placement log
+/// makes WHERE reproducible: over random group mixes with skewed decode
+/// lengths (no pruning), an inline least-loaded run with `--steal idle`
+/// must (a) produce the same completed outputs as the identical run with
+/// stealing off, modulo engine attribution, (b) keep the merged ledger
+/// balanced and the paged-KV allocator leak-free, and (c) be reproduced
+/// bit-for-bit — INCLUDING engine attribution — by replaying its
+/// JSON-round-tripped placement log on a fresh service.
+#[test]
+fn prop_steal_replay_bit_identical() {
+    let max_seq = 16usize;
+    type Key = (usize, Vec<i32>, Vec<u32>, FinishReason, Option<u32>);
+    // ((engines, slots), [(group_size, temp_bit); n])
+    let g = Pair(Pair(UsizeIn(2, 3), UsizeIn(1, 3)),
+                 VecOf(Pair(UsizeIn(1, 5), UsizeIn(0, 1)), 2, 10));
+    assert_prop("steal-replay-parity", 0x57EA1, 60, &g,
+                |((engines, slots), groups)| {
+        let n_eng = (*engines).max(2);
+        let slots = (*slots).max(1);
+        let build = || -> RolloutService<MockEngine> {
+            let engs: Vec<MockEngine> = (0..n_eng)
+                .map(|_| MockEngine::new(slots, 8, max_seq, 2))
+                .collect();
+            let mut svc = RolloutService::new(engs, max_seq, 2);
+            svc.stripe = StripePolicy::LeastLoaded;
+            svc.set_kv(KvConfig {
+                layout: KvLayout::Paged,
+                page_size: 4,
+                budget_pages: None,
+            });
+            svc
+        };
+        let fingerprint = |svc: &mut RolloutService<MockEngine>|
+                          -> Vec<Key> {
+            for (gid, &(sz, temp)) in groups.iter().enumerate() {
+                svc.submit_group(GroupSpec {
+                    group_id: gid,
+                    prompt: vec![3 + (gid as i32 % 5); 2 + gid % 3],
+                    group_size: sz.max(1),
+                    // skewed decode budgets: even groups run ~9x longer,
+                    // the straggler shape stealing exists for
+                    max_new: if gid % 2 == 0 { 9 } else { 1 },
+                    temperature: temp as f32,
+                    top_p: 1.0,
+                    seed: 0x57 ^ ((gid as u64) << 8),
+                });
+            }
+            let results = svc.run(|gid, _| (gid % 2) as f32).unwrap();
+            results
+                .iter()
+                .flat_map(|gr| gr.members.iter().map(move |m| {
+                    (gr.engine,
+                     m.result.generated.clone(),
+                     m.result.logprobs.iter().map(|l| l.to_bits())
+                         .collect::<Vec<u32>>(),
+                     m.result.finish,
+                     m.reward.map(|r| r.to_bits()))
+                }))
+                .collect()
+        };
+        // the recorded stolen run
+        let mut stolen = build();
+        stolen.steal = StealPolicy::Idle;
+        let fs = fingerprint(&mut stolen);
+        let st = stolen.take_stats().unwrap();
+        if st.completed + st.cancelled != st.submitted
+            || st.kv_pages_freed != st.kv_pages_allocated
+        {
+            return false; // stealing unbalanced a ledger
+        }
+        // same outputs with stealing off, modulo engine attribution
+        let mut plain = build();
+        let fp = fingerprint(&mut plain);
+        if fs.len() != fp.len()
+            || !fs.iter().zip(&fp).all(|(a, b)| {
+                (&a.1, &a.2, a.3, a.4) == (&b.1, &b.2, b.3, b.4)
+            })
+        {
+            return false; // stealing changed completed outputs
+        }
+        // replay the log (JSON round-tripped) on a fresh service:
+        // bit-identical including engine attribution, zero live steals
+        let log = PlacementLog::from_json(
+            &stolen.placement_log().to_json()).unwrap();
+        let mut replayed = build();
+        replayed.set_replay(log);
+        fingerprint(&mut replayed) == fs
+            && replayed.placement_log().steals() == 0
+    });
+}
+
+/// The same contract across the thread boundary: a THREADED run with work
+/// stealing enabled resolves every group, balances the merged ledger,
+/// reports exactly as many steals in its drained stats as its placement
+/// log records, and an INLINE replay of that log reproduces the completed
+/// outputs bit-for-bit including engine attribution (the inline backend
+/// is the reference semantics; placement is data, not thread timing).
+#[test]
+fn prop_threaded_steal_ledger_and_replay() {
+    let max_seq = 16usize;
+    type Key = (usize, Vec<i32>, Vec<u32>, FinishReason, Option<u32>);
+    // (slots, [(group_size, temp_bit); n])
+    let g = Pair(UsizeIn(1, 3),
+                 VecOf(Pair(UsizeIn(1, 4), UsizeIn(0, 1)), 2, 8));
+    assert_prop("threaded-steal-replay", 0x7EA15, 30, &g,
+                |(slots, groups)| {
+        let slots = (*slots).max(1);
+        let n_eng = 3usize;
+        let fingerprint = |svc: &mut RolloutService<MockEngine>|
+                          -> Vec<Key> {
+            for (gid, &(sz, temp)) in groups.iter().enumerate() {
+                svc.submit_group(GroupSpec {
+                    group_id: gid,
+                    prompt: vec![3 + (gid as i32 % 5); 2 + gid % 3],
+                    group_size: sz.max(1),
+                    max_new: if gid % 2 == 0 { 9 } else { 1 },
+                    temperature: temp as f32,
+                    top_p: 1.0,
+                    seed: 0x7E ^ ((gid as u64) << 8),
+                });
+            }
+            let results = svc.run(|gid, _| (gid % 2) as f32).unwrap();
+            results
+                .iter()
+                .flat_map(|gr| gr.members.iter().map(move |m| {
+                    (gr.engine,
+                     m.result.generated.clone(),
+                     m.result.logprobs.iter().map(|l| l.to_bits())
+                         .collect::<Vec<u32>>(),
+                     m.result.finish,
+                     m.reward.map(|r| r.to_bits()))
+                }))
+                .collect()
+        };
+        let factories: Vec<EngineFactory<MockEngine>> = (0..n_eng)
+            .map(|_| {
+                Box::new(move || Ok(MockEngine::new(slots, 8, max_seq, 2)))
+                    as EngineFactory<MockEngine>
+            })
+            .collect();
+        let mut svc =
+            RolloutService::threaded(factories, max_seq, 2).unwrap();
+        svc.stripe = StripePolicy::LeastLoaded;
+        svc.steal = StealPolicy::Idle;
+        let fs = fingerprint(&mut svc);
+        let st = svc.take_stats().unwrap();
+        if st.completed != st.submitted {
+            return false; // no pruning: every member must complete
+        }
+        if st.steals != svc.placement_log().steals() {
+            return false; // stats and log disagree on steal count
+        }
+        let log = svc.placement_log().clone();
+        let engs: Vec<MockEngine> = (0..n_eng)
+            .map(|_| MockEngine::new(slots, 8, max_seq, 2))
+            .collect();
+        let mut replayed = RolloutService::new(engs, max_seq, 2);
+        replayed.set_replay(log);
+        fingerprint(&mut replayed) == fs
+    });
 }
 
 /// Regression property for the trainer's old `padded_g = 1` fallback: on a
