@@ -1,0 +1,664 @@
+//! Hand-rolled Rust lexer for the repo lint passes (no dependencies, the
+//! `util/json.rs` idiom).  It is not a full Rust front end — it produces
+//! exactly what the passes in [`super::passes`] consume:
+//!
+//! * a token stream (identifiers, punctuation with maximal munch, string /
+//!   char / number literals, lifetimes) with 1-based line numbers,
+//! * the comments, separately (text + line) — annotation comments like
+//!   `// lint: allow(panic, <reason>)` and the recorder's `//!` field
+//!   catalog are read from here, never from the token stream,
+//! * `#[cfg(test)]` item spans, so test-only code is exempt from the
+//!   panic wall and Send-safety checks.
+//!
+//! The classic false-positive sources for textual Rust lints are handled
+//! structurally: raw strings (`r"…"`, `r#"…"#`), nested block comments,
+//! char literals vs. lifetimes, and multi-char operators (`::`, `=>`,
+//! `..=`, compound assignment) lex as single tokens, so a `.unwrap()`
+//! inside a string or comment can never trip a pass.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    /// string literal; `text` holds the raw content between the quotes
+    /// (escape sequences unprocessed — the passes only match plain keys)
+    Str,
+    Char,
+    Lifetime,
+    Num,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line the token starts on
+    pub line: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// 1-based line the comment starts on
+    pub line: u32,
+    /// full comment text including the `//` / `/*` markers
+    pub text: String,
+}
+
+/// One lexed source file: tokens, comments, and `#[cfg(test)]` spans.
+#[derive(Clone, Debug)]
+pub struct LexedFile {
+    /// path relative to the scanned source root, `/`-separated
+    /// (e.g. `coordinator/scheduler.rs`)
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    /// token-index ranges `[start, end)` covered by a `#[cfg(test)]` item
+    test_spans: Vec<(usize, usize)>,
+}
+
+/// Multi-char punctuation, longest first (maximal munch).
+const PUNCT3: [&str; 4] = ["<<=", ">>=", "..=", "..."];
+const PUNCT2: [&str; 19] = ["::", "->", "=>", "==", "!=", "<=", ">=",
+                            "&&", "||", "+=", "-=", "*=", "/=", "%=",
+                            "^=", "&=", "|=", "<<", ".."];
+// NB: ">>" is intentionally absent from PUNCT2 — nested generic closers
+// (`Vec<Vec<u64>>`) are far more common in this codebase than shifts, and
+// the angle-depth tracking in the passes wants two `>` tokens there.
+// Shift expressions still lex fine as two adjacent `>` puncts.
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// If `b[i]` starts a raw string (`r"`, `r#"`, `br"`, …), return
+/// `(open_quote_index, n_hashes)`.  `r#ident` (raw identifier) does not
+/// match — the char after the hashes must be `"`.
+fn raw_string_start(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if j < b.len() && b[j] == 'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != 'r' {
+        return None;
+    }
+    let mut k = j + 1;
+    let mut hashes = 0;
+    while k < b.len() && b[k] == '#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k < b.len() && b[k] == '"' {
+        Some((k, hashes))
+    } else {
+        None
+    }
+}
+
+impl LexedFile {
+    pub fn lex(path: &str, src: &str) -> LexedFile {
+        let b: Vec<char> = src.chars().collect();
+        let mut toks: Vec<Tok> = Vec::new();
+        let mut comments: Vec<Comment> = Vec::new();
+        let mut i = 0usize;
+        let mut line: u32 = 1;
+        while i < b.len() {
+            let c = b[i];
+            if c == '\n' {
+                line += 1;
+                i += 1;
+                continue;
+            }
+            if c.is_whitespace() {
+                i += 1;
+                continue;
+            }
+            // line comment (also doc comments `///` and `//!`)
+            if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+                let start = i;
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+                comments.push(Comment {
+                    line,
+                    text: b[start..i].iter().collect(),
+                });
+                continue;
+            }
+            // block comment, nesting tracked (Rust block comments nest)
+            if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                let start = i;
+                let start_line = line;
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < b.len()
+                        && b[i + 1] == '/'
+                    {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == '\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                comments.push(Comment {
+                    line: start_line,
+                    text: b[start..i].iter().collect(),
+                });
+                continue;
+            }
+            // raw string: r"…", r#"…"#, br"…" — no escapes inside
+            if let Some((open, hashes)) = raw_string_start(&b, i) {
+                let tline = line;
+                let mut j = open + 1;
+                let mut end = b.len();
+                while j < b.len() {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if b[j] == '"' {
+                        let mut h = 0usize;
+                        while h < hashes
+                            && j + 1 + h < b.len()
+                            && b[j + 1 + h] == '#'
+                        {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            end = j;
+                            j += 1 + hashes;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text: b[open + 1..end.min(b.len())].iter().collect(),
+                    line: tline,
+                });
+                i = j;
+                continue;
+            }
+            // plain (or byte) string literal with escapes
+            if c == '"'
+                || (c == 'b' && i + 1 < b.len() && b[i + 1] == '"')
+            {
+                if c == 'b' {
+                    i += 1;
+                }
+                let tline = line;
+                i += 1; // opening quote
+                let mut text = String::new();
+                while i < b.len() {
+                    match b[i] {
+                        '\\' if i + 1 < b.len() => {
+                            if b[i + 1] == '\n' {
+                                line += 1;
+                            }
+                            text.push(b[i]);
+                            text.push(b[i + 1]);
+                            i += 2;
+                        }
+                        '"' => break,
+                        ch => {
+                            if ch == '\n' {
+                                line += 1;
+                            }
+                            text.push(ch);
+                            i += 1;
+                        }
+                    }
+                }
+                i += 1; // closing quote
+                toks.push(Tok { kind: TokKind::Str, text, line: tline });
+                continue;
+            }
+            // lifetime vs. char literal
+            if c == '\'' {
+                let next_is_name = i + 1 < b.len()
+                    && is_ident_start(b[i + 1]);
+                let closes = i + 2 < b.len() && b[i + 2] == '\'';
+                if next_is_name && !closes {
+                    // lifetime or loop label: 'a, '_, 'outer
+                    let mut j = i + 1;
+                    while j < b.len() && is_ident_continue(b[j]) {
+                        j += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: b[i..j].iter().collect(),
+                        line,
+                    });
+                    i = j;
+                    continue;
+                }
+                // char literal: 'x', '\n', '\'', '\u{1F600}'
+                let tline = line;
+                let mut j = i + 1;
+                if j < b.len() && b[j] == '\\' {
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+                while j < b.len() && b[j] != '\'' {
+                    j += 1;
+                }
+                let end = (j + 1).min(b.len());
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: b[i..end].iter().collect(),
+                    line: tline,
+                });
+                i = end;
+                continue;
+            }
+            // number (good-enough: passes never inspect numeric values)
+            if c.is_ascii_digit() {
+                let start = i;
+                i += 1;
+                while i < b.len() {
+                    let ch = b[i];
+                    if is_ident_continue(ch) {
+                        i += 1;
+                    } else if ch == '.'
+                        && i + 1 < b.len()
+                        && b[i + 1].is_ascii_digit()
+                    {
+                        // 1.5 is one token; 0..n keeps the range punct
+                        i += 1;
+                    } else if (ch == '+' || ch == '-')
+                        && matches!(b[i - 1], 'e' | 'E')
+                        && i + 1 < b.len()
+                        && b[i + 1].is_ascii_digit()
+                    {
+                        // exponent sign: 1e-6
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(Tok {
+                    kind: TokKind::Num,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            // identifier / keyword
+            if is_ident_start(c) {
+                let start = i;
+                while i < b.len() && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            // punctuation, longest match first
+            let rest: String =
+                b[i..b.len().min(i + 3)].iter().collect();
+            let mut matched: Option<&str> = None;
+            for p in PUNCT3 {
+                if rest.starts_with(p) {
+                    matched = Some(p);
+                    break;
+                }
+            }
+            if matched.is_none() {
+                for p in PUNCT2 {
+                    if rest.starts_with(p) {
+                        matched = Some(p);
+                        break;
+                    }
+                }
+            }
+            let text = match matched {
+                Some(p) => p.to_string(),
+                None => c.to_string(),
+            };
+            i += text.chars().count();
+            toks.push(Tok { kind: TokKind::Punct, text, line });
+        }
+        let test_spans = compute_test_spans(&toks);
+        LexedFile {
+            path: path.to_string(),
+            toks,
+            comments,
+            test_spans,
+        }
+    }
+
+    /// Is token index `ti` inside a `#[cfg(test)]` item?
+    pub fn in_test(&self, ti: usize) -> bool {
+        self.test_spans
+            .iter()
+            .any(|&(s, e)| ti >= s && ti < e)
+    }
+
+    pub fn is_ident(&self, ti: usize, text: &str) -> bool {
+        self.toks.get(ti).is_some_and(
+            |t| t.kind == TokKind::Ident && t.text == text)
+    }
+
+    pub fn is_punct(&self, ti: usize, text: &str) -> bool {
+        self.toks.get(ti).is_some_and(
+            |t| t.kind == TokKind::Punct && t.text == text)
+    }
+
+    /// Index of the `}` / `)` / `]` matching the opener at `open` (which
+    /// must be `{`, `(` or `[`), or `toks.len()` when unbalanced.
+    pub fn matching_close(&self, open: usize) -> usize {
+        let (o, c) = match self.toks[open].text.as_str() {
+            "{" => ("{", "}"),
+            "(" => ("(", ")"),
+            "[" => ("[", "]"),
+            _ => return self.toks.len(),
+        };
+        let mut depth = 0usize;
+        let mut j = open;
+        while j < self.toks.len() {
+            let t = &self.toks[j];
+            if t.kind == TokKind::Punct {
+                if t.text == o {
+                    depth += 1;
+                } else if t.text == c {
+                    depth -= 1;
+                    if depth == 0 {
+                        return j;
+                    }
+                }
+            }
+            j += 1;
+        }
+        self.toks.len()
+    }
+}
+
+/// Find `#[cfg(test)]` (and `#[cfg(all(test, …))]`) item spans.
+/// `#[cfg(not(test))]` is NOT a test span — the `not` guard rejects it.
+/// The span runs from the attribute's `#` through the end of the
+/// annotated item: its matching `}` for brace items (`mod tests { … }`,
+/// fns), or the terminating `;` for semicolon items (`use`, statics).
+fn compute_test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if !(toks[i].kind == TokKind::Punct && toks[i].text == "#"
+            && toks[i + 1].kind == TokKind::Punct
+            && toks[i + 1].text == "[")
+        {
+            i += 1;
+            continue;
+        }
+        // collect the attribute tokens up to the matching `]`
+        let attr_start = i;
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut has_cfg = false;
+        let mut has_test = false;
+        let mut has_not = false;
+        while j < toks.len() && depth > 0 {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct && t.text == "[" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == "]" {
+                depth -= 1;
+            } else if t.kind == TokKind::Ident {
+                match t.text.as_str() {
+                    "cfg" => has_cfg = true,
+                    "test" => has_test = true,
+                    "not" => has_not = true,
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        if !(has_cfg && has_test && !has_not) {
+            i = j;
+            continue;
+        }
+        // skip any further attributes on the same item
+        while j + 1 < toks.len()
+            && toks[j].kind == TokKind::Punct
+            && toks[j].text == "#"
+            && toks[j + 1].text == "["
+        {
+            let mut d = 1usize;
+            j += 2;
+            while j < toks.len() && d > 0 {
+                if toks[j].kind == TokKind::Punct {
+                    if toks[j].text == "[" {
+                        d += 1;
+                    } else if toks[j].text == "]" {
+                        d -= 1;
+                    }
+                }
+                j += 1;
+            }
+        }
+        // scan to the item's end: first depth-0 `{` (then its match) or
+        // a depth-0 `;` before any brace
+        let mut d = 0i64;
+        let mut end = toks.len();
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" => d += 1,
+                    ")" | "]" => d -= 1,
+                    "{" if d == 0 => {
+                        // matching close from here
+                        let mut bd = 0usize;
+                        let mut k = j;
+                        while k < toks.len() {
+                            let u = &toks[k];
+                            if u.kind == TokKind::Punct {
+                                if u.text == "{" {
+                                    bd += 1;
+                                } else if u.text == "}" {
+                                    bd -= 1;
+                                    if bd == 0 {
+                                        break;
+                                    }
+                                }
+                            }
+                            k += 1;
+                        }
+                        end = (k + 1).min(toks.len());
+                        break;
+                    }
+                    ";" if d == 0 => {
+                        end = j + 1;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        spans.push((attr_start, end));
+        i = end;
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex(src: &str) -> LexedFile {
+        LexedFile::lex("test.rs", src)
+    }
+
+    fn idents(f: &LexedFile) -> Vec<&str> {
+        f.toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn raw_strings_do_not_leak_tokens() {
+        // the classic false positive: panic-looking text inside a raw
+        // string (even one holding quotes and hashes) must stay a single
+        // Str token
+        let f = lex(r##"let x = r"a.unwrap()"; let y = r#"b "q" panic!"#;"##);
+        let strs: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, vec!["a.unwrap()", r#"b "q" panic!"#]);
+        assert!(!idents(&f).contains(&"unwrap"));
+        assert!(!idents(&f).contains(&"panic"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let f = lex("a /* outer /* inner unwrap() */ still comment */ b");
+        assert_eq!(idents(&f), vec!["a", "b"]);
+        assert_eq!(f.comments.len(), 1);
+        assert!(f.comments[0].text.contains("inner unwrap()"));
+    }
+
+    #[test]
+    fn line_comments_recorded_with_lines() {
+        let f = lex("x\n// lint: allow(panic, reason here)\ny");
+        assert_eq!(f.comments.len(), 1);
+        assert_eq!(f.comments[0].line, 2);
+        assert!(f.comments[0].text.contains("allow(panic"));
+        assert_eq!(f.toks[1].line, 3); // y
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_mod_and_fn() {
+        let src = "fn live() { x.unwrap(); }\n\
+                   #[cfg(test)]\nmod tests {\n  fn t() { y.unwrap(); }\n}\n\
+                   fn live2() {}";
+        let f = lex(src);
+        // the unwrap inside mod tests is in a test span; the first is not
+        let unwraps: Vec<usize> = f
+            .toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.text == "unwrap")
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(unwraps.len(), 2);
+        assert!(!f.in_test(unwraps[0]));
+        assert!(f.in_test(unwraps[1]));
+        // code after the test mod is live again
+        let live2 = f
+            .toks
+            .iter()
+            .position(|t| t.text == "live2")
+            .unwrap();
+        assert!(!f.in_test(live2));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_span() {
+        let f = lex("#[cfg(not(test))]\nfn live() { x.unwrap(); }");
+        let u = f.toks.iter().position(|t| t.text == "unwrap").unwrap();
+        assert!(!f.in_test(u));
+    }
+
+    #[test]
+    fn cfg_test_attr_on_use_item_ends_at_semicolon() {
+        let f = lex("#[cfg(test)]\nuse foo::bar;\nfn live() { b.expect(\"x\"); }");
+        let e = f.toks.iter().position(|t| t.text == "expect").unwrap();
+        assert!(!f.in_test(e));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let f = lex("fn f<'a>(x: &'a str) -> char { 'x' }\nlet nl = '\\n';");
+        let lifetimes: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let chars: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(chars, vec!["'x'", "'\\n'"]);
+    }
+
+    #[test]
+    fn maximal_munch_puncts() {
+        let f = lex("a::b => c == d; e += 0..=9; g -> h");
+        let puncts: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(puncts.contains(&"::"));
+        assert!(puncts.contains(&"=>"));
+        assert!(puncts.contains(&"=="));
+        assert!(puncts.contains(&"+="));
+        assert!(puncts.contains(&"..="));
+        assert!(puncts.contains(&"->"));
+        // `=>`/`==` never split into bare `=`
+        assert!(!puncts.contains(&"="));
+    }
+
+    #[test]
+    fn nested_generics_close_as_two_angle_tokens() {
+        let f = lex("let x: Vec<Vec<u64>> = v;");
+        let n = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct && t.text == ">")
+            .count();
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn strings_with_escapes_and_numbers() {
+        let f = lex(r#"call("a \"quoted\" key", 1.5, 1e-6, 0x5eed)"#);
+        let strs: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].contains("quoted"));
+        let nums: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5", "1e-6", "0x5eed"]);
+    }
+
+    #[test]
+    fn matching_close_walks_nested_braces() {
+        let f = lex("{ a { b } c ( d ) }");
+        assert_eq!(f.matching_close(0), f.toks.len() - 1);
+    }
+}

@@ -1,0 +1,291 @@
+//! Repo-aware static analysis: `qurl lint`.
+//!
+//! Seven PRs of growth created hand-maintained correctness contracts
+//! that nothing machine-checked — "field catalog updated" lived in
+//! changelog prose.  This module is a dependency-free Rust source
+//! scanner (hand-rolled lexer in [`lexer`], no syn/proc-macro — the
+//! `util/json.rs` idiom) that turns those contracts into build
+//! failures.  It runs two ways with identical semantics:
+//!
+//! * `qurl lint` — prints the per-pass findings table, exits nonzero on
+//!   any finding (CI runs this in deny mode before clippy),
+//! * tier-1 unit tests — `tests/lint.rs` runs [`run_all`] over `src/`,
+//!   so drift fails `cargo test -q` without the subcommand being
+//!   invoked, and the fixture tests in [`passes`] prove each pass fires
+//!   on seeded violations and stays quiet on clean input.
+//!
+//! # Lint catalog
+//!
+//! | pass | contract | escape hatch |
+//! |------|----------|--------------|
+//! | `stats-catalog` | every `SchedulerStats` field (coordinator/request.rs) is accumulated in `SchedulerStats::merge`, documented in the `sched_*` field catalog (metrics/recorder.rs module docs), and written to a Recorder row in rl/trainer.rs.  Derived-key aliases: `occupancy_sum`→`sched_occupancy`, `queue_wait_sum_s`→`sched_queue_wait_s`, `wall_s`→`sched_tokens_per_s`. | none — merge, document, and emit the field |
+//! | `config-drift` | every `TrainerConfig` field (rl/trainer.rs) round-trips `config::to_json` **and** `config::from_json`, and registers a `--` flag in `train_cli` (main.rs). | `CONFIG_ONLY` list in passes.rs for preset-level fields that deliberately have no flag; stale entries (field gains a flag) are themselves findings |
+//! | `protocol` | every `Command`/`Event` variant in coordinator/service.rs is both constructed and matched outside tests — no dead and no unhandled protocol variants. | none — delete the variant or handle it |
+//! | `panic-wall` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` outside `#[cfg(test)]` in the hot-path modules: coordinator/{scheduler,service,kv,engine}.rs and `runtime/*`.  (`assert!` stays legal — invariant checks are welcome; what's banned is panicking *recovery paths*.) | `// lint: allow(panic, <reason>)` on or directly above the line; the reason must state the invariant that makes the panic unreachable |
+//! | `send-safety` | `StepEngine::new` (and so `EngineFactory` realization) only inside `StepEngine::factory` — the closure workers run on their own thread — encoding PR 3's "PJRT state never crosses a thread" rule. | `// lint: allow(send, <reason>)` for provably same-thread construction (the inline backend) |
+//!
+//! Passes 1–3 also emit findings when their anchor files are missing
+//! from the scanned set, so renaming `request.rs` (say) surfaces as a
+//! lint failure instead of silently disabling the check.  Malformed
+//! annotations (unknown kind, empty reason) are findings too: an escape
+//! hatch without a recorded invariant is a violation in its own right.
+//!
+//! ROADMAP note: when checkpoint/resume lands (item 3), the manifest
+//! field set joins `config-drift` the same way `TrainerConfig` does.
+
+pub mod lexer;
+pub mod passes;
+
+use std::collections::HashSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::LexedFile;
+
+/// The five lint passes, in report order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    StatsCatalog,
+    ConfigDrift,
+    Protocol,
+    PanicWall,
+    SendSafety,
+}
+
+pub const PASSES: [Pass; 5] = [
+    Pass::StatsCatalog,
+    Pass::ConfigDrift,
+    Pass::Protocol,
+    Pass::PanicWall,
+    Pass::SendSafety,
+];
+
+impl Pass {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::StatsCatalog => "stats-catalog",
+            Pass::ConfigDrift => "config-drift",
+            Pass::Protocol => "protocol",
+            Pass::PanicWall => "panic-wall",
+            Pass::SendSafety => "send-safety",
+        }
+    }
+
+    /// One-line contract, shown in the report header.
+    pub fn contract(self) -> &'static str {
+        match self {
+            Pass::StatsCatalog => {
+                "SchedulerStats fields merged, cataloged, and emitted"
+            }
+            Pass::ConfigDrift => {
+                "TrainerConfig fields round-trip JSON and carry a flag"
+            }
+            Pass::Protocol => {
+                "Command/Event variants constructed and matched"
+            }
+            Pass::PanicWall => {
+                "no panicking calls on hot paths outside #[cfg(test)]"
+            }
+            Pass::SendSafety => {
+                "StepEngine built only inside worker-thread closures"
+            }
+        }
+    }
+}
+
+impl fmt::Display for Pass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One lint violation.  `line == 0` means the finding is about the file
+/// as a whole (missing anchor, missing struct).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub pass: Pass,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// The lexed source files a lint run scans.  Paths are relative to the
+/// source root and `/`-separated (`coordinator/scheduler.rs`), so the
+/// passes address anchor files the same way from `qurl lint`, the
+/// repo-clean test, and the in-memory fixture sets.
+pub struct SourceSet {
+    files: Vec<LexedFile>,
+}
+
+impl SourceSet {
+    /// Build a set from in-memory `(path, source)` pairs — the fixture
+    /// tests use this to seed violations without touching disk layout.
+    pub fn from_memory(files: &[(&str, &str)]) -> SourceSet {
+        SourceSet {
+            files: files
+                .iter()
+                .map(|(p, s)| LexedFile::lex(p, s))
+                .collect(),
+        }
+    }
+
+    /// Lex every `*.rs` under `root` (recursively), sorted by relative
+    /// path for deterministic reports.
+    pub fn load(root: &Path) -> io::Result<SourceSet> {
+        let mut paths: Vec<PathBuf> = Vec::new();
+        walk(root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::with_capacity(paths.len());
+        for p in &paths {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let src = fs::read_to_string(p)?;
+            files.push(LexedFile::lex(&rel, &src));
+        }
+        Ok(SourceSet { files })
+    }
+
+    pub fn file(&self, path: &str) -> Option<&LexedFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+
+    pub fn files(&self) -> &[LexedFile] {
+        &self.files
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+pub fn run_pass(pass: Pass, set: &SourceSet) -> Vec<Finding> {
+    match pass {
+        Pass::StatsCatalog => passes::stats_catalog(set),
+        Pass::ConfigDrift => passes::config_drift(set),
+        Pass::Protocol => passes::protocol(set),
+        Pass::PanicWall => passes::panic_wall(set),
+        Pass::SendSafety => passes::send_safety(set),
+    }
+}
+
+/// Run all five passes.  Findings both the panic-wall and send-safety
+/// passes raise (malformed annotations are parsed by each) are deduped
+/// by `(file, line, msg)`.
+pub fn run_all(set: &SourceSet) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    let mut seen: HashSet<(String, u32, String)> = HashSet::new();
+    for pass in PASSES {
+        for f in run_pass(pass, set) {
+            if seen.insert((f.file.clone(), f.line, f.msg.clone())) {
+                out.push(f);
+            }
+        }
+    }
+    out
+}
+
+/// Render the per-pass findings table `qurl lint` prints (and CI uploads
+/// as an artifact).
+pub fn report(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    s.push_str("qurl lint — repo contract checks\n\n");
+    s.push_str(&format!(
+        "{:<14} {:>8}  {}\n", "pass", "findings", "contract"));
+    for pass in PASSES {
+        let n = findings.iter().filter(|f| f.pass == pass).count();
+        let status = if n == 0 { "ok".to_string() } else { n.to_string() };
+        s.push_str(&format!(
+            "{:<14} {:>8}  {}\n", pass.name(), status, pass.contract()));
+    }
+    for pass in PASSES {
+        let of_pass: Vec<&Finding> =
+            findings.iter().filter(|f| f.pass == pass).collect();
+        if of_pass.is_empty() {
+            continue;
+        }
+        s.push_str(&format!("\n[{}]\n", pass.name()));
+        for f in of_pass {
+            if f.line == 0 {
+                s.push_str(&format!("  {}: {}\n", f.file, f.msg));
+            } else {
+                s.push_str(&format!(
+                    "  {}:{}: {}\n", f.file, f.line, f.msg));
+            }
+        }
+    }
+    let total = findings.len();
+    if total == 0 {
+        s.push_str("\nall passes clean\n");
+    } else {
+        s.push_str(&format!("\n{total} finding(s)\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_lists_passes_and_counts() {
+        let f = vec![Finding {
+            pass: Pass::PanicWall,
+            file: "coordinator/scheduler.rs".to_string(),
+            line: 7,
+            msg: "`unwrap` on a hot path".to_string(),
+        }];
+        let r = report(&f);
+        assert!(r.contains("stats-catalog"));
+        assert!(r.contains("send-safety"));
+        assert!(r.contains("[panic-wall]"));
+        assert!(r.contains("coordinator/scheduler.rs:7"));
+        assert!(r.contains("1 finding(s)"));
+        let clean = report(&[]);
+        assert!(clean.contains("all passes clean"));
+    }
+
+    #[test]
+    fn run_all_dedups_shared_annotation_findings() {
+        // a malformed annotation is parsed by both panic-wall and
+        // send-safety; run_all must report it once
+        let set = SourceSet::from_memory(&[
+            (
+                "coordinator/scheduler.rs",
+                "// lint: allow(panic, )\nfn f() {}\n",
+            ),
+            ("coordinator/service.rs", ""),
+            ("coordinator/kv.rs", ""),
+            ("coordinator/engine.rs", ""),
+        ]);
+        let all = run_all(&set);
+        let malformed: Vec<&Finding> = all
+            .iter()
+            .filter(|f| f.msg.contains("non-empty reason"))
+            .collect();
+        assert_eq!(malformed.len(), 1);
+    }
+
+    #[test]
+    fn from_memory_paths_resolve() {
+        let set = SourceSet::from_memory(&[("a/b.rs", "fn x() {}")]);
+        assert!(set.file("a/b.rs").is_some());
+        assert!(set.file("a/c.rs").is_none());
+        assert_eq!(set.files().len(), 1);
+    }
+}

@@ -1,0 +1,889 @@
+//! The five repo-contract lint passes.  Each takes a [`SourceSet`] so the
+//! unit tests drive them over seeded-violation fixtures exactly the way
+//! `qurl lint` drives them over `src/`.  See the Lint catalog in
+//! [`super`] (src/analysis/mod.rs) for each pass's contract and escape
+//! hatch.
+
+use std::collections::{BTreeSet, HashSet};
+
+use super::lexer::{LexedFile, TokKind};
+use super::{Finding, Pass, SourceSet};
+
+// ---- shared structural helpers ---------------------------------------------
+
+/// Fields of `struct <name> { … }`: the identifier before every `:` at
+/// body depth 0 (angle depth tracked so generic bounds never split a
+/// field).  Returns `(field, line)` pairs in declaration order.
+fn struct_fields(f: &LexedFile, name: &str) -> Option<Vec<(String, u32)>> {
+    let decl = (0..f.toks.len()).find(|&i| {
+        f.is_ident(i, "struct") && f.is_ident(i + 1, name)
+    })?;
+    let open = (decl + 2..f.toks.len())
+        .find(|&i| f.is_punct(i, "{"))?;
+    let close = f.matching_close(open);
+    let mut depth = 0i64;
+    let mut angle = 0i64;
+    let mut out: Vec<(String, u32)> = Vec::new();
+    for j in open + 1..close {
+        let t = &f.toks[j];
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        match t.text.as_str() {
+            "{" | "(" | "[" => depth += 1,
+            "}" | ")" | "]" => depth -= 1,
+            "<" => angle += 1,
+            ">" => angle -= 1,
+            ":" if depth == 0 && angle <= 0 => {
+                if f.toks[j - 1].kind == TokKind::Ident {
+                    out.push((
+                        f.toks[j - 1].text.clone(),
+                        f.toks[j - 1].line,
+                    ));
+                }
+                angle = 0;
+            }
+            _ => {}
+        }
+    }
+    Some(out)
+}
+
+/// Token span `(open_brace, close_brace)` of the body of the first
+/// `fn <name>` in the file.
+fn fn_body(f: &LexedFile, name: &str) -> Option<(usize, usize)> {
+    let decl = (0..f.toks.len()).find(|&i| {
+        f.is_ident(i, "fn") && f.is_ident(i + 1, name)
+    })?;
+    let mut d = 0i64;
+    for j in decl + 2..f.toks.len() {
+        let t = &f.toks[j];
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        match t.text.as_str() {
+            "(" | "[" => d += 1,
+            ")" | "]" => d -= 1,
+            "{" if d == 0 => return Some((j, f.matching_close(j))),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Variants of `enum <name> { … }` plus the declaration token span.
+fn enum_variants(
+    f: &LexedFile,
+    name: &str,
+) -> Option<(Vec<(String, u32)>, (usize, usize))> {
+    let decl = (0..f.toks.len()).find(|&i| {
+        f.is_ident(i, "enum") && f.is_ident(i + 1, name)
+    })?;
+    let open = (decl + 2..f.toks.len())
+        .find(|&i| f.is_punct(i, "{"))?;
+    let close = f.matching_close(open);
+    let mut depth = 0i64;
+    let mut out: Vec<(String, u32)> = Vec::new();
+    for j in open + 1..close {
+        let t = &f.toks[j];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" | "(" | "[" => depth += 1,
+                "}" | ")" | "]" => depth -= 1,
+                _ => {}
+            }
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && depth == 0
+            && (f.is_punct(j - 1, "{") || f.is_punct(j - 1, ","))
+        {
+            out.push((t.text.clone(), t.line));
+        }
+    }
+    Some((out, (decl, close + 1)))
+}
+
+/// String-literal contents inside a token range.
+fn strings_in(f: &LexedFile, range: (usize, usize)) -> Vec<&str> {
+    f.toks[range.0..range.1.min(f.toks.len())]
+        .iter()
+        .filter(|t| t.kind == TokKind::Str)
+        .map(|t| t.text.as_str())
+        .collect()
+}
+
+/// Token spans that are *patterns*: every match-arm pattern (including
+/// its guard, up to the `=>`) and every `let`-binding pattern (covers
+/// `if let`, `while let` and `let … else`).  An `Enum::Variant` path
+/// inside one of these spans is a *match* of the variant; outside (and
+/// outside the enum declaration) it is a *construction*.
+fn pattern_spans(f: &LexedFile) -> Vec<(usize, usize)> {
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    let n = f.toks.len();
+    for i in 0..n {
+        if f.is_ident(i, "match") {
+            // body opens at the first `{` outside the scrutinee's parens
+            let mut d = 0i64;
+            let mut open = None;
+            for j in i + 1..n {
+                let t = &f.toks[j];
+                if t.kind != TokKind::Punct {
+                    continue;
+                }
+                match t.text.as_str() {
+                    "(" | "[" => d += 1,
+                    ")" | "]" => d -= 1,
+                    "{" if d == 0 => {
+                        open = Some(j);
+                        break;
+                    }
+                    "{" => d += 1,
+                    "}" => d -= 1,
+                    ";" if d == 0 => break, // not a match expression
+                    _ => {}
+                }
+            }
+            let Some(open) = open else { continue };
+            let close = f.matching_close(open);
+            // walk the arms: pattern (+ guard) runs to the depth-0 `=>`
+            let mut k = open + 1;
+            while k < close {
+                let arm_start = k;
+                let mut d2 = 0i64;
+                let mut arrow = None;
+                while k < close {
+                    let t = &f.toks[k];
+                    if t.kind == TokKind::Punct {
+                        match t.text.as_str() {
+                            "(" | "[" | "{" => d2 += 1,
+                            ")" | "]" | "}" => d2 -= 1,
+                            "=>" if d2 == 0 => {
+                                arrow = Some(k);
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    k += 1;
+                }
+                let Some(arrow) = arrow else { break };
+                spans.push((arm_start, arrow));
+                // skip the arm body: braced block or up to a depth-0 `,`
+                k = arrow + 1;
+                if k < close && f.is_punct(k, "{") {
+                    k = f.matching_close(k) + 1;
+                    if k < close && f.is_punct(k, ",") {
+                        k += 1;
+                    }
+                } else {
+                    let mut d3 = 0i64;
+                    while k < close {
+                        let t = &f.toks[k];
+                        if t.kind == TokKind::Punct {
+                            match t.text.as_str() {
+                                "(" | "[" | "{" => d3 += 1,
+                                ")" | "]" | "}" => d3 -= 1,
+                                "," if d3 == 0 => {
+                                    k += 1;
+                                    break;
+                                }
+                                _ => {}
+                            }
+                        }
+                        k += 1;
+                    }
+                }
+            }
+        } else if f.is_ident(i, "let") {
+            // pattern runs to the depth-0 `=` (or `;` for plain decls)
+            let mut d = 0i64;
+            for j in i + 1..n {
+                let t = &f.toks[j];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" => d += 1,
+                        ")" | "]" | "}" => d -= 1,
+                        "=" | ";" if d == 0 => {
+                            spans.push((i + 1, j));
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+    spans
+}
+
+/// Parse a file's escape-hatch annotations — `// lint: allow(panic, why)` or with the `send` kind — one physical line each.
+/// Returns the source lines covered for `kind` (the comment's line and
+/// the next, so the annotation sits above or beside the site) plus
+/// findings for malformed annotations (missing kind/reason — an escape
+/// hatch without a recorded invariant is itself a violation).
+/// Self-referential caveat: this file is scanned by its own passes, so
+/// these docs must themselves parse as well-formed annotations.
+fn allow_lines(
+    f: &LexedFile,
+    kind: &str,
+    pass: Pass,
+) -> (HashSet<u32>, Vec<Finding>) {
+    let mut lines: HashSet<u32> = HashSet::new();
+    let mut bad: Vec<Finding> = Vec::new();
+    for c in &f.comments {
+        let Some(at) = c.text.find("lint: allow") else { continue };
+        let rest = &c.text[at..];
+        let parsed = rest.find('(').and_then(|po| {
+            let inner = &rest[po + 1..];
+            let ci = inner.find(',')?;
+            let k = inner[..ci].trim().to_string();
+            let pe = inner.rfind(')')?;
+            if pe <= ci {
+                return None;
+            }
+            let reason = inner[ci + 1..pe].trim().to_string();
+            Some((k, reason))
+        });
+        match parsed {
+            Some((k, reason)) => {
+                if k != "panic" && k != "send" {
+                    bad.push(Finding {
+                        pass,
+                        file: f.path.clone(),
+                        line: c.line,
+                        msg: format!(
+                            "unknown lint annotation kind {k:?} \
+                             (expected panic or send)"),
+                    });
+                } else if reason.is_empty() {
+                    bad.push(Finding {
+                        pass,
+                        file: f.path.clone(),
+                        line: c.line,
+                        msg: format!(
+                            "lint: allow({k}, …) needs a non-empty \
+                             reason stating the invariant"),
+                    });
+                } else if k == kind {
+                    lines.insert(c.line);
+                    lines.insert(c.line + 1);
+                }
+            }
+            None => bad.push(Finding {
+                pass,
+                file: f.path.clone(),
+                line: c.line,
+                msg: "malformed lint annotation — expected \
+                      `lint: allow(<kind>, <reason>)`"
+                    .to_string(),
+            }),
+        }
+    }
+    (lines, bad)
+}
+
+fn missing_anchor(pass: Pass, path: &str) -> Finding {
+    Finding {
+        pass,
+        file: path.to_string(),
+        line: 0,
+        msg: format!(
+            "anchor file {path} not found in the scanned set — the \
+             pass cannot verify its contract (was the file moved? \
+             update src/analysis/passes.rs)"),
+    }
+}
+
+// ---- pass 1: stats-catalog drift -------------------------------------------
+
+const STATS_FILE: &str = "coordinator/request.rs";
+const CATALOG_FILE: &str = "metrics/recorder.rs";
+const EMIT_FILE: &str = "rl/trainer.rs";
+
+/// The recorder-row key a `SchedulerStats` field surfaces as.  Sum-style
+/// counters map 1:1 to `sched_<field>`; the three accumulators that only
+/// reach the row through a derived method map to that method's key.
+fn stat_row_key(field: &str) -> String {
+    match field {
+        "occupancy_sum" => "sched_occupancy".to_string(),
+        "queue_wait_sum_s" => "sched_queue_wait_s".to_string(),
+        "wall_s" => "sched_tokens_per_s".to_string(),
+        _ => format!("sched_{field}"),
+    }
+}
+
+pub fn stats_catalog(set: &SourceSet) -> Vec<Finding> {
+    let pass = Pass::StatsCatalog;
+    let Some(req) = set.file(STATS_FILE) else {
+        return vec![missing_anchor(pass, STATS_FILE)];
+    };
+    let Some(fields) = struct_fields(req, "SchedulerStats") else {
+        return vec![Finding {
+            pass,
+            file: STATS_FILE.to_string(),
+            line: 0,
+            msg: "struct SchedulerStats not found".to_string(),
+        }];
+    };
+    let mut out: Vec<Finding> = Vec::new();
+    // merge coverage: `self.<field>` inside fn merge
+    let merge = fn_body(req, "merge");
+    if merge.is_none() {
+        out.push(Finding {
+            pass,
+            file: STATS_FILE.to_string(),
+            line: 0,
+            msg: "SchedulerStats::merge not found".to_string(),
+        });
+    }
+    let catalog: Option<String> = set.file(CATALOG_FILE).map(|f| {
+        f.comments
+            .iter()
+            .map(|c| c.text.as_str())
+            .collect::<Vec<_>>()
+            .join("\n")
+    });
+    if catalog.is_none() {
+        out.push(missing_anchor(pass, CATALOG_FILE));
+    }
+    let emitted: Option<Vec<&str>> = set
+        .file(EMIT_FILE)
+        .map(|f| strings_in(f, (0, f.toks.len())));
+    if emitted.is_none() {
+        out.push(missing_anchor(pass, EMIT_FILE));
+    }
+    for (field, line) in &fields {
+        if let Some((open, close)) = merge {
+            let merged = (open..close).any(|i| {
+                req.is_ident(i, "self")
+                    && req.is_punct(i + 1, ".")
+                    && req.is_ident(i + 2, field)
+            });
+            if !merged {
+                out.push(Finding {
+                    pass,
+                    file: STATS_FILE.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "SchedulerStats.{field} is not accumulated in \
+                         SchedulerStats::merge — multi-run steps would \
+                         silently drop it"),
+                });
+            }
+        }
+        let key = stat_row_key(field);
+        if let Some(cat) = &catalog {
+            if !cat.contains(&key) {
+                out.push(Finding {
+                    pass,
+                    file: CATALOG_FILE.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "`{key}` (SchedulerStats.{field}) is missing \
+                         from the sched_* field catalog in \
+                         {CATALOG_FILE}"),
+                });
+            }
+        }
+        if let Some(em) = &emitted {
+            if !em.iter().any(|s| s.contains(&key)) {
+                out.push(Finding {
+                    pass,
+                    file: EMIT_FILE.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "`{key}` (SchedulerStats.{field}) is never \
+                         written to a Recorder row in {EMIT_FILE}"),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---- pass 2: config drift --------------------------------------------------
+
+const CFG_FILE: &str = "rl/trainer.rs";
+const JSON_FILE: &str = "config/mod.rs";
+const CLI_FILE: &str = "main.rs";
+
+/// Fields that deliberately have no `qurl train` flag: they define the
+/// preset itself (algo, suite, batch geometry, eval/analysis cadence) and
+/// are overridden by editing a preset JSON, not per-run.  A field listed
+/// here that *gains* a flag must be removed — the pass flags stale
+/// entries.
+const CONFIG_ONLY: [&str; 15] = [
+    "algo", "suite", "prompts_per_step", "group_size", "temp", "top_p",
+    "eval_every", "eval_problems_per_family", "inner_epochs", "gamma",
+    "gae_lambda", "whiten_adv", "dynamic_sampling", "requantize_every",
+    "analyze_every",
+];
+
+/// Field → flag names that are not the mechanical `_`→`-` rewrite.
+const FLAG_ALIASES: [(&str, &str); 6] = [
+    ("rollout_mode", "rollout"),
+    ("rollout_stripe", "stripe"),
+    ("rollout_steal", "steal"),
+    ("kv_layout", "kv"),
+    ("uaq_scale", "uaq"),
+    ("prune_rollouts", "prune"),
+];
+
+pub fn config_drift(set: &SourceSet) -> Vec<Finding> {
+    let pass = Pass::ConfigDrift;
+    let Some(tr) = set.file(CFG_FILE) else {
+        return vec![missing_anchor(pass, CFG_FILE)];
+    };
+    let Some(fields) = struct_fields(tr, "TrainerConfig") else {
+        return vec![Finding {
+            pass,
+            file: CFG_FILE.to_string(),
+            line: 0,
+            msg: "struct TrainerConfig not found".to_string(),
+        }];
+    };
+    let mut out: Vec<Finding> = Vec::new();
+    let json_keys = |fun: &str| -> Option<BTreeSet<String>> {
+        let f = set.file(JSON_FILE)?;
+        let body = fn_body(f, fun)?;
+        Some(strings_in(f, body).iter().map(|s| s.to_string()).collect())
+    };
+    let to_json = json_keys("to_json");
+    let from_json = json_keys("from_json");
+    if to_json.is_none() || from_json.is_none() {
+        out.push(missing_anchor(pass, JSON_FILE));
+    }
+    // flags registered by `fn train_cli`: the string after each `.opt(`
+    let flags: Option<BTreeSet<String>> = set.file(CLI_FILE).and_then(|f| {
+        let (open, close) = fn_body(f, "train_cli")?;
+        let mut fl = BTreeSet::new();
+        for i in open..close {
+            if f.is_punct(i, ".")
+                && f.is_ident(i + 1, "opt")
+                && f.is_punct(i + 2, "(")
+                && f.toks.get(i + 3).map(|t| t.kind) == Some(TokKind::Str)
+            {
+                fl.insert(f.toks[i + 3].text.clone());
+            }
+        }
+        Some(fl)
+    });
+    if flags.is_none() {
+        out.push(missing_anchor(pass, CLI_FILE));
+    }
+    for (field, line) in &fields {
+        for (fun, keys) in
+            [("to_json", &to_json), ("from_json", &from_json)]
+        {
+            if let Some(keys) = keys {
+                if !keys.contains(field) {
+                    out.push(Finding {
+                        pass,
+                        file: JSON_FILE.to_string(),
+                        line: *line,
+                        msg: format!(
+                            "TrainerConfig.{field} does not round-trip: \
+                             no \"{field}\" key in config::{fun}"),
+                    });
+                }
+            }
+        }
+        let Some(flags) = &flags else { continue };
+        let flag = FLAG_ALIASES
+            .iter()
+            .find(|(f, _)| f == field)
+            .map(|(_, v)| v.to_string())
+            .unwrap_or_else(|| field.replace('_', "-"));
+        let config_only = CONFIG_ONLY.contains(&field.as_str());
+        let has_flag = flags.contains(&flag);
+        if !config_only && !has_flag {
+            out.push(Finding {
+                pass,
+                file: CLI_FILE.to_string(),
+                line: *line,
+                msg: format!(
+                    "TrainerConfig.{field} has no --{flag} flag in \
+                     train_cli (add one, or list the field in \
+                     CONFIG_ONLY with a rationale)"),
+            });
+        }
+        if config_only && has_flag {
+            out.push(Finding {
+                pass,
+                file: CLI_FILE.to_string(),
+                line: *line,
+                msg: format!(
+                    "TrainerConfig.{field} is listed CONFIG_ONLY but \
+                     train_cli registers --{flag} — remove the stale \
+                     allow-list entry"),
+            });
+        }
+    }
+    out
+}
+
+// ---- pass 3: protocol exhaustiveness ---------------------------------------
+
+const PROTO_FILE: &str = "coordinator/service.rs";
+
+pub fn protocol(set: &SourceSet) -> Vec<Finding> {
+    let pass = Pass::Protocol;
+    let Some(svc) = set.file(PROTO_FILE) else {
+        return vec![missing_anchor(pass, PROTO_FILE)];
+    };
+    let spans = pattern_spans(svc);
+    let in_pattern =
+        |i: usize| spans.iter().any(|&(s, e)| i >= s && i < e);
+    let mut out: Vec<Finding> = Vec::new();
+    for enum_name in ["Command", "Event"] {
+        let Some((variants, decl)) = enum_variants(svc, enum_name)
+        else {
+            out.push(Finding {
+                pass,
+                file: PROTO_FILE.to_string(),
+                line: 0,
+                msg: format!("enum {enum_name} not found"),
+            });
+            continue;
+        };
+        let names: BTreeSet<&str> =
+            variants.iter().map(|(v, _)| v.as_str()).collect();
+        let mut constructed: BTreeSet<String> = BTreeSet::new();
+        let mut matched: BTreeSet<String> = BTreeSet::new();
+        for i in 0..svc.toks.len() {
+            if !(svc.is_ident(i, enum_name) && svc.is_punct(i + 1, "::"))
+            {
+                continue;
+            }
+            let Some(v) = svc.toks.get(i + 2) else { continue };
+            if v.kind != TokKind::Ident || !names.contains(v.text.as_str())
+            {
+                continue;
+            }
+            if (i >= decl.0 && i < decl.1) || svc.in_test(i) {
+                continue;
+            }
+            if in_pattern(i) {
+                matched.insert(v.text.clone());
+            } else {
+                constructed.insert(v.text.clone());
+            }
+        }
+        for (v, line) in &variants {
+            if !constructed.contains(v) {
+                out.push(Finding {
+                    pass,
+                    file: PROTO_FILE.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "{enum_name}::{v} is never constructed — dead \
+                         protocol variant"),
+                });
+            }
+            if !matched.contains(v) {
+                out.push(Finding {
+                    pass,
+                    file: PROTO_FILE.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "{enum_name}::{v} is never matched — the \
+                         service loops would drop or wedge on it"),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---- pass 4: panic-freedom wall --------------------------------------------
+
+/// Hot-path modules where a panic poisons a worker thread or aborts a
+/// serving loop.  `runtime/*` joins by prefix below.
+const HOT_FILES: [&str; 4] = [
+    "coordinator/scheduler.rs",
+    "coordinator/service.rs",
+    "coordinator/kv.rs",
+    "coordinator/engine.rs",
+];
+
+const DENY_MACROS: [&str; 4] =
+    ["panic", "unreachable", "todo", "unimplemented"];
+const DENY_METHODS: [&str; 2] = ["unwrap", "expect"];
+
+pub fn panic_wall(set: &SourceSet) -> Vec<Finding> {
+    let pass = Pass::PanicWall;
+    let mut out: Vec<Finding> = Vec::new();
+    let mut scope: Vec<&LexedFile> = Vec::new();
+    for path in HOT_FILES {
+        match set.file(path) {
+            Some(f) => scope.push(f),
+            None => out.push(missing_anchor(pass, path)),
+        }
+    }
+    for f in set.files() {
+        if f.path.starts_with("runtime/") {
+            scope.push(f);
+        }
+    }
+    for f in scope {
+        let (allowed, bad) = allow_lines(f, "panic", pass);
+        out.extend(bad);
+        for i in 0..f.toks.len() {
+            let t = &f.toks[i];
+            if t.kind != TokKind::Ident || f.in_test(i) {
+                continue;
+            }
+            let name = t.text.as_str();
+            let hit = (DENY_MACROS.contains(&name)
+                && f.is_punct(i + 1, "!"))
+                || (DENY_METHODS.contains(&name)
+                    && i > 0
+                    && f.is_punct(i - 1, ".")
+                    && f.is_punct(i + 1, "("));
+            if !hit || allowed.contains(&t.line) {
+                continue;
+            }
+            out.push(Finding {
+                pass,
+                file: f.path.clone(),
+                line: t.line,
+                msg: format!(
+                    "`{name}` on a hot path outside #[cfg(test)] — \
+                     return a typed error, or annotate the invariant \
+                     with `// lint: allow(panic, <reason>)`"),
+            });
+        }
+    }
+    out
+}
+
+// ---- pass 5: Send-safety ---------------------------------------------------
+
+const ENGINE_FILE: &str = "coordinator/engine.rs";
+
+pub fn send_safety(set: &SourceSet) -> Vec<Finding> {
+    let pass = Pass::SendSafety;
+    let mut out: Vec<Finding> = Vec::new();
+    for f in set.files() {
+        let factory = if f.path == ENGINE_FILE {
+            fn_body(f, "factory")
+        } else {
+            None
+        };
+        let (allowed, bad) = allow_lines(f, "send", pass);
+        out.extend(bad);
+        for i in 0..f.toks.len() {
+            if !(f.is_ident(i, "StepEngine")
+                && f.is_punct(i + 1, "::")
+                && f.is_ident(i + 2, "new")
+                && f.is_punct(i + 3, "("))
+            {
+                continue;
+            }
+            if f.in_test(i) {
+                continue;
+            }
+            if let Some((open, close)) = factory {
+                if i > open && i < close {
+                    // the worker-thread closure in StepEngine::factory —
+                    // the one blessed construction site
+                    continue;
+                }
+            }
+            if allowed.contains(&f.toks[i].line) {
+                continue;
+            }
+            out.push(Finding {
+                pass,
+                file: f.path.clone(),
+                line: f.toks[i].line,
+                msg: "StepEngine::new outside StepEngine::factory — \
+                      PJRT state must not cross threads; construct via \
+                      the factory inside the worker thread, or annotate \
+                      `// lint: allow(send, <reason>)` if the engine \
+                      provably stays on this thread"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
+// ---- fixture-driven tests ---------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(files: &[(&str, &str)]) -> SourceSet {
+        SourceSet::from_memory(files)
+    }
+
+    fn msgs(fs: &[Finding]) -> String {
+        fs.iter()
+            .map(|f| format!("{}:{} {}", f.file, f.line, f.msg))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    // ---- pass 1 ----
+
+    #[test]
+    fn stats_catalog_fires_on_each_drift_axis_and_stays_quiet_on_clean() {
+        let s = set(&[
+            (
+                "coordinator/request.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/stats_drift_request.rs"),
+            ),
+            (
+                "metrics/recorder.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/stats_drift_recorder.rs"),
+            ),
+            (
+                "rl/trainer.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/stats_drift_trainer.rs"),
+            ),
+        ]);
+        let f = stats_catalog(&s);
+        let m = msgs(&f);
+        // `completed` is fully wired in the fixture: no finding names it
+        assert!(!m.contains("completed"), "false positive:\n{m}");
+        // the three seeded drift axes all fire
+        assert!(m.contains("SchedulerStats.submitted is not accumulated"),
+                "missing merge finding:\n{m}");
+        assert!(m.contains("`sched_decode_steps` (SchedulerStats.\
+                            decode_steps) is missing from the sched_*"),
+                "missing catalog finding:\n{m}");
+        assert!(m.contains("`sched_decode_steps` (SchedulerStats.\
+                            decode_steps) is never written"),
+                "missing emit finding:\n{m}");
+        // alias: occupancy_sum is documented+emitted as sched_occupancy
+        assert!(!m.contains("occupancy_sum"), "alias broke:\n{m}");
+        assert_eq!(f.len(), 3, "unexpected findings:\n{m}");
+    }
+
+    // ---- pass 2 ----
+
+    #[test]
+    fn config_drift_fires_on_json_and_cli_gaps() {
+        let s = set(&[
+            (
+                "rl/trainer.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/config_drift_trainer.rs"),
+            ),
+            (
+                "config/mod.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/config_drift_config.rs"),
+            ),
+            (
+                "main.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/config_drift_main.rs"),
+            ),
+        ]);
+        let f = config_drift(&s);
+        let m = msgs(&f);
+        // steps: fully wired — quiet
+        assert!(!m.contains("TrainerConfig.steps "), "false positive:\n{m}");
+        // kv_layout: alias --kv registered — quiet on the CLI axis,
+        // but missing from from_json — one finding
+        assert!(m.contains("TrainerConfig.kv_layout does not round-trip: \
+                            no \"kv_layout\" key in config::from_json"),
+                "missing from_json finding:\n{m}");
+        // seed: no flag registered
+        assert!(m.contains("TrainerConfig.seed has no --seed flag"),
+                "missing cli finding:\n{m}");
+        // temp: CONFIG_ONLY but the fixture registers --temp → stale
+        assert!(m.contains("TrainerConfig.temp is listed CONFIG_ONLY"),
+                "missing stale-allowlist finding:\n{m}");
+        assert_eq!(f.len(), 3, "unexpected findings:\n{m}");
+    }
+
+    // ---- pass 3 ----
+
+    #[test]
+    fn protocol_finds_dead_and_unhandled_variants() {
+        let s = set(&[(
+            "coordinator/service.rs",
+            include_str!(
+                "../../tests/fixtures/lint/protocol_service.rs"),
+        )]);
+        let f = protocol(&s);
+        let m = msgs(&f);
+        // Submit: constructed + matched — quiet
+        assert!(!m.contains("Submit"), "false positive:\n{m}");
+        // Finished: constructed + matched via `if let` — quiet
+        assert!(!m.contains("Finished"), "false positive:\n{m}");
+        assert!(m.contains("Command::Dead is never constructed"),
+                "missing dead finding:\n{m}");
+        assert!(m.contains("Command::Unhandled is never matched"),
+                "missing unhandled finding:\n{m}");
+        assert_eq!(f.len(), 2, "unexpected findings:\n{m}");
+    }
+
+    // ---- pass 4 ----
+
+    #[test]
+    fn panic_wall_fires_denies_and_honors_the_escape_hatch() {
+        let hot = include_str!(
+            "../../tests/fixtures/lint/panic_wall_hot.rs");
+        let s = set(&[
+            ("coordinator/scheduler.rs", hot),
+            ("coordinator/service.rs", ""),
+            ("coordinator/kv.rs", ""),
+            ("coordinator/engine.rs", ""),
+        ]);
+        let f = panic_wall(&s);
+        let m = msgs(&f);
+        assert!(m.contains("`unwrap` on a hot path"),
+                "missing unwrap finding:\n{m}");
+        assert!(m.contains("`unreachable` on a hot path"),
+                "missing unreachable finding:\n{m}");
+        assert!(m.contains("needs a non-empty reason"),
+                "missing malformed-annotation finding:\n{m}");
+        // annotated expect, cfg(test) unwrap, and panic-looking text in
+        // comments / strings / raw strings stay quiet
+        assert!(!m.contains("`expect` on a hot path"),
+                "annotation not honored:\n{m}");
+        assert!(!m.contains("`panic` on a hot path"),
+                "comment/string text leaked into the wall:\n{m}");
+        assert_eq!(f.len(), 3, "unexpected findings:\n{m}");
+    }
+
+    #[test]
+    fn panic_wall_reports_missing_hot_files() {
+        let s = set(&[("coordinator/scheduler.rs", "fn ok() {}")]);
+        let f = panic_wall(&s);
+        assert_eq!(f.len(), 3); // service, kv, engine anchors missing
+        assert!(msgs(&f).contains("anchor file coordinator/service.rs"));
+    }
+
+    // ---- pass 5 ----
+
+    #[test]
+    fn send_safety_blesses_factory_and_annotations_only() {
+        let s = set(&[
+            (
+                "coordinator/engine.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/send_safety_engine.rs"),
+            ),
+            (
+                "main.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/send_safety_main.rs"),
+            ),
+        ]);
+        let f = send_safety(&s);
+        let m = msgs(&f);
+        assert_eq!(f.len(), 1, "expected exactly one finding:\n{m}");
+        assert_eq!(f[0].file, "main.rs");
+        assert!(m.contains("StepEngine::new outside StepEngine::factory"));
+    }
+}

@@ -320,6 +320,7 @@ impl KvBuf {
         *self = match lit {
             Some(l) => KvBuf::Device(l),
             None => KvBuf::Host(
+                // lint: allow(panic, InputHandle always carries host or literal — new()/from_literal() each set one and into_parts never drops both)
                 host.expect("KV handle lost both representations").into_f32()),
         };
     }
@@ -335,7 +336,10 @@ impl KvBuf {
         }
         match self {
             KvBuf::Host(v) => Ok(v),
-            _ => unreachable!("KV cache empty outside a call"),
+            // Empty outside a call means a previous error path failed to
+            // restore the payload; surface it as the same typed error the
+            // take path uses instead of poisoning the worker thread
+            _ => Err(KvTakenError.into()),
         }
     }
 }

@@ -203,21 +203,34 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// across a steal) and return in the order given.
     pub fn extract_queued(&mut self, ids: &[u64])
                           -> Option<Vec<RolloutRequest>> {
-        if ids.is_empty()
-            || !ids.iter().all(
-                |id| self.queue.iter().any(|(r, _)| r.id == *id))
-        {
+        if ids.is_empty() {
             return None;
         }
-        let mut out = Vec::with_capacity(ids.len());
+        // resolve every id to a queue index before touching the queue, so
+        // a missing or duplicated id (two entries resolving to one index)
+        // rejects the whole steal with the ledger untouched
+        let mut idx: Vec<usize> = Vec::with_capacity(ids.len());
         for id in ids {
-            let qi = self
-                .queue
-                .iter()
-                .position(|(r, _)| r.id == *id)
-                .expect("presence checked above");
-            let (req, _) = self.queue.remove(qi).unwrap();
-            out.push(req);
+            match self.queue.iter().position(|(r, _)| r.id == *id) {
+                Some(qi) if !idx.contains(&qi) => idx.push(qi),
+                _ => return None,
+            }
+        }
+        // remove highest index first so the remaining ones stay valid;
+        // `picked` keeps the caller's order
+        let mut order: Vec<usize> = (0..idx.len()).collect();
+        order.sort_by_key(|&k| std::cmp::Reverse(idx[k]));
+        let mut picked: Vec<Option<RolloutRequest>> =
+            ids.iter().map(|_| None).collect();
+        for k in order {
+            if let Some((req, _)) = self.queue.remove(idx[k]) {
+                picked[k] = Some(req);
+            }
+        }
+        let out: Vec<RolloutRequest> =
+            picked.into_iter().flatten().collect();
+        if out.len() != ids.len() {
+            return None;
         }
         self.stats.submitted -= out.len();
         Some(out)
@@ -291,8 +304,9 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// [`Scheduler::tick`] results; on a drained scheduler
     /// `completed + cancelled == submitted`.
     pub fn cancel(&mut self, id: u64) -> Option<RolloutResult> {
-        if let Some(qi) = self.queue.iter().position(|(r, _)| r.id == id) {
-            let (req, t_enq) = self.queue.remove(qi).unwrap();
+        let qi = self.queue.iter().position(|(r, _)| r.id == id);
+        if let Some((req, t_enq)) = qi.and_then(|qi| self.queue.remove(qi))
+        {
             self.stats.cancelled += 1;
             return Some(RolloutResult {
                 id: req.id,
@@ -373,9 +387,16 @@ impl<E: DecodeEngine> Scheduler<E> {
             admissible = take;
         }
         let mut newly = Vec::new();
-        for _ in 0..admissible {
-            let (req, t_enq) = self.queue.pop_front().unwrap();
-            let slot = self.slots.acquire(req.id).expect("free slot");
+        while newly.len() < admissible {
+            // `admissible` was clamped to queue length and free slots
+            // above; running out early just admits fewer this round
+            let Some((req, t_enq)) = self.queue.pop_front() else {
+                break;
+            };
+            let Some(slot) = self.slots.acquire(req.id) else {
+                self.queue.push_front((req, t_enq));
+                break;
+            };
             newly.push((req, t_enq, slot));
         }
         // cluster identical prompts: reps[k] is the newly-index of cluster

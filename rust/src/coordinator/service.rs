@@ -1160,7 +1160,7 @@ impl<E: DecodeEngine> RolloutService<E> {
             for (gi, uids) in cands {
                 let stolen = {
                     let Backend::Inline(scheds) = &mut self.backend else {
-                        unreachable!()
+                        return;
                     };
                     scheds[victim].extract_queued(&uids)
                 };
@@ -1169,7 +1169,7 @@ impl<E: DecodeEngine> RolloutService<E> {
                 };
                 {
                     let Backend::Inline(scheds) = &mut self.backend else {
-                        unreachable!()
+                        return;
                     };
                     for r in reqs {
                         scheds[thief].submit(r);
@@ -1191,7 +1191,8 @@ impl<E: DecodeEngine> RolloutService<E> {
             for e in 0..self.engines() {
                 let finished = {
                     let Backend::Inline(scheds) = &mut self.backend else {
-                        unreachable!("inline run on threaded backend")
+                        return Err(anyhow!(
+                            "inline run called on a threaded backend"));
                     };
                     if scheds[e].pending() == 0 {
                         continue;
@@ -1208,7 +1209,9 @@ impl<E: DecodeEngine> RolloutService<E> {
                         let partial = {
                             let Backend::Inline(scheds) = &mut self.backend
                             else {
-                                unreachable!()
+                                return Err(anyhow!(
+                                    "inline run called on a threaded \
+                                     backend"));
                             };
                             scheds[engine].cancel(uid)
                         };
@@ -1301,7 +1304,8 @@ impl<E: DecodeEngine> RolloutService<E> {
         while unresolved > 0 {
             let ev = {
                 let Backend::Threaded { events, .. } = &self.backend else {
-                    unreachable!("threaded run on inline backend")
+                    return Err(anyhow!(
+                        "threaded run called on an inline backend"));
                 };
                 // bounded wait so a dead worker (thread panic = contract
                 // violation in its engine) can't wedge the control loop
@@ -1312,7 +1316,9 @@ impl<E: DecodeEngine> RolloutService<E> {
                     let dead = {
                         let Backend::Threaded { workers, .. } = &self.backend
                         else {
-                            unreachable!()
+                            return Err(anyhow!(
+                                "threaded run called on an inline \
+                                 backend"));
                         };
                         workers.iter().any(|w| match &w.join {
                             Some(j) => j.is_finished(),
@@ -1341,7 +1347,9 @@ impl<E: DecodeEngine> RolloutService<E> {
                             let Backend::Threaded { workers, .. } =
                                 &self.backend
                             else {
-                                unreachable!()
+                                return Err(anyhow!(
+                                    "threaded run called on an inline \
+                                     backend"));
                             };
                             workers[engine]
                                 .cmd
@@ -1386,7 +1394,9 @@ impl<E: DecodeEngine> RolloutService<E> {
                             let Backend::Threaded { workers, .. } =
                                 &self.backend
                             else {
-                                unreachable!()
+                                return Err(anyhow!(
+                                    "threaded run called on an inline \
+                                     backend"));
                             };
                             workers[thief]
                                 .cmd
@@ -1535,17 +1545,21 @@ impl<E: DecodeEngine> RolloutService<E> {
         }
         let mut out = Vec::with_capacity(self.groups.len());
         for g in self.groups.drain(..) {
-            assert_eq!(g.finished + g.cancelled, g.size,
-                       "group {} resolved {}/{} members",
-                       g.group_id, g.finished + g.cancelled, g.size);
+            if g.finished + g.cancelled != g.size {
+                return Err(anyhow!(
+                    "group {} resolved {}/{} members at drain",
+                    g.group_id, g.finished + g.cancelled, g.size));
+            }
+            let gid = g.group_id;
+            let mut members = Vec::with_capacity(g.outcomes.len());
+            for (mi, o) in g.outcomes.into_iter().enumerate() {
+                members.push(o.ok_or_else(|| anyhow!(
+                    "group {gid} member {mi} unresolved at drain"))?);
+            }
             out.push(GroupResult {
-                group_id: g.group_id,
+                group_id: gid,
                 engine: g.engine,
-                members: g
-                    .outcomes
-                    .into_iter()
-                    .map(|o| o.expect("member unresolved"))
-                    .collect(),
+                members,
                 pruned: g.pruned,
             });
         }
@@ -1664,7 +1678,12 @@ impl<E: DecodeEngine + 'static> RolloutService<E> {
                     failed = Some(e.context(format!(
                         "engine worker {i} failed to start")));
                 }
-                Ok(_) => unreachable!("non-handshake event at startup"),
+                Ok(_) => {
+                    failed = failed.or_else(|| {
+                        Some(anyhow!("unexpected non-handshake event \
+                                      during worker startup"))
+                    });
+                }
                 Err(_) => {
                     failed = failed.or_else(|| {
                         Some(anyhow!("engine workers died or hung during \

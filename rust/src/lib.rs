@@ -12,8 +12,11 @@
 //! * [`quant`] — Rust mirrors of the quantizers + UAQ + analysis metrics,
 //! * [`tasks`] — synthetic verifiable-reward workloads + tokenizer,
 //! * [`perfmodel`] — GPU roofline simulator (paper Fig. 8),
-//! * [`metrics`], [`config`], [`util`] — support substrate.
+//! * [`metrics`], [`config`], [`util`] — support substrate,
+//! * [`analysis`] — repo-aware lint (`qurl lint`): catalog/config drift,
+//!   protocol gaps, and hot-path panics as build failures.
 
+pub mod analysis;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;

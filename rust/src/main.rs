@@ -9,6 +9,8 @@
 //!   throughput — Fig. 8 roofline sweep (+ measured CPU decode)
 //!   quantize   — quantize a checkpoint and report error statistics
 //!   info       — artifact/manifest summary
+//!   lint       — repo-aware static analysis (catalog drift, config
+//!                drift, protocol gaps, hot-path panics, Send-safety)
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -41,6 +43,7 @@ fn main() -> Result<()> {
         "throughput" => cmd_throughput(rest),
         "quantize" => cmd_quantize(rest),
         "info" => cmd_info(rest),
+        "lint" => cmd_lint(rest),
         _ => {
             eprintln!(
                 "qurl {} — Quantized Reinforcement Learning (QuRL) reproduction\n\n\
@@ -53,7 +56,8 @@ fn main() -> Result<()> {
                  \x20             shared prefill, multi-engine striping)\n\
                  \x20 throughput  Fig. 8 roofline sweep\n\
                  \x20 quantize    quantization error report\n\
-                 \x20 info        manifest summary",
+                 \x20 info        manifest summary\n\
+                 \x20 lint        repo lint: drift/protocol/panic passes",
                 qurl::version(),
                 config::PRESETS.join(", ")
             );
@@ -382,6 +386,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let mut svc = match exec {
         RolloutExec::Inline => {
             let engines: Vec<StepEngine> = (0..n_engines)
+                // lint: allow(send, inline backend — engines are built and ticked on this thread only, PJRT state never crosses)
                 .map(|_| StepEngine::new(&rt, w.clone()))
                 .collect();
             RolloutService::new(engines, man.max_seq, man.eos_id)
@@ -546,5 +551,46 @@ fn cmd_info(argv: &[String]) -> Result<()> {
         println!("  {name:16} {} in / {} out", sig.inputs.len(),
                  sig.outputs.len());
     }
+    Ok(())
+}
+
+/// `qurl lint` — run the five repo-aware static-analysis passes over a
+/// Rust source tree and exit nonzero on findings.  The same passes run
+/// as tier-1 unit tests (`src/analysis/passes.rs` fixtures plus the
+/// repo-clean gate in `tests/lint.rs`); this subcommand is the CI
+/// entrypoint, and `--report` writes the findings table to a file so
+/// CI can upload it as a build artifact.  See `src/analysis/mod.rs`
+/// for the lint catalog and escape hatches.
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("qurl lint",
+                       "repo-aware static analysis (see src/analysis/)")
+        .opt("src", "",
+             "source root to scan (default: the src/ tree this binary \
+              was built from)")
+        .opt("report", "", "also write the findings table to this path");
+    let args = cli.parse_from(argv).map_err(|e| anyhow::anyhow!(e))?;
+    let root = match args.str("src") {
+        s if s.is_empty() => {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+        }
+        s => PathBuf::from(s),
+    };
+    let set = qurl::analysis::SourceSet::load(&root)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    let findings = qurl::analysis::run_all(&set);
+    let table = qurl::analysis::report(&findings);
+    println!("{table}");
+    let report_path = args.str("report");
+    if !report_path.is_empty() {
+        if let Some(dir) = Path::new(&report_path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&report_path, &table)
+            .with_context(|| format!("writing {report_path}"))?;
+    }
+    anyhow::ensure!(findings.is_empty(), "qurl lint: {} finding(s)",
+                    findings.len());
     Ok(())
 }

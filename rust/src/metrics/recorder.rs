@@ -10,6 +10,13 @@
 //! |---------------------------|---------------------------------------------|
 //! | `sched_occupancy`         | mean occupied-slot fraction per decode call |
 //! | `sched_queue_wait_s`      | mean seconds a request queued before prefill|
+//! | `sched_submitted`         | requests admitted to scheduler queues this  |
+//! |                           | step (pre-prefill; queue inflow)            |
+//! | `sched_completed`         | requests that finished (EOS or max_new)     |
+//! | `sched_decode_steps`      | summed per-replica decode ticks — the raw   |
+//! |                           | series `sched_load_imbalance` max/min-      |
+//! |                           | reduces (vs. `sched_decode_calls`, which    |
+//! |                           | counts lockstep artifact calls)             |
 //! | `sched_prefill_calls`     | batched prefill artifact calls              |
 //! | `sched_prefill_rows`      | rows actually prefilled (post prefix-share) |
 //! | `sched_mean_prefill_batch`| rows per prefill call (admission health)    |

@@ -395,6 +395,7 @@ impl Trainer {
         let mut svc = match self.cfg.rollout_exec {
             RolloutExec::Inline => {
                 let engines: Vec<StepEngine> = (0..n)
+                    // lint: allow(send, inline backend — engines are built and ticked on this thread only, PJRT state never crosses)
                     .map(|_| StepEngine::new(&self.rt, weights.clone()))
                     .collect();
                 RolloutService::new(engines, max_seq, eos_id)
@@ -880,6 +881,13 @@ impl Trainer {
             let mut row = Row::new(step as u64)
                 .set("sched_occupancy", st.mean_occupancy())
                 .set("sched_queue_wait_s", st.mean_queue_wait_s())
+                // lifecycle counters (added with the stats-catalog lint,
+                // which found them merged but never emitted): admission
+                // and completion volume per step, and the summed
+                // per-replica decode ticks behind load_imbalance
+                .set("sched_submitted", st.submitted as f64)
+                .set("sched_completed", st.completed as f64)
+                .set("sched_decode_steps", st.decode_steps as f64)
                 .set("sched_prefill_calls", st.prefill_calls as f64)
                 .set("sched_prefill_rows", st.prefill_rows as f64)
                 .set("sched_mean_prefill_batch", st.mean_prefill_batch())

@@ -296,8 +296,10 @@ impl ArtifactStore {
         let mut converted_now: Vec<usize> = Vec::new();
         let mut stage_err: Option<anyhow::Error> = None;
         for (i, h) in resident.iter_mut().enumerate() {
-            if h.is_staged() {
-                lits.push(h.lit.take().unwrap());
+            // take the cached literal when present (`is_staged`);
+            // otherwise fall through to the host-conversion path
+            if let Some(l) = h.lit.take() {
+                lits.push(l);
                 continue;
             }
             let converted = match h.host.as_ref() {
@@ -335,9 +337,15 @@ impl ArtifactStore {
             Some(e) => Err(e),
             None => {
                 let cache = self.cache.borrow();
-                let exe = cache.get(name).unwrap();
-                exe.execute::<xla::Literal>(&lits)
-                    .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))
+                match cache.get(name) {
+                    Some(exe) => exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| anyhow::anyhow!(
+                            "executing {name}: {e:?}")),
+                    None => Err(anyhow!(
+                        "{name}: executable missing after \
+                         ensure_compiled")),
+                }
             }
         };
         // hand the staged literals back to their handles in all cases — a
@@ -404,7 +412,7 @@ impl ArtifactStore {
             .iter()
             .map(|(k, s)| (k.clone(), *s))
             .collect();
-        v.sort_by(|a, b| b.1.secs.partial_cmp(&a.1.secs).unwrap());
+        v.sort_by(|a, b| b.1.secs.total_cmp(&a.1.secs));
         v
     }
 

@@ -125,6 +125,16 @@ pub struct Runtime {
     pub store: ArtifactStore,
 }
 
+/// Next output of an artifact call, with the artifact named in the error.
+/// An artifact returning fewer outputs than its signature promises is a
+/// build problem (stale `make artifacts`), and it surfaces as a typed
+/// error on the serving path instead of a panicking `unwrap`.
+fn next_out(it: &mut std::vec::IntoIter<HostTensor>, name: &str)
+            -> Result<HostTensor> {
+    it.next().ok_or_else(|| anyhow::anyhow!(
+        "{name}: artifact returned fewer outputs than its signature"))
+}
+
 impl Runtime {
     pub fn open(dir: &std::path::Path) -> Result<Runtime> {
         Ok(Runtime { store: ArtifactStore::open(dir)? })
@@ -146,7 +156,8 @@ impl Runtime {
     /// Deterministic initial parameters from a seed.
     pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
         let out = self.store.call("init_params", &[HostTensor::scalar_i32(seed)])?;
-        Ok(out.into_iter().next().unwrap().into_f32())
+        let mut it = out.into_iter();
+        Ok(next_out(&mut it, "init_params")?.into_f32())
     }
 
     /// Quantize section-B weights to int8 (per-output-channel scales).
@@ -156,7 +167,8 @@ impl Runtime {
             &[HostTensor::f32(&[flat_b.len()], flat_b.to_vec())],
         )?;
         let mut it = out.into_iter();
-        Ok((it.next().unwrap().into_i8(), it.next().unwrap().into_f32()))
+        Ok((next_out(&mut it, "quantize_int8")?.into_i8(),
+            next_out(&mut it, "quantize_int8")?.into_f32()))
     }
 
     /// Fake-quantize section-B weights onto the e4m3 grid.
@@ -165,7 +177,8 @@ impl Runtime {
             "quantize_fp8",
             &[HostTensor::f32(&[flat_b.len()], flat_b.to_vec())],
         )?;
-        Ok(out.into_iter().next().unwrap().into_f32())
+        let mut it = out.into_iter();
+        Ok(next_out(&mut it, "quantize_fp8")?.into_f32())
     }
 
     /// Build rollout-engine weights from full-precision params.
@@ -202,7 +215,8 @@ impl Runtime {
                 HostTensor::scalar_f32(s),
             ],
         )?;
-        Ok(out.into_iter().next().unwrap().into_f32())
+        let mut it = out.into_iter();
+        Ok(next_out(&mut it, "uaq_scale")?.into_f32())
     }
 
     /// Batched rollout (prefill + scan decode + sampling in one artifact).
@@ -225,9 +239,9 @@ impl Runtime {
         let out = self.store.call(&name, &inputs)?;
         let mut it = out.into_iter();
         Ok(GenerateOut {
-            tokens: it.next().unwrap().into_i32(),
-            logprob: it.next().unwrap().into_f32(),
-            mask: it.next().unwrap().into_f32(),
+            tokens: next_out(&mut it, &name)?.into_i32(),
+            logprob: next_out(&mut it, &name)?.into_f32(),
+            mask: next_out(&mut it, &name)?.into_f32(),
         })
     }
 
@@ -246,9 +260,9 @@ impl Runtime {
         )?;
         let mut it = out.into_iter();
         Ok(ScoreOut {
-            logprob: it.next().unwrap().into_f32(),
-            value: it.next().unwrap().into_f32(),
-            entropy: it.next().unwrap().into_f32(),
+            logprob: next_out(&mut it, "logprob_bf16")?.into_f32(),
+            value: next_out(&mut it, "logprob_bf16")?.into_f32(),
+            entropy: next_out(&mut it, "logprob_bf16")?.into_f32(),
         })
     }
 
@@ -263,7 +277,8 @@ impl Runtime {
         inputs.push(HostTensor::i32(&[b, t], tokens.to_vec()));
         let name = format!("logprob_{}", w.mode().tag());
         let out = self.store.call(&name, &inputs)?;
-        Ok(out.into_iter().next().unwrap().into_f32())
+        let mut it = out.into_iter();
+        Ok(next_out(&mut it, &name)?.into_f32())
     }
 
     /// One RL optimization step; updates `store` in place, returns metrics.
@@ -293,10 +308,10 @@ impl Runtime {
         ];
         let out = self.store.call("train_step", &inputs)?;
         let mut it = out.into_iter();
-        ps.params = it.next().unwrap().into_f32();
-        ps.m = it.next().unwrap().into_f32();
-        ps.v = it.next().unwrap().into_f32();
-        Ok(it.next().unwrap().into_f32())
+        ps.params = next_out(&mut it, "train_step")?.into_f32();
+        ps.m = next_out(&mut it, "train_step")?.into_f32();
+        ps.v = next_out(&mut it, "train_step")?.into_f32();
+        Ok(next_out(&mut it, "train_step")?.into_f32())
     }
 
     /// One supervised (cross-entropy) step — builds the RL base model.
@@ -318,9 +333,9 @@ impl Runtime {
         ];
         let out = self.store.call("sft_step", &inputs)?;
         let mut it = out.into_iter();
-        ps.params = it.next().unwrap().into_f32();
-        ps.m = it.next().unwrap().into_f32();
-        ps.v = it.next().unwrap().into_f32();
-        Ok(it.next().unwrap().into_f32())
+        ps.params = next_out(&mut it, "sft_step")?.into_f32();
+        ps.m = next_out(&mut it, "sft_step")?.into_f32();
+        ps.v = next_out(&mut it, "sft_step")?.into_f32();
+        Ok(next_out(&mut it, "sft_step")?.into_f32())
     }
 }

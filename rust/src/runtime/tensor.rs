@@ -99,6 +99,7 @@ impl HostTensor {
     pub fn as_f32(&self) -> &[f32] {
         match self {
             HostTensor::F32 { data, .. } => data.as_slice(),
+            // lint: allow(panic, dtype contract — callers pick the accessor the artifact signature pins; a mismatch is a caller bug, not runtime input)
             other => panic!("expected f32 tensor, got {}", other.dtype_str()),
         }
     }
@@ -106,6 +107,7 @@ impl HostTensor {
     pub fn as_i32(&self) -> &[i32] {
         match self {
             HostTensor::I32 { data, .. } => data.as_slice(),
+            // lint: allow(panic, dtype contract — callers pick the accessor the artifact signature pins; a mismatch is a caller bug, not runtime input)
             other => panic!("expected i32 tensor, got {}", other.dtype_str()),
         }
     }
@@ -113,6 +115,7 @@ impl HostTensor {
     pub fn as_i8(&self) -> &[i8] {
         match self {
             HostTensor::I8 { data, .. } => data.as_slice(),
+            // lint: allow(panic, dtype contract — callers pick the accessor the artifact signature pins; a mismatch is a caller bug, not runtime input)
             other => panic!("expected i8 tensor, got {}", other.dtype_str()),
         }
     }
@@ -125,6 +128,7 @@ impl HostTensor {
             HostTensor::F32 { data, .. } => {
                 Arc::try_unwrap(data).unwrap_or_else(|a| (*a).clone())
             }
+            // lint: allow(panic, dtype contract — callers pick the accessor the artifact signature pins; a mismatch is a caller bug, not runtime input)
             other => panic!("expected f32 tensor, got {}", other.dtype_str()),
         }
     }
@@ -134,6 +138,7 @@ impl HostTensor {
             HostTensor::I32 { data, .. } => {
                 Arc::try_unwrap(data).unwrap_or_else(|a| (*a).clone())
             }
+            // lint: allow(panic, dtype contract — callers pick the accessor the artifact signature pins; a mismatch is a caller bug, not runtime input)
             other => panic!("expected i32 tensor, got {}", other.dtype_str()),
         }
     }
@@ -143,6 +148,7 @@ impl HostTensor {
             HostTensor::I8 { data, .. } => {
                 Arc::try_unwrap(data).unwrap_or_else(|a| (*a).clone())
             }
+            // lint: allow(panic, dtype contract — callers pick the accessor the artifact signature pins; a mismatch is a caller bug, not runtime input)
             other => panic!("expected i8 tensor, got {}", other.dtype_str()),
         }
     }

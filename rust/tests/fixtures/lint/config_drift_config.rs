@@ -1,0 +1,23 @@
+//! Config-drift fixture (config/mod.rs role).  `kv_layout` is written
+//! by `to_json` but silently reset to a default in `from_json` — the
+//! classic round-trip drift where a saved run reloads with a different
+//! KV layout than it ran with.
+
+pub fn to_json(c: &TrainerConfig) -> String {
+    let mut s = String::new();
+    s.push_str(&kv("steps", c.steps));
+    s.push_str(&kv("kv_layout", &c.kv_layout));
+    s.push_str(&kv("seed", c.seed));
+    s.push_str(&kv("temp", c.temp));
+    s
+}
+
+pub fn from_json(j: &Json) -> TrainerConfig {
+    TrainerConfig {
+        steps: j.get("steps"),
+        seed: j.get("seed"),
+        temp: j.get("temp"),
+        // seeded violation: no "kv_layout" key read back
+        kv_layout: default_kv(),
+    }
+}

@@ -1,0 +1,11 @@
+//! Config-drift fixture (main.rs role).  Registers `--steps`, the
+//! `--kv` alias for `kv_layout`, and — seeded violation — `--temp`,
+//! which the pass's CONFIG_ONLY list says must stay preset-only.
+//! `seed` gets no flag at all.
+
+fn train_cli() -> Cli {
+    Cli::new("train")
+        .opt("steps", "200", "training steps")
+        .opt("kv", "dense", "kv layout: dense|paged")
+        .opt("temp", "1.0", "sampling temperature")
+}

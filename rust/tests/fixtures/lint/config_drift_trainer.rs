@@ -1,0 +1,10 @@
+//! Config-drift fixture (trainer.rs role): four fields covering every
+//! outcome — fully wired, missing from `from_json`, missing a CLI
+//! flag, and a stale `CONFIG_ONLY` entry.
+
+pub struct TrainerConfig {
+    pub steps: usize,
+    pub kv_layout: String,
+    pub seed: u64,
+    pub temp: f32,
+}

@@ -1,0 +1,32 @@
+//! Panic-wall fixture: two seeded violations (`unwrap`,
+//! `unreachable!`), one malformed annotation, and every quiet case —
+//! an annotated `expect`, a `#[cfg(test)]` unwrap, and panic-looking
+//! text in comments, strings, and raw strings.
+
+pub fn hot(q: &mut Queue) -> Step {
+    // a comment mentioning panic!("boom") and .unwrap() must stay quiet
+    let msg = "this string says x.unwrap() and panic!";
+    let raw = r#"raw "panic!" text with .expect( too"#;
+    log(msg, raw);
+    let slot = q.free.pop().unwrap();
+    match q.kind {
+        Kind::A => step_a(slot),
+        _ => unreachable!(),
+    }
+}
+
+pub fn annotated(q: &Queue) -> u64 {
+    // lint: allow(panic, queue non-empty by the admission invariant)
+    q.ids.first().expect("non-empty by admission")
+}
+
+// lint: allow(panic, )
+pub fn under_malformed_annotation() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_only_unwraps_are_fine() {
+        make().unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! Protocol fixture (service.rs role): `Command::Dead` is only ever
+//! matched (dead variant), `Command::Unhandled` only ever constructed
+//! (the service loop would wedge on it).  `Submit` and `Finished`
+//! exercise both classifications, including `if let` matching.
+
+pub enum Command {
+    Submit(u64),
+    Dead,
+    Unhandled,
+}
+
+pub enum Event {
+    Finished(u64),
+}
+
+pub fn run(rx: &Receiver) {
+    send(Command::Submit(1));
+    send(Command::Unhandled);
+    loop {
+        match rx.recv() {
+            Command::Submit(id) => handle(id),
+            Command::Dead => return,
+            _ => drop_it(),
+        }
+    }
+}
+
+pub fn emit() -> Event {
+    Event::Finished(3)
+}
+
+pub fn pump(ev: Event) {
+    if let Event::Finished(id) = ev {
+        done(id);
+    }
+}

@@ -1,0 +1,18 @@
+//! Send-safety fixture (engine.rs role): the blessed construction
+//! site — `StepEngine::new` inside the closure `StepEngine::factory`
+//! returns, realized on the worker thread.
+
+pub struct StepEngine;
+
+impl StepEngine {
+    pub fn factory(dir: PathBuf, weights: Weights) -> EngineFactory {
+        Box::new(move || {
+            let rt = Arc::new(Runtime::open(&dir)?);
+            Ok(StepEngine::new(&rt, weights))
+        })
+    }
+
+    pub fn new(rt: &Arc<Runtime>, weights: Weights) -> StepEngine {
+        build(rt, weights)
+    }
+}

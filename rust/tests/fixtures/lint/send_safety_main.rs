@@ -1,0 +1,10 @@
+//! Send-safety fixture (main.rs role): seeded violation — an engine
+//! constructed outside `StepEngine::factory`, with no allow(send)
+//! annotation, so PJRT state could cross a thread boundary.
+
+pub fn cmd_serve(rt: &Arc<Runtime>, weights: Weights) {
+    let engines: Vec<StepEngine> = (0..2)
+        .map(|_| StepEngine::new(rt, weights.clone()))
+        .collect();
+    drive(engines);
+}

@@ -1,0 +1,12 @@
+//! Stats-catalog fixture (recorder.rs role): the `sched_*` field
+//! catalog lives in module doc comments, exactly like the real
+//! metrics/recorder.rs.  The catalog below deliberately omits the
+//! decode-steps key so the catalog axis of the pass fires.
+//!
+//! | key              | meaning                              |
+//! |------------------|--------------------------------------|
+//! | `sched_submitted`| requests admitted to the queue       |
+//! | `sched_completed`| requests finished this step          |
+//! | `sched_occupancy`| mean busy slots per decode tick      |
+
+pub struct Recorder;

@@ -1,0 +1,18 @@
+//! Stats-catalog fixture (request.rs role): `submitted` is seeded as
+//! missing from `merge` — the drift axis the pass must catch.
+
+pub struct SchedulerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub decode_steps: u64,
+    pub occupancy_sum: f64,
+}
+
+impl SchedulerStats {
+    pub fn merge(&mut self, o: &SchedulerStats) {
+        // seeded violation: `self.submitted` deliberately not accumulated
+        self.completed += o.completed;
+        self.decode_steps += o.decode_steps;
+        self.occupancy_sum += o.occupancy_sum;
+    }
+}

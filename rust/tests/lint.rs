@@ -1,0 +1,19 @@
+//! Tier-1 gate: the repo's own source tree must pass every `qurl lint`
+//! pass.  This is the test-side twin of the `qurl lint` subcommand — it
+//! makes catalog drift, config drift, protocol gaps, hot-path panics,
+//! and Send-safety violations `cargo test` failures, not just CI-job
+//! failures.  Per-pass semantics (and the seeded-violation fixtures)
+//! are covered by the unit tests in `src/analysis/passes.rs`; this file
+//! only asserts the live tree is clean.
+
+use std::path::Path;
+
+use qurl::analysis::{report, run_all, SourceSet};
+
+#[test]
+fn repo_source_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let set = SourceSet::load(&root).expect("scan src/");
+    let findings = run_all(&set);
+    assert!(findings.is_empty(), "\n{}", report(&findings));
+}
