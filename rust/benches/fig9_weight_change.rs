@@ -15,6 +15,7 @@ fn main() -> anyhow::Result<()> {
     let (rt, base) = bk::setup()?;
     let steps = bk::bench_steps(8, 160);
     let mut rows = Vec::new();
+    let mut rq_rows = Vec::new();
     for (label, uaq) in [("s=1.0", 1.0f32), ("s=1.5", 1.5f32)] {
         let mut cfg = config::deepscaler_grpo();
         cfg.steps = steps;
@@ -37,11 +38,43 @@ fn main() -> anyhow::Result<()> {
                        format!("{err:.3e}"),
                        format!("{:.1}", err / upd.max(1e-18)),
                        format!("{codes:.4}")]);
+        // delta-requantization companion: how much of the network the WHOLE
+        // run actually moved through the int8 grid, tensor-granular — the
+        // refresh cost a delta requant pays vs the full rebuild
+        let p0 = if (uaq - 1.0).abs() > 1e-6 {
+            rt.uaq_scale(&base.params, uaq)?
+        } else {
+            base.params.clone()
+        };
+        let (w0, _) = rt.engine_weights_delta(QuantMode::Int8, &p0, None)?;
+        let (w1, rep) =
+            rt.engine_weights_delta(QuantMode::Int8, &tr.ps.params,
+                                    Some(&w0))?;
+        let swap: u64 = w0
+            .host_tensors()
+            .iter()
+            .zip(w1.host_tensors())
+            .filter(|(o, n)| !o.same_payload(n))
+            .map(|(_, n)| n.byte_len())
+            .sum();
+        rq_rows.push(vec![
+            label.to_string(),
+            format!("{}/{}", rep.tensors_changed, rep.total()),
+            format!("{:.3}", rep.changed_fraction()),
+            format!("{:.0}", swap as f64 / 1e3),
+            format!("{:.0}", w1.byte_len() as f64 / 1e3),
+        ]);
     }
     print_table("Fig. 9 analog: update vs quantization noise (tail means)",
                 &["uaq", "norm update (Eq.13)", "norm quant err (Eq.14)",
                   "err/upd", "int8 codes changed"], &rows);
+    print_table(&format!("delta requantization over the run ({steps} RL \
+                          steps)"),
+                &["uaq", "tensors changed", "frac", "swap h2d KB",
+                  "full restage KB"], &rq_rows);
     println!("\nexpected: err/upd >> 1 at s=1 (updates masked); s=1.5 cuts \
-              the ratio ~s^2 = 2.25x and more codes change per interval.");
+              the ratio ~s^2 = 2.25x and more codes change per interval.  \
+              The requant table prices the same masking at refresh time: \
+              only tensors whose quantized payload moved re-stage.");
     Ok(())
 }

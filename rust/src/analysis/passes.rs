@@ -599,12 +599,16 @@ pub fn protocol(set: &SourceSet) -> Vec<Finding> {
 // ---- pass 4: panic-freedom wall --------------------------------------------
 
 /// Hot-path modules where a panic poisons a worker thread or aborts a
-/// serving loop.  `runtime/*` joins by prefix below.
-const HOT_FILES: [&str; 4] = [
+/// serving loop.  `runtime/*` joins by prefix below.  `rl/trainer.rs` is
+/// on the wall because the training loop drives the threaded rollout
+/// service: a trainer panic strands worker threads mid-decode instead of
+/// unwinding the run as an error.
+const HOT_FILES: [&str; 5] = [
     "coordinator/scheduler.rs",
     "coordinator/service.rs",
     "coordinator/kv.rs",
     "coordinator/engine.rs",
+    "rl/trainer.rs",
 ];
 
 const DENY_MACROS: [&str; 4] =
@@ -838,6 +842,7 @@ mod tests {
             ("coordinator/service.rs", ""),
             ("coordinator/kv.rs", ""),
             ("coordinator/engine.rs", ""),
+            ("rl/trainer.rs", ""),
         ]);
         let f = panic_wall(&s);
         let m = msgs(&f);
@@ -860,7 +865,7 @@ mod tests {
     fn panic_wall_reports_missing_hot_files() {
         let s = set(&[("coordinator/scheduler.rs", "fn ok() {}")]);
         let f = panic_wall(&s);
-        assert_eq!(f.len(), 3); // service, kv, engine anchors missing
+        assert_eq!(f.len(), 4); // service, kv, engine, trainer anchors missing
         assert!(msgs(&f).contains("anchor file coordinator/service.rs"));
     }
 

@@ -170,6 +170,7 @@ pub fn to_json(cfg: &TrainerConfig) -> Json {
         ("prefill_chunk", Json::num(cfg.prefill_chunk as f64)),
         ("requantize_every", Json::num(cfg.requantize_every as f64)),
         ("analyze_every", Json::num(cfg.analyze_every as f64)),
+        ("requant_delta", Json::Bool(cfg.requant_delta)),
     ])
 }
 
@@ -241,6 +242,7 @@ pub fn from_json(j: &Json) -> Result<TrainerConfig> {
     cfg.prefill_chunk = get_f("prefill_chunk", 0.0).max(0.0) as usize;
     cfg.requantize_every = get_f("requantize_every", 1.0) as usize;
     cfg.analyze_every = get_f("analyze_every", 0.0) as usize;
+    cfg.requant_delta = get_b("requant_delta", true);
     Ok(cfg)
 }
 
@@ -282,6 +284,7 @@ mod tests {
         cfg.prefill_chunk = 64;
         cfg.prune_rollouts = false;
         cfg.prune_min_finished = 5;
+        cfg.requant_delta = false;
         let j = to_json(&cfg);
         let back = from_json(&j).unwrap();
         assert_eq!(back.rollout_engines, 3);
@@ -301,6 +304,9 @@ mod tests {
         assert!(d.placement_log.is_empty());
         assert_eq!(d.kv_layout, KvLayout::Dense);
         assert_eq!((d.kv_page_size, d.prefill_chunk), (16, 0));
+        assert!(d.requant_delta, "delta requantization defaults on");
+        assert!(!back.requant_delta,
+                "explicit requant_delta=false round-trips");
         assert!(!back.prune_rollouts);
         assert_eq!(back.prune_min_finished, 5);
         assert_eq!(back.algo, cfg.algo);

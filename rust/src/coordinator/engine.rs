@@ -10,7 +10,12 @@
 //! * **weights** — converted to device-format literals **once per weight
 //!   generation** ([`DecodeEngine::swap_weights`] bumps it), via
 //!   [`InputHandle`]s cached in the engine; a decode tick stages zero
-//!   weight bytes.
+//!   weight bytes.  Swaps are delta-aware: a handle whose payload is
+//!   pointer-identical in the incoming weights (delta requantization
+//!   reuses the previous epoch's `Arc` for bit-identical tensors) is
+//!   kept, cached conversion and all — only the payloads that actually
+//!   changed re-stage, and a zero-change swap stages nothing
+//!   ([`DecodeEngine::take_swap_h2d`] measures the remainder).
 //! * **KV caches** — between decode ticks the `[L,B,H,S,Dh]` caches flow
 //!   output→input as raw literals ([`KvBuf`]); they materialize into host
 //!   vectors only when the engine must *mutate* rows (prefill-merge on
@@ -175,9 +180,13 @@ pub trait DecodeEngine {
     ///
     /// `epoch` is the service's [`WeightEpoch`](super::service::WeightEpoch)
     /// (surfaced in stats rows); independent of its value, engines with
-    /// conversion caches must guarantee the new weights are re-staged —
-    /// `StepEngine` replaces its resident handles wholesale, so serving
-    /// stale bytes is unrepresentable (bit-parity tested).
+    /// conversion caches must guarantee every *changed* weight payload is
+    /// re-staged.  `StepEngine` keeps an existing resident handle only
+    /// when the incoming payload is pointer-identical to the installed one
+    /// (same allocation ⇒ same bytes ⇒ the cached conversion is still the
+    /// truth) and builds a fresh unstaged handle for everything else — so
+    /// serving stale bytes stays unrepresentable (bit-parity tested) while
+    /// a delta requantization re-stages only what moved.
     fn swap_weights(&mut self, w: Self::Weights, epoch: u64);
 
     /// Drain the engine's accumulated `(bytes_h2d, bytes_d2h)` staging
@@ -188,6 +197,16 @@ pub trait DecodeEngine {
     /// Engines without a conversion boundary report zeros.
     fn take_transfer(&mut self) -> (u64, u64) {
         (0, 0)
+    }
+
+    /// Drain the weight bytes [`DecodeEngine::swap_weights`] scheduled for
+    /// re-staging since the last drain: the total payload size of resident
+    /// handles a swap replaced (pointer-unequal vs the installed weights).
+    /// Under delta requantization this is the change-proportional swap
+    /// cost — a swap whose weights all reuse the previous epoch's `Arc`s
+    /// drains 0.  Engines without a conversion cache report 0.
+    fn take_swap_h2d(&mut self) -> u64 {
+        0
     }
 
     /// Install a KV layout ([`KvConfig`]) — rebuilds the engine's page
@@ -251,6 +270,10 @@ impl<E: DecodeEngine> DecodeEngine for &mut E {
 
     fn take_transfer(&mut self) -> (u64, u64) {
         (**self).take_transfer()
+    }
+
+    fn take_swap_h2d(&mut self) -> u64 {
+        (**self).take_swap_h2d()
     }
 
     fn configure_kv(&mut self, cfg: KvConfig) {
@@ -425,9 +448,10 @@ pub struct StepEngine {
     rt: Arc<Runtime>,
     pub weights: EngineWeights,
     /// resident weight inputs: the literal conversion is cached for each
-    /// handle's lifetime, and `swap_weights` replaces the handles wholesale
-    /// — so decode ticks stage zero weight bytes and a stale conversion is
-    /// unrepresentable (no handle outlives its content)
+    /// handle's lifetime, and `swap_weights` replaces every handle whose
+    /// payload changed (keeping pointer-identical ones) — so decode ticks
+    /// stage zero weight bytes and a stale conversion is unrepresentable
+    /// (no handle outlives its content)
     weight_handles: Vec<InputHandle>,
     /// `[L, B, H, S, Dh]` caches, resident between artifact calls
     cache_k: KvBuf,
@@ -437,6 +461,9 @@ pub struct StepEngine {
     /// staged/fetched bytes since the last `take_transfer` drain
     acc_h2d: u64,
     acc_d2h: u64,
+    /// weight bytes `swap_weights` scheduled for re-staging (payloads that
+    /// were not pointer-identical) since the last `take_swap_h2d` drain
+    acc_swap_h2d: u64,
     /// input residency on (the default).  Off = the per-call baseline:
     /// weights reconvert and KV round-trips through host vectors every
     /// call — kept for the bit-parity tests and the copy-tax bench column.
@@ -484,6 +511,7 @@ impl StepEngine {
             batch: m.rollout_batch,
             acc_h2d: 0,
             acc_d2h: 0,
+            acc_swap_h2d: 0,
             resident: true,
             full_row_fork: false,
             pager: KvPager::new(m.rollout_batch, m.max_seq,
@@ -537,12 +565,49 @@ impl StepEngine {
 /// appear in [`ArtifactStore::stats`](crate::runtime::ArtifactStore::stats).
 const KV_MATERIALIZE: &str = "kv_materialize(host)";
 
-/// Resident weight handles for `w`, in artifact input order.  The single
-/// definition both `StepEngine::new` and `swap_weights` build from — the
-/// "stale cached conversion is unrepresentable" guarantee rests on every
-/// installation path constructing fresh (unstaged) handles identically.
+/// Resident weight handles for `w`, in artifact input order — the fresh
+/// (unstaged) form `StepEngine::new` installs and `delta_weight_handles`
+/// falls back to per changed payload.
 fn weight_handles(w: &EngineWeights) -> Vec<InputHandle> {
     w.host_tensors().into_iter().map(InputHandle::new).collect()
+}
+
+/// Delta-aware handle refresh for a weight swap: keep the existing handle
+/// — cached device conversion included — for every payload that is
+/// pointer-identical between `old_w` and `new_w` ([`HostTensor::same_payload`];
+/// same allocation ⇒ same bytes ⇒ the cached literal is still the truth),
+/// and build a fresh unstaged handle for the rest.  Returns the handles in
+/// artifact input order plus the byte total of replaced payloads — the h2d
+/// the next call pays for this swap (drained as `swap_bytes_h2d`).
+///
+/// `Runtime::engine_weights_delta` produces exactly this pointer-reuse for
+/// tensors whose quantized form came out bit-identical, so with small RL
+/// steps most handles survive a requantization and a zero-change swap
+/// re-stages nothing.  A mode switch (different payload layout) replaces
+/// everything — the conservative direction: a false "changed" costs one
+/// re-stage, a false "unchanged" would serve stale bytes.
+fn delta_weight_handles(old_w: &EngineWeights, old: Vec<InputHandle>,
+                        new_w: &EngineWeights) -> (Vec<InputHandle>, u64) {
+    let new_ts = new_w.host_tensors();
+    if old_w.mode() != new_w.mode() || old.len() != new_ts.len() {
+        let bytes = new_ts.iter().map(HostTensor::byte_len).sum();
+        return (new_ts.into_iter().map(InputHandle::new).collect(), bytes);
+    }
+    let old_ts = old_w.host_tensors();
+    let mut bytes = 0u64;
+    let handles = old
+        .into_iter()
+        .zip(old_ts.iter().zip(new_ts))
+        .map(|(h, (ot, nt))| {
+            if ot.same_payload(&nt) {
+                h
+            } else {
+                bytes += nt.byte_len();
+                InputHandle::new(nt)
+            }
+        })
+        .collect();
+    (handles, bytes)
 }
 
 impl DecodeEngine for StepEngine {
@@ -778,17 +843,27 @@ impl DecodeEngine for StepEngine {
     /// every replica's caches).  The precision mode may change too — the
     /// artifact name is derived from the installed weights per call.
     ///
-    /// The resident weight handles are replaced wholesale (fresh handles
-    /// start unstaged), so stale cached bytes are unrepresentable no
-    /// matter what `epoch` value the caller passes; the next call stages
-    /// the new weights exactly once.
+    /// The swap is delta-aware ([`delta_weight_handles`]): a handle whose
+    /// payload is pointer-identical in the incoming weights keeps its
+    /// cached conversion, everything else gets a fresh unstaged handle —
+    /// so stale cached bytes stay unrepresentable no matter what `epoch`
+    /// value the caller passes, while the next call stages only the
+    /// payloads that actually changed (a full-refresh swap pays the old
+    /// wholesale cost; a zero-change delta swap pays nothing).
     fn swap_weights(&mut self, w: EngineWeights, _epoch: u64) {
-        self.weight_handles = weight_handles(&w);
+        let old = std::mem::take(&mut self.weight_handles);
+        let (handles, staged) = delta_weight_handles(&self.weights, old, &w);
+        self.weight_handles = handles;
+        self.acc_swap_h2d += staged;
         self.weights = w;
     }
 
     fn take_transfer(&mut self) -> (u64, u64) {
         (std::mem::take(&mut self.acc_h2d), std::mem::take(&mut self.acc_d2h))
+    }
+
+    fn take_swap_h2d(&mut self) -> u64 {
+        std::mem::take(&mut self.acc_swap_h2d)
     }
 
     fn configure_kv(&mut self, cfg: KvConfig) {
@@ -815,6 +890,49 @@ impl DecodeEngine for StepEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Delta swap contract: pointer-identical payloads keep their handle
+    /// (zero re-stage), changed payloads get fresh handles and their bytes
+    /// go on the swap ledger, and a mode switch restages everything.
+    #[test]
+    fn delta_swap_keeps_pointer_equal_handles_and_counts_the_rest() {
+        let a = Arc::new(vec![0.5f32; 4]); // 16 B
+        let qw = Arc::new(vec![1i8; 6]); // 6 B
+        let qs = Arc::new(vec![0.25f32; 3]); // 12 B
+        let old_w =
+            EngineWeights::Int8 { a: a.clone(), qw, qs: qs.clone() };
+
+        // zero-change swap: every payload Arc reused → zero scheduled h2d
+        let (kept, bytes) =
+            delta_weight_handles(&old_w, weight_handles(&old_w), &old_w);
+        assert_eq!(bytes, 0, "zero-change swap must schedule zero h2d");
+
+        // one changed payload: qw reallocated, a/qs Arcs reused
+        let new_qw = Arc::new(vec![2i8; 6]);
+        let new_w = EngineWeights::Int8 {
+            a: a.clone(),
+            qw: new_qw.clone(),
+            qs: qs.clone(),
+        };
+        let (handles, bytes) = delta_weight_handles(&old_w, kept, &new_w);
+        assert_eq!(bytes, 6, "only the 6-byte qw payload re-stages");
+        // artifact input order is (a, qw, qs): unchanged handles still hold
+        // the shared payloads, the changed one holds the new allocation
+        let hosts: Vec<HostTensor> = handles
+            .into_iter()
+            .map(|h| h.into_parts().0.expect("unstaged handle keeps host"))
+            .collect();
+        assert!(std::ptr::eq(hosts[0].as_f32().as_ptr(), a.as_ptr()));
+        assert!(std::ptr::eq(hosts[1].as_i8().as_ptr(), new_qw.as_ptr()));
+        assert!(std::ptr::eq(hosts[2].as_f32().as_ptr(), qs.as_ptr()));
+
+        // precision-mode switch: payload layout differs → full restage
+        let bf16 = EngineWeights::Bf16 { flat: Arc::new(vec![0.0f32; 8]) };
+        let (handles, bytes) =
+            delta_weight_handles(&old_w, weight_handles(&old_w), &bf16);
+        assert_eq!(handles.len(), 1);
+        assert_eq!(bytes, bf16.byte_len());
+    }
 
     /// Satellite: a double-take must surface as the typed [`KvTakenError`]
     /// (clean worker abort), not a panic (poisoned thread).

@@ -35,6 +35,13 @@ pub struct MockEngine {
     /// bit-for-bit.  [`DecodeEngine::swap_weights`] replaces it — tests
     /// observe a hot requantization as a change in greedy outputs.
     weights: u64,
+    /// swap-restage ledger: [`DecodeEngine::swap_weights`] books
+    /// `size_of::<u64>()` when the pushed signature differs from the
+    /// installed one and nothing when it matches — the mock analogue of
+    /// `StepEngine` keeping pointer-equal handles, so the propcheck suites
+    /// can assert "zero-change swap ⇒ zero swap h2d" through the full
+    /// service/scheduler plumbing
+    acc_swap_h2d: u64,
     /// logits-block storage recycler (one block per prefill/decode call)
     pool: Rc<F32Pool>,
     /// bookkeeping the tests assert on
@@ -71,6 +78,7 @@ impl MockEngine {
             eos_id,
             state: vec![0; batch],
             weights: 0,
+            acc_swap_h2d: 0,
             pool: Rc::new(F32Pool::new()),
             prefill_calls: 0,
             prefill_rows: 0,
@@ -176,9 +184,19 @@ impl DecodeEngine for MockEngine {
     }
 
     /// Swap the weight signature; per-slot sequence state survives, exactly
-    /// like the real engine's KV caches survive a hot requantization.
+    /// like the real engine's KV caches survive a hot requantization.  A
+    /// signature that differs from the installed one books its size on the
+    /// swap-restage ledger; an identical one books nothing (the mock's
+    /// zero-change delta swap).
     fn swap_weights(&mut self, w: u64, _epoch: u64) {
+        if w != self.weights {
+            self.acc_swap_h2d += std::mem::size_of::<u64>() as u64;
+        }
         self.weights = w;
+    }
+
+    fn take_swap_h2d(&mut self) -> u64 {
+        std::mem::take(&mut self.acc_swap_h2d)
     }
 
     fn configure_kv(&mut self, cfg: KvConfig) {

@@ -97,7 +97,14 @@
 //!   resident input handles; [`DecodeEngine::swap_weights`] (driven by
 //!   [`RolloutService::push_weights`] → `WeightEpoch`) installs new ones
 //!   and the next call stages them exactly once.  Decode ticks between
-//!   swaps stage **zero** weight bytes.
+//!   swaps stage **zero** weight bytes.  The change signal inside a swap
+//!   is `Arc` pointer equality: `Runtime::engine_weights_delta` clones
+//!   the previous epoch's payload `Arc` for every tensor that requantized
+//!   bit-identically, `swap_weights` keeps the resident handle (cached
+//!   conversion included) for every pointer-equal payload, and only the
+//!   remainder re-stages (`sched_swap_bytes_h2d`).  Pointer-unequal but
+//!   bytewise-equal payloads re-stage too — the conservative direction;
+//!   stale bytes stay unrepresentable.
 //! * **never (steady-state decode)** — the `[L,B,H,S,Dh]` KV caches flow
 //!   decode-output → decode-input as raw device-format literals.
 //! * **per admission boundary** — prefill/`fork_kv` mutate cache rows, so

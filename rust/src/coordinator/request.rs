@@ -84,6 +84,22 @@ pub struct SchedulerStats {
     /// bytes copied device-format→host (logits each call; KV only when it
     /// must materialize for a row merge or fork)
     pub bytes_d2h: u64,
+    /// weight bytes swaps scheduled for re-staging (drained from
+    /// [`DecodeEngine::take_swap_h2d`](super::engine::DecodeEngine::take_swap_h2d)
+    /// on `Scheduler::take_stats`): the payloads `swap_weights` replaced
+    /// because they were not pointer-identical to the installed weights.
+    /// Under delta requantization this is the change-proportional swap
+    /// cost — a refresh whose tensors all requantized bit-identically
+    /// drains 0 here even though a swap happened.
+    pub swap_bytes_h2d: u64,
+    /// manifest tensors whose requantized payload differed from the
+    /// previous epoch's (bumped by the trainer's delta refresh, not the
+    /// scheduler)
+    pub requant_tensors_changed: usize,
+    /// manifest tensors whose requantized payload came out bit-identical
+    /// and was reused `Arc`-for-`Arc` — the paper's "quantization masks
+    /// nearly all weight updates" effect, counted per refresh
+    pub requant_tensors_skipped: usize,
     /// chunked-prefill work units: truncated prefill calls plus
     /// chunk-continuation decode rounds (0 when `prefill_chunk` is off)
     pub prefill_chunks: usize,
@@ -208,6 +224,9 @@ impl SchedulerStats {
         self.pruned_groups += other.pruned_groups;
         self.bytes_h2d += other.bytes_h2d;
         self.bytes_d2h += other.bytes_d2h;
+        self.swap_bytes_h2d += other.swap_bytes_h2d;
+        self.requant_tensors_changed += other.requant_tensors_changed;
+        self.requant_tensors_skipped += other.requant_tensors_skipped;
         self.prefill_chunks += other.prefill_chunks;
         self.kv_pages_allocated += other.kv_pages_allocated;
         self.kv_pages_freed += other.kv_pages_freed;
@@ -235,17 +254,27 @@ mod tests {
         let mut a = SchedulerStats {
             bytes_h2d: 100,
             bytes_d2h: 10,
+            swap_bytes_h2d: 64,
+            requant_tensors_changed: 2,
+            requant_tensors_skipped: 20,
             weight_epoch: 3,
             ..Default::default()
         };
         let b = SchedulerStats {
             bytes_h2d: 7,
             bytes_d2h: 2,
+            swap_bytes_h2d: 8,
+            requant_tensors_changed: 1,
+            requant_tensors_skipped: 21,
             weight_epoch: 1,
             ..Default::default()
         };
         a.merge(&b);
         assert_eq!((a.bytes_h2d, a.bytes_d2h), (107, 12));
+        assert_eq!(a.swap_bytes_h2d, 72,
+                   "swap restage bytes are a counter, merge sums them");
+        assert_eq!((a.requant_tensors_changed, a.requant_tensors_skipped),
+                   (3, 41));
         assert_eq!(a.weight_epoch, 3, "epoch is a level, merge takes max");
     }
 

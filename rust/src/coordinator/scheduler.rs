@@ -281,6 +281,7 @@ impl<E: DecodeEngine> Scheduler<E> {
         let (h2d, d2h) = self.engine.take_transfer();
         self.stats.bytes_h2d += h2d;
         self.stats.bytes_d2h += d2h;
+        self.stats.swap_bytes_h2d += self.engine.take_swap_h2d();
         let kv = self.engine.take_kv_stats();
         self.stats.kv_pages_allocated += kv.allocated;
         self.stats.kv_pages_freed += kv.freed;

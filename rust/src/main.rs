@@ -185,6 +185,11 @@ fn train_cli() -> Cli {
         .opt("prune-min-finished", "0",
              "members that must finish with identical reward before a group \
               is pruned (0 = auto: max(2, group_size/2))")
+        .opt("requant-delta", "",
+             "delta requantization: reuse the previous epoch's payload for \
+              every tensor whose quantized form is bit-identical, so a \
+              weight refresh re-stages only what changed (off = full \
+              requant oracle; outputs bit-identical) (on|off; default on)")
         .opt("uaq", "-1", "override UAQ scale (-1 = preset)")
         .opt("lr", "0", "override learning rate (0 = preset)")
         .opt("seed", "0", "seed")
@@ -257,6 +262,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     if args.usize("prune-min-finished") > 0 {
         cfg.prune_min_finished = args.usize("prune-min-finished");
+    }
+    match args.str("requant-delta").as_str() {
+        "" => {}
+        "on" | "true" | "1" => cfg.requant_delta = true,
+        "off" | "false" | "0" => cfg.requant_delta = false,
+        other => anyhow::bail!("bad --requant-delta {other:?} (on|off)"),
     }
     if args.f64("uaq") >= 0.0 {
         cfg.uaq_scale = args.f32("uaq");

@@ -40,6 +40,16 @@
 //! |                           | conversion count 0 — the copy-tax ledger)   |
 //! | `sched_bytes_d2h`         | bytes copied device-format→host (logits;    |
 //! |                           | KV only at merge/fork boundaries)           |
+//! | `sched_swap_bytes_h2d`    | weight bytes swaps scheduled for re-staging |
+//! |                           | (pointer-unequal payloads only — the delta- |
+//! |                           | requantization swap cost; 0 on a refresh    |
+//! |                           | whose tensors all requantized identically)  |
+//! | `sched_requant_tensors_changed` | manifest tensors whose requantized    |
+//! |                           | payload differed from the previous epoch's  |
+//! |                           | (delta refresh re-staged them)              |
+//! | `sched_requant_tensors_skipped` | manifest tensors reused Arc-for-Arc   |
+//! |                           | because quantization masked their update    |
+//! |                           | (the paper's masking effect, per refresh)   |
 //! | `sched_h2d_per_decode`    | `sched_bytes_h2d / sched_decode_calls`.  On |
 //! |                           | the resident path WEIGHT bytes are ~0       |
 //! |                           | between swaps; what remains is per-tick     |

@@ -10,7 +10,7 @@
 use crate::runtime::manifest::Manifest;
 use crate::runtime::QuantMode;
 
-use super::{fp8, int8};
+use super::{delta, int8};
 
 fn sq_norm(xs: &[f32]) -> f64 {
     xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
@@ -31,29 +31,28 @@ pub fn normalized_weight_update(theta_t: &[f32], theta_t1: &[f32]) -> f64 {
 }
 
 /// Dequantized section-B weights under `mode` (identity for Bf16).
+///
+/// Quantization fans out one tensor per scoped worker thread
+/// ([`delta::quant_int8_parallel`]/[`delta::quant_fp8_parallel`]) — this
+/// runs per RL step under `analyze_every`, and the per-tensor host quant
+/// is embarrassingly parallel.  Bit-identical to the old serial loop for
+/// every worker count.
 pub fn effective_weights(manifest: &Manifest, flat_b: &[f32],
                          mode: QuantMode) -> Vec<f32> {
+    let workers = delta::default_workers(manifest.params.len());
     match mode {
         QuantMode::Bf16 => flat_b.to_vec(),
         QuantMode::Int8 => {
+            let (q, s) = delta::quant_int8_parallel(manifest, flat_b, workers);
             let mut out = vec![0.0f32; flat_b.len()];
-            for_each_mat(manifest, |name, off, k, n| {
-                let w = &flat_b[off..off + k * n];
-                let (q, s) = int8::weight_quant(w, k, n);
-                out[off..off + k * n]
-                    .copy_from_slice(&int8::dequant(&q, &s, k, n));
-                let _ = name;
-            });
+            for m in delta::mat_layout(manifest) {
+                let w = m.w_off..m.w_off + m.numel();
+                out[w.clone()].copy_from_slice(&int8::dequant(
+                    &q[w], &s[m.s_off..m.s_off + m.n], m.k, m.n));
+            }
             out
         }
-        QuantMode::Fp8 => {
-            let mut out = vec![0.0f32; flat_b.len()];
-            for_each_mat(manifest, |_, off, k, n| {
-                let w = &flat_b[off..off + k * n];
-                out[off..off + k * n].copy_from_slice(&fp8::weight_quant(w, k, n));
-            });
-            out
-        }
+        QuantMode::Fp8 => delta::quant_fp8_parallel(manifest, flat_b, workers),
     }
 }
 
@@ -78,15 +77,11 @@ pub fn normalized_quant_error(manifest: &Manifest, flat_b: &[f32],
 pub fn int8_code_change_fraction(manifest: &Manifest, b_t: &[f32],
                                  b_t1: &[f32]) -> f64 {
     assert_eq!(b_t.len(), b_t1.len());
-    let mut changed = 0usize;
-    let mut total = 0usize;
-    for_each_mat(manifest, |_, off, k, n| {
-        let (q0, _) = int8::weight_quant(&b_t[off..off + k * n], k, n);
-        let (q1, _) = int8::weight_quant(&b_t1[off..off + k * n], k, n);
-        changed += q0.iter().zip(&q1).filter(|(a, b)| a != b).count();
-        total += q0.len();
-    });
-    changed as f64 / total.max(1) as f64
+    let workers = delta::default_workers(manifest.params.len());
+    let (q0, _) = delta::quant_int8_parallel(manifest, b_t, workers);
+    let (q1, _) = delta::quant_int8_parallel(manifest, b_t1, workers);
+    let changed = q0.iter().zip(&q1).filter(|(a, b)| a != b).count();
+    changed as f64 / q0.len().max(1) as f64
 }
 
 /// Iterate section-B matrices as (name, offset_in_b, K, N).

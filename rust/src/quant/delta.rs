@@ -1,0 +1,454 @@
+//! Change-aware ("delta") requantization support.
+//!
+//! The paper's weight-update analysis (§4.3, Fig. 4/9) shows per-step RL
+//! weight deltas are tiny, and per-channel quantization masks most of
+//! them: a tensor usually requantizes to a bit-identical `(q, scale)`
+//! payload.  This module turns that observation into machinery:
+//!
+//! * [`mat_layout`] — the per-tensor view of the flat section-B buffers
+//!   (each 2-D `params` entry paired with its `qscales` entry by name),
+//!   shared by the parallel quantizer and the change accounting;
+//! * [`quant_int8_parallel`] / [`quant_fp8_parallel`] — the serial host
+//!   quant mirrors ([`int8::weight_quant`], [`fp8::weight_quant`]) fanned
+//!   out across `std::thread::scope` workers, one tensor per work item;
+//!   results are assembled on the calling thread in layout order, so the
+//!   output is bit-identical to the serial mirrors for every worker
+//!   count;
+//! * [`DeltaReport`] plus the `*_delta` comparators — bitwise per-tensor
+//!   change detection between two snapshots (`to_bits` on f32, so the
+//!   comparison is representation equality, never float `==`).
+//!
+//! The engine-facing delta path
+//! ([`Runtime::engine_weights_delta`](crate::runtime::Runtime::engine_weights_delta))
+//! quantizes through the same XLA artifacts as the full path and uses the
+//! comparators here only to DECIDE what changed — so a delta refresh is
+//! bit-identical to a full one by construction (the host mirrors are
+//! close but not bit-exact vs the fp8 artifact).  The parallel mirrors
+//! serve the per-step host analysis (`quant::analysis`) and the
+//! fig9/BENCH host-quant timing.
+
+use crate::runtime::manifest::Manifest;
+
+use super::{fp8, int8};
+
+/// One section-B matrix paired with its per-channel scale run: the unit
+/// of change detection and of the parallel quant fan-out.
+#[derive(Clone, Debug)]
+pub struct MatLayout {
+    pub name: String,
+    /// element offset into the flat section-B weight buffer
+    pub w_off: usize,
+    pub k: usize,
+    pub n: usize,
+    /// element offset into the flat per-channel scale buffer (int8 path;
+    /// fp8 folds scales back into the fake-quantized payload)
+    pub s_off: usize,
+}
+
+impl MatLayout {
+    pub fn numel(&self) -> usize {
+        self.k * self.n
+    }
+}
+
+/// Pair every section-B `params` matrix with its `qscales` entry by name.
+/// The manifest is the single source of layout truth (the runtime never
+/// hard-codes model dims), so this is also the iteration order the
+/// parallel quantizers and comparators share.
+pub fn mat_layout(man: &Manifest) -> Vec<MatLayout> {
+    man.params
+        .iter()
+        .filter(|p| p.offset >= man.a_size)
+        .map(|p| {
+            assert_eq!(p.shape.len(), 2, "section B must be matrices");
+            let s = man
+                .qscales
+                .iter()
+                .find(|s| s.name == p.name)
+                .unwrap_or_else(|| panic!("no qscales entry for {}", p.name));
+            assert_eq!(s.channels, p.shape[1],
+                       "qscales channels != N for {}", p.name);
+            MatLayout {
+                name: p.name.clone(),
+                w_off: p.offset - man.a_size,
+                k: p.shape[0],
+                n: p.shape[1],
+                s_off: s.offset,
+            }
+        })
+        .collect()
+}
+
+/// Worker count for the parallel fan-out: one per available core, capped
+/// by the number of work items (extra threads would only sit idle).
+pub fn default_workers(n_items: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(n_items.max(1))
+}
+
+/// Run `f(0..n)` across `workers` scoped threads (item `i` goes to worker
+/// `i % workers`) and return the results in item order.  Per-item results
+/// are independent, so the output is identical for every worker count —
+/// parallelism changes wall-clock, never bits.
+fn fan_out<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::new();
+    out.resize_with(n, || None);
+    std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..workers)
+            .map(|wi| {
+                let f = &f;
+                sc.spawn(move || {
+                    (wi..n)
+                        .step_by(workers)
+                        .map(|i| (i, f(i)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("quant worker panicked") {
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter()
+        .map(|v| v.expect("fan_out worker covered all items"))
+        .collect()
+}
+
+/// Host INT8 quantization of the flat section-B buffer, one tensor per
+/// work item across `workers` scoped threads.  Bit-identical to running
+/// [`int8::weight_quant`] per matrix serially.
+pub fn quant_int8_parallel(man: &Manifest, flat_b: &[f32], workers: usize)
+                           -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(flat_b.len(), man.b_size);
+    let mats = mat_layout(man);
+    let per = fan_out(mats.len(), workers, |i| {
+        let m = &mats[i];
+        int8::weight_quant(&flat_b[m.w_off..m.w_off + m.numel()], m.k, m.n)
+    });
+    let mut q = vec![0i8; man.b_size];
+    let mut s = vec![0.0f32; man.n_qscales];
+    for (m, (qi, si)) in mats.iter().zip(per) {
+        q[m.w_off..m.w_off + m.numel()].copy_from_slice(&qi);
+        s[m.s_off..m.s_off + m.n].copy_from_slice(&si);
+    }
+    (q, s)
+}
+
+/// Host FP8 fake quantization of the flat section-B buffer, parallel per
+/// tensor.  Bit-identical to [`fp8::weight_quant`] per matrix serially.
+pub fn quant_fp8_parallel(man: &Manifest, flat_b: &[f32], workers: usize)
+                          -> Vec<f32> {
+    assert_eq!(flat_b.len(), man.b_size);
+    let mats = mat_layout(man);
+    let per = fan_out(mats.len(), workers, |i| {
+        let m = &mats[i];
+        fp8::weight_quant(&flat_b[m.w_off..m.w_off + m.numel()], m.k, m.n)
+    });
+    let mut out = vec![0.0f32; man.b_size];
+    for (m, fq) in mats.iter().zip(per) {
+        out[m.w_off..m.w_off + m.numel()].copy_from_slice(&fq);
+    }
+    out
+}
+
+/// Representation equality on f32 buffers: same length and same bits at
+/// every position.  Bitwise (`to_bits`), not float `==` — a comparison
+/// that drives `Arc` reuse must never conflate `-0.0` with `0.0` or
+/// treat NaN as unequal to itself.
+pub fn f32_bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Per-tensor outcome of one delta requantization:
+/// `tensors_changed + tensors_skipped == manifest.params.len()`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaReport {
+    /// manifest tensors whose payload changed and was rebuilt
+    pub tensors_changed: usize,
+    /// tensors whose quantized payload was bit-identical and was reused
+    pub tensors_skipped: usize,
+}
+
+impl DeltaReport {
+    /// Full-refresh (or no-previous-weights) report: every tensor rebuilt.
+    pub fn all_changed(n_tensors: usize) -> DeltaReport {
+        DeltaReport { tensors_changed: n_tensors, tensors_skipped: 0 }
+    }
+
+    pub fn note(&mut self, changed: bool) {
+        if changed {
+            self.tensors_changed += 1;
+        } else {
+            self.tensors_skipped += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: DeltaReport) {
+        self.tensors_changed += other.tensors_changed;
+        self.tensors_skipped += other.tensors_skipped;
+    }
+
+    pub fn total(&self) -> usize {
+        self.tensors_changed + self.tensors_skipped
+    }
+
+    /// Fraction of tensors that actually changed (0.0 on an empty report
+    /// — guards the zero-denominator case like the scheduler stats do).
+    pub fn changed_fraction(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.tensors_changed as f64 / self.total() as f64
+        }
+    }
+}
+
+/// Change detection over the section-A tensors (raw f32 bits — section A
+/// stays full precision in every rollout mode).
+pub fn section_a_delta(man: &Manifest, a0: &[f32], a1: &[f32]) -> DeltaReport {
+    assert_eq!(a0.len(), man.a_size);
+    assert_eq!(a1.len(), man.a_size);
+    let mut rep = DeltaReport::default();
+    for p in man.params.iter().filter(|p| p.offset < man.a_size) {
+        let r = p.offset..p.offset + p.numel();
+        rep.note(!f32_bits_eq(&a0[r.clone()], &a1[r]));
+    }
+    rep
+}
+
+/// Change detection over every manifest tensor of two full-precision
+/// (Bf16-mode) flat parameter vectors.
+pub fn flat_delta(man: &Manifest, f0: &[f32], f1: &[f32]) -> DeltaReport {
+    assert_eq!(f0.len(), man.n_params);
+    assert_eq!(f1.len(), man.n_params);
+    let mut rep = DeltaReport::default();
+    for p in &man.params {
+        let r = p.offset..p.offset + p.numel();
+        rep.note(!f32_bits_eq(&f0[r.clone()], &f1[r]));
+    }
+    rep
+}
+
+/// Change detection over the section-B matrices of two INT8 snapshots: a
+/// tensor is unchanged iff BOTH its code block and its per-channel scale
+/// run are bit-identical (a scale shift re-means every code, so it must
+/// count as a change even when the codes happen to agree).
+pub fn int8_delta(man: &Manifest, qw0: &[i8], qs0: &[f32],
+                  qw1: &[i8], qs1: &[f32]) -> DeltaReport {
+    assert_eq!(qw0.len(), man.b_size);
+    assert_eq!(qw1.len(), man.b_size);
+    assert_eq!(qs0.len(), man.n_qscales);
+    assert_eq!(qs1.len(), man.n_qscales);
+    let mut rep = DeltaReport::default();
+    for m in mat_layout(man) {
+        let w = m.w_off..m.w_off + m.numel();
+        let s = m.s_off..m.s_off + m.n;
+        rep.note(qw0[w.clone()] != qw1[w]
+                 || !f32_bits_eq(&qs0[s.clone()], &qs1[s]));
+    }
+    rep
+}
+
+/// Change detection over the section-B matrices of two FP8 fake-quantized
+/// snapshots (scales are folded into the payload, so one bitwise compare
+/// per tensor covers both).
+pub fn fp8_delta(man: &Manifest, fq0: &[f32], fq1: &[f32]) -> DeltaReport {
+    assert_eq!(fq0.len(), man.b_size);
+    assert_eq!(fq1.len(), man.b_size);
+    let mut rep = DeltaReport::default();
+    for m in mat_layout(man) {
+        let r = m.w_off..m.w_off + m.numel();
+        rep.note(!f32_bits_eq(&fq0[r.clone()], &fq1[r]));
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{FlagIndex, ParamEntry, ScaleEntry};
+    use crate::util::rng::Pcg64;
+
+    /// Synthetic manifest: section A = one [4] vector, section B = a
+    /// [2,3] and a [3,2] matrix (qscales deliberately listed out of
+    /// params order to exercise the by-name pairing).
+    fn toy_manifest() -> Manifest {
+        Manifest {
+            vocab_size: 8,
+            d_model: 2,
+            n_heads: 1,
+            n_layers: 1,
+            d_ff: 3,
+            head_dim: 2,
+            max_seq: 8,
+            max_prompt: 2,
+            max_new: 2,
+            rollout_batch: 1,
+            train_batch: 1,
+            a_size: 4,
+            b_size: 12,
+            n_params: 16,
+            n_qscales: 5,
+            params: vec![
+                ParamEntry { name: "emb".into(), shape: vec![4], offset: 0 },
+                ParamEntry { name: "w1".into(), shape: vec![2, 3], offset: 4 },
+                ParamEntry { name: "w2".into(), shape: vec![3, 2], offset: 10 },
+            ],
+            qscales: vec![
+                ScaleEntry { name: "w2".into(), offset: 3, channels: 2 },
+                ScaleEntry { name: "w1".into(), offset: 0, channels: 3 },
+            ],
+            pad_id: 0,
+            bos_id: 1,
+            eos_id: 2,
+            flags: FlagIndex {
+                obj_mode: 0, eps_low: 1, eps_high: 2, tis_cap: 3,
+                kl_coef: 4, vf_coef: 5, ent_coef: 6, token_mean: 7,
+                lr: 8, beta1: 9, beta2: 10, adam_eps: 11,
+                weight_decay: 12, value_clip: 13, max_grad_norm: 14,
+                n: 15,
+            },
+            metric_names: vec![],
+            artifacts: std::collections::BTreeMap::new(),
+        }
+    }
+
+    fn rand_b(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..len).map(|_| rng.normal() as f32 * 0.05).collect()
+    }
+
+    #[test]
+    fn mat_layout_pairs_scales_by_name() {
+        let man = toy_manifest();
+        let mats = mat_layout(&man);
+        assert_eq!(mats.len(), 2);
+        assert_eq!((mats[0].name.as_str(), mats[0].w_off, mats[0].s_off),
+                   ("w1", 0, 0));
+        assert_eq!((mats[1].name.as_str(), mats[1].w_off, mats[1].s_off),
+                   ("w2", 6, 3));
+    }
+
+    #[test]
+    fn parallel_quant_bit_identical_to_serial_for_any_worker_count() {
+        let man = toy_manifest();
+        let b = rand_b(11, man.b_size);
+        // serial reference, assembled per mat
+        let mut q_ref = vec![0i8; man.b_size];
+        let mut s_ref = vec![0.0f32; man.n_qscales];
+        for m in mat_layout(&man) {
+            let (q, s) =
+                int8::weight_quant(&b[m.w_off..m.w_off + m.numel()], m.k, m.n);
+            q_ref[m.w_off..m.w_off + m.numel()].copy_from_slice(&q);
+            s_ref[m.s_off..m.s_off + m.n].copy_from_slice(&s);
+        }
+        let mut fq_ref = vec![0.0f32; man.b_size];
+        for m in mat_layout(&man) {
+            fq_ref[m.w_off..m.w_off + m.numel()].copy_from_slice(
+                &fp8::weight_quant(&b[m.w_off..m.w_off + m.numel()], m.k, m.n));
+        }
+        for workers in [1, 2, 3, 8] {
+            let (q, s) = quant_int8_parallel(&man, &b, workers);
+            assert_eq!(q, q_ref, "int8 codes drifted at workers={workers}");
+            assert!(f32_bits_eq(&s, &s_ref),
+                    "int8 scales drifted at workers={workers}");
+            let fq = quant_fp8_parallel(&man, &b, workers);
+            assert!(f32_bits_eq(&fq, &fq_ref),
+                    "fp8 payload drifted at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn change_detection_counts_moved_and_masked_tensors() {
+        let man = toy_manifest();
+        let b0 = rand_b(22, man.b_size);
+        let mut b1 = b0.clone();
+        b1[6] += 1.0; // first element of w2 — big enough to change its code
+        let (qw0, qs0) = quant_int8_parallel(&man, &b0, 2);
+        let (qw1, qs1) = quant_int8_parallel(&man, &b1, 2);
+        let rep = int8_delta(&man, &qw0, &qs0, &qw1, &qs1);
+        assert_eq!(rep, DeltaReport { tensors_changed: 1, tensors_skipped: 1 });
+        let fq0 = quant_fp8_parallel(&man, &b0, 2);
+        let fq1 = quant_fp8_parallel(&man, &b1, 2);
+        assert_eq!(fp8_delta(&man, &fq0, &fq1),
+                   DeltaReport { tensors_changed: 1, tensors_skipped: 1 });
+        // zero-change snapshots skip everything
+        let none = int8_delta(&man, &qw0, &qs0, &qw0, &qs0);
+        assert_eq!(none, DeltaReport { tensors_changed: 0, tensors_skipped: 2 });
+        assert_eq!(none.changed_fraction(), 0.0);
+    }
+
+    /// The paper's premise, measured on the detection path: a sub-step
+    /// update (smaller than half a quant step, away from the per-channel
+    /// absmax) requantizes bit-identically — fully masked.
+    #[test]
+    fn tiny_updates_are_fully_masked() {
+        let man = toy_manifest();
+        // Exact fp arithmetic: step = 2^-7, channel absmax = 127 * step
+        // (last row), every other element an exact non-tie multiple of
+        // step — so codes and scales are reproducible bit-for-bit.
+        let step = 2.0_f32.powi(-7);
+        let mut b0 = vec![0.0f32; man.b_size];
+        for m in mat_layout(&man) {
+            for r in 0..m.k {
+                for c in 0..m.n {
+                    let mult =
+                        if r == m.k - 1 { 127.0 } else { 10.0 + r as f32 };
+                    b0[m.w_off + r * m.n + c] = mult * step;
+                }
+            }
+        }
+        let (qw0, qs0) = quant_int8_parallel(&man, &b0, 1);
+        // nudge a non-absmax element of each mat by a tenth of its step
+        let mut b1 = b0.clone();
+        for m in mat_layout(&man) {
+            b1[m.w_off] += 0.1 * qs0[m.s_off];
+        }
+        let (qw1, qs1) = quant_int8_parallel(&man, &b1, 1);
+        let rep = int8_delta(&man, &qw0, &qs0, &qw1, &qs1);
+        assert_eq!(rep.tensors_changed, 0,
+                   "sub-step update must be masked by quantization");
+        assert_eq!(rep.tensors_skipped, 2);
+    }
+
+    #[test]
+    fn section_and_flat_deltas_compare_bits_not_floats() {
+        let man = toy_manifest();
+        let a0 = vec![0.0f32, 1.0, 2.0, 3.0];
+        let mut a1 = a0.clone();
+        a1[0] = -0.0; // 0.0 == -0.0 as floats, different bits
+        let rep = section_a_delta(&man, &a0, &a1);
+        assert_eq!(rep, DeltaReport { tensors_changed: 1, tensors_skipped: 0 });
+        let f0 = rand_b(33, man.n_params);
+        let mut f1 = f0.clone();
+        f1[5] += 1.0; // inside w1
+        let rep = flat_delta(&man, &f0, &f1);
+        assert_eq!(rep, DeltaReport { tensors_changed: 1, tensors_skipped: 2 });
+        assert!((rep.changed_fraction() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_merge_and_all_changed() {
+        let mut a = DeltaReport { tensors_changed: 1, tensors_skipped: 4 };
+        a.merge(DeltaReport { tensors_changed: 2, tensors_skipped: 0 });
+        assert_eq!(a, DeltaReport { tensors_changed: 3, tensors_skipped: 4 });
+        assert_eq!(a.total(), 7);
+        let full = DeltaReport::all_changed(9);
+        assert_eq!((full.tensors_changed, full.tensors_skipped), (9, 0));
+        assert_eq!(full.changed_fraction(), 1.0);
+        assert_eq!(DeltaReport::default().changed_fraction(), 0.0);
+    }
+}

@@ -35,13 +35,12 @@ pub fn weight_quant(w: &[f32], k: usize, n: usize) -> Vec<f32> {
         .iter()
         .map(|&a| a.max(SCALE_EPS) / E4M3_MAX)
         .collect();
-    w.iter()
-        .enumerate()
-        .map(|(i, &x)| {
-            let s = scale[i % n];
-            quant_e4m3(x / s) * s
-        })
-        .collect()
+    // row-wise zip against the [N] scales, no per-element `i % n`
+    let mut out = Vec::with_capacity(k * n);
+    for row in w.chunks_exact(n) {
+        out.extend(row.iter().zip(&scale).map(|(&x, &s)| quant_e4m3(x / s) * s));
+    }
+    out
 }
 
 #[cfg(test)]

@@ -39,9 +39,13 @@ pub fn weight_quant(w: &[f32], k: usize, n: usize) -> (Vec<i8>, Vec<f32>) {
         *s = s.max(SCALE_EPS) / QMAX;
     }
     let mut q = vec![0i8; k * n];
-    for (i, &x) in w.iter().enumerate() {
-        let j = i % n;
-        q[i] = rne(x / scale[j]).clamp(-QMAX, QMAX) as i8;
+    // row-wise: one pass per [N] row keeps the scale index a plain zip
+    // instead of a per-element `i % n` division — this loop runs per RL
+    // step in the fig4/fig9 host analysis
+    for (qrow, wrow) in q.chunks_exact_mut(n).zip(w.chunks_exact(n)) {
+        for ((qv, &x), &s) in qrow.iter_mut().zip(wrow).zip(&scale) {
+            *qv = rne(x / s).clamp(-QMAX, QMAX) as i8;
+        }
     }
     (q, scale)
 }
@@ -49,10 +53,12 @@ pub fn weight_quant(w: &[f32], k: usize, n: usize) -> (Vec<i8>, Vec<f32>) {
 /// Dequantize back to f32 (the effective rollout weights).
 pub fn dequant(q: &[i8], scale: &[f32], k: usize, n: usize) -> Vec<f32> {
     assert_eq!(q.len(), k * n);
-    q.iter()
-        .enumerate()
-        .map(|(i, &v)| v as f32 * scale[i % n])
-        .collect()
+    assert_eq!(scale.len(), n);
+    let mut out = Vec::with_capacity(k * n);
+    for row in q.chunks_exact(n) {
+        out.extend(row.iter().zip(scale).map(|(&v, &s)| v as f32 * s));
+    }
+    out
 }
 
 /// Token-wise symmetric activation quantization of [M, K] (for tests of the

@@ -1,7 +1,11 @@
 //! Quantization support: Rust mirrors of the L1 quantizers (bit-exact vs
-//! kernels/ref.py), the UAQ driver, and the weight-update analysis behind
-//! the paper's Fig. 4 / Fig. 9.
+//! kernels/ref.py), the UAQ driver, the weight-update analysis behind
+//! the paper's Fig. 4 / Fig. 9, and the change-aware delta-requantization
+//! layer (per-tensor change detection + parallel per-tensor host quant).
 
 pub mod analysis;
+pub mod delta;
 pub mod fp8;
 pub mod int8;
+
+pub use delta::DeltaReport;

@@ -18,6 +18,7 @@ use crate::coordinator::request::RolloutResult;
 use crate::coordinator::service::{GroupMember, GroupResult};
 use crate::metrics::{Recorder, Row};
 use crate::quant::analysis;
+use crate::quant::DeltaReport;
 use crate::runtime::{EngineWeights, ParamStore, QuantMode, Runtime, TrainBatch};
 use crate::tasks::{encode_batch, Problem, Suite, Tokenizer};
 use crate::util::rng::Pcg64;
@@ -28,6 +29,23 @@ use super::dapo::DynamicSampler;
 use super::eval;
 use super::kl;
 use super::objective::Objective;
+
+/// Typed error for driving the trainer's serving or eval paths before any
+/// rollout weights exist — [`Trainer::prepare`] (or the first `step`) must
+/// run `refresh_engine` first.  Previously an `.expect` panic; as a plain
+/// error it propagates to the caller like any other trainer failure
+/// instead of aborting the process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineNotReady;
+
+impl std::fmt::Display for EngineNotReady {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rollout engine weights not initialized (call \
+                   Trainer::prepare or Trainer::step first)")
+    }
+}
+
+impl std::error::Error for EngineNotReady {}
 
 /// RL algorithm family (the paper evaluates all three).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -210,6 +228,16 @@ pub struct TrainerConfig {
     pub requantize_every: usize,
     /// compute Fig. 4/9 weight-change analysis every k steps (0 = never)
     pub analyze_every: usize,
+    /// delta requantization (on = default): refresh engine weights through
+    /// [`Runtime::engine_weights_delta`], which reuses the previous
+    /// epoch's payload `Arc` for every tensor whose quantized form came
+    /// out bit-identical — downstream, `StepEngine::swap_weights` keeps
+    /// the cached device conversion for pointer-equal payloads, so a
+    /// refresh re-stages only what actually changed
+    /// (`sched_swap_bytes_h2d`).  Off = the full-requant oracle: rebuild
+    /// and re-stage everything each refresh (outputs bit-identical either
+    /// way; property-tested)
+    pub requant_delta: bool,
 }
 
 impl Default for TrainerConfig {
@@ -248,6 +276,7 @@ impl Default for TrainerConfig {
             prefill_chunk: 0,
             requantize_every: 1,
             analyze_every: 0,
+            requant_delta: true,
         }
     }
 }
@@ -370,8 +399,28 @@ impl Trainer {
             self.engine_age += 1;
             return Ok(());
         }
-        let w = self.rt.engine_weights(self.cfg.rollout_mode,
-                                       &self.ps.params)?;
+        // delta path (default): quantize via the same artifacts, then reuse
+        // the previous epoch's Arc for every bit-identical payload — the
+        // pointer equality swap_weights keys its zero-restage hot swap on.
+        // Off = the full-requant oracle (every tensor counts as changed).
+        let (w, report) = if self.cfg.requant_delta {
+            self.rt.engine_weights_delta(self.cfg.rollout_mode,
+                                         &self.ps.params,
+                                         self.engine.as_ref())?
+        } else {
+            let n = self.rt.manifest().params.len();
+            (self.rt.engine_weights(self.cfg.rollout_mode, &self.ps.params)?,
+             DeltaReport::all_changed(n))
+        };
+        if self.cfg.rollout_path == RolloutPath::Scheduler {
+            self.sched_stats
+                .get_or_insert_with(SchedulerStats::default)
+                .merge(&SchedulerStats {
+                    requant_tensors_changed: report.tensors_changed,
+                    requant_tensors_skipped: report.tensors_skipped,
+                    ..Default::default()
+                });
+        }
         self.engine = Some(w.clone());
         self.engine_age = 1;
         if let Some(svc) = &mut self.service {
@@ -388,7 +437,7 @@ impl Trainer {
         if self.service.is_some() {
             return Ok(());
         }
-        let weights = self.engine.clone().expect("engine not initialized");
+        let weights = self.engine.clone().ok_or(EngineNotReady)?;
         let n = self.cfg.rollout_engines.max(1);
         let m = self.rt.manifest();
         let (max_seq, eos_id) = (m.max_seq, m.eos_id);
@@ -483,7 +532,7 @@ impl Trainer {
             let (tokens, lens) = encode_batch(&self.tk, &refs, b, s, max_prompt);
             self.rollout_seed = self.rollout_seed.wrapping_add(1);
             let gen = {
-                let engine = self.engine.as_ref().expect("engine not initialized");
+                let engine = self.engine.as_ref().ok_or(EngineNotReady)?;
                 self.rt.generate(engine, &tokens, &lens, self.rollout_seed,
                                  self.cfg.temp, self.cfg.top_p)?
             };
@@ -557,6 +606,7 @@ impl Trainer {
             // groups a later member would have made informative
             (self.cfg.group_size / 2).max(2)
         };
+        // lint: allow(panic, ensure_service above either built the service or returned an error — None here is unreachable by construction)
         let svc = self.service.as_mut().unwrap();
         svc.prune = if prune {
             PrunePolicy::online(min_finished)
@@ -612,6 +662,7 @@ impl Trainer {
     /// reward the service's closure already verified.
     fn result_to_sample(&mut self, member: GroupMember, prompt: &[i32],
                         group: usize) -> Sample {
+        // lint: allow(panic, service contract — run()'s closure scores every completed member before it is returned (ensured by GroupResult::complete upstream))
         let reward = member.reward.expect("completed member unscored");
         let res = member.result;
         let s = self.rt.manifest().max_seq;
@@ -912,6 +963,16 @@ impl Trainer {
                 .set("sched_bytes_h2d", st.bytes_h2d as f64)
                 .set("sched_bytes_d2h", st.bytes_d2h as f64)
                 .set("sched_h2d_per_decode", st.h2d_per_decode())
+                // delta requantization: what each refresh actually moved.
+                // swap_bytes_h2d is the re-stage the swaps scheduled
+                // (pointer-unequal payloads only — 0 when quantization
+                // masked every update); the tensor counters split each
+                // refresh into changed vs Arc-reused manifest tensors.
+                .set("sched_swap_bytes_h2d", st.swap_bytes_h2d as f64)
+                .set("sched_requant_tensors_changed",
+                     st.requant_tensors_changed as f64)
+                .set("sched_requant_tensors_skipped",
+                     st.requant_tensors_skipped as f64)
                 .set("sched_prefill_chunks", st.prefill_chunks as f64)
                 // the page ledger: allocation/free deltas plus the live
                 // and high-water levels — paged-vs-dense memory pressure
@@ -970,7 +1031,7 @@ impl Trainer {
 
         // periodic evaluation
         if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
-            let engine = self.engine.clone().expect("engine");
+            let engine = self.engine.clone().ok_or(EngineNotReady)?;
             let acc = eval::greedy_accuracy(
                 &self.rt, &engine, &self.tk, &self.suite,
                 self.cfg.seed, self.cfg.eval_problems_per_family)?;

@@ -5,7 +5,7 @@
 //! # Residency boundary (who pays for data movement, and when)
 //!
 //! Every artifact call crosses a host↔device-format boundary; this module
-//! defines three tiers of traffic across it:
+//! defines four tiers of traffic across it:
 //!
 //! * **per-call** — fresh [`HostTensor`] inputs convert to PJRT literals
 //!   at call time and outputs copy back out
@@ -16,9 +16,17 @@
 //!   converted literal of an immutable payload for the handle's lifetime
 //!   ([`ArtifactStore::call_with_resident`](artifact::ArtifactStore::call_with_resident));
 //!   callers replace handles when content changes.  This is how
-//!   rollout-engine weights convert once per `WeightEpoch`/requantization
-//!   (the engine rebuilds its handles on a swap) instead of once per
-//!   decode tick.
+//!   rollout-engine weights convert at most once per
+//!   `WeightEpoch`/requantization instead of once per decode tick.
+//! * **per-delta** — the change-proportional refinement of per-epoch:
+//!   [`Runtime::engine_weights_delta`](exec::Runtime::engine_weights_delta)
+//!   clones the previous epoch's `Arc` for every payload that requantized
+//!   bit-identically, and `StepEngine::swap_weights` keeps the existing
+//!   handle (cached conversion and all) for every pointer-equal payload.
+//!   With small RL steps (the paper's premise) quantization masks most
+//!   updates, so a typical refresh re-converts only the payloads that
+//!   actually moved — the replaced remainder is the `swap_bytes_h2d`
+//!   metric, and a zero-change refresh stages zero weight bytes.
 //! * **never** — output literals taken raw from
 //!   [`CallOutputs`](artifact::CallOutputs) and fed back through
 //!   `InputHandle::from_literal` stay in device format across calls.  The

@@ -86,6 +86,27 @@ impl HostTensor {
         }
     }
 
+    /// True when both tensors share one payload allocation (same dtype,
+    /// same `Arc`).  This is the delta-requantization change signal:
+    /// [`Runtime::engine_weights_delta`](super::Runtime::engine_weights_delta)
+    /// clones the previous epoch's `Arc` for every payload that requantized
+    /// bit-identically, so pointer equality here tells
+    /// `StepEngine::swap_weights` which resident handles (and cached device
+    /// conversions) it may keep.  Pointer-unequal payloads may still be
+    /// bytewise equal — callers must treat that as "changed" (a false
+    /// positive costs one re-stage, never stale bytes).
+    pub fn same_payload(&self, other: &HostTensor) -> bool {
+        match (self, other) {
+            (HostTensor::F32 { data: a, .. },
+             HostTensor::F32 { data: b, .. }) => Arc::ptr_eq(a, b),
+            (HostTensor::I32 { data: a, .. },
+             HostTensor::I32 { data: b, .. }) => Arc::ptr_eq(a, b),
+            (HostTensor::I8 { data: a, .. },
+             HostTensor::I8 { data: b, .. }) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
     /// Payload size in bytes (the unit of the `bytes_h2d`/`bytes_d2h`
     /// transfer accounting in `ArtifactStore`).
     pub fn byte_len(&self) -> u64 {
@@ -257,6 +278,22 @@ mod tests {
         let ptr = t3.as_f32().as_ptr();
         let v = t3.into_f32();
         assert!(std::ptr::eq(ptr, v.as_ptr()));
+    }
+
+    #[test]
+    fn same_payload_is_pointer_equality_not_value_equality() {
+        let buf = Arc::new(vec![1.0f32, 2.0]);
+        let a = HostTensor::f32_shared(&[2], buf.clone());
+        let b = HostTensor::f32_shared(&[2], buf);
+        // same Arc → same payload, and clone preserves it
+        assert!(a.same_payload(&b));
+        assert!(a.same_payload(&a.clone()));
+        // bytewise-equal but distinct allocation → NOT same payload
+        let c = HostTensor::f32(&[2], vec![1.0, 2.0]);
+        assert!(!a.same_payload(&c));
+        // dtype mismatch is never the same payload
+        let d = HostTensor::i8(&[2], vec![1, 2]);
+        assert!(!a.same_payload(&d));
     }
 
     #[test]

@@ -13,7 +13,8 @@ use qurl::metrics::Recorder;
 use qurl::quant::{analysis, fp8 as qfp8, int8 as qint8};
 use qurl::rl::{Objective, ObjectiveKind, RolloutExec, RolloutPath, Trainer,
                TrainerConfig};
-use qurl::runtime::{ParamStore, QuantMode, Runtime, TrainBatch};
+use qurl::runtime::{EngineWeights, ParamStore, QuantMode, Runtime,
+                    TrainBatch};
 use qurl::tasks::{encode_batch, Problem, Suite, Tokenizer};
 
 fn runtime() -> Arc<Runtime> {
@@ -492,6 +493,200 @@ fn resident_weights_convert_once_per_epoch() {
     let (h2d, _) = eng.take_transfer();
     assert_eq!(h2d, (2 * 4 * man.rollout_batch) as u64,
                "post-swap decode still staging weights ({h2d} bytes)");
+}
+
+fn f32_bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Payload-level bit equality between two weight builds (Arc identity is
+/// deliberately NOT required — a delta build shares storage, a full build
+/// never does; only the bits must agree).
+fn assert_weights_bits_eq(x: &EngineWeights, y: &EngineWeights, ctx: &str) {
+    use EngineWeights as W;
+    match (x, y) {
+        (W::Bf16 { flat: xf }, W::Bf16 { flat: yf }) => {
+            assert!(f32_bits(xf) == f32_bits(yf), "{ctx}: bf16 flat differs");
+        }
+        (W::Int8 { a: xa, qw: xw, qs: xs },
+         W::Int8 { a: ya, qw: yw, qs: ys }) => {
+            assert!(f32_bits(xa) == f32_bits(ya),
+                    "{ctx}: int8 section A differs");
+            assert!(xw == yw, "{ctx}: int8 codes differ");
+            assert!(f32_bits(xs) == f32_bits(ys), "{ctx}: int8 scales differ");
+        }
+        (W::Fp8 { a: xa, b_fq: xq }, W::Fp8 { a: ya, b_fq: yq }) => {
+            assert!(f32_bits(xa) == f32_bits(ya),
+                    "{ctx}: fp8 section A differs");
+            assert!(f32_bits(xq) == f32_bits(yq),
+                    "{ctx}: fp8 fake-quant differs");
+        }
+        _ => panic!("{ctx}: quantization mode mismatch"),
+    }
+}
+
+/// Delta requantization is bit-identical to the full rebuild it replaces —
+/// the acceptance criterion of the change-aware refresh.  For every mode:
+/// a cold delta (no previous epoch) equals the full build; a refresh under
+/// identical params changes nothing and reuses every payload Arc-for-Arc;
+/// a refresh after a localized update (section A plus ONE section-B
+/// matrix) equals the full build bitwise while the report shows the
+/// untouched tensors skipped.  For the quantized modes, a scheduler run
+/// that hot-swaps the delta-built weights mid-flight must produce
+/// bit-identical rollouts to the same run swapping in the full build.
+#[test]
+fn delta_requant_matches_full_rebuild_bitwise() {
+    let rt = runtime();
+    let man = rt.manifest().clone();
+    let n_tensors = man.params.len();
+    let p0 = rt.init_params(71).unwrap();
+    // a localized update: all of section A nudged, one B matrix rescaled
+    let mut first_mat: Option<(usize, usize)> = None;
+    analysis::for_each_mat(&man, |_, off, k, n| {
+        if first_mat.is_none() {
+            first_mat = Some((off, k * n));
+        }
+    });
+    let (moff, mlen) = first_mat.unwrap();
+    let mut p1 = p0.clone();
+    for v in &mut p1[..man.a_size] {
+        *v += 0.25;
+    }
+    for v in &mut p1[man.a_size + moff..man.a_size + moff + mlen] {
+        *v *= 1.5;
+    }
+    let (tokens, _, plens) = test_prompts(&rt, 3);
+    let s = man.max_seq;
+    let rollout = |w_start: &EngineWeights, w_swap: &EngineWeights| {
+        let mut eng = StepEngine::new(&rt, w_start.clone());
+        let mut sched = Scheduler::new(&mut eng, man.max_seq, man.eos_id);
+        for (r, &plen) in plens.iter().enumerate() {
+            sched.submit(RolloutRequest {
+                id: r as u64,
+                prompt: Arc::new(tokens[r * s..r * s + plen].to_vec()),
+                max_new: man.max_new.min(10),
+                temperature: if r % 2 == 0 { 0.0 } else { 1.0 },
+                top_p: 0.9,
+                seed: 5 ^ r as u64,
+            });
+        }
+        for _ in 0..2 {
+            sched.tick().unwrap();
+        }
+        sched.swap_weights(w_swap.clone(), 1);
+        let mut results = sched.run_to_completion().unwrap();
+        results.sort_by_key(|r| r.id);
+        results
+            .into_iter()
+            .map(|r| (r.id, r.generated,
+                      r.logprobs.iter().map(|l| l.to_bits())
+                          .collect::<Vec<_>>()))
+            .collect::<Vec<_>>()
+    };
+    for mode in [QuantMode::Int8, QuantMode::Fp8, QuantMode::Bf16] {
+        // cold start: no previous epoch, delta degenerates to the full path
+        let full0 = rt.engine_weights(mode, &p0).unwrap();
+        let (d0, r0) = rt.engine_weights_delta(mode, &p0, None).unwrap();
+        assert_weights_bits_eq(&d0, &full0, &format!("{mode:?} cold"));
+        assert_eq!(r0.tensors_changed, n_tensors, "{mode:?} cold report");
+        // identical params requantize identically: nothing changes and
+        // every payload is the PREVIOUS epoch's Arc (zero allocation too)
+        let (same, rs) = rt.engine_weights_delta(mode, &p0, Some(&d0)).unwrap();
+        assert_eq!((rs.tensors_changed, rs.tensors_skipped), (0, n_tensors),
+                   "{mode:?} no-op refresh report");
+        let (old_ts, new_ts) = (d0.host_tensors(), same.host_tensors());
+        for (ot, nt) in old_ts.iter().zip(&new_ts) {
+            assert!(ot.same_payload(nt),
+                    "{mode:?}: no-op refresh re-allocated a payload");
+        }
+        // a real update: delta build == full build, bit for bit, with the
+        // untouched tensors skipped in the report
+        let full1 = rt.engine_weights(mode, &p1).unwrap();
+        let (d1, r1) = rt.engine_weights_delta(mode, &p1, Some(&d0)).unwrap();
+        assert_weights_bits_eq(&d1, &full1, &format!("{mode:?} update"));
+        assert_eq!(r1.total(), n_tensors);
+        assert!(r1.tensors_changed >= 1, "{mode:?}: update not detected");
+        assert!(r1.tensors_skipped >= 1,
+                "{mode:?}: untouched tensors re-staged (changed {})",
+                r1.tensors_changed);
+        // end to end: a mid-run hot swap of the delta build serves the
+        // exact rollouts the full build does
+        if mode != QuantMode::Bf16 {
+            assert_eq!(rollout(&full0, &d1), rollout(&full0, &full1),
+                       "{mode:?}: delta-built swap diverged from full");
+        }
+    }
+}
+
+/// The zero-restage guarantee, byte-exact on the real artifacts: swapping
+/// in a delta build whose tensors ALL requantized identically books zero
+/// swap bytes and the next decode stages only the per-tick control
+/// vectors; a partial delta (section A changed, quantized section B
+/// masked) books and stages exactly the changed payload — strictly less
+/// than the full weight restage the pre-delta path paid.
+#[test]
+fn zero_change_delta_swap_restages_nothing() {
+    let rt = runtime();
+    let man = rt.manifest().clone();
+    let p = rt.init_params(72).unwrap();
+    let (w0, _) = rt.engine_weights_delta(QuantMode::Int8, &p, None).unwrap();
+    // same params → every Arc reused
+    let (w1, r1) = rt
+        .engine_weights_delta(QuantMode::Int8, &p, Some(&w0))
+        .unwrap();
+    assert_eq!((r1.tensors_changed, r1.tensors_skipped),
+               (0, man.params.len()));
+    // section A perturbed, section B untouched → only `a` re-stages
+    let mut pa = p.clone();
+    for v in &mut pa[..man.a_size] {
+        *v += 0.5;
+    }
+    let (w2, r2) = rt
+        .engine_weights_delta(QuantMode::Int8, &pa, Some(&w1))
+        .unwrap();
+    assert!(r2.tensors_changed >= 1 && r2.tensors_skipped >= 1,
+            "expected a mixed report, got {}/{}",
+            r2.tensors_changed, r2.tensors_skipped);
+    let (tokens, _, plens) = test_prompts(&rt, 1);
+    let prompt = tokens[..plens[0]].to_vec();
+    let mut eng = StepEngine::new(&rt, w0);
+    let wb = eng.weight_bytes();
+    let logits = eng.prefill(&[0], &[prompt.as_slice()]).unwrap();
+    let mut tok = greedy_tok(logits[0].as_slice());
+    let mut pos = (prompt.len() - 1) as i32;
+    let step = |eng: &mut StepEngine, tok: &mut i32, pos: &mut i32| {
+        *pos += 1;
+        assert!((*pos as usize) + 1 < man.max_seq, "test prompt too long");
+        let lg = eng.decode(&[(0, *pos, *tok)]).unwrap();
+        *tok = greedy_tok(lg[0].as_slice());
+    };
+    // drain the post-prefill KV re-stage; no swap has happened yet
+    step(&mut eng, &mut tok, &mut pos);
+    eng.take_transfer();
+    assert_eq!(eng.take_swap_h2d(), 0);
+    let control = (2 * 4 * man.rollout_batch) as u64;
+    // ZERO-CHANGE swap: pointer-equal payloads keep their handles — the
+    // ledger books nothing and the next decode is control-vector-only
+    eng.swap_weights(w1, 1);
+    assert_eq!(eng.take_swap_h2d(), 0, "zero-change swap booked a restage");
+    step(&mut eng, &mut tok, &mut pos);
+    let (h2d, _) = eng.take_transfer();
+    assert_eq!(h2d, control,
+               "zero-change swap restaged weight bytes ({h2d} vs {control})");
+    // PARTIAL swap: exactly the section-A payload re-stages, byte-exact,
+    // strictly cheaper than the full restage
+    eng.swap_weights(w2, 2);
+    let booked = eng.take_swap_h2d();
+    let a_bytes = (man.a_size * 4) as u64;
+    assert_eq!(booked, a_bytes,
+               "partial swap booked {booked} bytes, expected the \
+                section-A payload {a_bytes}");
+    assert!(booked < wb, "partial restage not cheaper than full ({wb})");
+    step(&mut eng, &mut tok, &mut pos);
+    let (h2d, _) = eng.take_transfer();
+    assert_eq!(h2d, control + a_bytes,
+               "partial swap staged {h2d}; expected control + changed \
+                payload ({})", control + a_bytes);
 }
 
 /// Prune-as-you-generate on the real artifacts: on a DAPO-shaped workload

@@ -819,6 +819,82 @@ fn prop_weight_swap_outputs_track_epoch() {
     });
 }
 
+/// Delta-requantization swap accounting, end-to-end through the service:
+/// pushing a weight signature identical to the installed one must book
+/// ZERO swap-restage bytes (the engine kept its handles), a genuinely new
+/// signature must book exactly one restage per replica, and the zero-change
+/// push must not perturb outputs.  The ledger drains through
+/// `Scheduler::take_stats` → `SchedulerStats::swap_bytes_h2d` — the same
+/// plumbing the trainer's `sched_swap_bytes_h2d` row reads — across engine
+/// counts and both execution backends.
+#[test]
+fn prop_zero_change_swap_stages_zero_bytes() {
+    let max_seq = 16usize;
+    // ((engines, threaded), [group_size; n])
+    let g = Pair(Pair(UsizeIn(1, 3), UsizeIn(0, 1)),
+                 VecOf(UsizeIn(1, 4), 1, 5));
+    assert_prop("zero-change-swap-zero-h2d", 0xd317, 30, &g,
+                |((engines, threaded), sizes)| {
+        let n_eng = (*engines).max(1);
+        let build = |threaded: bool| -> RolloutService<MockEngine> {
+            if threaded {
+                let fs: Vec<EngineFactory<MockEngine>> = (0..n_eng)
+                    .map(|_| {
+                        Box::new(move || Ok(MockEngine::new(3, 8, max_seq, 2)))
+                            as EngineFactory<MockEngine>
+                    })
+                    .collect();
+                RolloutService::threaded(fs, max_seq, 2).unwrap()
+            } else {
+                let engs: Vec<MockEngine> = (0..n_eng)
+                    .map(|_| MockEngine::new(3, 8, max_seq, 2))
+                    .collect();
+                RolloutService::new(engs, max_seq, 2)
+            }
+        };
+        let workload = |svc: &mut RolloutService<MockEngine>| {
+            for (gid, &sz) in sizes.iter().enumerate() {
+                svc.submit_group(GroupSpec {
+                    group_id: gid,
+                    prompt: vec![2 + (gid as i32 % 5); 2 + gid % 3],
+                    group_size: sz.max(1),
+                    max_new: 1 + gid % 5,
+                    temperature: 0.0,
+                    top_p: 1.0,
+                    seed: gid as u64,
+                });
+            }
+            let results = svc.run(|_, _| 0.0).unwrap();
+            results
+                .iter()
+                .flat_map(|gr| gr.members.iter().map(|m| {
+                    (m.result.generated.clone(),
+                     m.result.logprobs.iter().map(|l| l.to_bits())
+                         .collect::<Vec<u32>>())
+                }))
+                .collect::<Vec<_>>()
+        };
+        let per_swap = (n_eng * std::mem::size_of::<u64>()) as u64;
+        let mut svc = build(*threaded == 1);
+        // no swap ever issued: the ledger starts (and drains) empty
+        workload(&mut svc);
+        if svc.take_stats().unwrap().swap_bytes_h2d != 0 {
+            return false;
+        }
+        // a new signature re-stages once on every replica
+        svc.push_weights(0xC0FF_EE00);
+        let out1 = workload(&mut svc);
+        if svc.take_stats().unwrap().swap_bytes_h2d != per_swap {
+            return false;
+        }
+        // the SAME signature again: zero-change swap, zero bytes, and the
+        // outputs of the following run are bit-identical
+        svc.push_weights(0xC0FF_EE00);
+        let out2 = workload(&mut svc);
+        svc.take_stats().unwrap().swap_bytes_h2d == 0 && out1 == out2
+    });
+}
+
 /// The PR-2 pruning-savings guarantee holds on the THREADED path: with
 /// uniform-reward groups much wider than the slot count and an unreachable
 /// EOS (every member would otherwise decode to max_new), online pruning
