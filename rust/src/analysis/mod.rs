@@ -19,9 +19,9 @@
 //! | pass | contract | escape hatch |
 //! |------|----------|--------------|
 //! | `stats-catalog` | every `SchedulerStats` field (coordinator/request.rs) is accumulated in `SchedulerStats::merge`, documented in the `sched_*` field catalog (metrics/recorder.rs module docs), and written to a Recorder row in rl/trainer.rs.  Derived-key aliases: `occupancy_sum`→`sched_occupancy`, `queue_wait_sum_s`→`sched_queue_wait_s`, `wall_s`→`sched_tokens_per_s`. | none — merge, document, and emit the field |
-//! | `config-drift` | every `TrainerConfig` field (rl/trainer.rs) round-trips `config::to_json` **and** `config::from_json`, and registers a `--` flag in `train_cli` (main.rs). | `CONFIG_ONLY` list in passes.rs for preset-level fields that deliberately have no flag; stale entries (field gains a flag) are themselves findings |
+//! | `config-drift` | every `TrainerConfig` field (rl/trainer.rs) round-trips `config::to_json` **and** `config::from_json`, and registers a `--` flag in `train_cli` (main.rs).  Same contract for every `CheckpointManifest` field (rl/checkpoint.rs) against `CheckpointManifest::to_json`/`from_json` — a field captured on save but not restored on load silently breaks deterministic resume. | `CONFIG_ONLY` list in passes.rs for preset-level fields that deliberately have no flag; stale entries (field gains a flag) are themselves findings.  No hatch for manifest fields |
 //! | `protocol` | every `Command`/`Event` variant in coordinator/service.rs is both constructed and matched outside tests — no dead and no unhandled protocol variants. | none — delete the variant or handle it |
-//! | `panic-wall` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` outside `#[cfg(test)]` in the hot-path modules: coordinator/{scheduler,service,kv,engine}.rs and `runtime/*`.  (`assert!` stays legal — invariant checks are welcome; what's banned is panicking *recovery paths*.) | `// lint: allow(panic, <reason>)` on or directly above the line; the reason must state the invariant that makes the panic unreachable |
+//! | `panic-wall` | no `unwrap()` / `expect(` / `panic!` / `unreachable!` / `todo!` / `unimplemented!` outside `#[cfg(test)]` in the hot-path modules: coordinator/{scheduler,service,kv,engine}.rs, rl/{trainer,checkpoint}.rs and `runtime/*`.  (`assert!` stays legal — invariant checks are welcome; what's banned is panicking *recovery paths*.) | `// lint: allow(panic, <reason>)` on or directly above the line; the reason must state the invariant that makes the panic unreachable |
 //! | `send-safety` | `StepEngine::new` (and so `EngineFactory` realization) only inside `StepEngine::factory` — the closure workers run on their own thread — encoding PR 3's "PJRT state never crosses a thread" rule. | `// lint: allow(send, <reason>)` for provably same-thread construction (the inline backend) |
 //!
 //! Passes 1–3 also emit findings when their anchor files are missing
@@ -30,8 +30,10 @@
 //! annotations (unknown kind, empty reason) are findings too: an escape
 //! hatch without a recorded invariant is a violation in its own right.
 //!
-//! ROADMAP note: when checkpoint/resume lands (item 3), the manifest
-//! field set joins `config-drift` the same way `TrainerConfig` does.
+//! Checkpoint/resume (ROADMAP item 3) landed: the `CheckpointManifest`
+//! field set is covered by `config-drift` the same way `TrainerConfig`
+//! is, and rl/checkpoint.rs sits on the panic wall — recovery-path
+//! failures must be typed `CheckpointError`s, never panics.
 
 pub mod lexer;
 pub mod passes;

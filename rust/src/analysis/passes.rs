@@ -407,6 +407,7 @@ pub fn stats_catalog(set: &SourceSet) -> Vec<Finding> {
 const CFG_FILE: &str = "rl/trainer.rs";
 const JSON_FILE: &str = "config/mod.rs";
 const CLI_FILE: &str = "main.rs";
+const CKPT_FILE: &str = "rl/checkpoint.rs";
 
 /// Fields that deliberately have no `qurl train` flag: they define the
 /// preset itself (algo, suite, batch geometry, eval/analysis cadence) and
@@ -520,6 +521,50 @@ pub fn config_drift(set: &SourceSet) -> Vec<Finding> {
             });
         }
     }
+    // checkpoint manifest: the same save/load shape contract, applied to
+    // CheckpointManifest::to_json/from_json in rl/checkpoint.rs — a field
+    // captured on save but never restored on load (or vice versa)
+    // silently breaks the deterministic-resume guarantee, the exact drift
+    // class this pass exists for
+    let Some(ck) = set.file(CKPT_FILE) else {
+        out.push(missing_anchor(pass, CKPT_FILE));
+        return out;
+    };
+    let Some(mfields) = struct_fields(ck, "CheckpointManifest") else {
+        out.push(Finding {
+            pass,
+            file: CKPT_FILE.to_string(),
+            line: 0,
+            msg: "struct CheckpointManifest not found".to_string(),
+        });
+        return out;
+    };
+    for fun in ["to_json", "from_json"] {
+        let Some(body) = fn_body(ck, fun) else {
+            out.push(Finding {
+                pass,
+                file: CKPT_FILE.to_string(),
+                line: 0,
+                msg: format!("CheckpointManifest::{fun} not found"),
+            });
+            continue;
+        };
+        let keys: BTreeSet<String> =
+            strings_in(ck, body).iter().map(|s| s.to_string()).collect();
+        for (field, line) in &mfields {
+            if !keys.contains(field) {
+                out.push(Finding {
+                    pass,
+                    file: CKPT_FILE.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "CheckpointManifest.{field} does not round-trip: \
+                         no \"{field}\" key in CheckpointManifest::{fun} \
+                         — a resumed run would silently lose it"),
+                });
+            }
+        }
+    }
     out
 }
 
@@ -602,13 +647,19 @@ pub fn protocol(set: &SourceSet) -> Vec<Finding> {
 /// serving loop.  `runtime/*` joins by prefix below.  `rl/trainer.rs` is
 /// on the wall because the training loop drives the threaded rollout
 /// service: a trainer panic strands worker threads mid-decode instead of
-/// unwinding the run as an error.
-const HOT_FILES: [&str; 5] = [
+/// unwinding the run as an error.  `rl/checkpoint.rs` is on the wall
+/// because it runs on the crash-*recovery* path: a panic while reading a
+/// torn snapshot would turn recoverable corruption into an abort, and
+/// every failure there must instead surface as a typed
+/// `CheckpointError` so the loader can fall back to the previous good
+/// checkpoint.
+const HOT_FILES: [&str; 6] = [
     "coordinator/scheduler.rs",
     "coordinator/service.rs",
     "coordinator/kv.rs",
     "coordinator/engine.rs",
     "rl/trainer.rs",
+    "rl/checkpoint.rs",
 ];
 
 const DENY_MACROS: [&str; 4] =
@@ -790,6 +841,11 @@ mod tests {
                 include_str!(
                     "../../tests/fixtures/lint/config_drift_main.rs"),
             ),
+            (
+                "rl/checkpoint.rs",
+                include_str!(
+                    "../../tests/fixtures/lint/ckpt_drift_checkpoint.rs"),
+            ),
         ]);
         let f = config_drift(&s);
         let m = msgs(&f);
@@ -806,7 +862,15 @@ mod tests {
         // temp: CONFIG_ONLY but the fixture registers --temp → stale
         assert!(m.contains("TrainerConfig.temp is listed CONFIG_ONLY"),
                 "missing stale-allowlist finding:\n{m}");
-        assert_eq!(f.len(), 3, "unexpected findings:\n{m}");
+        // checkpoint manifest: step/rng_state round-trip — quiet;
+        // rng_inc is written by to_json but never read back in from_json
+        assert!(!m.contains("CheckpointManifest.step"),
+                "false positive:\n{m}");
+        assert!(m.contains("CheckpointManifest.rng_inc does not \
+                            round-trip: no \"rng_inc\" key in \
+                            CheckpointManifest::from_json"),
+                "missing manifest drift finding:\n{m}");
+        assert_eq!(f.len(), 4, "unexpected findings:\n{m}");
     }
 
     // ---- pass 3 ----
@@ -843,6 +907,7 @@ mod tests {
             ("coordinator/kv.rs", ""),
             ("coordinator/engine.rs", ""),
             ("rl/trainer.rs", ""),
+            ("rl/checkpoint.rs", ""),
         ]);
         let f = panic_wall(&s);
         let m = msgs(&f);
@@ -865,7 +930,8 @@ mod tests {
     fn panic_wall_reports_missing_hot_files() {
         let s = set(&[("coordinator/scheduler.rs", "fn ok() {}")]);
         let f = panic_wall(&s);
-        assert_eq!(f.len(), 4); // service, kv, engine, trainer anchors missing
+        // service, kv, engine, trainer, checkpoint anchors missing
+        assert_eq!(f.len(), 5);
         assert!(msgs(&f).contains("anchor file coordinator/service.rs"));
     }
 

@@ -171,6 +171,10 @@ pub fn to_json(cfg: &TrainerConfig) -> Json {
         ("requantize_every", Json::num(cfg.requantize_every as f64)),
         ("analyze_every", Json::num(cfg.analyze_every as f64)),
         ("requant_delta", Json::Bool(cfg.requant_delta)),
+        ("ckpt_every", Json::num(cfg.ckpt_every as f64)),
+        ("ckpt_dir", Json::str(&cfg.ckpt_dir)),
+        ("ckpt_keep", Json::num(cfg.ckpt_keep as f64)),
+        ("resume", Json::Bool(cfg.resume)),
     ])
 }
 
@@ -243,6 +247,12 @@ pub fn from_json(j: &Json) -> Result<TrainerConfig> {
     cfg.requantize_every = get_f("requantize_every", 1.0) as usize;
     cfg.analyze_every = get_f("analyze_every", 0.0) as usize;
     cfg.requant_delta = get_b("requant_delta", true);
+    cfg.ckpt_every = get_f("ckpt_every", 0.0).max(0.0) as usize;
+    if let Some(d) = j.get("ckpt_dir").and_then(|v| v.as_str()) {
+        cfg.ckpt_dir = d.to_string();
+    }
+    cfg.ckpt_keep = get_f("ckpt_keep", 3.0).max(0.0) as usize;
+    cfg.resume = get_b("resume", false);
     Ok(cfg)
 }
 
@@ -285,6 +295,10 @@ mod tests {
         cfg.prune_rollouts = false;
         cfg.prune_min_finished = 5;
         cfg.requant_delta = false;
+        cfg.ckpt_every = 4;
+        cfg.ckpt_dir = "runs/ckpts".to_string();
+        cfg.ckpt_keep = 7;
+        cfg.resume = true;
         let j = to_json(&cfg);
         let back = from_json(&j).unwrap();
         assert_eq!(back.rollout_engines, 3);
@@ -309,6 +323,13 @@ mod tests {
                 "explicit requant_delta=false round-trips");
         assert!(!back.prune_rollouts);
         assert_eq!(back.prune_min_finished, 5);
+        assert_eq!(back.ckpt_every, 4);
+        assert_eq!(back.ckpt_dir, "runs/ckpts");
+        assert_eq!(back.ckpt_keep, 7);
+        assert!(back.resume);
+        assert_eq!((d.ckpt_every, d.ckpt_keep), (0, 3));
+        assert!(d.ckpt_dir.is_empty());
+        assert!(!d.resume, "resume defaults off");
         assert_eq!(back.algo, cfg.algo);
         assert_eq!(back.objective.kind, cfg.objective.kind);
         assert_eq!(back.rollout_mode, cfg.rollout_mode);

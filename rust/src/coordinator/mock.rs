@@ -54,6 +54,13 @@ pub struct MockEngine {
     /// fail the next N decode calls with an error (worker/tick error-path
     /// tests); each failure consumes one count, so the engine recovers
     pub fail_decodes: usize,
+    /// crash-injection for checkpoint-recovery tests: when nonzero, the
+    /// decode call that would become call number `fail_at_tick` errors
+    /// instead (once — the knob disarms after firing).  Unlike
+    /// `fail_decodes` this counts *successful* calls, so a test can say
+    /// "die mid-step at tick T" without knowing how many decodes already
+    /// ran.  0 = off.
+    pub fail_at_tick: usize,
     /// the same page ledger [`StepEngine`](super::StepEngine) embeds,
     /// driven from the same call stream — so propcheck proves the
     /// allocator invariants (no leaks, CoW before shared writes,
@@ -87,6 +94,7 @@ impl MockEngine {
             decode_calls: 0,
             max_pos_seen: 0,
             fail_decodes: 0,
+            fail_at_tick: 0,
             pager: KvPager::new(batch, max_seq, KvConfig::default()),
         }
     }
@@ -145,6 +153,10 @@ impl DecodeEngine for MockEngine {
         if self.fail_decodes > 0 {
             self.fail_decodes -= 1;
             anyhow::bail!("injected decode failure (fail_decodes)");
+        }
+        if self.fail_at_tick > 0 && self.decode_calls + 1 == self.fail_at_tick {
+            self.fail_at_tick = 0; // fire once, then the engine recovers
+            anyhow::bail!("injected crash at decode tick (fail_at_tick)");
         }
         self.decode_calls += 1;
         assert!(rows.len() <= self.batch, "decode wider than slot count");

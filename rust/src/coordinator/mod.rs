@@ -124,6 +124,22 @@
 //! input paths across a mid-run weight swap (integration-tested) —
 //! residency, placement and thread interleaving change wall-clock and
 //! copy-bytes, never learning.
+//!
+//! # Checkpoint/resume boundary
+//!
+//! The service participates in crash-safe checkpoints
+//! ([`rl::checkpoint`](crate::rl::checkpoint)) through three calls, all
+//! legal only between runs: [`RolloutService::snapshot`] captures the
+//! cross-run state (uid allocators, placement cursor, load estimates,
+//! [`WeightEpoch`], the full [`PlacementLog`]) as a [`ServiceSnapshot`];
+//! [`RolloutService::restore`] installs one on a freshly built service;
+//! and [`RolloutService::reissue_weights`] stamps the rebuilt engines
+//! with the restored epoch (a swap at the *current* counter, where
+//! [`RolloutService::push_weights`] would bump it).  Everything else the
+//! service holds is either drained per step (`take_stats`), empty
+//! between runs (group ledgers), or configuration re-derived from the
+//! fingerprinted `TrainerConfig` — see [`ServiceSnapshot`] for the full
+//! captured/not-captured inventory.
 
 pub mod engine;
 pub mod kv;
@@ -141,5 +157,5 @@ pub use request::{FinishReason, RolloutRequest, RolloutResult, SchedulerStats};
 pub use scheduler::Scheduler;
 pub use service::{EngineFactory, GroupMember, GroupResult, GroupSpec,
                   OutstandingGroupsError, PlacementLog, PlacementReason,
-                  PlacementRecord, PrunePolicy, RolloutService, StealPolicy,
-                  StripePolicy, WeightEpoch};
+                  PlacementRecord, PrunePolicy, RolloutService,
+                  ServiceSnapshot, StealPolicy, StripePolicy, WeightEpoch};

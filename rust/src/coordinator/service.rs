@@ -441,6 +441,84 @@ impl std::error::Error for OutstandingGroupsError {}
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
 pub struct WeightEpoch(pub u64);
 
+/// The cross-run state a [`RolloutService`] carries between steps — the
+/// exact set a checkpoint must capture for a rebuilt service to place,
+/// seed, and log identically to one that never went away
+/// ([`RolloutService::snapshot`] / [`RolloutService::restore`]).
+///
+/// What is *not* here, and why: per-engine [`SchedulerStats`] and the
+/// service wall clock are drained by `take_stats` at every step boundary
+/// (checkpoints happen right after a drain, so they are zero by
+/// construction); `by_uid`/`groups` are empty between runs; `live_load`,
+/// `idle_workers` and `steal_inflight` are intra-run scratch; `replay`,
+/// the stripe/steal/prune policies and the scheduler knobs are
+/// configuration, re-derived from the (fingerprinted) `TrainerConfig` on
+/// resume rather than serialized twice.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceSnapshot {
+    /// next scheduler request id ([`RolloutRequest::id`] allocator)
+    pub next_uid: u64,
+    /// round-robin placement cursor
+    pub next_engine: usize,
+    /// per-engine outstanding-cost estimate (monotone under plain
+    /// least-loaded — restoring it verbatim is what keeps post-resume
+    /// least-loaded placement identical to the uninterrupted run)
+    pub est_load: Vec<u64>,
+    /// service-lifetime group counter backing
+    /// [`PlacementRecord::group_uid`]
+    pub next_group_uid: u64,
+    /// current [`WeightEpoch`] value
+    pub epoch: u64,
+    /// full placement/steal history (replay fodder and parity artifact)
+    pub log: PlacementLog,
+}
+
+impl ServiceSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("next_uid", Json::num(self.next_uid as f64)),
+            ("next_engine", Json::num(self.next_engine as f64)),
+            ("est_load",
+             Json::Arr(self.est_load.iter()
+                 .map(|&x| Json::num(x as f64)).collect())),
+            ("next_group_uid", Json::num(self.next_group_uid as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("log", self.log.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServiceSnapshot> {
+        let field = |k: &str| {
+            j.get(k).and_then(|v| v.as_usize()).ok_or_else(|| {
+                anyhow!("service snapshot: bad field {k:?}")
+            })
+        };
+        let est_load = j
+            .get("est_load")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("service snapshot: bad field \"est_load\""))?
+            .iter()
+            .map(|v| {
+                v.as_usize().map(|x| x as u64).ok_or_else(|| {
+                    anyhow!("service snapshot: non-numeric est_load entry")
+                })
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        let log = PlacementLog::from_json(
+            j.get("log")
+                .ok_or_else(|| anyhow!("service snapshot: bad field \"log\""))?,
+        )?;
+        Ok(ServiceSnapshot {
+            next_uid: field("next_uid")? as u64,
+            next_engine: field("next_engine")?,
+            est_load,
+            next_group_uid: field("next_group_uid")? as u64,
+            epoch: field("epoch")? as u64,
+            log,
+        })
+    }
+}
+
 /// Factory an engine worker thread runs to build its own engine.  `Send`
 /// so it can move into the thread; the engine it returns never leaves that
 /// thread, which is what lets non-`Send` engines (PJRT-backed
@@ -1639,6 +1717,90 @@ impl<E: DecodeEngine> RolloutService<E> {
         self.last_engine_stats = per;
         Ok(out)
     }
+
+    // ---- checkpoint support ------------------------------------------------
+
+    /// Capture the cross-run service state for a checkpoint (see
+    /// [`ServiceSnapshot`] for exactly what is and isn't included).  Only
+    /// legal between runs — with groups outstanding the uid ledgers are
+    /// mid-flight and the snapshot would be unreplayable; that is the same
+    /// typed [`OutstandingGroupsError`] contract as [`Self::take_stats`].
+    pub fn snapshot(&self) -> Result<ServiceSnapshot> {
+        if !self.groups.is_empty() {
+            return Err(OutstandingGroupsError {
+                outstanding: self.groups.len(),
+            }
+            .into());
+        }
+        Ok(ServiceSnapshot {
+            next_uid: self.next_uid,
+            next_engine: self.next_engine,
+            est_load: self.est_load.clone(),
+            next_group_uid: self.next_group_uid,
+            epoch: self.epoch.0,
+            log: self.log.clone(),
+        })
+    }
+
+    /// Install a checkpointed [`ServiceSnapshot`] on a freshly built
+    /// service, after which placement, member seeding, and the placement
+    /// log continue bit-identically to the service the snapshot was taken
+    /// from.  Typed errors when the snapshot's replica count does not
+    /// match this service (a resume under a silently changed `--engines`)
+    /// or when groups are outstanding.
+    ///
+    /// The restored [`WeightEpoch`] is the *counter* only; the engines
+    /// themselves were just rebuilt and still carry epoch-0 bookkeeping.
+    /// Callers complete the resume with [`Self::reissue_weights`] (stamp
+    /// the current weights with the restored epoch) and one discarded
+    /// [`Self::take_stats`] drain, so post-resume stats rows match an
+    /// uninterrupted run's post-drain state.
+    pub fn restore(&mut self, snap: &ServiceSnapshot) -> Result<()> {
+        if !self.groups.is_empty() {
+            return Err(OutstandingGroupsError {
+                outstanding: self.groups.len(),
+            }
+            .into());
+        }
+        if snap.est_load.len() != self.est_load.len() {
+            return Err(anyhow!(
+                "service snapshot was taken with {} engine replicas but \
+                 this service has {} — resume with the same --engines",
+                snap.est_load.len(),
+                self.est_load.len()
+            ));
+        }
+        self.next_uid = snap.next_uid;
+        self.next_engine = snap.next_engine;
+        self.est_load = snap.est_load.clone();
+        self.next_group_uid = snap.next_group_uid;
+        self.epoch = WeightEpoch(snap.epoch);
+        self.log = snap.log.clone();
+        Ok(())
+    }
+
+    /// Re-install weights at the *current* epoch without bumping it — the
+    /// resume path's counterpart to [`Self::push_weights`].  After
+    /// [`Self::restore`] the epoch counter says generation `k` but the
+    /// rebuilt engines still decode with their construction weights at
+    /// epoch-0 bookkeeping; this stamps them with generation `k` so
+    /// `sched_weight_epoch` (and the swap protocol) continue exactly as
+    /// in the uninterrupted run.
+    pub fn reissue_weights(&mut self, w: E::Weights) {
+        let epoch = self.epoch;
+        match &mut self.backend {
+            Backend::Inline(scheds) => {
+                for s in scheds.iter_mut() {
+                    s.swap_weights(w.clone(), epoch.0);
+                }
+            }
+            Backend::Threaded { workers, .. } => {
+                for wk in workers.iter() {
+                    let _ = wk.cmd.send(Command::SwapWeights(w.clone(), epoch));
+                }
+            }
+        }
+    }
 }
 
 impl<E: DecodeEngine + 'static> RolloutService<E> {
@@ -2282,6 +2444,58 @@ mod tests {
         assert_eq!(back.final_engine(7), None);
         assert!(PlacementLog::from_json(&Json::parse("{}").unwrap())
                     .is_err());
+    }
+
+    /// Checkpoint contract: a fresh service with a restored snapshot
+    /// places, seeds, and logs the *next* run bit-identically to the
+    /// service the snapshot came from; the snapshot JSON round-trips; and
+    /// the failure modes (snapshot mid-run, replica-count mismatch) are
+    /// typed errors.
+    #[test]
+    fn service_snapshot_restore_continues_bit_identically() {
+        let run_more = |svc: &mut RolloutService<MockEngine>| {
+            for gid in 10..16 {
+                svc.submit_group(spec(gid, gid as i32, 3, 1.0));
+            }
+            let res = svc.run(|_, r| r.generated.len() as f32).unwrap();
+            svc.take_stats().unwrap();
+            fingerprint(&res)
+        };
+        // phase 1: a warm-up run establishes non-trivial cursors/log
+        let mut original = service(3, 4);
+        original.stripe = StripePolicy::LeastLoaded;
+        for gid in 0..5 {
+            original.submit_group(spec(gid, gid as i32, 4, 1.0));
+        }
+        original.run(|_, r| r.generated.len() as f32).unwrap();
+        original.take_stats().unwrap();
+        let snap = original.snapshot().unwrap();
+        assert!(snap.next_uid > 0 && snap.next_group_uid == 5);
+        // JSON round trip preserves every field
+        let text = snap.to_json().to_string();
+        let back =
+            ServiceSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(snap, back, "snapshot JSON round trip drifted");
+        // phase 2: restore onto a fresh service; both continue identically
+        let mut resumed = service(3, 4);
+        resumed.stripe = StripePolicy::LeastLoaded;
+        resumed.restore(&back).unwrap();
+        let a = run_more(&mut original);
+        let b = run_more(&mut resumed);
+        assert_eq!(a, b, "restored service diverged from the original");
+        assert_eq!(original.placement_log(), resumed.placement_log(),
+                   "placement logs diverged after restore");
+        // failure modes are typed
+        let mut narrow = service(2, 4);
+        assert!(narrow.restore(&back).is_err(),
+                "replica-count mismatch must refuse");
+        let mut busy = service(3, 4);
+        busy.submit_group(spec(0, 0, 2, 0.0));
+        assert!(busy.snapshot().unwrap_err()
+                    .downcast_ref::<OutstandingGroupsError>().is_some());
+        assert!(busy.restore(&back).unwrap_err()
+                    .downcast_ref::<OutstandingGroupsError>().is_some());
+        busy.run(|_, _| 0.0).unwrap();
     }
 
     /// The tentpole perf claim, enforced: on the skewed straggler

@@ -196,6 +196,21 @@ fn train_cli() -> Cli {
         .opt("engine-noise", "-1", "override engine noise std (-1 = preset)")
         .opt("sft-steps", "600", "SFT steps if base model missing")
         .opt("save", "", "save final checkpoint here")
+        .opt("ckpt-every", "0",
+             "write a crash-safe run checkpoint every k steps (atomic \
+              versioned snapshot: params + optimizer + RNG + service \
+              state; 0 = off)")
+        .opt("ckpt-dir", "",
+             "checkpoint directory for --ckpt-every / --resume (empty = \
+              off)")
+        .opt("ckpt-keep", "-1",
+             "retention: keep the newest k good checkpoints, never \
+              deleting the newest good one (0 = keep all; -1 = preset, \
+              preset 3)")
+        .opt("resume", "",
+             "resume from the newest good checkpoint under --ckpt-dir, \
+              bit-identically; refused if the config changed (on|off; \
+              default off)")
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
@@ -277,6 +292,21 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     if args.f64("engine-noise") >= 0.0 {
         cfg.engine_noise = args.f32("engine-noise");
+    }
+    if args.usize("ckpt-every") > 0 {
+        cfg.ckpt_every = args.usize("ckpt-every");
+    }
+    if !args.str("ckpt-dir").is_empty() {
+        cfg.ckpt_dir = args.str("ckpt-dir");
+    }
+    if args.f64("ckpt-keep") >= 0.0 {
+        cfg.ckpt_keep = args.f64("ckpt-keep") as usize;
+    }
+    match args.str("resume").as_str() {
+        "" => {}
+        "on" | "true" | "1" => cfg.resume = true,
+        "off" | "false" | "0" => cfg.resume = false,
+        other => anyhow::bail!("bad --resume {other:?} (on|off)"),
     }
     cfg.seed = args.u64("seed");
     let run = if args.str("run").is_empty() {

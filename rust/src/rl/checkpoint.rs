@@ -1,0 +1,1034 @@
+//! Crash-safe checkpoint/resume: atomic versioned run snapshots with a
+//! bit-identical deterministic-resume guarantee (ROADMAP item 3).
+//!
+//! # Snapshot layout
+//!
+//! One checkpoint is one directory under `--ckpt-dir`:
+//!
+//! ```text
+//! ckpts/
+//!   step_000004/
+//!     manifest.json       versioned metadata + per-payload checksums
+//!     params.bin          ParamStore (weights + Adam moments + step) — V2
+//!     ref_params.bin      frozen KL reference policy        (vec payload)
+//!     engine_params.bin   params the engine was last quantized from
+//!     prev_params.bin     Fig. 9 analysis snapshot           (optional)
+//!   step_000006/
+//!     ...
+//! ```
+//!
+//! The manifest captures everything the run's determinism depends on that
+//! is not already in a payload: the trainer's [`Pcg64`] stream position
+//! (`rng_state`/`rng_inc` — see [`Pcg64::snapshot`]), the rollout seed
+//! cursor, the requant cadence position (`engine_age`; the requant
+//! level/mode rides in the embedded config), the
+//! [`DynamicSampler`](super::dapo::DynamicSampler) counters, the
+//! [`Schedule`](super::schedule::Schedule) stage table, the
+//! [`ServiceSnapshot`] (uid allocators, placement cursor and estimates,
+//! [`WeightEpoch`](crate::coordinator::WeightEpoch), the full placement
+//! log), the full `TrainerConfig` JSON, and a config fingerprint that
+//! refuses resume under a silently-changed config
+//! ([`check_config`] names the differing field; the `--ckpt-*`/`--resume`
+//! control knobs themselves are excluded, since those legitimately differ
+//! between the original and the resuming invocation).
+//!
+//! **RNG audit** (what makes the captured set complete): the trainer owns
+//! exactly one long-lived stream, `Trainer::rng` (engine-noise draws) —
+//! captured here.  Every rollout stream is *derived, not stored*: member
+//! streams come from [`member_seed`](crate::util::rng::member_seed) applied
+//! to the `GroupSpec` seed, which the trainer computes from the
+//! `rollout_seed` cursor — captured here.  Problem samplers are re-seeded
+//! per step from `cfg.seed` and the step number — derived.  `Pcg64::fork`
+//! is not used on any rollout path.  So no RNG consumed during rollout
+//! lives outside this manifest.
+//!
+//! # Crash-safety protocol
+//!
+//! Payloads are staged into a `.tmp_step_NNNNNN` sibling directory, each
+//! written via temp-file + fsync + rename ([`ParamStore::save`] and the
+//! vec payload codec share the protocol), the manifest is written last,
+//! the staging directory is fsynced, and one atomic directory rename
+//! publishes the checkpoint.  A crash at any point leaves either the
+//! previous checkpoints untouched plus a `.tmp_*` straggler (garbage
+//! collected on the next save) — never a torn `step_*` directory.
+//! On load, [`latest_good`] walks checkpoints newest-first, re-verifying
+//! every payload checksum, and falls back past corrupted snapshots; an
+//! unknown `format_version` is a typed refusal
+//! ([`CheckpointError::UnknownVersion`]), not a silent fallback — a newer
+//! format means *this binary* is the wrong reader, not that the data is
+//! bad.  Retention ([`gc`], `--ckpt-keep K`) keeps the newest K *good*
+//! checkpoints and never deletes the newest good one.
+//!
+//! # What is NOT captured, and why that is sound
+//!
+//! * Per-step scheduler stats, the service wall clock, and Recorder rows —
+//!   drained/emitted at every step boundary; checkpoints are taken right
+//!   after a drain, so they are empty by construction.
+//! * Engine-internal KV/slot state — empty between runs (every group
+//!   resolves before `take_stats` is legal).
+//! * `DynamicSampler` waves in progress — the trainer constructs its
+//!   sampler fresh inside each step; at a boundary the counters are zero
+//!   (the manifest still carries them for forward-compatibility).
+//! * Prune policy — pure configuration, re-derived from the fingerprinted
+//!   config.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::ServiceSnapshot;
+use crate::runtime::ParamStore;
+use crate::util::hash::{fnv1a64, fnv1a64_continue, FNV_OFFSET};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Manifest format version this binary writes and reads.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// Config keys excluded from the resume fingerprint: the checkpoint
+/// control knobs legitimately differ between the original invocation and
+/// the one resuming it (`--resume` itself, most obviously).
+pub const CKPT_CONTROL_KEYS: [&str; 4] =
+    ["ckpt_every", "ckpt_dir", "ckpt_keep", "resume"];
+
+const MANIFEST_FILE: &str = "manifest.json";
+const VEC_MAGIC: &[u8; 8] = b"QURLVEC1";
+
+/// Typed checkpoint failures — every failure path on the resume road is
+/// one of these (the PR-8 panic wall applies to this module; nothing here
+/// panics on bad input).
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// manifest declares a format this binary does not understand
+    UnknownVersion { path: PathBuf, found: u64 },
+    /// a payload's bytes do not hash to the manifest's checksum
+    ChecksumMismatch {
+        path: PathBuf,
+        file: String,
+        stored: u64,
+        computed: u64,
+    },
+    /// manifest (or payload header) failed to parse
+    Malformed { path: PathBuf, detail: String },
+    /// a payload file named by the manifest is missing or unreadable
+    MissingPayload { path: PathBuf, file: String },
+    /// the resumed config differs from the checkpointed one
+    ConfigMismatch {
+        field: String,
+        saved: String,
+        current: String,
+    },
+    /// no good checkpoint exists under the directory
+    NoCheckpoint { dir: PathBuf },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::UnknownVersion { path, found } => write!(
+                f,
+                "checkpoint {path:?} has manifest format_version {found}; \
+                 this build reads version {FORMAT_VERSION} — refusing \
+                 (was the checkpoint written by a newer build?)"
+            ),
+            CheckpointError::ChecksumMismatch {
+                path,
+                file,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "checkpoint {path:?}: payload {file:?} checksum mismatch \
+                 (stored {stored:#018x}, computed {computed:#018x}) — torn \
+                 or corrupted snapshot"
+            ),
+            CheckpointError::Malformed { path, detail } => {
+                write!(f, "checkpoint {path:?}: malformed manifest: {detail}")
+            }
+            CheckpointError::MissingPayload { path, file } => write!(
+                f,
+                "checkpoint {path:?}: payload {file:?} missing or unreadable"
+            ),
+            CheckpointError::ConfigMismatch {
+                field,
+                saved,
+                current,
+            } => write!(
+                f,
+                "resume refused: config field {field:?} changed since the \
+                 checkpoint (saved {saved}, current {current}); resume with \
+                 the original config or start a fresh run"
+            ),
+            CheckpointError::NoCheckpoint { dir } => {
+                write!(f, "no good checkpoint found under {dir:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// Versioned checkpoint metadata (`manifest.json`).  Every field here
+/// must appear in BOTH [`CheckpointManifest::to_json`] and
+/// [`CheckpointManifest::from_json`] — the `qurl lint` config-drift pass
+/// enforces the same save/load shape contract it enforces for
+/// `TrainerConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointManifest {
+    /// manifest format version ([`FORMAT_VERSION`])
+    pub format_version: u64,
+    /// next step the resumed run executes (steps `0..step` are complete)
+    pub step: u64,
+    /// trainer [`Pcg64`] stream state (hex string in JSON — u128 does not
+    /// survive an f64 number)
+    pub rng_state: u128,
+    /// trainer [`Pcg64`] stream increment (hex string in JSON)
+    pub rng_inc: u128,
+    /// rollout seed cursor (bumped once per rollout call)
+    pub rollout_seed: i32,
+    /// requant cadence position (steps since the last engine refresh)
+    pub engine_age: u64,
+    /// [`DynamicSampler`](super::dapo::DynamicSampler) kept-groups counter
+    pub sampler_kept: u64,
+    /// sampler seen-groups counter
+    pub sampler_seen: u64,
+    /// sampler wave counter
+    pub sampler_waves: u64,
+    /// [`Schedule`](super::schedule::Schedule) stage table, when the run
+    /// uses one (`Schedule::to_json` shape)
+    pub schedule: Option<Json>,
+    /// rollout-service cross-run state, when the scheduler path built one
+    pub service: Option<ServiceSnapshot>,
+    /// full `TrainerConfig` JSON at save time (`config::to_json` shape)
+    pub config: Json,
+    /// FNV-1a 64 over the fingerprint-relevant config (hex string in
+    /// JSON); see [`config_fingerprint`]
+    pub config_fingerprint: u64,
+    /// `(file name, FNV-1a 64 over the file's bytes)` per payload
+    pub payloads: Vec<(String, u64)>,
+}
+
+impl CheckpointManifest {
+    pub fn to_json(&self) -> Json {
+        let payloads = Json::Obj(
+            self.payloads
+                .iter()
+                .map(|(f, sum)| (f.clone(), hex64(*sum)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("format_version", Json::num(self.format_version as f64)),
+            ("step", Json::num(self.step as f64)),
+            ("rng_state", hex128(self.rng_state)),
+            ("rng_inc", hex128(self.rng_inc)),
+            ("rollout_seed", Json::num(self.rollout_seed as f64)),
+            ("engine_age", Json::num(self.engine_age as f64)),
+            ("sampler_kept", Json::num(self.sampler_kept as f64)),
+            ("sampler_seen", Json::num(self.sampler_seen as f64)),
+            ("sampler_waves", Json::num(self.sampler_waves as f64)),
+            ("schedule",
+             self.schedule.clone().unwrap_or(Json::Null)),
+            ("service",
+             self.service.as_ref().map(|s| s.to_json())
+                 .unwrap_or(Json::Null)),
+            ("config", self.config.clone()),
+            ("config_fingerprint", hex64(self.config_fingerprint)),
+            ("payloads", payloads),
+        ])
+    }
+
+    pub fn from_json(j: &Json, path: &Path) -> Result<CheckpointManifest> {
+        let bad = |detail: &str| CheckpointError::Malformed {
+            path: path.to_path_buf(),
+            detail: detail.to_string(),
+        };
+        let num = |k: &str| -> Result<u64, CheckpointError> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .map(|x| x as u64)
+                .ok_or_else(|| bad(&format!("bad numeric field {k:?}")))
+        };
+        let hex = |k: &str| -> Result<u128, CheckpointError> {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .and_then(parse_hex)
+                .ok_or_else(|| bad(&format!("bad hex field {k:?}")))
+        };
+        let format_version = num("format_version")?;
+        if format_version != FORMAT_VERSION {
+            return Err(CheckpointError::UnknownVersion {
+                path: path.to_path_buf(),
+                found: format_version,
+            }
+            .into());
+        }
+        let rollout_seed = j
+            .get("rollout_seed")
+            .and_then(|v| v.as_i64())
+            .ok_or_else(|| bad("bad numeric field \"rollout_seed\""))?
+            as i32;
+        let schedule = match j.get("schedule") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(s.clone()),
+        };
+        let service = match j.get("service") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(ServiceSnapshot::from_json(s).map_err(|e| {
+                bad(&format!("bad \"service\" snapshot: {e}"))
+            })?),
+        };
+        let config = j
+            .get("config")
+            .cloned()
+            .ok_or_else(|| bad("missing \"config\" object"))?;
+        let mut payloads = Vec::new();
+        let pmap = j
+            .get("payloads")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| bad("missing \"payloads\" object"))?;
+        for (file, sum) in pmap {
+            let sum = sum.as_str().and_then(parse_hex).ok_or_else(|| {
+                bad(&format!("bad payload checksum for {file:?}"))
+            })?;
+            payloads.push((file.clone(), sum as u64));
+        }
+        Ok(CheckpointManifest {
+            format_version,
+            step: num("step")?,
+            rng_state: hex("rng_state")?,
+            rng_inc: hex("rng_inc")?,
+            rollout_seed,
+            engine_age: num("engine_age")?,
+            sampler_kept: num("sampler_kept")?,
+            sampler_seen: num("sampler_seen")?,
+            sampler_waves: num("sampler_waves")?,
+            schedule,
+            service,
+            config,
+            config_fingerprint: hex("config_fingerprint")? as u64,
+            payloads,
+        })
+    }
+}
+
+/// Borrowed view of everything one checkpoint captures — what the trainer
+/// hands to [`save`].
+pub struct CheckpointState<'a> {
+    /// next step to execute after resume
+    pub step: u64,
+    /// full config JSON (`config::to_json` shape)
+    pub config: Json,
+    /// trainer RNG position ([`Pcg64::snapshot`])
+    pub rng: (u128, u128),
+    pub rollout_seed: i32,
+    pub engine_age: u64,
+    /// sampler counters (`DynamicSampler::snapshot`)
+    pub sampler: (usize, usize, usize),
+    /// stage table (`Schedule::to_json`), when the run uses one
+    pub schedule: Option<Json>,
+    /// rollout-service cross-run state, when a service exists
+    pub service: Option<ServiceSnapshot>,
+    /// actor weights + Adam moments + optimizer step
+    pub ps: &'a ParamStore,
+    /// frozen KL reference policy
+    pub ref_params: &'a [f32],
+    /// Fig. 9 analysis snapshot, when one is held
+    pub prev_params: Option<&'a [f32]>,
+    /// params the rollout engine was last quantized from — what makes a
+    /// mid-requant-interval resume rebuild the *same* engine rather than
+    /// requantizing newer params
+    pub engine_params: Option<&'a [f32]>,
+}
+
+/// One checkpoint loaded back into owned state.
+pub struct LoadedCheckpoint {
+    pub manifest: CheckpointManifest,
+    pub ps: ParamStore,
+    pub ref_params: Vec<f32>,
+    pub prev_params: Option<Vec<f32>>,
+    pub engine_params: Option<Vec<f32>>,
+    /// directory the checkpoint was read from
+    pub dir: PathBuf,
+}
+
+impl LoadedCheckpoint {
+    /// Rebuild the trainer RNG at its captured position.
+    pub fn rng(&self) -> Pcg64 {
+        Pcg64::restore(self.manifest.rng_state, self.manifest.rng_inc)
+    }
+}
+
+// ---- fingerprint / config comparison --------------------------------------
+
+/// FNV-1a 64 over the canonical (sorted-key, [`CKPT_CONTROL_KEYS`]
+/// filtered) config JSON text.  The filter is what lets a `--resume`
+/// invocation differ in its checkpoint knobs without tripping the
+/// mismatch refusal.
+pub fn config_fingerprint(config: &Json) -> u64 {
+    fnv1a64(filtered_config(config).to_string().as_bytes())
+}
+
+fn filtered_config(config: &Json) -> Json {
+    match config {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .filter(|(k, _)| {
+                    !CKPT_CONTROL_KEYS.contains(&k.as_str())
+                })
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// Refuse resume under a silently-changed config: compare the
+/// checkpointed config JSON against the current one field by field
+/// (checkpoint control knobs excluded) and name the first differing
+/// field.  Field-wise rather than fingerprint-wise so the error says
+/// *what* changed, not just that something did.
+pub fn check_config(saved: &Json, current: &Json) -> Result<()> {
+    let (a, b) = (filtered_config(saved), filtered_config(current));
+    if a == b {
+        return Ok(());
+    }
+    let absent = || "<absent>".to_string();
+    let (am, bm) = (a.as_obj(), b.as_obj());
+    let mut keys: Vec<&String> = Vec::new();
+    if let (Some(am), Some(bm)) = (am, bm) {
+        keys.extend(am.keys());
+        keys.extend(bm.keys().filter(|k| !am.contains_key(*k)));
+        for k in keys {
+            let sv = am.get(k);
+            let cv = bm.get(k);
+            if sv != cv {
+                return Err(CheckpointError::ConfigMismatch {
+                    field: k.clone(),
+                    saved: sv.map(|v| v.to_string()).unwrap_or_else(absent),
+                    current: cv.map(|v| v.to_string()).unwrap_or_else(absent),
+                }
+                .into());
+            }
+        }
+    }
+    // non-object configs (should not happen) still refuse, just blunter
+    Err(CheckpointError::ConfigMismatch {
+        field: "<config>".to_string(),
+        saved: a.to_string(),
+        current: b.to_string(),
+    }
+    .into())
+}
+
+// ---- save ------------------------------------------------------------------
+
+/// Directory name for a checkpoint of `step` (`step_000123`; fixed width
+/// so lexicographic order is step order).
+pub fn step_dir_name(step: u64) -> String {
+    format!("step_{step:06}")
+}
+
+/// Write one checkpoint crash-safely and run retention GC.  Returns the
+/// published checkpoint directory.
+///
+/// Protocol: stage every payload into `.tmp_step_NNNNNN` (each payload is
+/// itself written temp+fsync+rename), write the manifest last, fsync the
+/// staging directory, then one atomic rename publishes the snapshot.
+/// `keep == 0` disables retention (keep everything); otherwise the newest
+/// `keep` good checkpoints survive ([`gc`]).
+pub fn save(dir: &Path, st: &CheckpointState<'_>, keep: usize)
+            -> Result<PathBuf> {
+    std::fs::create_dir_all(dir).map_err(|e| {
+        CheckpointError::Malformed {
+            path: dir.to_path_buf(),
+            detail: format!("cannot create checkpoint dir: {e}"),
+        }
+    })?;
+    let name = step_dir_name(st.step);
+    let stage = dir.join(format!(".tmp_{name}"));
+    if stage.exists() {
+        std::fs::remove_dir_all(&stage).ok(); // crash leftover
+    }
+    std::fs::create_dir_all(&stage).map_err(|e| {
+        CheckpointError::Malformed {
+            path: stage.clone(),
+            detail: format!("cannot create staging dir: {e}"),
+        }
+    })?;
+    // payloads first (each internally atomic + checksummed)
+    st.ps.save(&stage.join("params.bin"))?;
+    save_vec(&stage.join("ref_params.bin"), st.ref_params)?;
+    if let Some(p) = st.prev_params {
+        save_vec(&stage.join("prev_params.bin"), p)?;
+    }
+    if let Some(p) = st.engine_params {
+        save_vec(&stage.join("engine_params.bin"), p)?;
+    }
+    // whole-file digests into the manifest (the loader's torn-snapshot
+    // detector; payload-internal checksums guard the single-file case)
+    let mut payloads = Vec::new();
+    let mut names = vec!["params.bin", "ref_params.bin"];
+    if st.prev_params.is_some() {
+        names.push("prev_params.bin");
+    }
+    if st.engine_params.is_some() {
+        names.push("engine_params.bin");
+    }
+    for file in names {
+        let bytes =
+            std::fs::read(stage.join(file)).map_err(|_| {
+                CheckpointError::MissingPayload {
+                    path: stage.clone(),
+                    file: file.to_string(),
+                }
+            })?;
+        payloads.push((file.to_string(), fnv1a64(&bytes)));
+    }
+    let manifest = CheckpointManifest {
+        format_version: FORMAT_VERSION,
+        step: st.step,
+        rng_state: st.rng.0,
+        rng_inc: st.rng.1,
+        rollout_seed: st.rollout_seed,
+        engine_age: st.engine_age,
+        sampler_kept: st.sampler.0 as u64,
+        sampler_seen: st.sampler.1 as u64,
+        sampler_waves: st.sampler.2 as u64,
+        schedule: st.schedule.clone(),
+        service: st.service.clone(),
+        config: st.config.clone(),
+        config_fingerprint: config_fingerprint(&st.config),
+        payloads,
+    };
+    write_atomic(&stage.join(MANIFEST_FILE),
+                 manifest.to_json().to_string().as_bytes())?;
+    sync_dir(&stage);
+    let dest = dir.join(&name);
+    if dest.exists() {
+        // re-checkpointing the same step (resume overlap): replace whole
+        std::fs::remove_dir_all(&dest).ok();
+    }
+    std::fs::rename(&stage, &dest).map_err(|e| {
+        CheckpointError::Malformed {
+            path: dest.clone(),
+            detail: format!("publishing rename failed: {e}"),
+        }
+    })?;
+    sync_dir(dir);
+    if keep > 0 {
+        gc(dir, keep)?;
+    }
+    Ok(dest)
+}
+
+// ---- verify / load ---------------------------------------------------------
+
+/// Parse and fully verify one checkpoint directory: manifest parses, the
+/// format version is known, and every payload's bytes hash to the
+/// manifest's checksum.  Typed errors throughout.
+pub fn verify(step_dir: &Path) -> Result<CheckpointManifest> {
+    let mpath = step_dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&mpath).map_err(|_| {
+        CheckpointError::MissingPayload {
+            path: step_dir.to_path_buf(),
+            file: MANIFEST_FILE.to_string(),
+        }
+    })?;
+    let j = Json::parse(&text).map_err(|e| CheckpointError::Malformed {
+        path: mpath.clone(),
+        detail: e.to_string(),
+    })?;
+    let manifest = CheckpointManifest::from_json(&j, &mpath)?;
+    for (file, stored) in &manifest.payloads {
+        let bytes = std::fs::read(step_dir.join(file)).map_err(|_| {
+            CheckpointError::MissingPayload {
+                path: step_dir.to_path_buf(),
+                file: file.clone(),
+            }
+        })?;
+        let computed = fnv1a64(&bytes);
+        if computed != *stored {
+            return Err(CheckpointError::ChecksumMismatch {
+                path: step_dir.to_path_buf(),
+                file: file.clone(),
+                stored: *stored,
+                computed,
+            }
+            .into());
+        }
+    }
+    Ok(manifest)
+}
+
+/// Load one verified checkpoint directory into owned state.
+pub fn load_dir(step_dir: &Path) -> Result<LoadedCheckpoint> {
+    let manifest = verify(step_dir)?;
+    let has = |f: &str| manifest.payloads.iter().any(|(n, _)| n == f);
+    let ps = ParamStore::load(&step_dir.join("params.bin"))?;
+    let ref_params = load_vec(&step_dir.join("ref_params.bin"))?;
+    let prev_params = if has("prev_params.bin") {
+        Some(load_vec(&step_dir.join("prev_params.bin"))?)
+    } else {
+        None
+    };
+    let engine_params = if has("engine_params.bin") {
+        Some(load_vec(&step_dir.join("engine_params.bin"))?)
+    } else {
+        None
+    };
+    Ok(LoadedCheckpoint {
+        manifest,
+        ps,
+        ref_params,
+        prev_params,
+        engine_params,
+        dir: step_dir.to_path_buf(),
+    })
+}
+
+/// Newest checkpoint that verifies clean, scanning `step_*` directories
+/// newest-first and falling back past corrupted/torn snapshots (each skip
+/// is logged).  `Ok(None)` when the directory holds no checkpoint at all.
+/// An unknown manifest version is NOT skipped — it propagates as the
+/// typed refusal, because newer-format data means this binary is the
+/// wrong reader, and "fall back to older state" would silently rewind
+/// the run.
+pub fn latest_good(dir: &Path) -> Result<Option<PathBuf>> {
+    for (_, path) in step_dirs(dir) {
+        match verify(&path) {
+            Ok(_) => return Ok(Some(path)),
+            Err(e) => {
+                let unknown = e
+                    .downcast_ref::<CheckpointError>()
+                    .map(|c| matches!(c,
+                                      CheckpointError::UnknownVersion { .. }))
+                    .unwrap_or(false);
+                if unknown {
+                    return Err(e);
+                }
+                crate::warnln!("ckpt", "skipping bad checkpoint {path:?}: \
+                                {e}; falling back to the previous one");
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Load the newest good checkpoint under `dir` (the `--resume` entry
+/// point).  Typed [`CheckpointError::NoCheckpoint`] when none exists.
+pub fn load_latest(dir: &Path) -> Result<LoadedCheckpoint> {
+    match latest_good(dir)? {
+        Some(path) => load_dir(&path),
+        None => Err(CheckpointError::NoCheckpoint {
+            dir: dir.to_path_buf(),
+        }
+        .into()),
+    }
+}
+
+// ---- retention -------------------------------------------------------------
+
+/// Retention GC: keep the newest `keep` *good* checkpoints (bad ones
+/// inside that window are also retained — they may be all there is until
+/// enough good ones accumulate), delete everything older, and sweep
+/// `.tmp_*` staging leftovers.  The newest good checkpoint is never
+/// deleted: it is the first one the walk counts.  Returns the number of
+/// directories removed.
+pub fn gc(dir: &Path, keep: usize) -> Result<usize> {
+    let keep = keep.max(1);
+    let mut removed = 0usize;
+    let mut good_seen = 0usize;
+    for (_, path) in step_dirs(dir) {
+        if good_seen < keep {
+            if verify(&path).is_ok() {
+                good_seen += 1;
+            }
+            continue;
+        }
+        if std::fs::remove_dir_all(&path).is_ok() {
+            removed += 1;
+        }
+    }
+    // crash leftovers from interrupted saves
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with(".tmp_step_")
+                && std::fs::remove_dir_all(entry.path()).is_ok()
+            {
+                removed += 1;
+            }
+        }
+    }
+    Ok(removed)
+}
+
+/// `step_*` checkpoint directories under `dir`, newest (highest step)
+/// first.  Staging (`.tmp_*`) and foreign entries are ignored.
+fn step_dirs(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let mut out: Vec<(u64, PathBuf)> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy().to_string();
+            if let Some(num) = name.strip_prefix("step_") {
+                if let Ok(step) = num.parse::<u64>() {
+                    if entry.path().is_dir() {
+                        out.push((step, entry.path()));
+                    }
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out
+}
+
+// ---- payload codec ---------------------------------------------------------
+
+/// Atomic checksummed f32-vector payload (reference policy, analysis and
+/// engine-source params): `QURLVEC1`, n as u64 LE, raw f32 bytes, FNV-1a
+/// 64 over everything preceding.  Same temp + fsync + rename protocol as
+/// [`ParamStore::save`].
+fn save_vec(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes =
+        Vec::with_capacity(16 + data.len() * 4 + 8);
+    bytes.extend_from_slice(VEC_MAGIC);
+    bytes.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    for x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    let sum = fnv1a64(&bytes);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+    write_atomic(path, &bytes)
+}
+
+fn load_vec(path: &Path) -> Result<Vec<f32>> {
+    let malformed = |detail: String| CheckpointError::Malformed {
+        path: path.to_path_buf(),
+        detail,
+    };
+    let bytes = std::fs::read(path).map_err(|_| {
+        CheckpointError::MissingPayload {
+            path: path.to_path_buf(),
+            file: path
+                .file_name()
+                .map(|n| n.to_string_lossy().to_string())
+                .unwrap_or_default(),
+        }
+    })?;
+    if bytes.len() < 24 || &bytes[..8] != VEC_MAGIC {
+        return Err(malformed(
+            "truncated or mislabeled vec payload".to_string(),
+        )
+        .into());
+    }
+    let mut u = [0u8; 8];
+    u.copy_from_slice(&bytes[8..16]);
+    let n = u64::from_le_bytes(u) as usize;
+    let body_end = 16usize.saturating_add(n.saturating_mul(4));
+    if bytes.len() != body_end + 8 {
+        return Err(malformed(format!(
+            "vec payload claims {n} f32s but holds {} bytes",
+            bytes.len()
+        ))
+        .into());
+    }
+    u.copy_from_slice(&bytes[body_end..]);
+    let stored = u64::from_le_bytes(u);
+    let computed =
+        fnv1a64_continue(FNV_OFFSET, &bytes[..body_end]);
+    if stored != computed {
+        return Err(CheckpointError::ChecksumMismatch {
+            path: path.to_path_buf(),
+            file: path
+                .file_name()
+                .map(|f| f.to_string_lossy().to_string())
+                .unwrap_or_default(),
+            stored,
+            computed,
+        }
+        .into());
+    }
+    let mut out = Vec::with_capacity(n);
+    for chunk in bytes[16..body_end].chunks_exact(4) {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(chunk);
+        out.push(f32::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+/// Temp-file + fsync + atomic-rename write, with a best-effort parent
+/// directory fsync for rename durability.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("payload"));
+    name.push(".tmp");
+    let tmp = path.with_file_name(name);
+    let stage_err = |e: std::io::Error| CheckpointError::Malformed {
+        path: tmp.clone(),
+        detail: format!("staging write failed: {e}"),
+    };
+    let mut f = std::fs::File::create(&tmp).map_err(stage_err)?;
+    f.write_all(bytes).map_err(stage_err)?;
+    f.sync_all().map_err(stage_err)?;
+    drop(f);
+    std::fs::rename(&tmp, path).map_err(|e| {
+        CheckpointError::Malformed {
+            path: path.to_path_buf(),
+            detail: format!("atomic rename failed: {e}"),
+        }
+    })?;
+    if let Some(parent) = path.parent() {
+        sync_dir(parent);
+    }
+    Ok(())
+}
+
+/// Best-effort directory fsync (makes renames durable on Linux; a
+/// failure here degrades durability, not correctness, so it is ignored).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+fn hex128(v: u128) -> Json {
+    Json::Str(format!("{v:#x}"))
+}
+
+fn hex64(v: u64) -> Json {
+    Json::Str(format!("{v:#x}"))
+}
+
+fn parse_hex(s: &str) -> Option<u128> {
+    u128::from_str_radix(s.strip_prefix("0x")?, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("qurl_ckpt_{tag}"));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn store(step: u64) -> ParamStore {
+        ParamStore {
+            params: (0..24).map(|i| i as f32 * 0.5 - 3.0).collect(),
+            m: vec![0.25; 24],
+            v: vec![0.5; 24],
+            step,
+            a_size: 8,
+        }
+    }
+
+    fn state<'a>(step: u64, ps: &'a ParamStore, refp: &'a [f32],
+                 cfg: &Json) -> CheckpointState<'a> {
+        CheckpointState {
+            step,
+            config: cfg.clone(),
+            rng: (0x1234_5678_9abc_def0_1111_2222_3333_4444,
+                  0x5555_6666_7777_8888_9999_aaaa_bbbb_cccd),
+            rollout_seed: -77,
+            engine_age: 1,
+            sampler: (0, 0, 0),
+            schedule: None,
+            service: None,
+            ps,
+            ref_params: refp,
+            prev_params: None,
+            engine_params: None,
+        }
+    }
+
+    fn cfg_json() -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(7.0)),
+            ("steps", Json::num(10.0)),
+            ("ckpt_every", Json::num(2.0)),
+            ("resume", Json::Bool(false)),
+        ])
+    }
+
+    /// Manifest JSON round trip is exact, including the u128 RNG state
+    /// (hex strings — an f64 number would shred the low bits).
+    #[test]
+    fn manifest_json_roundtrip_preserves_u128() {
+        let ps = store(3);
+        let refp = vec![1.0f32; 24];
+        let st = state(4, &ps, &refp, &cfg_json());
+        let man = CheckpointManifest {
+            format_version: FORMAT_VERSION,
+            step: st.step,
+            rng_state: st.rng.0,
+            rng_inc: st.rng.1,
+            rollout_seed: st.rollout_seed,
+            engine_age: st.engine_age,
+            sampler_kept: 1,
+            sampler_seen: 2,
+            sampler_waves: 3,
+            schedule: None,
+            service: None,
+            config: st.config.clone(),
+            config_fingerprint: config_fingerprint(&st.config),
+            payloads: vec![("params.bin".into(), 0xdead_beef_cafe_f00d)],
+        };
+        let text = man.to_json().to_string();
+        let back = CheckpointManifest::from_json(
+            &Json::parse(&text).unwrap(), Path::new("t")).unwrap();
+        assert_eq!(man, back);
+    }
+
+    /// Save → load round trip restores params, moments, RNG position and
+    /// the manifest metadata bit-for-bit.
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = tdir("roundtrip");
+        let ps = store(9);
+        let refp: Vec<f32> = (0..24).map(|i| i as f32 * -0.125).collect();
+        let prev: Vec<f32> = vec![2.5; 24];
+        let mut st = state(6, &ps, &refp, &cfg_json());
+        st.prev_params = Some(&prev);
+        let path = save(&dir, &st, 0).unwrap();
+        assert_eq!(path, dir.join("step_000006"));
+        let back = load_latest(&dir).unwrap();
+        assert_eq!(back.manifest.step, 6);
+        assert_eq!(back.manifest.rng_state, st.rng.0);
+        assert_eq!(back.manifest.rng_inc, st.rng.1);
+        assert_eq!(back.manifest.rollout_seed, -77);
+        assert_eq!(back.ps.params, ps.params);
+        assert_eq!(back.ps.m, ps.m);
+        assert_eq!(back.ps.step, 9);
+        assert_eq!(back.ref_params, refp);
+        assert_eq!(back.prev_params.as_deref(), Some(&prev[..]));
+        assert!(back.engine_params.is_none());
+        // no staging leftovers
+        assert!(!dir.join(".tmp_step_000006").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Corrupted payload → loader falls back to the previous good
+    /// snapshot; with no good snapshot at all the error is typed.
+    #[test]
+    fn corruption_falls_back_to_previous_good() {
+        let dir = tdir("fallback");
+        let ps = store(1);
+        let refp = vec![0.5f32; 24];
+        save(&dir, &state(2, &ps, &refp, &cfg_json()), 0).unwrap();
+        save(&dir, &state(4, &ps, &refp, &cfg_json()), 0).unwrap();
+        // flip a byte mid-payload in the newest snapshot
+        let victim = dir.join("step_000004").join("params.bin");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&victim, &bytes).unwrap();
+        let back = load_latest(&dir).unwrap();
+        assert_eq!(back.manifest.step, 2, "did not fall back past the \
+                                           corrupted snapshot");
+        // corrupt the survivor too: typed NoCheckpoint
+        let victim = dir.join("step_000002").join("ref_params.bin");
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = load_latest(&dir).unwrap_err();
+        assert!(matches!(err.downcast_ref::<CheckpointError>(),
+                         Some(CheckpointError::NoCheckpoint { .. })),
+                "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Unknown manifest version: typed refusal, NOT a silent fallback to
+    /// an older (readable) snapshot.
+    #[test]
+    fn unknown_version_is_typed_refusal() {
+        let dir = tdir("version");
+        let ps = store(1);
+        let refp = vec![0.5f32; 24];
+        save(&dir, &state(2, &ps, &refp, &cfg_json()), 0).unwrap();
+        save(&dir, &state(4, &ps, &refp, &cfg_json()), 0).unwrap();
+        let mpath = dir.join("step_000004").join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath,
+                       text.replace("\"format_version\":1",
+                                    "\"format_version\":99")).unwrap();
+        let err = load_latest(&dir).unwrap_err();
+        match err.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::UnknownVersion { found, .. }) => {
+                assert_eq!(*found, 99);
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Config drift refusal names the differing field; the checkpoint
+    /// control knobs are exempt.
+    #[test]
+    fn config_mismatch_names_the_field() {
+        let saved = cfg_json();
+        let mut current = saved.clone();
+        if let Json::Obj(m) = &mut current {
+            m.insert("steps".to_string(), Json::num(20.0));
+            // control knobs may differ freely
+            m.insert("ckpt_every".to_string(), Json::num(5.0));
+            m.insert("resume".to_string(), Json::Bool(true));
+        }
+        let err = check_config(&saved, &current).unwrap_err();
+        match err.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::ConfigMismatch { field, saved,
+                                                   current }) => {
+                assert_eq!(field, "steps");
+                assert_eq!((saved.as_str(), current.as_str()),
+                           ("10", "20"));
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        // identical (modulo control knobs) passes
+        let mut same = cfg_json();
+        if let Json::Obj(m) = &mut same {
+            m.insert("resume".to_string(), Json::Bool(true));
+        }
+        assert!(check_config(&cfg_json(), &same).is_ok());
+        assert_eq!(config_fingerprint(&cfg_json()),
+                   config_fingerprint(&same),
+                   "control knobs must not move the fingerprint");
+    }
+
+    /// Retention: newest `keep` good checkpoints survive, older ones go,
+    /// the newest good one survives even when newer snapshots are bad,
+    /// and staging leftovers are swept.
+    #[test]
+    fn gc_keeps_newest_good() {
+        let dir = tdir("gc");
+        let ps = store(1);
+        let refp = vec![0.5f32; 24];
+        for step in [2u64, 4, 6, 8] {
+            save(&dir, &state(step, &ps, &refp, &cfg_json()), 0).unwrap();
+        }
+        std::fs::create_dir_all(dir.join(".tmp_step_000010")).unwrap();
+        gc(&dir, 2).unwrap();
+        assert!(!dir.join("step_000002").exists());
+        assert!(!dir.join("step_000004").exists());
+        assert!(dir.join("step_000006").exists());
+        assert!(dir.join("step_000008").exists());
+        assert!(!dir.join(".tmp_step_000010").exists(),
+                "staging leftover not swept");
+        // newest is corrupt: keep=1 must still retain the older good one
+        std::fs::remove_file(dir.join("step_000008").join("params.bin"))
+            .unwrap();
+        gc(&dir, 1).unwrap();
+        assert!(dir.join("step_000006").exists(),
+                "gc deleted the only good checkpoint");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -103,6 +103,26 @@ impl DynamicSampler {
             self.kept_groups as f64 / self.seen_groups as f64
         }
     }
+
+    /// Checkpoint capture: `(kept_groups, seen_groups, waves)` — the full
+    /// mutable state (the remaining fields are configuration).  The
+    /// trainer constructs its sampler fresh inside each step's collect
+    /// loop, so at a step-boundary checkpoint this is always
+    /// `(0, 0, 0)`; the API exists so any future mid-step or cross-step
+    /// sampler survives resume, per the checkpoint manifest contract in
+    /// [`crate::rl::checkpoint`].
+    pub fn snapshot(&self) -> (usize, usize, usize) {
+        (self.kept_groups, self.seen_groups, self.waves)
+    }
+
+    /// Restore a [`Self::snapshot`] onto a sampler built with the same
+    /// configuration; counting then continues exactly where it left off.
+    pub fn restore(&mut self, snap: (usize, usize, usize)) {
+        let (kept, seen, waves) = snap;
+        self.kept_groups = kept;
+        self.seen_groups = seen;
+        self.waves = waves;
+    }
 }
 
 #[cfg(test)]
@@ -165,6 +185,22 @@ mod tests {
         assert_eq!(ds.seen_groups, 6);
         assert!((ds.efficiency() - 0.5).abs() < 1e-9);
         assert!(!ds.done());
+    }
+
+    /// Checkpoint contract: a restored sampler makes the same keep/done
+    /// decisions the original would have, from the same position.
+    #[test]
+    fn snapshot_restore_continues_counting() {
+        let mut a = DynamicSampler::new(2, 3);
+        a.offer(&[0., 0., 1., 0.]);
+        let snap = a.snapshot();
+        assert_eq!(snap, (1, 2, 1));
+        let mut b = DynamicSampler::new(2, 3);
+        b.restore(snap);
+        assert_eq!(a.offer(&[1., 0., 0., 1.]), b.offer(&[1., 0., 0., 1.]));
+        assert_eq!((a.kept(), a.seen_groups, a.waves, a.done()),
+                   (b.kept(), b.seen_groups, b.waves, b.done()));
+        assert!((a.efficiency() - b.efficiency()).abs() < 1e-12);
     }
 
     /// The online (service-path) policy matches post-hoc filtering counts:

@@ -1,8 +1,25 @@
 //! The RL layer: objectives (paper §4 — naive / decoupled / TIS / ACR),
 //! advantage estimation (GRPO / RLOO / GAE), DAPO dynamic sampling, KL
 //! estimators, evaluation protocols and the training loop.
+//!
+//! # Trainer → checkpoint flow
+//!
+//! [`Trainer::run`] is the checkpoint/resume seam ([`checkpoint`] holds
+//! the format and protocol): every `--ckpt-every` steps it snapshots, at a
+//! step boundary, the [`ParamStore`](crate::runtime::ParamStore) (weights
+//! + Adam moments), the reference policy, the trainer's
+//! [`Pcg64`](crate::util::rng::Pcg64) position, the rollout seed cursor,
+//! the requant cadence (`engine_age` + the params the engine was last
+//! quantized from), the Fig. 9 analysis snapshot, and — on the scheduler
+//! path — the [`ServiceSnapshot`](crate::coordinator::ServiceSnapshot).
+//! `--resume` restores all of that before the step loop, rebuilds the
+//! engine from the *saved* quantization source, and re-stamps the rebuilt
+//! service with the restored weight epoch, making the continued run
+//! bit-identical to one that never stopped (integration-tested on the
+//! mock engine, including crash-mid-step recovery).
 
 pub mod advantage;
+pub mod checkpoint;
 pub mod dapo;
 pub mod eval;
 pub mod schedule;
@@ -10,6 +27,7 @@ pub mod kl;
 pub mod objective;
 pub mod trainer;
 
+pub use checkpoint::{CheckpointError, CheckpointManifest};
 pub use objective::{Objective, ObjectiveKind};
 pub use trainer::{pretrain_sft, Algo, RolloutExec, RolloutPath, Sample,
                   Trainer, TrainerConfig};

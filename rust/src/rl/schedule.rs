@@ -2,6 +2,17 @@
 //! stages at 8k/16k/24k context with growing rollouts per query.  This
 //! testbed's analog scales task *difficulty* and group size per stage
 //! (context length is fixed by the AOT artifacts; DESIGN.md §2).
+//!
+//! A [`Schedule`] is a pure function of the step counter — it carries no
+//! cursor — so checkpoint/resume ([`crate::rl::checkpoint`]) needs only
+//! the step number plus the stage table itself, which
+//! [`Schedule::to_json`]/[`Schedule::from_json`] round-trip into the
+//! manifest (a resumed run must refuse a silently edited stage table the
+//! same way it refuses a changed `TrainerConfig`).
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
 
 /// One stage of a staged RL run.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -77,6 +88,62 @@ impl Schedule {
     pub fn n_stages(&self) -> usize {
         self.stages.len()
     }
+
+    /// Serialize the stage table (checkpoint-manifest payload).  `temp` is
+    /// stored via `f32 -> f64` widening, which is exact, so the round trip
+    /// is bit-preserving.
+    pub fn to_json(&self) -> Json {
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("from_step", Json::num(s.from_step as f64)),
+                    ("difficulty", Json::num(s.difficulty as f64)),
+                    ("group_size", Json::num(s.group_size as f64)),
+                    ("temp", Json::num(s.temp as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("stages", Json::Arr(stages))])
+    }
+
+    /// Parse a [`Self::to_json`] stage table; typed errors on shape
+    /// violations (missing array, bad field, empty table, nonzero first
+    /// stage) rather than panics — this runs on the resume path.
+    pub fn from_json(j: &Json) -> Result<Schedule> {
+        let arr = j
+            .get("stages")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("schedule: missing \"stages\" array"))?;
+        if arr.is_empty() {
+            return Err(anyhow!("schedule: empty stage table"));
+        }
+        let mut stages = Vec::with_capacity(arr.len());
+        for (i, s) in arr.iter().enumerate() {
+            let field = |k: &str| {
+                s.get(k).and_then(|v| v.as_usize()).ok_or_else(|| {
+                    anyhow!("schedule stage {i}: bad field {k:?}")
+                })
+            };
+            let temp = s
+                .get("temp")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("schedule stage {i}: bad field \"temp\""))?
+                as f32;
+            stages.push(Stage {
+                from_step: field("from_step")?,
+                difficulty: field("difficulty")?,
+                group_size: field("group_size")?,
+                temp,
+            });
+        }
+        stages.sort_by_key(|s| s.from_step);
+        if stages[0].from_step != 0 {
+            return Err(anyhow!("schedule: first stage must start at step 0"));
+        }
+        Ok(Schedule { stages })
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +186,34 @@ mod tests {
         ]);
         assert_eq!(s.at(49).difficulty, 0);
         assert_eq!(s.at(50).temp, 0.8);
+    }
+
+    /// Checkpoint contract: the stage table JSON round-trips exactly
+    /// (including f32 temps), and malformed tables are typed errors.
+    #[test]
+    fn json_roundtrip_preserves_stages() {
+        let s = Schedule::deepscaler(800, 1, 8);
+        let text = s.to_json().to_string();
+        let back = Schedule::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_stages(), 3);
+        for step in [0, 399, 400, 600, 799, 10_000] {
+            assert_eq!(s.at(step), back.at(step), "stage drift at {step}");
+        }
+        let odd = Schedule::from_stages(vec![
+            Stage { from_step: 0, difficulty: 1, group_size: 4, temp: 0.7 },
+            Stage { from_step: 9, difficulty: 2, group_size: 8, temp: 1.3 },
+        ]);
+        let back =
+            Schedule::from_json(&Json::parse(&odd.to_json().to_string())
+                .unwrap()).unwrap();
+        assert_eq!(back.at(9).temp.to_bits(), 1.3f32.to_bits(),
+                   "temp must round-trip bit-exactly");
+        for bad in ["{}", r#"{"stages": []}"#,
+                    r#"{"stages": [{"from_step": 5, "difficulty": 1,
+                                    "group_size": 2, "temp": 1.0}]}"#] {
+            assert!(Schedule::from_json(&Json::parse(bad).unwrap()).is_err(),
+                    "accepted malformed schedule: {bad}");
+        }
     }
 
     #[test]

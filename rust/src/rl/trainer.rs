@@ -238,6 +238,18 @@ pub struct TrainerConfig {
     /// and re-stage everything each refresh (outputs bit-identical either
     /// way; property-tested)
     pub requant_delta: bool,
+    /// write a crash-safe checkpoint every k steps (0 = off); see
+    /// [`crate::rl::checkpoint`] for the snapshot format and the
+    /// deterministic-resume guarantee
+    pub ckpt_every: usize,
+    /// directory checkpoints are written to / resumed from (empty = off)
+    pub ckpt_dir: String,
+    /// retention: keep the newest k good checkpoints (0 = keep all); the
+    /// newest good one is never deleted
+    pub ckpt_keep: usize,
+    /// resume from the newest good checkpoint under `ckpt_dir` before
+    /// training; refused if the (non-checkpoint) config changed
+    pub resume: bool,
 }
 
 impl Default for TrainerConfig {
@@ -277,6 +289,10 @@ impl Default for TrainerConfig {
             requantize_every: 1,
             analyze_every: 0,
             requant_delta: true,
+            ckpt_every: 0,
+            ckpt_dir: String::new(),
+            ckpt_keep: 3,
+            resume: false,
         }
     }
 }
@@ -337,6 +353,10 @@ pub struct Trainer {
     sched_engine_stats: Vec<SchedulerStats>,
     /// previous-step section-B snapshot for the Fig. 9 analysis
     prev_params: Option<Vec<f32>>,
+    /// params the engine was last quantized from — checkpointed so a
+    /// resume mid requant interval rebuilds the *same* engine instead of
+    /// requantizing newer params ([`crate::rl::checkpoint`])
+    engine_src: Option<Vec<f32>>,
 }
 
 impl Trainer {
@@ -369,6 +389,7 @@ impl Trainer {
             sched_stats: None,
             sched_engine_stats: Vec::new(),
             prev_params: None,
+            engine_src: None,
         })
     }
 
@@ -422,6 +443,7 @@ impl Trainer {
                 });
         }
         self.engine = Some(w.clone());
+        self.engine_src = Some(self.ps.params.clone());
         self.engine_age = 1;
         if let Some(svc) = &mut self.service {
             svc.push_weights(w);
@@ -1045,12 +1067,107 @@ impl Trainer {
     }
 
     /// Run the configured number of steps; returns final training reward EMA.
+    ///
+    /// With `cfg.resume` set, training first restores the newest good
+    /// checkpoint under `cfg.ckpt_dir` and continues from its step; with
+    /// `cfg.ckpt_every > 0`, a crash-safe snapshot is written at every k-th
+    /// step boundary ([`crate::rl::checkpoint`]).
     pub fn run(&mut self) -> Result<f64> {
+        let mut start = 0usize;
+        if self.cfg.resume {
+            start = self.resume_from_checkpoint()?;
+        }
         let mut last = 0.0;
-        for step in 0..self.cfg.steps {
+        for step in start..self.cfg.steps {
             last = self.step(step)?;
+            self.maybe_checkpoint(step)?;
         }
         Ok(self.rec.tail_mean("reward", 8).unwrap_or(last))
+    }
+
+    /// Write a checkpoint if `step` lands on the `ckpt_every` cadence.
+    /// Runs *after* `step` completed, so the snapshot's `step` field is the
+    /// next step to execute and the per-step stats are fully drained.
+    fn maybe_checkpoint(&mut self, step: usize) -> Result<()> {
+        if self.cfg.ckpt_every == 0
+            || self.cfg.ckpt_dir.is_empty()
+            || (step + 1) % self.cfg.ckpt_every != 0
+        {
+            return Ok(());
+        }
+        let service = match &self.service {
+            Some(svc) => Some(svc.snapshot()?),
+            None => None,
+        };
+        let st = super::checkpoint::CheckpointState {
+            step: (step + 1) as u64,
+            config: crate::config::to_json(&self.cfg),
+            rng: self.rng.snapshot(),
+            rollout_seed: self.rollout_seed,
+            engine_age: self.engine_age as u64,
+            // the trainer's DynamicSampler lives inside collect(), so at a
+            // step boundary its counters are zero by construction
+            sampler: (0, 0, 0),
+            schedule: None,
+            service,
+            ps: &self.ps,
+            ref_params: &self.ref_params,
+            prev_params: self.prev_params.as_deref(),
+            engine_params: self.engine_src.as_deref(),
+        };
+        let dir = std::path::PathBuf::from(&self.cfg.ckpt_dir);
+        let path = super::checkpoint::save(&dir, &st, self.cfg.ckpt_keep)?;
+        crate::info!("trainer", "checkpoint written: {path:?}");
+        Ok(())
+    }
+
+    /// Restore the newest good checkpoint and return the step to continue
+    /// from.  Refuses (typed errors from [`crate::rl::checkpoint`]) on a
+    /// changed config, an unknown manifest version, or when every snapshot
+    /// is corrupt.  The rollout engine is requantized from the *saved*
+    /// engine-source params — not the current ones — so a resume that
+    /// lands mid requant interval serves exactly the weights the
+    /// uninterrupted run would have; on the scheduler path the service is
+    /// rebuilt eagerly and stamped with the restored [`WeightEpoch`] via
+    /// `reissue_weights`, so the next `push_weights` bumps the epoch just
+    /// like an uninterrupted run's would.
+    fn resume_from_checkpoint(&mut self) -> Result<usize> {
+        anyhow::ensure!(!self.cfg.ckpt_dir.is_empty(),
+                        "resume requested but ckpt_dir is empty \
+                         (--resume needs --ckpt-dir)");
+        let dir = std::path::PathBuf::from(&self.cfg.ckpt_dir);
+        let loaded = super::checkpoint::load_latest(&dir)?;
+        super::checkpoint::check_config(&loaded.manifest.config,
+                                        &crate::config::to_json(&self.cfg))?;
+        self.rng = loaded.rng();
+        self.rollout_seed = loaded.manifest.rollout_seed;
+        self.engine_age = loaded.manifest.engine_age as usize;
+        self.ps = loaded.ps;
+        self.ref_params = loaded.ref_params;
+        self.prev_params = loaded.prev_params;
+        if let Some(src) = &loaded.engine_params {
+            // full requant of the saved source params is bit-identical to
+            // whatever delta path produced the original engine
+            // (property-tested), so the rebuilt engine serves the same
+            // quantized weights and the next delta refresh sees the same
+            // per-tensor change set
+            let w = self.rt.engine_weights(self.cfg.rollout_mode, src)?;
+            self.engine = Some(w);
+            self.engine_src = Some(src.clone());
+        }
+        if let Some(snap) = loaded.manifest.service.clone() {
+            self.ensure_service()?;
+            if let Some(svc) = &mut self.service {
+                svc.restore(&snap)?;
+                if let Some(w) = &self.engine {
+                    svc.reissue_weights(w.clone());
+                }
+            }
+        }
+        let step = loaded.manifest.step as usize;
+        crate::info!("trainer", "resumed from {:?} at step {step}",
+                     loaded.dir);
+        Ok(step)
     }
 }
 

@@ -6,13 +6,28 @@
 //! benches can share a pretrained base model.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::hash::{fnv1a64_continue, FNV_OFFSET};
+
 use super::manifest::Manifest;
 
-const MAGIC: &[u8; 8] = b"QURLCKP1";
+/// Legacy header: no checksum, written non-atomically.  Still accepted on
+/// load so pre-existing artifacts (`base_model.bin`) keep working.
+const MAGIC_V1: &[u8; 8] = b"QURLCKP1";
+/// Current header: same layout as V1 plus a trailing FNV-1a 64 digest over
+/// every preceding byte (magic + header + payload).  Written atomically
+/// (temp + fsync + rename), so a reader never observes a torn V2 file at
+/// the final path; the checksum catches truncation/corruption that happens
+/// after the rename (bit rot, partial copies).
+const MAGIC_V2: &[u8; 8] = b"QURLCKP2";
+
+/// Hard ceiling on the parameter count a checkpoint header may claim —
+/// a corrupted length field must become a typed error, not a
+/// multi-terabyte allocation attempt.
+const MAX_PARAMS: usize = 1 << 32;
 
 /// Actor parameters + Adam state + step counter.
 #[derive(Clone, Debug)]
@@ -66,43 +81,95 @@ impl ParamStore {
 
     // ---- checkpoint I/O ----------------------------------------------------
 
+    /// Write a V2 checkpoint crash-safely: stage the full payload in a
+    /// sibling `.tmp` file, fsync it, then atomically rename over `path`
+    /// (and best-effort fsync the parent directory so the rename itself is
+    /// durable).  A crash at any point leaves either the previous file or
+    /// a stray `.tmp` — never a torn checkpoint at the final path.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent).ok();
         }
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {path:?}"))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
-        f.write_all(&self.step.to_le_bytes())?;
-        f.write_all(&(self.a_size as u64).to_le_bytes())?;
+        let tmp = tmp_path(path);
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        let mut header = Vec::with_capacity(32);
+        header.extend_from_slice(MAGIC_V2);
+        header.extend_from_slice(&(self.params.len() as u64).to_le_bytes());
+        header.extend_from_slice(&self.step.to_le_bytes());
+        header.extend_from_slice(&(self.a_size as u64).to_le_bytes());
+        let mut sum = fnv1a64_continue(FNV_OFFSET, &header);
+        f.write_all(&header)?;
         for v in [&self.params, &self.m, &self.v] {
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
             };
+            sum = fnv1a64_continue(sum, bytes);
             f.write_all(bytes)?;
+        }
+        f.write_all(&sum.to_le_bytes())?;
+        f.sync_all()
+            .with_context(|| format!("fsync of staged checkpoint {tmp:?}"))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} into {path:?}"))?;
+        if let Some(parent) = path.parent() {
+            if let Ok(dir) = std::fs::File::open(parent) {
+                let _ = dir.sync_all(); // durability of the rename itself
+            }
         }
         Ok(())
     }
 
+    /// Load a checkpoint, accepting the current V2 format (checksummed)
+    /// and the legacy V1 format (pre-checksum artifacts such as
+    /// `base_model.bin`).  Truncated or corrupted files are typed errors
+    /// naming the path — never garbage weights.
     pub fn load(path: &Path) -> Result<ParamStore> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {path:?}"))?;
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{path:?} is not a qurl checkpoint");
+        f.read_exact(&mut magic)
+            .with_context(|| format!("truncated checkpoint header in {path:?}"))?;
+        if &magic == MAGIC_V2 {
+            Self::load_body(&mut f, path, true)
+        } else if &magic == MAGIC_V1 {
+            Self::load_body(&mut f, path, false)
+        } else {
+            bail!("{path:?} is not a qurl checkpoint (unknown magic \
+                   {magic:02x?}; known versions: QURLCKP1, QURLCKP2)");
         }
-        let mut u = [0u8; 8];
-        f.read_exact(&mut u)?;
-        let n = u64::from_le_bytes(u) as usize;
-        f.read_exact(&mut u)?;
-        let step = u64::from_le_bytes(u);
-        f.read_exact(&mut u)?;
-        let a_size = u64::from_le_bytes(u) as usize;
-        let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+    }
+
+    /// Shared V1/V2 body reader; `checksummed` selects whether a trailing
+    /// FNV-1a digest is expected and verified.
+    fn load_body(f: &mut std::fs::File, path: &Path, checksummed: bool)
+                 -> Result<ParamStore> {
+        let magic = if checksummed { MAGIC_V2 } else { MAGIC_V1 };
+        let mut sum = fnv1a64_continue(FNV_OFFSET, magic);
+        let mut header = [0u8; 24];
+        f.read_exact(&mut header)
+            .with_context(|| format!("truncated checkpoint header in {path:?}"))?;
+        sum = fnv1a64_continue(sum, &header);
+        let word = |i: usize| -> u64 {
+            let mut u = [0u8; 8];
+            u.copy_from_slice(&header[i * 8..i * 8 + 8]);
+            u64::from_le_bytes(u)
+        };
+        let n = word(0) as usize;
+        let step = word(1);
+        let a_size = word(2) as usize;
+        if n > MAX_PARAMS || a_size > n {
+            bail!("implausible checkpoint header in {path:?}: \
+                   n_params={n} a_size={a_size} (corrupt length field?)");
+        }
+        let mut read_vec = |section: &str| -> Result<Vec<f32>> {
             let mut bytes = vec![0u8; n * 4];
-            f.read_exact(&mut bytes)?;
+            f.read_exact(&mut bytes).with_context(|| {
+                format!("truncated checkpoint {path:?}: {section} section \
+                         short of {} bytes", n * 4)
+            })?;
+            sum = fnv1a64_continue(sum, &bytes);
             let mut out = vec![0.0f32; n];
             unsafe {
                 std::ptr::copy_nonoverlapping(
@@ -110,11 +177,35 @@ impl ParamStore {
             }
             Ok(out)
         };
-        let params = read_vec(n)?;
-        let m = read_vec(n)?;
-        let v = read_vec(n)?;
+        let params = read_vec("params")?;
+        let m = read_vec("adam-m")?;
+        let v = read_vec("adam-v")?;
+        drop(read_vec);
+        if checksummed {
+            let mut tail = [0u8; 8];
+            f.read_exact(&mut tail).with_context(|| {
+                format!("truncated checkpoint {path:?}: checksum missing")
+            })?;
+            let expect = u64::from_le_bytes(tail);
+            if sum != expect {
+                bail!("checksum mismatch in {path:?}: computed \
+                       {sum:#018x}, stored {expect:#018x} (torn or \
+                       corrupted checkpoint)");
+            }
+        }
         Ok(ParamStore { params, m, v, step, a_size })
     }
+}
+
+/// Sibling staging path for atomic writes: `<file>.tmp` in the same
+/// directory, so the final `rename` never crosses a filesystem boundary.
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("ckpt"));
+    name.push(".tmp");
+    path.with_file_name(name)
 }
 
 #[cfg(test)]
@@ -150,6 +241,98 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxxxxx").unwrap();
         assert!(ParamStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn small_store() -> ParamStore {
+        ParamStore {
+            params: (0..32).map(|i| (i as f32 - 7.0) * 0.25).collect(),
+            m: vec![0.5; 32],
+            v: vec![0.0625; 32],
+            step: 3,
+            a_size: 8,
+        }
+    }
+
+    /// Legacy V1 files (pre-checksum `base_model.bin` artifacts) must
+    /// still load byte-for-byte.
+    #[test]
+    fn legacy_v1_format_still_loads() {
+        let dir = std::env::temp_dir().join("qurl_test_ckpt_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.bin");
+        let ps = small_store();
+        // hand-write the V1 layout: magic, n, step, a_size, 3 raw sections
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"QURLCKP1");
+        bytes.extend_from_slice(&(ps.params.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&ps.step.to_le_bytes());
+        bytes.extend_from_slice(&(ps.a_size as u64).to_le_bytes());
+        for sec in [&ps.params, &ps.m, &ps.v] {
+            for x in sec.iter() {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let back = ParamStore::load(&path).unwrap();
+        assert_eq!(back.params, ps.params);
+        assert_eq!((back.step, back.a_size), (3, 8));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Truncated payload = typed error whose message names the path —
+    /// never a short-read panic or a garbage-weights resume.
+    #[test]
+    fn truncated_file_is_typed_error_naming_path() {
+        let dir = std::env::temp_dir().join("qurl_test_ckpt_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.bin");
+        small_store().save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in [4usize, 20, 40, full.len() - 4] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let err = ParamStore::load(&path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("torn.bin"),
+                    "cut={cut}: error must name the path: {msg}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A flipped payload byte fails the V2 checksum with a typed error.
+    #[test]
+    fn corrupted_payload_fails_checksum() {
+        let dir = std::env::temp_dir().join("qurl_test_ckpt_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flip.bin");
+        small_store().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ParamStore::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("checksum mismatch") && msg.contains("flip.bin"),
+                "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The atomic protocol leaves no `.tmp` straggler after a successful
+    /// save, and saving over an existing checkpoint replaces it whole.
+    #[test]
+    fn save_is_atomic_and_replaces_in_place() {
+        let dir = std::env::temp_dir().join("qurl_test_ckpt_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.bin");
+        let mut ps = small_store();
+        ps.save(&path).unwrap();
+        ps.params[0] = 123.5;
+        ps.step = 9;
+        ps.save(&path).unwrap();
+        assert!(!tmp_path(&path).exists(), "staging file left behind");
+        let back = ParamStore::load(&path).unwrap();
+        assert_eq!(back.params[0], 123.5);
+        assert_eq!(back.step, 9);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,76 @@
+//! FNV-1a 64-bit hashing for checkpoint integrity.
+//!
+//! The offline build ships no hashing crates, so checkpoint payloads and
+//! manifests carry a hand-rolled FNV-1a digest: simple, allocation-free,
+//! byte-order independent (it hashes the serialized bytes), and plenty for
+//! torn/truncated-write *detection* — this is an integrity checksum against
+//! partial writes and bit rot, not a cryptographic signature.  Both the
+//! [`ParamStore`](crate::runtime::ParamStore) binary format (V2 header) and
+//! the [`rl::checkpoint`](crate::rl::checkpoint) manifest use it, so the
+//! constants here are load-bearing for every checkpoint on disk: changing
+//! them invalidates existing snapshots and requires a format-version bump.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// One-shot FNV-1a 64 over a byte slice.
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_continue(FNV_OFFSET, bytes)
+}
+
+/// Streaming form: fold more bytes into an existing digest (start from
+/// [`FNV_OFFSET`]).  Lets multi-section payloads checksum without
+/// concatenating buffers.
+#[inline]
+pub fn fnv1a64_continue(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin the digest values: checksums live inside on-disk checkpoint
+    /// formats, so these bits must never drift without a version bump.
+    #[test]
+    fn fnv1a64_pinned_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f737_10b0);
+    }
+
+    /// Streaming in chunks must equal the one-shot digest.
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let whole = fnv1a64(data);
+        let mut h = FNV_OFFSET;
+        for chunk in data.chunks(7) {
+            h = fnv1a64_continue(h, chunk);
+        }
+        assert_eq!(h, whole);
+    }
+
+    /// A single flipped bit anywhere changes the digest (the torn-write
+    /// detection property the checkpoint loader relies on).
+    #[test]
+    fn single_bit_flips_detected() {
+        let base: Vec<u8> = (0..64u8).collect();
+        let h0 = fnv1a64(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut tampered = base.clone();
+                tampered[i] ^= 1 << bit;
+                assert_ne!(fnv1a64(&tampered), h0, "byte {i} bit {bit}");
+            }
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! substitution.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod pool;

@@ -1,0 +1,575 @@
+//! Integration tests for crash-safe checkpoint/resume (ROADMAP item 3):
+//! the bit-identical deterministic-resume guarantee, end to end on the
+//! mock engine.
+//!
+//! The harness below (`Mini`) is a miniature trainer running the real
+//! production loop shape over a real [`RolloutService`]: requant cadence
+//! via `push_weights` (with the engine quantized from a recorded source,
+//! exactly like `Trainer::refresh_engine`), the rollout seed cursor, one
+//! long-lived [`Pcg64`] noise stream, a param update driven by rewards,
+//! and a `take_stats` drain at every step boundary.  It checkpoints and
+//! resumes through the real `rl::checkpoint` API — `save`,
+//! `load_latest`, `check_config`, `ServiceSnapshot`
+//! restore + `reissue_weights` — so these tests exercise the same seam
+//! `Trainer::run` does, without needing compiled model artifacts.
+//!
+//! The contract under test, per leg: run 2N steps uninterrupted vs run
+//! N steps / checkpoint / fresh process / resume / run N more — every
+//! post-resume step's tokens, logprobs are implied (tokens are argmax
+//! over them), rewards, parameter bits, RNG draws, and (on inline legs)
+//! placement logs are bit-identical.
+
+use std::path::{Path, PathBuf};
+
+use qurl::coordinator::{EngineFactory, GroupSpec, KvConfig, KvLayout,
+                        MockEngine, RolloutService, StealPolicy,
+                        StripePolicy};
+use qurl::rl::checkpoint::{self, CheckpointError, CheckpointState};
+use qurl::runtime::ParamStore;
+use qurl::util::hash::fnv1a64;
+use qurl::util::json::Json;
+use qurl::util::rng::Pcg64;
+
+const N_PARAMS: usize = 24;
+const MAX_SEQ: usize = 16;
+const VOCAB: usize = 8;
+const EOS: i32 = 2;
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qurl_ckpt_it_{tag}"));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Mock analogue of host quantization: a deterministic signature of the
+/// source params, pushed into the engines as the `u64` weight handle.
+fn quantize(params: &[f32]) -> u64 {
+    let bytes: Vec<u8> =
+        params.iter().flat_map(|p| p.to_le_bytes()).collect();
+    fnv1a64(&bytes)
+}
+
+#[derive(Clone, Copy)]
+struct Knobs {
+    engines: usize,
+    slots: usize,
+    threaded: bool,
+    paged: bool,
+    steal: bool,
+    least_loaded: bool,
+    requant_every: usize,
+    groups_per_step: usize,
+    /// crash injection: engine 0 errors at this decode tick (0 = off)
+    fail_at_tick: usize,
+}
+
+const BASE: Knobs = Knobs {
+    engines: 2,
+    slots: 2,
+    threaded: false,
+    paged: false,
+    steal: false,
+    least_loaded: false,
+    requant_every: 2,
+    groups_per_step: 3,
+    fail_at_tick: 0,
+};
+
+fn cfg_json(k: &Knobs) -> Json {
+    Json::obj(vec![
+        ("engines", Json::num(k.engines as f64)),
+        ("slots", Json::num(k.slots as f64)),
+        ("threaded", Json::Bool(k.threaded)),
+        ("paged", Json::Bool(k.paged)),
+        ("steal", Json::Bool(k.steal)),
+        ("least_loaded", Json::Bool(k.least_loaded)),
+        ("requant_every", Json::num(k.requant_every as f64)),
+        ("groups_per_step", Json::num(k.groups_per_step as f64)),
+        // control knobs: excluded from the fingerprint, may differ freely
+        ("ckpt_every", Json::num(0.0)),
+        ("resume", Json::Bool(false)),
+    ])
+}
+
+fn build_service(k: &Knobs) -> RolloutService<MockEngine> {
+    let mut svc = if k.threaded {
+        let fs: Vec<EngineFactory<MockEngine>> = (0..k.engines)
+            .map(|_| {
+                let slots = k.slots;
+                Box::new(move || {
+                    Ok(MockEngine::new(slots, VOCAB, MAX_SEQ, EOS))
+                }) as EngineFactory<MockEngine>
+            })
+            .collect();
+        RolloutService::threaded(fs, MAX_SEQ, EOS).unwrap()
+    } else {
+        let engs: Vec<MockEngine> = (0..k.engines)
+            .map(|i| {
+                let mut e = MockEngine::new(k.slots, VOCAB, MAX_SEQ, EOS);
+                if i == 0 {
+                    e.fail_at_tick = k.fail_at_tick;
+                }
+                e
+            })
+            .collect();
+        RolloutService::new(engs, MAX_SEQ, EOS)
+    };
+    if k.least_loaded {
+        svc.stripe = StripePolicy::LeastLoaded;
+    }
+    if k.steal {
+        svc.steal = StealPolicy::Idle;
+    }
+    if k.paged {
+        svc.set_kv(KvConfig {
+            layout: KvLayout::Paged,
+            page_size: 4,
+            budget_pages: None,
+        });
+    }
+    svc
+}
+
+/// Everything one step's determinism is observable through.
+#[derive(Clone, Debug, PartialEq)]
+struct Row {
+    step: usize,
+    /// generated tokens per member, submission order
+    tokens: Vec<Vec<i32>>,
+    /// per-member sampled-token logprob bits, concatenated (float
+    /// parity, not just argmax parity)
+    logprobs: Vec<u32>,
+    /// reward bits per member (u32::MAX sentinel for unscored members)
+    rewards: Vec<u32>,
+    /// engine attribution per group (scrubbed on threaded+steal legs,
+    /// where placement is live timing)
+    engines: Vec<usize>,
+    /// param bits after this step's update
+    params: Vec<u32>,
+    /// the noise draw consumed this step (proves RNG stream position)
+    noise: u64,
+}
+
+fn scrub_attribution(rows: &[Row]) -> Vec<Row> {
+    rows.iter()
+        .map(|r| Row { engines: Vec::new(), ..r.clone() })
+        .collect()
+}
+
+struct Mini {
+    k: Knobs,
+    cfg: Json,
+    rng: Pcg64,
+    rollout_seed: i32,
+    engine_age: usize,
+    /// params the engine weights were last quantized from
+    engine_src: Option<Vec<f32>>,
+    weights: u64,
+    ps: ParamStore,
+    ref_params: Vec<f32>,
+    svc: RolloutService<MockEngine>,
+}
+
+impl Mini {
+    fn new(k: Knobs) -> Mini {
+        let ps = ParamStore {
+            params: (0..N_PARAMS)
+                .map(|i| i as f32 * 0.25 - 3.0)
+                .collect(),
+            m: vec![0.0; N_PARAMS],
+            v: vec![0.0; N_PARAMS],
+            step: 0,
+            a_size: 8,
+        };
+        let ref_params = ps.params.clone();
+        Mini {
+            cfg: cfg_json(&k),
+            rng: Pcg64::new(0x51_524c ^ 0xABCD),
+            rollout_seed: 0x2f2f,
+            engine_age: usize::MAX,
+            engine_src: None,
+            weights: 0,
+            ps,
+            ref_params,
+            svc: build_service(&k),
+            k,
+        }
+    }
+
+    /// One training step: maybe requantize, roll out, drain stats,
+    /// update params with reward signal + RNG noise.
+    fn step(&mut self, step: usize) -> anyhow::Result<Row> {
+        // requant cadence (Trainer::refresh_engine shape): quantize from
+        // the current params, remember the source, push at a new epoch
+        if self.engine_age >= self.k.requant_every {
+            self.weights = quantize(&self.ps.params);
+            self.engine_src = Some(self.ps.params.clone());
+            self.svc.push_weights(self.weights);
+            self.engine_age = 0;
+        } else {
+            self.engine_age += 1;
+        }
+        // rollout seed cursor (one bump per rollout call)
+        let base = (self.rollout_seed as u32 as u64) << 32;
+        self.rollout_seed = self.rollout_seed.wrapping_add(1);
+        let mut offset = 0u64;
+        for gid in 0..self.k.groups_per_step {
+            let size = 2 + gid % 2;
+            self.svc.submit_group(GroupSpec {
+                group_id: gid,
+                prompt: vec![3 + ((step + gid) % 5) as i32; 2 + gid % 3],
+                group_size: size,
+                max_new: if gid % 2 == 0 { 9 } else { 2 },
+                temperature: 1.0,
+                top_p: 1.0,
+                seed: base | offset,
+            });
+            offset += size as u64;
+        }
+        let results = self.svc.run(|gid, res| {
+            (res.generated.len() % 3) as f32 + (gid % 2) as f32
+        })?;
+        let _ = self.svc.take_stats()?; // step-boundary drain
+        // param update: rewards + one draw off the long-lived stream
+        let noise = self.rng.next_u64();
+        let reward_sum: f32 = results
+            .iter()
+            .flat_map(|g| g.members.iter().filter_map(|m| m.reward))
+            .sum();
+        let total_tokens: usize =
+            results.iter().map(|g| g.generated_tokens()).sum();
+        for (i, p) in self.ps.params.iter_mut().enumerate() {
+            *p += 0.01 * reward_sum
+                + 1e-4 * ((noise >> (i % 32)) & 0xff) as f32
+                - 0.002 * ((total_tokens + i) % 7) as f32;
+        }
+        self.ps.step += 1;
+        Ok(Row {
+            step,
+            tokens: results
+                .iter()
+                .flat_map(|g| {
+                    g.members.iter().map(|m| m.result.generated.clone())
+                })
+                .collect(),
+            logprobs: results
+                .iter()
+                .flat_map(|g| g.members.iter().flat_map(|m| {
+                    m.result.logprobs.iter().map(|l| l.to_bits())
+                }))
+                .collect(),
+            rewards: results
+                .iter()
+                .flat_map(|g| g.members.iter().map(|m| {
+                    m.reward.map(|r| r.to_bits()).unwrap_or(u32::MAX)
+                }))
+                .collect(),
+            engines: results.iter().map(|g| g.engine).collect(),
+            params: self.ps.params.iter().map(|p| p.to_bits()).collect(),
+            noise,
+        })
+    }
+
+    /// Checkpoint through the real API, exactly as `Trainer` does after
+    /// completing step `next_step - 1`.
+    fn checkpoint(&self, dir: &Path, next_step: usize, keep: usize)
+                  -> anyhow::Result<PathBuf> {
+        let st = CheckpointState {
+            step: next_step as u64,
+            config: self.cfg.clone(),
+            rng: self.rng.snapshot(),
+            rollout_seed: self.rollout_seed,
+            engine_age: self.engine_age as u64,
+            sampler: (0, 0, 0),
+            schedule: None,
+            service: Some(self.svc.snapshot()?),
+            ps: &self.ps,
+            ref_params: &self.ref_params,
+            prev_params: None,
+            engine_params: self.engine_src.as_deref(),
+        };
+        checkpoint::save(dir, &st, keep)
+    }
+
+    /// Fresh-process resume: build everything from scratch (as after a
+    /// crash), load the newest good checkpoint, refuse config drift,
+    /// restore trainer state, requantize the engine from the SAVED
+    /// source, and re-stamp the rebuilt service — the
+    /// `Trainer::resume_from_checkpoint` protocol.  Returns the next
+    /// step to execute.
+    fn resume(k: Knobs, dir: &Path) -> anyhow::Result<(Mini, usize)> {
+        let mut mini = Mini::new(k);
+        let loaded = checkpoint::load_latest(dir)?;
+        checkpoint::check_config(&loaded.manifest.config, &mini.cfg)?;
+        mini.rng = loaded.rng();
+        mini.rollout_seed = loaded.manifest.rollout_seed;
+        mini.engine_age = loaded.manifest.engine_age as usize;
+        mini.ps = loaded.ps;
+        mini.ref_params = loaded.ref_params;
+        if let Some(src) = &loaded.engine_params {
+            // requantizing the saved source is bit-identical to the
+            // delta-built engine the original run was serving
+            mini.weights = quantize(src);
+            mini.engine_src = Some(src.clone());
+        }
+        if let Some(snap) = &loaded.manifest.service {
+            mini.svc.restore(snap)?;
+            mini.svc.reissue_weights(mini.weights);
+        }
+        Ok((mini, loaded.manifest.step as usize))
+    }
+}
+
+fn run_steps(mini: &mut Mini, from: usize, to: usize) -> Vec<Row> {
+    (from..to).map(|s| mini.step(s).unwrap()).collect()
+}
+
+/// Baseline leg: inline backend, round-robin placement, dense KV.
+/// Run 6 steps straight vs 3 + checkpoint + fresh-process resume + 3:
+/// every post-resume row (tokens, rewards, attribution, param bits, RNG
+/// draws) and the full placement log are bit-identical.
+#[test]
+fn resume_is_bit_identical_inline_round_robin() {
+    let dir = tdir("parity_rr");
+    let mut a = Mini::new(BASE);
+    let rows_a = run_steps(&mut a, 0, 6);
+    // the harness actually produces signal on every fingerprint axis
+    assert_eq!(rows_a[0].step, 0);
+    assert!(!rows_a[0].tokens.is_empty());
+    assert!(!rows_a[0].logprobs.is_empty());
+    assert!(!rows_a[0].rewards.is_empty());
+    assert!(!rows_a[0].engines.is_empty());
+    assert!(!rows_a[0].params.is_empty());
+    assert_ne!(rows_a[0].noise, 0);
+    let mut b = Mini::new(BASE);
+    let _ = run_steps(&mut b, 0, 3);
+    b.checkpoint(&dir, 3, 0).unwrap();
+    drop(b); // the process goes away
+    let (mut c, start) = Mini::resume(BASE, &dir).unwrap();
+    assert_eq!(start, 3);
+    let rows_c = run_steps(&mut c, start, 6);
+    assert_eq!(rows_a[3..], rows_c[..], "post-resume rows diverged");
+    assert_eq!(a.svc.placement_log(), c.svc.placement_log(),
+               "placement logs diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hard-mode inline leg: least-loaded placement + paged KV + work
+/// stealing, with the checkpoint taken MID requant interval — the
+/// resumed engine must be rebuilt from the saved quantization source
+/// (the current params have moved on), and least-loaded placement must
+/// continue from the restored load estimates.  Bit-identical including
+/// engine attribution and the placement log.
+#[test]
+fn resume_parity_least_loaded_paged_steal_mid_requant() {
+    let k = Knobs {
+        least_loaded: true,
+        paged: true,
+        steal: true,
+        requant_every: 3,
+        ..BASE
+    };
+    let dir = tdir("parity_ll_paged_steal");
+    let mut a = Mini::new(k);
+    let rows_a = run_steps(&mut a, 0, 8);
+    let mut b = Mini::new(k);
+    let _ = run_steps(&mut b, 0, 2);
+    // mid-interval: the engine is serving weights quantized from OLDER
+    // params than the current ones
+    assert_ne!(b.engine_src.as_deref().unwrap(), &b.ps.params[..],
+               "requant cadence not actually mid-interval");
+    b.checkpoint(&dir, 2, 0).unwrap();
+    drop(b);
+    let (mut c, start) = Mini::resume(k, &dir).unwrap();
+    assert_eq!(start, 2);
+    let rows_c = run_steps(&mut c, start, 8);
+    assert_eq!(rows_a[2..], rows_c[..], "post-resume rows diverged");
+    assert_eq!(a.svc.placement_log(), c.svc.placement_log(),
+               "placement logs diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The threaded backend with paged KV + stealing: placement under live
+/// stealing is thread timing, so engine attribution is scrubbed; the
+/// outputs themselves — tokens, rewards, param bits, RNG draws — must
+/// still be bit-identical across checkpoint/resume (the service
+/// isolation contract makes outputs placement-independent).
+#[test]
+fn resume_parity_threaded_paged_steal_outputs() {
+    let k = Knobs {
+        threaded: true,
+        paged: true,
+        steal: true,
+        least_loaded: true,
+        engines: 3,
+        ..BASE
+    };
+    let dir = tdir("parity_threaded");
+    let mut a = Mini::new(k);
+    let rows_a = run_steps(&mut a, 0, 6);
+    let mut b = Mini::new(k);
+    let _ = run_steps(&mut b, 0, 3);
+    b.checkpoint(&dir, 3, 0).unwrap();
+    drop(b);
+    let (mut c, start) = Mini::resume(k, &dir).unwrap();
+    assert_eq!(start, 3);
+    let rows_c = run_steps(&mut c, start, 6);
+    assert_eq!(scrub_attribution(&rows_a[3..]),
+               scrub_attribution(&rows_c),
+               "post-resume outputs diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash-mid-step recovery: engine 0 is armed to error at a decode tick
+/// that lands inside a later step.  The run checkpoints every step,
+/// dies mid-step, and a fresh process resumes from the last completed
+/// checkpoint — the re-executed remainder is bit-identical to a run
+/// that never crashed.
+#[test]
+fn crash_mid_step_resumes_bit_identically() {
+    let steps = 6usize;
+    let dir = tdir("crash");
+    let mut a = Mini::new(BASE);
+    let rows_a = run_steps(&mut a, 0, steps);
+    let k = Knobs { fail_at_tick: 25, ..BASE };
+    let mut b = Mini::new(k);
+    let mut s_fail = None;
+    for s in 0..steps {
+        match b.step(s) {
+            Ok(_) => {
+                b.checkpoint(&dir, s + 1, 0).unwrap();
+            }
+            Err(e) => {
+                assert!(format!("{e:#}").contains("injected crash"),
+                        "unexpected error: {e:#}");
+                s_fail = Some(s);
+                break;
+            }
+        }
+    }
+    let s_fail = s_fail.expect("fail_at_tick=25 never fired");
+    assert!((1..steps).contains(&s_fail),
+            "crash tick landed outside the run (step {s_fail})");
+    drop(b); // mid-step state dies with the process
+    // resume must NOT see the armed tick again (a real restart wouldn't)
+    let (mut c, start) = Mini::resume(BASE, &dir).unwrap();
+    assert_eq!(start, s_fail, "resumed from the wrong checkpoint");
+    let rows_c = run_steps(&mut c, start, steps);
+    assert_eq!(rows_a[s_fail..], rows_c[..],
+               "post-crash remainder diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Failure path: the newest checkpoint is corrupted on disk after the
+/// crash.  Resume falls back to the previous good one (re-executing one
+/// more step) and the rerun is still bit-identical.
+#[test]
+fn corrupted_newest_falls_back_and_stays_bit_identical() {
+    let dir = tdir("fallback_it");
+    let mut a = Mini::new(BASE);
+    let rows_a = run_steps(&mut a, 0, 6);
+    let mut b = Mini::new(BASE);
+    for s in 0..4 {
+        b.step(s).unwrap();
+        b.checkpoint(&dir, s + 1, 0).unwrap();
+    }
+    drop(b);
+    let victim = dir.join("step_000004").join("params.bin");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&victim, &bytes).unwrap();
+    let (mut c, start) = Mini::resume(BASE, &dir).unwrap();
+    assert_eq!(start, 3, "did not fall back past the corrupted snapshot");
+    let rows_c = run_steps(&mut c, start, 6);
+    assert_eq!(rows_a[3..], rows_c[..], "fallback rerun diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Failure path: resuming under a silently-changed config is a typed
+/// refusal naming the differing field — never a quietly-different run.
+#[test]
+fn changed_config_is_refused_with_the_field_named() {
+    let dir = tdir("cfg_refusal");
+    let mut b = Mini::new(BASE);
+    b.step(0).unwrap();
+    b.checkpoint(&dir, 1, 0).unwrap();
+    drop(b);
+    let changed = Knobs { requant_every: 5, ..BASE };
+    let err = Mini::resume(changed, &dir).unwrap_err();
+    match err.downcast_ref::<CheckpointError>() {
+        Some(CheckpointError::ConfigMismatch { field, .. }) => {
+            assert_eq!(field, "requant_every");
+        }
+        other => panic!("wrong error: {other:?}"),
+    }
+    // the original config still resumes fine
+    assert!(Mini::resume(BASE, &dir).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Retention through the training loop: `keep = 2` with a checkpoint
+/// every step leaves exactly the newest two snapshots, and the survivor
+/// set still resumes bit-identically.
+#[test]
+fn retention_keeps_newest_k_through_the_loop() {
+    let dir = tdir("retention_it");
+    let mut a = Mini::new(BASE);
+    let rows_a = run_steps(&mut a, 0, 6);
+    let mut b = Mini::new(BASE);
+    for s in 0..5 {
+        b.step(s).unwrap();
+        b.checkpoint(&dir, s + 1, 2).unwrap();
+    }
+    drop(b);
+    for gone in 1..=3u64 {
+        assert!(!dir.join(checkpoint::step_dir_name(gone)).exists(),
+                "gc left step {gone}");
+    }
+    for kept in 4..=5u64 {
+        assert!(dir.join(checkpoint::step_dir_name(kept)).exists(),
+                "gc deleted step {kept}");
+    }
+    let (mut c, start) = Mini::resume(BASE, &dir).unwrap();
+    assert_eq!(start, 5);
+    let rows_c = run_steps(&mut c, start, 6);
+    assert_eq!(rows_a[5..], rows_c[..], "post-gc resume diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// CI artifact: time one save/load cycle on the mock-trainer state and
+/// emit `results/BENCH_ckpt.json` (+ a manifest copy) for the workflow
+/// to upload.  This is a smoke emission, not a perf assertion.
+#[test]
+fn bench_ckpt_smoke_emits_artifact() {
+    let dir = tdir("bench");
+    let mut m = Mini::new(BASE);
+    let _ = run_steps(&mut m, 0, 2);
+    let t0 = std::time::Instant::now();
+    let path = m.checkpoint(&dir, 2, 0).unwrap();
+    let save_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let loaded = checkpoint::load_latest(&dir).unwrap();
+    let load_s = t1.elapsed().as_secs_f64();
+    assert_eq!(loaded.manifest.step, 2);
+    let bytes: u64 = std::fs::read_dir(&path)
+        .unwrap()
+        .flatten()
+        .filter_map(|e| e.metadata().ok())
+        .map(|md| md.len())
+        .sum();
+    let report = Json::obj(vec![
+        ("save_s", Json::num(save_s)),
+        ("load_s", Json::num(load_s)),
+        ("bytes", Json::num(bytes as f64)),
+        ("payloads", Json::num(loaded.manifest.payloads.len() as f64)),
+        ("n_params", Json::num(N_PARAMS as f64)),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/BENCH_ckpt.json", report.to_string()).ok();
+    std::fs::copy(path.join("manifest.json"),
+                  "results/ckpt_manifest.json")
+        .ok();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,31 @@
+// Lint fixture: a miniature rl/checkpoint.rs for the config_drift
+// checkpoint-manifest axis.  One violation is seeded: `rng_inc` is
+// written by `to_json` but never read back in `from_json`, so a resumed
+// run would silently lose the RNG stream selector.  `step` and
+// `rng_state` round-trip and must stay quiet.
+
+pub struct CheckpointManifest {
+    pub step: u64,
+    pub rng_state: u128,
+    pub rng_inc: u128,
+}
+
+impl CheckpointManifest {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"{}\":{},\"{}\":{},\"{}\":{}}}",
+            "step", self.step, "rng_state", self.rng_state, "rng_inc",
+            self.rng_inc,
+        )
+    }
+
+    pub fn from_json(raw: &str) -> CheckpointManifest {
+        let step = field(raw, "step");
+        let rng_state = field(raw, "rng_state");
+        CheckpointManifest { step: step as u64, rng_state, rng_inc: 0 }
+    }
+}
+
+fn field(_raw: &str, _key: &str) -> u128 {
+    0
+}
